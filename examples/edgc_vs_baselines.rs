@@ -1,0 +1,65 @@
+//! Head-to-head: EDGC vs Megatron-LM (no compression), fixed-rank
+//! PowerSGD, and Optimus-CC on the same model/data/seed — the Fig. 11 /
+//! Table III comparison at laptop scale.
+//!
+//!     cargo run --release --example edgc_vs_baselines -- artifacts/tiny 200
+
+use anyhow::Result;
+use edgc::config::{Method, TrainConfig};
+use edgc::coordinator::{Backend, Trainer};
+use edgc::metrics::Table;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let artifacts = args.first().cloned().unwrap_or_else(|| "artifacts/tiny".into());
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400);
+
+    let methods = [
+        Method::Megatron,
+        Method::FixedRank(64),
+        Method::OptimusCc(64),
+        Method::Edgc,
+    ];
+    let mut summary = Table::new(
+        "edgc_vs_baselines",
+        &["method", "ppl", "probe_acc", "virtual_time_s", "comm_time_s", "comm_reduction_x"],
+    );
+    let mut names = Vec::new();
+    for (i, &method) in methods.iter().enumerate() {
+        let mut cfg = TrainConfig {
+            artifacts: artifacts.clone(),
+            steps,
+            method,
+            eval_every: (steps / 10).max(4),
+            ..TrainConfig::default()
+        };
+        cfg.edgc.window = (steps / 20).max(4);
+        cfg.edgc.alpha = 0.5;
+        let name = method.name();
+        println!("[{}] running {steps} steps...", name);
+        let mut tr = Trainer::new(cfg, Backend::Host)?;
+        let s = tr.run()?;
+        summary.push(vec![
+            i as f64,
+            s.final_ppl,
+            s.probe_accuracy,
+            s.virtual_time,
+            s.virtual_comm_time,
+            s.total_uncompressed_floats as f64 / s.total_comm_floats.max(1) as f64,
+        ]);
+        names.push(name);
+    }
+    println!("\nmethods: {:?}\n\n{}", names, summary.render());
+    summary.write("runs")?;
+
+    // the paper's headline shape, asserted
+    let ppls = summary.column("ppl");
+    let times = summary.column("virtual_time_s");
+    assert!(times[3] < times[0], "EDGC must beat Megatron on time");
+    assert!(
+        ppls[3] < ppls[1] * 1.05,
+        "EDGC PPL must not be worse than fixed-rank PowerSGD"
+    );
+    println!("edgc_vs_baselines OK");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Quickstart: load the AOT artifacts, run one training step + one
+//! compressed all-reduce round trip through PJRT, print the numbers.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This is the smallest possible tour of the public API: [`Runtime`]
+//! (artifact loading), a real `train_step` execution, and one masked-rank
+//! PowerSGD compression of the largest gradient matrix.
+
+use anyhow::Result;
+use edgc::runtime::{lit_f32, lit_i32, to_f32, to_scalar, Runtime};
+
+fn main() -> Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts/tiny".to_string());
+    let rt = Runtime::load(&dir)?;
+    let m = rt.manifest.clone();
+    println!(
+        "loaded preset={} ({} params, {} artifacts) on {}",
+        m.preset,
+        m.n_params,
+        m.artifact_names.len(),
+        rt.platform()
+    );
+
+    // one real training step ------------------------------------------------
+    let params = rt.init_params()?;
+    let b = m.batch;
+    let s = m.seq_len;
+    let tokens: Vec<i32> = (0..b * (s + 1)).map(|i| (i % m.vocab) as i32).collect();
+    let out = rt.run(
+        "train_step",
+        &[
+            lit_f32(&params, &[m.n_params as i64])?,
+            lit_i32(&tokens, &[b as i64, (s + 1) as i64])?,
+        ],
+    )?;
+    let loss = to_scalar(&out[0])?;
+    let grads = to_f32(&out[1])?;
+    println!("train_step: loss={loss:.4} (ln vocab = {:.4})", (m.vocab as f32).ln());
+    assert!(loss.is_finite());
+
+    // one masked-rank PowerSGD round trip on the embedding gradient ---------
+    let spec = m.param("tok_emb")?.clone();
+    let bucket = m.bucket_for(&spec.shape).expect("tok_emb is a compression bucket");
+    let (rows, cols, r) = (bucket.m, bucket.n, bucket.r_max);
+    let g = &grads[spec.offset..spec.offset + spec.size()];
+
+    let r_eff = r / 2; // pretend DAC chose half the ceiling
+    let mask: Vec<f32> = (0..r).map(|i| if i < r_eff { 1.0 } else { 0.0 }).collect();
+    let q0: Vec<f32> =
+        (0..cols * r).map(|i| ((i * 2654435761 % 1000) as f32 / 500.0) - 1.0).collect();
+
+    let tag = bucket.tag();
+    let a = lit_f32(g, &[rows as i64, cols as i64])?;
+    let p = rt.run(
+        &format!("ps_phase1_{tag}"),
+        &[a, lit_f32(&q0, &[cols as i64, r as i64])?, lit_f32(&mask, &[r as i64])?],
+    )?;
+    let a = lit_f32(g, &[rows as i64, cols as i64])?;
+    let pq = rt.run(
+        &format!("ps_phase2_{tag}"),
+        &[a, p[0].clone(), lit_f32(&mask, &[r as i64])?],
+    )?;
+    let a = lit_f32(g, &[rows as i64, cols as i64])?;
+    let fin = rt.run(&format!("ps_finalize_{tag}"), &[a, pq[0].clone(), pq[1].clone()])?;
+
+    let approx = to_f32(&fin[0])?;
+    let residual = to_f32(&fin[1])?;
+    let norm = |v: &[f32]| v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    let rel_err = norm(&residual) / norm(g).max(1e-30);
+    println!(
+        "powersgd[{tag}, r={r_eff}/{r}]: volume {} -> {} floats ({:.1}x), rel err {rel_err:.3}",
+        rows * cols,
+        r_eff * (rows + cols),
+        (rows * cols) as f64 / (r_eff * (rows + cols)) as f64,
+    );
+    assert!(rel_err < 1.0, "compression must capture some energy");
+    assert!((norm(&approx) > 0.0) && rel_err.is_finite());
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,130 @@
+"""AOT lowering: JAX graphs → HLO *text* artifacts + manifest.
+
+Run once at build time (``make artifacts``); the rust coordinator loads
+the artifacts through PJRT and Python never appears on the training hot
+path again.
+
+Interchange is HLO text, NOT ``lowered.compile()``/``.serialize()``:
+jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids, which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The HLO text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --preset tiny --batch 8 --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, args, path: str) -> int:
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build(preset: str, batch: int, out_dir: str, seed: int) -> dict:
+    cfg = M.PRESETS[preset]
+    os.makedirs(out_dir, exist_ok=True)
+    P = M.n_params(cfg)
+    artifacts = {}
+
+    def emit(name, fn, args):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        n = lower_to_file(fn, args, path)
+        artifacts[name] = {"file": f"{name}.hlo.txt", "bytes": n}
+        print(f"  {name}: {n} chars")
+
+    flat = sds((P,))
+    batch_sds = sds((batch, cfg.seq_len + 1), jnp.int32)
+
+    print(f"[aot] preset={preset} params={P} batch={batch}")
+    emit("train_step", M.train_step(cfg), (flat, batch_sds))
+    emit("eval_step", M.eval_step(cfg), (flat, batch_sds))
+    emit(
+        "adam",
+        M.adam_update,
+        (flat, flat, flat, flat, sds((6,))),
+    )
+    emit("entropy", M.entropy_estimate, (sds((M.ENTROPY_SAMPLE,)),))
+
+    buckets = []
+    for (m, n) in M.grad_buckets(cfg):
+        r = M.default_rank_max(m, n)
+        buckets.append({"m": m, "n": n, "r_max": r})
+        tag = f"{m}x{n}"
+        a, q, p, mask = sds((m, n)), sds((n, r)), sds((m, r)), sds((r,))
+        emit(f"ps_phase1_{tag}", M.ps_phase1, (a, q, mask))
+        emit(f"ps_phase2_{tag}", M.ps_phase2, (a, p, mask))
+        emit(f"ps_finalize_{tag}", M.ps_finalize, (a, p, q))
+
+    # initial parameters (binary f32 LE) — rust maps this straight into the
+    # flat parameter buffer.
+    init = M.init_params(cfg, seed=seed)
+    init.tofile(os.path.join(out_dir, "init_params.bin"))
+
+    manifest = {
+        "preset": preset,
+        "seed": seed,
+        "batch": batch,
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_head": cfg.n_head,
+            "n_layer": cfg.n_layer,
+            "seq_len": cfg.seq_len,
+            "n_params": P,
+        },
+        "entropy_sample": M.ENTROPY_SAMPLE,
+        "entropy_bins": M.ENTROPY_BINS,
+        "params": [
+            {"name": s.name, "shape": list(s.shape), "offset": s.offset}
+            for s in M.param_table(cfg)
+        ],
+        "buckets": buckets,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(artifacts)} artifacts + manifest to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="tiny", choices=sorted(M.PRESETS))
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    out_dir = os.path.join(args.out, args.preset)
+    build(args.preset, args.batch, out_dir, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""L1 Pallas kernels for EDGC (build-time only; lowered into HLO by aot.py).
+
+* ``matmul``  — tiled MXU matmul, the PowerSGD power-iteration hot spot
+* ``entropy`` — histogram + differential-entropy estimate (GDS)
+* ``adam``    — fused elementwise Adam over the flat parameter vector
+* ``ref``     — pure-jnp oracle for all of the above
+"""
+
+from . import adam, entropy, matmul, ref  # noqa: F401

@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: tiled matmul — the PowerSGD power-iteration hot spot.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the paper's hot loop is
+the pair of GEMMs P = A·Q and Q' = Aᵀ·P̂ inside each compressed
+all-reduce. On GPU the reference implementation (PowerSGD/Optimus-CC)
+drives cuBLAS; here the kernel is expressed for the TPU MXU instead —
+128×128 blocks sized to the systolic array, a VMEM accumulator scratch
+carried across the K grid dimension, and a BlockSpec schedule that
+streams A row-panels / B column-panels HBM→VMEM.
+
+``interpret=True`` lowers the kernel to plain HLO so the AOT artifacts
+execute on the PJRT CPU client (real-TPU lowering emits a Mosaic
+custom-call the CPU plugin cannot run).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# MXU-shaped default tiles. The wrapper shrinks them for small operands so
+# tiny shapes (unit tests, hypothesis sweeps) do not over-pad.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """Grid point (i, j, k): acc += A[i,k] @ B[k,j]; flush at k == n_k-1.
+
+    The accumulator lives in a VMEM scratch so partial sums never round-trip
+    to HBM; f32 accumulation regardless of input dtype (bf16-safe).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest power-of-two block ≤ pref that does not over-pad tiny dims."""
+    b = pref
+    while b > dim and b > 8:
+        b //= 2
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def _matmul_padded(a, b, bm, bn, bk):
+    m, k = a.shape
+    k2, n = b.shape
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        # f32 accumulator tile in VMEM, carried across the K dimension.
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(a, b)
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B via the Pallas kernel, padding to block multiples."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    bm = _pick_block(m, BLOCK_M)
+    bn = _pick_block(n, BLOCK_N)
+    bk = _pick_block(k, BLOCK_K)
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    kp = -(-k // bk) * bk
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    out = _matmul_padded(a_p, b_p, bm, bn, bk)
+    return out[:m, :n]

@@ -1,0 +1,320 @@
+"""L2: JAX compute graphs for EDGC (build-time only; AOT-lowered by aot.py).
+
+Everything the rust coordinator executes at runtime is defined here:
+
+* a GPT-2-style decoder-only transformer whose parameters live in ONE flat
+  f32 vector (the rust side owns the buffer; the graph unflattens with
+  static offsets) — ``train_step`` returns (loss, flat_grads),
+  ``eval_step`` returns per-example losses;
+* the masked-rank PowerSGD graphs (phase1 / phase2 / finalize) that call
+  the L1 Pallas matmul kernel — one artifact set per gradient-matrix
+  shape bucket, rank-dynamic via a column mask (DESIGN.md §Dynamic rank);
+* the GDS entropy-estimate graph over a fixed-size sample vector;
+* the fused-Adam update graph over the flat parameter vector.
+
+The flat layout is mirrored in artifacts/<preset>/manifest.json so rust
+and python agree bit-for-bit on offsets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import adam as adam_kernel
+from .kernels import entropy as entropy_kernel
+from .kernels import matmul as matmul_kernel
+
+
+# --------------------------------------------------------------------------
+# configuration and flat parameter layout
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer configuration (GPT-2 family shapes)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_head: int
+    n_layer: int
+    seq_len: int
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+#: Presets. ``tiny``/``small`` drive tests and reproduction sweeps on one
+#: CPU core; ``e2e100m`` is the ~100M-parameter end-to-end configuration;
+#: gpt2-2.5b / gpt2-12.1b exist for shape bookkeeping only (their gradient
+#: buckets parameterize the simulator benches — never executed here).
+PRESETS = {
+    "tiny": ModelConfig("tiny", vocab=512, d_model=128, n_head=4, n_layer=2, seq_len=64),
+    "small": ModelConfig("small", vocab=2048, d_model=256, n_head=8, n_layer=8, seq_len=128),
+    "base": ModelConfig("base", vocab=4096, d_model=512, n_head=8, n_layer=12, seq_len=256),
+    "e2e100m": ModelConfig("e2e100m", vocab=8192, d_model=768, n_head=12, n_layer=12, seq_len=256),
+    # paper-scale shape references (Table II)
+    "gpt2-2.5b": ModelConfig("gpt2-2.5b", vocab=50257, d_model=1920, n_head=20, n_layer=52, seq_len=1024),
+    "gpt2-12.1b": ModelConfig("gpt2-12.1b", vocab=50257, d_model=3584, n_head=28, n_layer=76, seq_len=1024),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    offset: int
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def param_table(cfg: ModelConfig) -> List[ParamSpec]:
+    """Flat layout of every tensor, in a fixed documented order.
+
+    The output head is tied to the token embedding (standard GPT-2), so
+    the embedding gradient is a (vocab, d_model) matrix — the largest
+    compression bucket, as in the paper.
+    """
+    specs: List[ParamSpec] = []
+    off = 0
+
+    def add(name, *shape):
+        nonlocal off
+        specs.append(ParamSpec(name, tuple(shape), off))
+        off += int(np.prod(shape))
+
+    d, v, s, f = cfg.d_model, cfg.vocab, cfg.seq_len, cfg.d_ff
+    add("tok_emb", v, d)
+    add("pos_emb", s, d)
+    for i in range(cfg.n_layer):
+        p = f"h{i}."
+        add(p + "ln1_g", d)
+        add(p + "ln1_b", d)
+        add(p + "qkv_w", d, 3 * d)
+        add(p + "qkv_b", 3 * d)
+        add(p + "proj_w", d, d)
+        add(p + "proj_b", d)
+        add(p + "ln2_g", d)
+        add(p + "ln2_b", d)
+        add(p + "fc_w", d, f)
+        add(p + "fc_b", f)
+        add(p + "fc2_w", f, d)
+        add(p + "fc2_b", d)
+    add("lnf_g", d)
+    add("lnf_b", d)
+    return specs
+
+
+def n_params(cfg: ModelConfig) -> int:
+    t = param_table(cfg)
+    return t[-1].offset + t[-1].size
+
+
+def unflatten(cfg: ModelConfig, flat: jnp.ndarray) -> dict:
+    """Static-offset views into the flat vector (zero-copy under XLA)."""
+    return {
+        s.name: jax.lax.dynamic_slice(flat, (s.offset,), (s.size,)).reshape(s.shape)
+        for s in param_table(cfg)
+    }
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """GPT-2 initialization into the flat vector (numpy; AOT-time only)."""
+    rng = np.random.RandomState(seed)
+    flat = np.zeros((n_params(cfg),), np.float32)
+    for s in param_table(cfg):
+        if s.name.endswith(("_g",)):  # layernorm gains
+            val = np.ones(s.shape, np.float32)
+        elif s.name.endswith(("_b",)):  # biases
+            val = np.zeros(s.shape, np.float32)
+        elif s.name.endswith("proj_w") or s.name.endswith("fc2_w"):
+            # residual-branch projections scaled down by depth (GPT-2 paper)
+            val = rng.randn(*s.shape).astype(np.float32) * (0.02 / np.sqrt(2 * cfg.n_layer))
+        else:
+            val = rng.randn(*s.shape).astype(np.float32) * 0.02
+        flat[s.offset : s.offset + s.size] = val.reshape(-1)
+    return flat
+
+
+# --------------------------------------------------------------------------
+# transformer forward / loss
+# --------------------------------------------------------------------------
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(cfg: ModelConfig, x, p, prefix):
+    b, s, d = x.shape
+    h = cfg.n_head
+    hd = d // h
+    qkv = x @ p[prefix + "qkv_w"] + p[prefix + "qkv_b"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return y @ p[prefix + "proj_w"] + p[prefix + "proj_b"]
+
+
+def _block(cfg, x, p, i):
+    pre = f"h{i}."
+    x = x + _attention(cfg, _layernorm(x, p[pre + "ln1_g"], p[pre + "ln1_b"]), p, pre)
+    hmid = jax.nn.gelu(_layernorm(x, p[pre + "ln2_g"], p[pre + "ln2_b"]) @ p[pre + "fc_w"] + p[pre + "fc_b"])
+    return x + hmid @ p[pre + "fc2_w"] + p[pre + "fc2_b"]
+
+
+def forward(cfg: ModelConfig, flat: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Logits [B, S, vocab] for token ids [B, S] (S == cfg.seq_len)."""
+    p = unflatten(cfg, flat)
+    b, s = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :s]
+    for i in range(cfg.n_layer):
+        x = _block(cfg, x, p, i)
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["tok_emb"].T  # tied output head
+
+
+def per_example_loss(cfg: ModelConfig, flat, batch) -> jnp.ndarray:
+    """Mean next-token cross-entropy per example; batch is [B, S+1] i32."""
+    tokens, targets = batch[:, :-1], batch[:, 1:]
+    logits = forward(cfg, flat, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll, axis=-1)
+
+
+def loss_fn(cfg: ModelConfig, flat, batch) -> jnp.ndarray:
+    return jnp.mean(per_example_loss(cfg, flat, batch))
+
+
+def train_step(cfg: ModelConfig):
+    """(flat_params [P], batch [B, S+1] i32) -> (loss, flat_grads [P])."""
+
+    def f(flat, batch):
+        loss, grads = jax.value_and_grad(lambda fl: loss_fn(cfg, fl, batch))(flat)
+        return loss, grads
+
+    return f
+
+
+def eval_step(cfg: ModelConfig):
+    """(flat_params, batch) -> per-example losses [B] (PPL + probe tasks)."""
+
+    def f(flat, batch):
+        return per_example_loss(cfg, flat, batch)
+
+    return f
+
+
+# --------------------------------------------------------------------------
+# PowerSGD compression graphs (masked rank; see DESIGN.md)
+# --------------------------------------------------------------------------
+
+
+def _gram_schmidt(p: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
+    """Eps-guarded classical Gram–Schmidt; zero (masked) columns stay zero.
+
+    fori_loop keeps the lowered HLO compact (a while loop, not r unrolled
+    projection chains).
+    """
+    m, r = p.shape
+    idx = jnp.arange(r)
+
+    def body(i, q):
+        c = jnp.take(p, i, axis=1)
+        coeff = q.T @ c
+        coeff = jnp.where(idx < i, coeff, 0.0)
+        c = c - q @ coeff
+        c = c / (jnp.linalg.norm(c) + eps)
+        return jax.lax.dynamic_update_slice(q, c[:, None], (0, i))
+
+    return jax.lax.fori_loop(0, r, body, jnp.zeros_like(p))
+
+
+def ps_phase1(a, q, mask):
+    """P = A @ (Q ⊙ mask). Pallas matmul is the hot spot."""
+    return matmul_kernel.matmul(a, q * mask[None, :])
+
+
+def ps_phase2(a, p_avg, mask):
+    """After the P all-reduce: orthonormalize and project back.
+
+    Returns (P̂, Q'). Both carry the mask so the factors are exactly
+    rank-⌊Σmask⌋.
+    """
+    p_hat = _gram_schmidt(p_avg * mask[None, :])
+    q_new = matmul_kernel.matmul(a.T, p_hat) * mask[None, :]
+    return p_hat, q_new
+
+
+def ps_finalize(a, p_hat, q_avg):
+    """approx = P̂ Q_avgᵀ (the decompression); residual = A − approx.
+
+    The residual is the error-feedback memory the rust side adds to the
+    next step's gradient (PowerSGD §error feedback / Optimus-CC).
+    """
+    approx = matmul_kernel.matmul(p_hat, q_avg.T)
+    return approx, a - approx
+
+
+# --------------------------------------------------------------------------
+# GDS entropy + Adam graphs
+# --------------------------------------------------------------------------
+
+ENTROPY_SAMPLE = 65536  # fixed artifact sample size (16 Pallas chunks)
+ENTROPY_BINS = 256
+
+
+def entropy_estimate(x):
+    """(sample [ENTROPY_SAMPLE]) -> (H_hist, H_gauss, sigma, mean)."""
+    return entropy_kernel.entropy_estimate(x, nbins=ENTROPY_BINS)
+
+
+def adam_update(p, m, v, g, scalars):
+    """Fused Adam over the flat vector; scalars=[lr,b1,b2,eps,bc1,bc2]."""
+    return adam_kernel.adam_update(p, m, v, g, scalars)
+
+
+# --------------------------------------------------------------------------
+# compression shape buckets
+# --------------------------------------------------------------------------
+
+
+def grad_buckets(cfg: ModelConfig) -> List[Tuple[int, int]]:
+    """Distinct 2-D gradient-matrix shapes eligible for low-rank compression.
+
+    1-D tensors (biases, layernorms) are never compressed — same policy as
+    PowerSGD/Optimus-CC. ``pos_emb`` is compressed like any other matrix.
+    """
+    shapes = []
+    for s in param_table(cfg):
+        if len(s.shape) == 2 and s.shape not in shapes:
+            shapes.append(s.shape)
+    return shapes
+
+
+def default_rank_max(m: int, n: int) -> int:
+    """Artifact-time rank ceiling per bucket: min(m, n, 64) rounded to 4.
+
+    64 matches the paper's GPT2-12.1B default; the CQM/DAC controller
+    masks down from here at runtime.
+    """
+    r = min(m, n, 64)
+    return max(4, (r // 4) * 4)

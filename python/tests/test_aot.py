@@ -1,0 +1,72 @@
+"""AOT path: artifacts lower, manifest is consistent, HLO text is sane."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build("tiny", batch=2, out_dir=out, seed=0)
+    return out, manifest
+
+
+def test_manifest_counts(built):
+    out, man = built
+    cfg = M.PRESETS["tiny"]
+    assert man["model"]["n_params"] == M.n_params(cfg)
+    assert len(man["buckets"]) == len(M.grad_buckets(cfg))
+    # 4 core graphs + 3 per bucket
+    assert len(man["artifacts"]) == 4 + 3 * len(man["buckets"])
+    for a in man["artifacts"].values():
+        assert os.path.exists(os.path.join(out, a["file"]))
+
+
+def test_hlo_text_is_parseable_dialect(built):
+    out, man = built
+    text = open(os.path.join(out, "train_step.hlo.txt")).read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # 64-bit-id protos are the failure mode; text must carry the params
+    assert "f32[470528]" in text  # flat param vector appears
+
+
+def test_init_params_bin_roundtrip(built):
+    out, man = built
+    flat = np.fromfile(os.path.join(out, "init_params.bin"), np.float32)
+    assert flat.shape[0] == man["model"]["n_params"]
+    np.testing.assert_allclose(flat, M.init_params(M.PRESETS["tiny"], 0))
+
+
+def test_manifest_param_offsets_match_model(built):
+    _, man = built
+    table = M.param_table(M.PRESETS["tiny"])
+    assert len(man["params"]) == len(table)
+    for j, s in zip(man["params"], table):
+        assert j["name"] == s.name
+        assert tuple(j["shape"]) == s.shape
+        assert j["offset"] == s.offset
+
+
+def test_entropy_artifact_shape_contract(built):
+    _, man = built
+    assert man["entropy_sample"] == M.ENTROPY_SAMPLE
+    assert M.ENTROPY_SAMPLE % 4096 == 0
+
+
+def test_lowered_train_step_executes_in_jax(built):
+    # Sanity: the exact function that was lowered still runs and produces
+    # finite loss/grads (guards against lowering a stale signature).
+    cfg = M.PRESETS["tiny"]
+    flat = jnp.asarray(M.init_params(cfg, 0))
+    batch = jnp.zeros((2, cfg.seq_len + 1), jnp.int32)
+    loss, grads = jax.jit(M.train_step(cfg))(flat, batch)
+    assert np.isfinite(float(loss))
+    assert grads.shape == flat.shape

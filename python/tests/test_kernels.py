@@ -1,0 +1,139 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes/dtypes for the Pallas kernels and asserts
+allclose against kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adam, entropy, matmul, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rnd(shape, seed, dtype=np.float32, scale=1.0):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype(dtype) * scale)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 80),
+    n=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    a, b = rnd((m, k), seed), rnd((k, n), seed + 1)
+    np.testing.assert_allclose(
+        matmul.matmul(a, b), ref.matmul_ref(a, b), rtol=2e-4, atol=2e-5
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_matmul_bf16_inputs_accumulate_f32(seed):
+    a = rnd((64, 64), seed).astype(jnp.bfloat16)
+    b = rnd((64, 64), seed + 1).astype(jnp.bfloat16)
+    out = matmul.matmul(a, b)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(out, ref.matmul_ref(a, b), rtol=2e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 128, 64), (1, 1, 1), (3, 5, 7)])
+def test_matmul_exact_block_and_edge_shapes(m, k, n):
+    a, b = rnd((m, k), 0), rnd((k, n), 1)
+    np.testing.assert_allclose(
+        matmul.matmul(a, b), ref.matmul_ref(a, b), rtol=2e-4, atol=2e-5
+    )
+
+
+def test_matmul_zero_inputs():
+    a = jnp.zeros((16, 16))
+    assert float(jnp.abs(matmul.matmul(a, a)).max()) == 0.0
+
+
+# ---------------------------------------------------------------- entropy
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-3, 10.0))
+def test_histogram_matches_ref(seed, scale):
+    x = rnd((entropy.CHUNK * 2,), seed, scale=scale)
+    lo, hi = float(x.min()), float(x.max()) + 1e-6
+    counts = entropy.histogram(x, jnp.float32(lo), jnp.float32(hi), 64)
+    np.testing.assert_allclose(counts, ref.histogram_ref(x, lo, hi, 64))
+    assert float(counts.sum()) == x.shape[0]
+
+
+def test_gaussian_entropy_closed_form():
+    # For N(0, σ²), the histogram estimator must approach Lemma 2.
+    x = rnd((entropy.CHUNK * 16,), 7, scale=0.37)
+    h_hist, h_gauss, sigma, mean = entropy.entropy_estimate(x)
+    assert abs(float(h_gauss) - (np.log(0.37) + 0.5 * np.log(2 * np.pi * np.e))) < 2e-2
+    assert abs(float(h_hist) - float(h_gauss)) < 5e-2
+    assert abs(float(sigma) - 0.37) < 5e-3
+    assert abs(float(mean)) < 5e-3
+
+
+def test_entropy_scales_with_sigma():
+    # Lemma 2: halving σ lowers H by log 2 — the monotonicity EDGC exploits.
+    a = entropy.entropy_estimate(rnd((entropy.CHUNK * 4,), 3, scale=1.0))[0]
+    b = entropy.entropy_estimate(rnd((entropy.CHUNK * 4,), 3, scale=0.5))[0]
+    assert abs((float(a) - float(b)) - np.log(2)) < 5e-2
+
+
+def test_uniform_vs_gaussian_entropy():
+    # Uniform on [-1,1]: H = log 2 ≈ 0.693; Gaussian with same σ has more.
+    u = jnp.asarray(np.random.RandomState(0).uniform(-1, 1, entropy.CHUNK * 4).astype(np.float32))
+    h_u = float(entropy.entropy_estimate(u)[0])
+    assert abs(h_u - np.log(2)) < 6e-2
+
+
+# ---------------------------------------------------------------- adam
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 3000),
+    t=st.integers(1, 50),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adam_matches_ref(n, t, seed):
+    p, g = rnd((n,), seed), rnd((n,), seed + 1)
+    m, v = rnd((n,), seed + 2, scale=0.1), jnp.abs(rnd((n,), seed + 3, scale=0.01))
+    lr, b1, b2, eps = 3e-4, 0.9, 0.999, 1e-8
+    sc = jnp.array([lr, b1, b2, eps, 1 - b1**t, 1 - b2**t], jnp.float32)
+    p1, m1, v1 = adam.adam_update(p, m, v, g, sc)
+    pr, mr, vr = ref.adam_ref(p, m, v, g, lr, b1, b2, eps, t)
+    np.testing.assert_allclose(p1, pr, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(m1, mr, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(v1, vr, rtol=1e-5, atol=1e-7)
+
+
+def test_adam_chunked_path():
+    # Length that is an exact multiple of the kernel chunk takes the tiled path.
+    n = adam.CHUNK * 2
+    p, g = rnd((n,), 0), rnd((n,), 1)
+    m = jnp.zeros(n)
+    v = jnp.zeros(n)
+    sc = jnp.array([1e-3, 0.9, 0.999, 1e-8, 0.1, 0.001], jnp.float32)
+    p1, _, _ = adam.adam_update(p, m, v, g, sc)
+    pr, _, _ = ref.adam_ref(p, m, v, g, 1e-3, 0.9, 0.999, 1e-8, 1)
+    np.testing.assert_allclose(p1, pr, rtol=1e-4, atol=1e-6)
+
+
+def test_adam_zero_grad_keeps_params_with_zero_moments():
+    n = 128
+    p = rnd((n,), 0)
+    z = jnp.zeros(n)
+    sc = jnp.array([1e-3, 0.9, 0.999, 1e-8, 0.1, 0.001], jnp.float32)
+    p1, m1, v1 = adam.adam_update(p, z, z, z, sc)
+    np.testing.assert_allclose(p1, p, atol=1e-7)
+    assert float(jnp.abs(m1).max()) == 0.0 and float(jnp.abs(v1).max()) == 0.0

@@ -1,0 +1,120 @@
+"""Masked-rank PowerSGD graph properties (L2) vs oracle and invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+
+
+def rnd(shape, seed, scale=1.0):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype(np.float32) * scale)
+
+
+def mask_vec(r_max, r_eff):
+    return jnp.asarray((np.arange(r_max) < r_eff).astype(np.float32))
+
+
+def roundtrip(a, q, mask):
+    p = M.ps_phase1(a, q, mask)
+    p_hat, q_new = M.ps_phase2(a, p, mask)
+    approx, residual = M.ps_finalize(a, p_hat, q_new)
+    return approx, residual, p_hat, q_new
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(8, 96),
+    n=st.integers(8, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_oracle(m, n, seed):
+    r = min(m, n, 16)
+    a, q = rnd((m, n), seed), rnd((n, r), seed + 1)
+    mask = mask_vec(r, r)
+    approx, residual, p_hat, q_new = roundtrip(a, q, mask)
+    ar, rr, pr, qr = ref.powersgd_roundtrip_ref(a, q, mask)
+    np.testing.assert_allclose(approx, ar, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(residual, rr, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(p_hat, pr, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(q_new, qr, rtol=1e-3, atol=1e-4)
+
+
+def test_error_feedback_identity():
+    # approx + residual == A exactly (up to float addition) — the invariant
+    # error feedback relies on.
+    a, q = rnd((64, 48), 0), rnd((48, 16), 1)
+    approx, residual, _, _ = roundtrip(a, q, mask_vec(16, 16))
+    np.testing.assert_allclose(approx + residual, a, rtol=1e-5, atol=1e-5)
+
+
+def test_masked_rank_is_exact():
+    # With mask r_eff < r_max, the reconstruction must have numerical rank
+    # exactly r_eff and the factor columns beyond r_eff must be zero.
+    a, q = rnd((64, 64), 2), rnd((64, 32), 3)
+    for r_eff in (4, 8, 16):
+        approx, _, p_hat, q_new = roundtrip(a, q, mask_vec(32, r_eff))
+        sv = np.linalg.svd(np.asarray(approx), compute_uv=False)
+        assert (sv > 1e-4 * sv[0]).sum() <= r_eff
+        assert float(jnp.abs(p_hat[:, r_eff:]).max()) < 1e-6
+        assert float(jnp.abs(q_new[:, r_eff:]).max()) < 1e-6
+
+
+def test_orthonormal_active_columns():
+    a, q = rnd((80, 40), 4), rnd((40, 24), 5)
+    _, _, p_hat, _ = roundtrip(a, q, mask_vec(24, 12))
+    g = np.asarray(p_hat[:, :12].T @ p_hat[:, :12])
+    np.testing.assert_allclose(g, np.eye(12), atol=1e-4)
+
+
+def test_error_decreases_with_rank():
+    # Rank–error tradeoff (paper Fig. 10 phenomenon 2): bigger rank, lower
+    # compression error on the same matrix.
+    a = rnd((96, 96), 6)
+    errs = []
+    for r_eff in (2, 4, 8, 16, 32):
+        q = rnd((96, 32), 7)
+        _, residual, _, _ = roundtrip(a, q, mask_vec(32, r_eff))
+        errs.append(float(jnp.linalg.norm(residual)))
+    assert all(errs[i] > errs[i + 1] for i in range(len(errs) - 1)), errs
+
+
+def test_power_iteration_improves_approximation():
+    # Re-using Q (warm start) across two rounds must not hurt: power
+    # iteration converges toward the top singular subspace.
+    a = rnd((64, 64), 8)
+    q = rnd((64, 8), 9)
+    mask = mask_vec(8, 8)
+    _, res1, _, q1 = roundtrip(a, q, mask)
+    _, res2, _, _ = roundtrip(a, q1, mask)
+    assert float(jnp.linalg.norm(res2)) <= float(jnp.linalg.norm(res1)) * 1.01
+
+
+def test_multi_worker_averaging_equivalence():
+    # Averaging P/Q factors across workers (what the rust all-reduce does)
+    # equals compressing the averaged matrix when workers share Q — the
+    # PowerSGD linearity property that makes factor all-reduce valid.
+    k = 4
+    mats = [rnd((48, 32), 10 + i) for i in range(k)]
+    q = rnd((32, 8), 20)
+    mask = mask_vec(8, 8)
+    # factor-averaged path
+    ps = [M.ps_phase1(a, q, mask) for a in mats]
+    p_avg = sum(ps) / k
+    a_mean = sum(mats) / k
+    p_hat, q_new = M.ps_phase2(a_mean, p_avg, mask)
+    approx_factor, _ = M.ps_finalize(a_mean, p_hat, q_new)
+    # direct path on the averaged matrix
+    approx_direct, _, _, _ = roundtrip(a_mean, q, mask)
+    np.testing.assert_allclose(approx_factor, approx_direct, rtol=1e-3, atol=1e-4)
+
+
+def test_zero_matrix_safe():
+    # eps-guarded Gram–Schmidt must not NaN on an all-zero gradient.
+    a = jnp.zeros((32, 32))
+    q = rnd((32, 8), 11)
+    approx, residual, p_hat, q_new = roundtrip(a, q, mask_vec(8, 8))
+    for t in (approx, residual, p_hat, q_new):
+        assert np.isfinite(np.asarray(t)).all()
+    assert float(jnp.abs(approx).max()) == 0.0

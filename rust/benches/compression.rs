@@ -1,0 +1,28 @@
+//! Bench: PowerSGD compression hot path (host backend) across the tiny
+//! model's real shape buckets and ranks — the L3-side cost that Eq. 2
+//! trades against network time. Feeds EXPERIMENTS.md §Perf.
+
+use edgc::compress::TensorCompressor;
+use edgc::util::bench::BenchSet;
+use edgc::util::rng::Rng;
+
+fn main() {
+    let mut set = BenchSet::new("compression");
+    for &(m, n) in &[(512usize, 128usize), (128, 512), (128, 384)] {
+        let mut rng = Rng::new(1);
+        let g: Vec<f32> = rng.normal_vec(m * n, 0.02);
+        for &r in &[8usize, 32, 64] {
+            let mut c = TensorCompressor::new(m, n, 64, 1, true, &mut rng);
+            set.run(&format!("round_host_{m}x{n}_r{r}"), || {
+                std::hint::black_box(c.round_host(&[&g], r));
+            });
+        }
+    }
+    // uncompressed baseline for the same volume
+    let mut rng = Rng::new(2);
+    let g1: Vec<f32> = rng.normal_vec(512 * 128, 0.02);
+    let g2: Vec<f32> = rng.normal_vec(512 * 128, 0.02);
+    set.run("allreduce_mean_512x128_dp2", || {
+        std::hint::black_box(edgc::compress::allreduce_mean(&[&g1, &g2]));
+    });
+}

@@ -1,0 +1,26 @@
+//! Bench: CQM math on the controller hot path — g(r), g⁻¹, the Theorem-3
+//! rank update, and the Monte-Carlo variant it replaces.
+
+use edgc::cqm;
+use edgc::util::bench::BenchSet;
+use edgc::util::rng::Rng;
+
+fn main() {
+    let mut set = BenchSet::new("cqm");
+    let (m, n) = (1920usize, 7680usize);
+    // warm the quantile cache once so the bench measures steady state
+    let _ = cqm::g(32.0, m, n);
+    set.run("g_cached", || {
+        std::hint::black_box(cqm::g(32.0, m, n));
+    });
+    set.run("g_inv", || {
+        std::hint::black_box(cqm::g_inv(1500.0, m, n));
+    });
+    set.run("rank_for_entropy_change", || {
+        std::hint::black_box(cqm::rank_for_entropy_change(64.0, 4.0, 3.7, m, n));
+    });
+    let mut rng = Rng::new(4);
+    set.run("g_monte_carlo_100trials_small", || {
+        std::hint::black_box(cqm::g_monte_carlo(16, 64, 256, &mut rng, 100));
+    });
+}

@@ -1,0 +1,23 @@
+//! Bench: GDS entropy estimation — Table V's cost-vs-β measurement on a
+//! full tiny-model gradient-sized buffer (470k floats).
+
+use edgc::entropy;
+use edgc::util::bench::BenchSet;
+use edgc::util::rng::Rng;
+
+fn main() {
+    let mut set = BenchSet::new("entropy");
+    let mut rng = Rng::new(3);
+    let grad: Vec<f32> = rng.normal_vec(470_528, 0.02);
+    let mut buf = Vec::new();
+    for &beta in &[1.0, 0.5, 0.25, 0.05] {
+        set.run(&format!("estimate_beta{beta}"), || {
+            entropy::subsample(&grad, beta, 0, &mut buf);
+            std::hint::black_box(entropy::estimate(&buf));
+        });
+    }
+    set.run("subsample_only_beta0.25", || {
+        entropy::subsample(&grad, 0.25, 0, &mut buf);
+        std::hint::black_box(buf.len());
+    });
+}

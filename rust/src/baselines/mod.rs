@@ -1,0 +1,107 @@
+//! Baseline compression policies (paper §V-A):
+//!
+//! * **Megatron-LM** — no compression, ever.
+//! * **PowerSGD** — fixed rank from step 0 (static low-rank; this is the
+//!   configuration whose early-training damage the paper's Table III
+//!   PPL gap demonstrates).
+//! * **Optimus-CC** — fixed rank with error feedback, but compression is
+//!   phase-selective: it only starts after a fixed warm-up fraction of
+//!   iterations (we use the same 10% default the paper applies to EDGC's
+//!   floor), which is why it preserves PPL where PowerSGD does not.
+//!
+//! EDGC's dynamic policy lives in [`crate::coordinator::dac`]; the
+//! trainer dispatches through [`ranks_for`] so every method shares the
+//! same training loop, all-reduce engine and virtual clock.
+
+use crate::config::Method;
+use crate::coordinator::dac::Dac;
+
+/// Warm-up length used by Optimus-CC's phase-selective compression.
+pub fn optimus_warmup_steps(total_steps: usize) -> usize {
+    (total_steps as f64 * 0.10).ceil() as usize
+}
+
+/// The per-step rank decision for a method. `None` = uncompressed step.
+/// For EDGC, `dac` must be the controller owned by the trainer.
+pub fn ranks_for(
+    method: Method,
+    step: usize,
+    total_steps: usize,
+    stages: usize,
+    dac: Option<&Dac>,
+) -> Option<Vec<usize>> {
+    match method {
+        Method::Megatron => None,
+        Method::FixedRank(r) => Some(vec![r; stages]),
+        Method::OptimusCc(r) => {
+            if step < optimus_warmup_steps(total_steps) {
+                None
+            } else {
+                Some(vec![r; stages])
+            }
+        }
+        Method::Edgc => dac.and_then(|d| d.stage_ranks()),
+    }
+}
+
+/// Does this method use error feedback? (PowerSGD and Optimus-CC do;
+/// plain Megatron has nothing to feed back; EDGC does, per §VII.)
+pub fn uses_error_feedback(method: Method) -> bool {
+    !matches!(method, Method::Megatron)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EdgcParams;
+    use crate::coordinator::dac::{Dac, RankBounds};
+    use crate::netsim::LinearCommModel;
+
+    #[test]
+    fn megatron_never_compresses() {
+        for step in [0, 100, 10_000] {
+            assert_eq!(ranks_for(Method::Megatron, step, 1000, 4, None), None);
+        }
+    }
+
+    #[test]
+    fn powersgd_compresses_from_step_zero() {
+        assert_eq!(ranks_for(Method::FixedRank(64), 0, 1000, 4, None), Some(vec![64; 4]));
+    }
+
+    #[test]
+    fn optimus_cc_waits_out_warmup() {
+        let total = 1000;
+        assert_eq!(ranks_for(Method::OptimusCc(128), 0, total, 4, None), None);
+        assert_eq!(ranks_for(Method::OptimusCc(128), 99, total, 4, None), None);
+        assert_eq!(ranks_for(Method::OptimusCc(128), 100, total, 4, None), Some(vec![128; 4]));
+    }
+
+    #[test]
+    fn edgc_defers_to_dac() {
+        let mut dac = Dac::new(
+            EdgcParams { window: 10, ..Default::default() },
+            RankBounds { r_min: 8, r_max: 64 },
+            512,
+            128,
+            LinearCommModel { eta: 1e-4, mape: 0.0 },
+            1e-3,
+            4,
+            100,
+        );
+        assert_eq!(ranks_for(Method::Edgc, 5, 100, 4, Some(&dac)), None);
+        dac.on_window(10, 4.0);
+        dac.on_window(20, 3.9);
+        dac.on_window(25, 3.85);
+        let ranks = ranks_for(Method::Edgc, 30, 100, 4, Some(&dac)).unwrap();
+        assert_eq!(ranks.len(), 4);
+    }
+
+    #[test]
+    fn error_feedback_policy() {
+        assert!(!uses_error_feedback(Method::Megatron));
+        assert!(uses_error_feedback(Method::FixedRank(4)));
+        assert!(uses_error_feedback(Method::OptimusCc(4)));
+        assert!(uses_error_feedback(Method::Edgc));
+    }
+}

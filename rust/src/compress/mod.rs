@@ -1,0 +1,412 @@
+//! PowerSGD low-rank compression engine (the paper's compression
+//! substrate, §II-B) with masked dynamic rank, warm-started Q, and
+//! per-replica error feedback.
+//!
+//! Two interchangeable execution paths with identical semantics:
+//!
+//! * the **host path** here (pure rust over [`Mat`]) — used by the
+//!   simulation sweeps and as the in-tree oracle;
+//! * the **artifact path** in the coordinator (PJRT executables
+//!   `ps_phase1/ps_phase2/ps_finalize_*` lowered from the Pallas-backed
+//!   L2 graphs) — used on the real training hot loop.
+//!
+//! Integration tests assert both paths agree on the same inputs.
+//!
+//! Protocol per tensor per step (PowerSGD, Vogels et al. 2019):
+//! each DP replica i holds gradient Gᵢ and error memory Eᵢ.
+//!   1. Mᵢ = Gᵢ + Eᵢ (error feedback)
+//!   2. Pᵢ = Mᵢ·(Q⊙mask)            → all-reduce mean P
+//!   3. P̂ = orth(P̄);  Q'ᵢ = Mᵢᵀ·P̂  → all-reduce mean Q'
+//!   4. Ĝ = P̂·Q̄'ᵀ (every replica);  Eᵢ = Mᵢ − Ĝ;  Q ← Q̄' (warm start)
+//!
+//! Communication volume per replica: r_eff·(m+n) floats vs m·n
+//! uncompressed — the quantity the netsim layer prices.
+
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+/// Bytes-on-the-wire accounting for one tensor round.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Volume {
+    /// Floats all-reduced with compression (P plus Q', per replica).
+    pub compressed: usize,
+    /// Floats an uncompressed all-reduce would have moved (m·n).
+    pub original: usize,
+}
+
+impl Volume {
+    pub fn ratio(&self) -> f64 {
+        self.original as f64 / self.compressed.max(1) as f64
+    }
+}
+
+/// Result of one compressed all-reduce round for one tensor.
+#[derive(Clone, Debug)]
+pub struct Round {
+    /// The decompressed averaged gradient ĜĜ (length m·n), row-major.
+    pub approx: Vec<f32>,
+    /// ‖M̄ − Ĝ‖_F / ‖M̄‖_F — the relative compression error (Fig. 10).
+    pub rel_error: f64,
+    pub volume: Volume,
+    pub rank_used: usize,
+}
+
+/// Per-tensor PowerSGD state shared across steps.
+#[derive(Clone, Debug)]
+pub struct TensorCompressor {
+    pub m: usize,
+    pub n: usize,
+    pub r_max: usize,
+    /// Warm-started projection matrix (n × r_max).
+    pub q: Mat,
+    /// Per-replica error-feedback memories (each m·n), present iff EF on.
+    pub errors: Vec<Vec<f32>>,
+    pub error_feedback: bool,
+    /// Deterministic stream for re-seeding dead Q columns (see
+    /// [`TensorCompressor::ensure_active_columns`]).
+    reseed: Rng,
+}
+
+impl TensorCompressor {
+    pub fn new(
+        m: usize,
+        n: usize,
+        r_max: usize,
+        replicas: usize,
+        error_feedback: bool,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(r_max <= m.min(n).max(1), "r_max {r_max} over min({m},{n})");
+        TensorCompressor {
+            m,
+            n,
+            r_max,
+            q: Mat::randn(n, r_max, 1.0, rng),
+            errors: if error_feedback { vec![vec![0.0; m * n]; replicas] } else { vec![] },
+            error_feedback,
+            reseed: rng.fork(0x5EED),
+        }
+    }
+
+    /// Re-seed dead (≈zero) columns among the first `r_eff` of Q.
+    ///
+    /// After the rank decreases, masked columns are stored as zeros; if
+    /// the DAC later *raises* the rank (entropy went back up), those
+    /// columns would stay zero forever under the eps-guarded
+    /// orthogonalization and contribute nothing. Fresh random directions
+    /// restore full rank-r expressiveness (any random init is valid
+    /// PowerSGD warm start). Called by both execution backends.
+    pub fn ensure_active_columns(&mut self, r_eff: usize) {
+        let r = r_eff.clamp(1, self.r_max);
+        for c in 0..r {
+            let mut norm2 = 0.0f64;
+            for row in 0..self.n {
+                let v = self.q.at(row, c) as f64;
+                norm2 += v * v;
+            }
+            if norm2 < 1e-18 {
+                for row in 0..self.n {
+                    *self.q.at_mut(row, c) = self.reseed.normal() as f32;
+                }
+            }
+        }
+    }
+
+    /// Column mask for an effective rank (clamped to [1, r_max]).
+    pub fn mask(&self, r_eff: usize) -> Vec<f32> {
+        let r = r_eff.clamp(1, self.r_max);
+        (0..self.r_max).map(|i| if i < r { 1.0 } else { 0.0 }).collect()
+    }
+
+    /// First `r_eff` columns of the warm Q (host path computes only the
+    /// active columns — equivalent to the artifact path's column mask,
+    /// §Perf: r_eff/r_max of the GEMM cost).
+    fn active_q(&self, r_eff: usize) -> Mat {
+        let mut q = Mat::zeros(self.n, r_eff);
+        for row in 0..self.n {
+            for c in 0..r_eff {
+                *q.at_mut(row, c) = self.q.at(row, c);
+            }
+        }
+        q
+    }
+
+    /// One full compressed all-reduce round on the host path.
+    ///
+    /// `grads[i]` is replica i's gradient (row-major m×n). Returns the
+    /// averaged decompressed gradient; updates Q and error memories.
+    pub fn round_host(&mut self, grads: &[&[f32]], r_eff: usize) -> Round {
+        let k = grads.len();
+        assert!(k > 0);
+        let r_eff = r_eff.clamp(1, self.r_max);
+        let (m, n) = (self.m, self.n);
+        for g in grads {
+            assert_eq!(g.len(), m * n);
+        }
+        self.ensure_active_columns(r_eff);
+
+        // 1. error feedback: Mᵢ = Gᵢ + Eᵢ
+        let ms: Vec<Mat> = (0..k)
+            .map(|i| {
+                let mut d = grads[i].to_vec();
+                if self.error_feedback {
+                    for (x, e) in d.iter_mut().zip(&self.errors[i]) {
+                        *x += e;
+                    }
+                }
+                Mat::from_vec(m, n, d)
+            })
+            .collect();
+
+        // 2. Pᵢ = Mᵢ·Q_active ; all-reduce mean (active columns only)
+        let qm = self.active_q(r_eff);
+        let mut p_avg = Mat::zeros(m, r_eff);
+        for mi in &ms {
+            p_avg.add_assign(&mi.matmul(&qm));
+        }
+        p_avg.scale(1.0 / k as f32);
+
+        // 3. P̂ = orth(P̄) ; Q'ᵢ = Mᵢᵀ·P̂ ; all-reduce mean
+        let p_hat = p_avg.gram_schmidt(1e-8);
+        let mut q_avg = Mat::zeros(n, r_eff);
+        for mi in &ms {
+            q_avg.add_assign(&mi.t().matmul(&p_hat));
+        }
+        q_avg.scale(1.0 / k as f32);
+
+        // 4. decompress + error update + warm start. One fused pass
+        // computes the mean-gradient norms for rel_error and the
+        // per-replica EF residuals (§Perf: avoids two extra m·n sweeps
+        // and the diff allocation).
+        let approx = p_hat.matmul(&q_avg.t());
+        let inv_k = 1.0f64 / k as f64;
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for j in 0..m * n {
+            let mut mm = 0.0f64;
+            for mi in &ms {
+                mm += mi.data[j] as f64;
+            }
+            mm *= inv_k;
+            let d = mm - approx.data[j] as f64;
+            num += d * d;
+            den += mm * mm;
+        }
+        let rel_error = num.sqrt() / den.sqrt().max(1e-30);
+
+        if self.error_feedback {
+            for (i, mi) in ms.iter().enumerate() {
+                for j in 0..m * n {
+                    self.errors[i][j] = mi.data[j] - approx.data[j];
+                }
+            }
+        }
+        // warm start: write the active columns back; columns ≥ r_eff keep
+        // their previous directions so a later rank increase warm-starts
+        // from something useful.
+        for row in 0..n {
+            for c in 0..r_eff {
+                *self.q.at_mut(row, c) = q_avg.at(row, c);
+            }
+        }
+
+        Round {
+            approx: approx.data,
+            rel_error,
+            volume: Volume { compressed: r_eff * (m + n), original: m * n },
+            rank_used: r_eff,
+        }
+    }
+
+    /// Reset error memories (e.g. when switching compression on/off).
+    pub fn reset_errors(&mut self) {
+        for e in &mut self.errors {
+            e.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+}
+
+/// Uncompressed all-reduce (Megatron baseline): plain mean + full volume.
+pub fn allreduce_mean(grads: &[&[f32]]) -> (Vec<f32>, Volume) {
+    let k = grads.len();
+    assert!(k > 0);
+    let n = grads[0].len();
+    let mut out = vec![0.0f32; n];
+    for g in grads {
+        assert_eq!(g.len(), n);
+        for (o, &x) in out.iter_mut().zip(g.iter()) {
+            *o += x;
+        }
+    }
+    let inv = 1.0 / k as f32;
+    out.iter_mut().for_each(|x| *x *= inv);
+    (out, Volume { compressed: n, original: n })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randmat(m: usize, n: usize, seed: u64) -> Vec<f32> {
+        Rng::new(seed).normal_vec(m * n, 1.0)
+    }
+
+    #[test]
+    fn single_replica_reduces_error_with_rank() {
+        let (m, n) = (48, 40);
+        let g = randmat(m, n, 1);
+        let mut errs = Vec::new();
+        for &r in &[2usize, 8, 24] {
+            let mut rng = Rng::new(2);
+            let mut c = TensorCompressor::new(m, n, 24, 1, false, &mut rng);
+            let round = c.round_host(&[&g], r);
+            errs.push(round.rel_error);
+            assert_eq!(round.rank_used, r);
+            assert_eq!(round.volume.original, m * n);
+            assert_eq!(round.volume.compressed, r * (m + n));
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn error_feedback_accumulates_what_was_lost() {
+        let (m, n) = (32, 32);
+        let g = randmat(m, n, 3);
+        let mut rng = Rng::new(4);
+        let mut c = TensorCompressor::new(m, n, 8, 1, true, &mut rng);
+        let round = c.round_host(&[&g], 8);
+        // E = M − Ĝ must equal the reconstruction residual exactly.
+        let mut want = g.clone();
+        for (w, a) in want.iter_mut().zip(&round.approx) {
+            *w -= a;
+        }
+        for (e, w) in c.errors[0].iter().zip(&want) {
+            assert!((e - w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn error_feedback_recovers_energy_over_steps() {
+        // Feeding the same gradient repeatedly: with EF the cumulative
+        // applied update (sum of approx) must converge to step·G.
+        let (m, n) = (24, 24);
+        let g = randmat(m, n, 5);
+        let mut rng = Rng::new(6);
+        let mut c = TensorCompressor::new(m, n, 4, 1, true, &mut rng);
+        let mut applied = vec![0.0f32; m * n];
+        let steps = 30;
+        for _ in 0..steps {
+            let r = c.round_host(&[&g], 4);
+            for (a, x) in applied.iter_mut().zip(&r.approx) {
+                *a += x;
+            }
+        }
+        let target: Vec<f32> = g.iter().map(|x| x * steps as f32).collect();
+        let num: f64 = applied
+            .iter()
+            .zip(&target)
+            .map(|(a, t)| ((a - t) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let den: f64 = target.iter().map(|t| (*t as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(num / den < 0.15, "relative drift {}", num / den);
+    }
+
+    #[test]
+    fn warm_q_improves_over_cold() {
+        let (m, n) = (40, 40);
+        let g = randmat(m, n, 7);
+        let mut rng = Rng::new(8);
+        let mut c = TensorCompressor::new(m, n, 6, 1, false, &mut rng);
+        let e1 = c.round_host(&[&g], 6).rel_error;
+        let e2 = c.round_host(&[&g], 6).rel_error; // Q warm-started now
+        assert!(e2 <= e1 * 1.001, "e1={e1} e2={e2}");
+    }
+
+    #[test]
+    fn multi_replica_mean_matches_direct_average() {
+        let (m, n) = (16, 20);
+        let g1 = randmat(m, n, 9);
+        let g2 = randmat(m, n, 10);
+        // full rank => approx should be ~exact mean
+        let mut rng = Rng::new(11);
+        let mut c = TensorCompressor::new(m, n, 16, 2, false, &mut rng);
+        let round = c.round_host(&[&g1, &g2], 16);
+        for (i, a) in round.approx.iter().enumerate() {
+            let want = 0.5 * (g1[i] + g2[i]);
+            assert!((a - want).abs() < 1e-3, "i={i} {a} vs {want}");
+        }
+        assert!(round.rel_error < 1e-3);
+    }
+
+    #[test]
+    fn mask_shapes() {
+        let mut rng = Rng::new(12);
+        let c = TensorCompressor::new(8, 8, 8, 1, false, &mut rng);
+        assert_eq!(c.mask(3), vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(c.mask(0)[0], 1.0); // clamped to 1
+        assert_eq!(c.mask(99).iter().sum::<f32>(), 8.0);
+    }
+
+    #[test]
+    fn allreduce_mean_baseline() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 6.0];
+        let (mean, vol) = allreduce_mean(&[&a, &b]);
+        assert_eq!(mean, vec![2.0, 4.0]);
+        assert_eq!(vol.ratio(), 1.0);
+    }
+
+    #[test]
+    fn zero_gradient_stable() {
+        let (m, n) = (12, 12);
+        let z = vec![0.0f32; m * n];
+        let mut rng = Rng::new(13);
+        let mut c = TensorCompressor::new(m, n, 4, 1, true, &mut rng);
+        let r = c.round_host(&[&z], 4);
+        assert!(r.approx.iter().all(|x| x.abs() < 1e-6));
+        assert!(r.rel_error.is_finite());
+    }
+
+    #[test]
+    fn volume_ratio_example() {
+        // 512x128 at rank 32: 65536 -> 20480 floats = 3.2x (quickstart).
+        let v = Volume { compressed: 32 * (512 + 128), original: 512 * 128 };
+        assert!((v.ratio() - 3.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_can_rise_again_after_falling() {
+        // Regression: after running at a low rank, the masked columns of
+        // Q are zero; a later rank increase must still achieve the higher
+        // rank's accuracy (dead columns get re-seeded).
+        let (m, n) = (48, 48);
+        let g = randmat(m, n, 21);
+        let mut rng = Rng::new(22);
+        let mut c = TensorCompressor::new(m, n, 16, 1, false, &mut rng);
+        let e_16_fresh = c.clone().round_host(&[&g], 16).rel_error;
+        for _ in 0..3 {
+            c.round_host(&[&g], 4); // drive at low rank
+        }
+        let e4 = c.round_host(&[&g], 4).rel_error;
+        // rise back to 16: error must return to (near) the rank-16 level
+        let mut e16 = f64::INFINITY;
+        for _ in 0..3 {
+            e16 = c.round_host(&[&g], 16).rel_error;
+        }
+        assert!(e16 < e4 * 0.8, "rank rise ineffective: e4={e4} e16={e16}");
+        assert!(e16 < e_16_fresh * 1.2, "should recover rank-16 quality");
+    }
+
+    #[test]
+    fn reset_errors_zeroes_memory() {
+        let (m, n) = (8, 8);
+        let g = randmat(m, n, 14);
+        let mut rng = Rng::new(15);
+        let mut c = TensorCompressor::new(m, n, 2, 1, true, &mut rng);
+        c.round_host(&[&g], 2);
+        assert!(c.errors[0].iter().any(|x| x.abs() > 1e-6));
+        c.reset_errors();
+        assert!(c.errors[0].iter().all(|&x| x == 0.0));
+    }
+}

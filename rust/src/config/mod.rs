@@ -1,0 +1,410 @@
+//! Config system: a TOML-subset parser (offline registry: no `toml`
+//! crate) plus the typed training/experiment configuration with paper
+//! presets.
+//!
+//! Supported TOML subset — everything our preset files use:
+//! `[section]` and `[a.b]` headers, `key = value` with string / integer /
+//! float / bool / homogeneous scalar arrays, `#` comments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::netsim::{Cluster, CLUSTER1_V100, CLUSTER2_H100, CLUSTER3_SCALING};
+
+/// A scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Int(i) => Ok(*i as f64),
+            Value::Float(f) => Ok(*f),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Ok(*i as usize),
+            _ => bail!("not a non-negative integer: {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+}
+
+/// Flat `section.key -> value` map.
+#[derive(Clone, Debug, Default)]
+pub struct Toml {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: malformed section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            let value = parse_value(line[eq + 1..].trim())
+                .with_context(|| format!("line {}", lineno + 1))?;
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            entries.insert(full, value);
+        }
+        Ok(Toml { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        self.get(key).map(|v| v.as_f64()).transpose().map(|o| o.unwrap_or(default))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        self.get(key).map(|v| v.as_usize()).transpose().map(|o| o.unwrap_or(default))
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        Ok(self.get(key).map(|v| v.as_str()).transpose()?.unwrap_or(default).to_string())
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        self.get(key).map(|v| v.as_bool()).transpose().map(|o| o.unwrap_or(default))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(stripped) = s.strip_prefix('"') {
+        let end = stripped.rfind('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(stripped[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            bail!("unterminated array");
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                let p = part.trim();
+                if p.is_empty() {
+                    continue;
+                }
+                items.push(parse_value(p)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+// ---------------------------------------------------------------- typed
+
+/// Which compression strategy a run uses (§V baselines + EDGC).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Megatron-LM: no compression.
+    Megatron,
+    /// PowerSGD at a fixed rank for the whole run.
+    FixedRank(usize),
+    /// Optimus-CC: fixed rank + error feedback, compressing only after a
+    /// fixed warm-up fraction (stage-selective phase compression).
+    OptimusCc(usize),
+    /// EDGC: entropy-driven dynamic rank (this paper).
+    Edgc,
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Megatron => "megatron".into(),
+            Method::FixedRank(r) => format!("powersgd-r{r}"),
+            Method::OptimusCc(r) => format!("optimus-cc-r{r}"),
+            Method::Edgc => "edgc".into(),
+        }
+    }
+
+    pub fn parse(s: &str, rank: usize) -> Result<Method> {
+        Ok(match s {
+            "megatron" | "none" => Method::Megatron,
+            "powersgd" | "fixed" => Method::FixedRank(rank),
+            "optimus-cc" | "optimus" => Method::OptimusCc(rank),
+            "edgc" => Method::Edgc,
+            other => bail!("unknown method {other:?}"),
+        })
+    }
+}
+
+/// EDGC controller parameters (paper defaults annotated).
+#[derive(Clone, Copy, Debug)]
+pub struct EdgcParams {
+    /// ISR α (paper: 0.1).
+    pub alpha: f64,
+    /// GSR β (paper: 0.25).
+    pub beta: f64,
+    /// Window size w in iterations (paper: 1000; scaled down for small runs).
+    pub window: usize,
+    /// Max per-window rank adjustment s (Constraint 2).
+    pub step_limit: usize,
+    /// Minimum warm-up fraction of total iterations (paper: 10%).
+    pub min_warmup_frac: f64,
+    /// Algorithm-2 stage alignment (the Fig. 14 ablation disables it:
+    /// all stages then share the stage-1 rank).
+    pub stage_aligned: bool,
+}
+
+impl Default for EdgcParams {
+    fn default() -> Self {
+        EdgcParams {
+            alpha: 0.1,
+            beta: 0.25,
+            window: 1000,
+            step_limit: 8,
+            min_warmup_frac: 0.1,
+            stage_aligned: true,
+        }
+    }
+}
+
+/// A full training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Artifact directory (e.g. "artifacts/tiny").
+    pub artifacts: String,
+    pub steps: usize,
+    pub dp: usize,
+    pub pp: usize,
+    pub tp: usize,
+    pub microbatches: usize,
+    pub lr: f64,
+    pub seed: u64,
+    pub method: Method,
+    pub edgc: EdgcParams,
+    pub cluster: Cluster,
+    /// Corpus size in tokens.
+    pub corpus_tokens: usize,
+    /// Simulated (paper-scale) model size for the virtual clock. The
+    /// numerics train the artifact model; the time axis prices this one
+    /// (DESIGN.md §Hardware-Adaptation). Defaults to GPT2-2.5B.
+    pub sim_params: usize,
+    /// Simulated per-replica tokens per iteration (paper batch geometry).
+    pub sim_tokens: usize,
+    /// Evaluate validation loss every k steps (0 = never).
+    pub eval_every: usize,
+    /// Output directory for metrics tables.
+    pub out_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifacts: "artifacts/tiny".into(),
+            steps: 200,
+            dp: 2,
+            pp: 4,
+            tp: 4,
+            microbatches: 8,
+            lr: 1e-3,
+            seed: 0,
+            method: Method::Edgc,
+            edgc: EdgcParams::default(),
+            cluster: CLUSTER1_V100,
+            corpus_tokens: 400_000,
+            sim_params: 2_500_000_000,
+            sim_tokens: 32 * 1024,
+            eval_every: 25,
+            out_dir: "runs".into(),
+        }
+    }
+}
+
+pub fn cluster_by_name(name: &str) -> Result<Cluster> {
+    Ok(match name {
+        "cluster1" | "v100" => CLUSTER1_V100,
+        "cluster2" | "h100" => CLUSTER2_H100,
+        "cluster3" | "scaling" => CLUSTER3_SCALING,
+        other => bail!("unknown cluster {other:?} (cluster1|cluster2|cluster3)"),
+    })
+}
+
+impl TrainConfig {
+    /// Load from a TOML file; missing keys keep defaults.
+    pub fn from_toml(text: &str) -> Result<TrainConfig> {
+        let t = Toml::parse(text)?;
+        let mut c = TrainConfig::default();
+        c.artifacts = t.str_or("run.artifacts", &c.artifacts)?;
+        c.steps = t.usize_or("run.steps", c.steps)?;
+        c.seed = t.usize_or("run.seed", c.seed as usize)? as u64;
+        c.lr = t.f64_or("run.lr", c.lr)?;
+        c.eval_every = t.usize_or("run.eval_every", c.eval_every)?;
+        c.corpus_tokens = t.usize_or("run.corpus_tokens", c.corpus_tokens)?;
+        c.out_dir = t.str_or("run.out_dir", &c.out_dir)?;
+        c.dp = t.usize_or("parallel.dp", c.dp)?;
+        c.pp = t.usize_or("parallel.pp", c.pp)?;
+        c.tp = t.usize_or("parallel.tp", c.tp)?;
+        c.microbatches = t.usize_or("parallel.microbatches", c.microbatches)?;
+        let rank = t.usize_or("compress.rank", 64)?;
+        c.method = Method::parse(&t.str_or("compress.method", "edgc")?, rank)?;
+        c.edgc.alpha = t.f64_or("edgc.alpha", c.edgc.alpha)?;
+        c.edgc.beta = t.f64_or("edgc.beta", c.edgc.beta)?;
+        c.edgc.window = t.usize_or("edgc.window", c.edgc.window)?;
+        c.edgc.step_limit = t.usize_or("edgc.step_limit", c.edgc.step_limit)?;
+        c.edgc.min_warmup_frac = t.f64_or("edgc.min_warmup_frac", c.edgc.min_warmup_frac)?;
+        c.edgc.stage_aligned = t.bool_or("edgc.stage_aligned", c.edgc.stage_aligned)?;
+        c.cluster = cluster_by_name(&t.str_or("cluster.preset", "cluster1")?)?;
+        c.sim_params = t.usize_or("cluster.sim_params", c.sim_params)?;
+        c.sim_tokens = t.usize_or("cluster.sim_tokens", c.sim_tokens)?;
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# paper cluster 1 run
+[run]
+artifacts = "artifacts/small"
+steps = 500
+lr = 0.0005
+
+[parallel]
+dp = 2
+pp = 4
+microbatches = 8
+
+[compress]
+method = "optimus-cc"
+rank = 128
+
+[edgc]
+window = 50
+alpha = 0.25
+
+[cluster]
+preset = "cluster1"
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let t = Toml::parse(SAMPLE).unwrap();
+        assert_eq!(t.get("run.steps"), Some(&Value::Int(500)));
+        assert_eq!(t.get("run.lr"), Some(&Value::Float(0.0005)));
+        assert_eq!(t.get("compress.method"), Some(&Value::Str("optimus-cc".into())));
+    }
+
+    #[test]
+    fn parse_arrays_and_bools() {
+        let t = Toml::parse("xs = [1, 2, 3]\nok = true\nname = \"a#b\" # trailing").unwrap();
+        assert_eq!(
+            t.get("xs"),
+            Some(&Value::Arr(vec![Value::Int(1), Value::Int(2), Value::Int(3)]))
+        );
+        assert_eq!(t.get("ok"), Some(&Value::Bool(true)));
+        assert_eq!(t.get("name"), Some(&Value::Str("a#b".into())));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Toml::parse("[unclosed").is_err());
+        assert!(Toml::parse("novalue").is_err());
+        assert!(Toml::parse("x = ").is_err());
+        assert!(Toml::parse("x = [1, 2").is_err());
+    }
+
+    #[test]
+    fn train_config_from_toml() {
+        let c = TrainConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(c.steps, 500);
+        assert_eq!(c.method, Method::OptimusCc(128));
+        assert_eq!(c.edgc.window, 50);
+        assert!((c.edgc.alpha - 0.25).abs() < 1e-12);
+        assert_eq!(c.edgc.beta, 0.25); // default retained
+        assert_eq!(c.cluster.name, "cluster1-v100-32gbps");
+    }
+
+    #[test]
+    fn train_config_defaults_on_empty() {
+        let c = TrainConfig::from_toml("").unwrap();
+        assert_eq!(c.steps, TrainConfig::default().steps);
+        assert_eq!(c.method, Method::Edgc);
+    }
+
+    #[test]
+    fn method_parse_and_names() {
+        assert_eq!(Method::parse("megatron", 0).unwrap(), Method::Megatron);
+        assert_eq!(Method::parse("powersgd", 32).unwrap(), Method::FixedRank(32));
+        assert_eq!(Method::parse("edgc", 0).unwrap().name(), "edgc");
+        assert!(Method::parse("nope", 0).is_err());
+    }
+
+    #[test]
+    fn cluster_lookup() {
+        assert_eq!(cluster_by_name("h100").unwrap().name, "cluster2-h100-400gbps");
+        assert!(cluster_by_name("zzz").is_err());
+    }
+}

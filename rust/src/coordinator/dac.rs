@@ -1,0 +1,317 @@
+//! DAC — Dynamic Alignment Compressor (paper §IV-D).
+//!
+//! Owns the EDGC control loop:
+//!
+//! * **rank bounds** from the Eq.-2 inequality over the calibrated
+//!   communication model (netsim), with the footnote-1 floor
+//!   r_min ∈ [r_max/6, r_max/4];
+//! * **adaptive warm-up** (§IV-D2): no compression until the Theorem-3
+//!   rank prediction drops below r_max (entropy has stabilized), with the
+//!   empirical ≥10%-of-iterations floor;
+//! * **window-based rank adjustment** (Algorithm 1): per window w, the
+//!   new stage-1 rank from the fixed-error CQM rule, rate-limited by the
+//!   step limit s (Constraint 2) and clamped to the bounds;
+//! * **stage alignment** (Algorithm 2 / Eq. 4): later pipeline stages
+//!   finish their backward earlier by (i−1)·T̄_microBack, so their comm
+//!   budget is larger and their rank relaxes upward through the linear
+//!   model T_com(r) = ηr.
+
+use crate::config::EdgcParams;
+use crate::cqm;
+use crate::netsim::LinearCommModel;
+
+/// Rank bounds for the controller (stage-1 reference bucket).
+#[derive(Clone, Copy, Debug)]
+pub struct RankBounds {
+    pub r_min: usize,
+    pub r_max: usize,
+}
+
+/// Reference state captured when compression activates (Constraint 1:
+/// the absolute error ε_ini is held fixed from this point on).
+#[derive(Clone, Copy, Debug)]
+struct ActivationRef {
+    h_ini: f64,
+}
+
+/// The DAC controller. Drive it with window-mean entropies via
+/// [`Dac::on_window`]; read per-stage ranks via [`Dac::stage_ranks`].
+#[derive(Clone, Debug)]
+pub struct Dac {
+    pub params: EdgcParams,
+    pub bounds: RankBounds,
+    /// Reference bucket dimensions for the CQM g(r; m, n) (the paper uses
+    /// the dominant gradient-matrix shape of stage 1).
+    pub m: usize,
+    pub n: usize,
+    /// Calibrated linear comm model (Eq. 3).
+    pub comm: LinearCommModel,
+    /// Mean microbatch backward time (Eq. 4).
+    pub microback: f64,
+    pub stages: usize,
+    /// Total planned iterations (for the 10% warm-up floor).
+    pub total_steps: usize,
+
+    activation: Option<ActivationRef>,
+    /// Running peak of window entropy during warm-up (the instability
+    /// phase reference — see Fig. 2's rise-then-decline shape).
+    h_peak: f64,
+    /// Consecutive warm-up windows below the peak (decline must be
+    /// sustained, not a transient dip of the instability phase).
+    decline_windows: usize,
+    warmup_done: bool,
+    r_prev: f64,
+    /// Completed-window entropy trace (diagnostics + Table VII).
+    pub entropy_trace: Vec<f64>,
+    /// Rank decisions per window (stage-1), for Fig. 13-style plots.
+    pub rank_trace: Vec<f64>,
+}
+
+impl Dac {
+    pub fn new(
+        params: EdgcParams,
+        bounds: RankBounds,
+        m: usize,
+        n: usize,
+        comm: LinearCommModel,
+        microback: f64,
+        stages: usize,
+        total_steps: usize,
+    ) -> Self {
+        Dac {
+            params,
+            bounds,
+            m,
+            n,
+            comm,
+            microback,
+            stages,
+            total_steps,
+            activation: None,
+            h_peak: f64::NEG_INFINITY,
+            decline_windows: 0,
+            warmup_done: false,
+            r_prev: bounds.r_max as f64,
+            entropy_trace: Vec::new(),
+            rank_trace: Vec::new(),
+        }
+    }
+
+    /// Is compression active (past warm-up)?
+    pub fn active(&self) -> bool {
+        self.warmup_done
+    }
+
+    /// The ≥10% warm-up floor in steps.
+    pub fn min_warmup_steps(&self) -> usize {
+        (self.total_steps as f64 * self.params.min_warmup_frac).ceil() as usize
+    }
+
+    /// Feed the mean entropy of a completed window ending at `step`.
+    /// Implements the adaptive warm-up determination and Algorithm 1.
+    pub fn on_window(&mut self, step: usize, window_entropy: f64) {
+        self.entropy_trace.push(window_entropy);
+
+        if !self.warmup_done {
+            // Adaptive warm-up (§IV-D2): gradient entropy first *rises*
+            // through the instability phase (Fig. 2), so the reference is
+            // the running peak; warm-up ends once the Theorem-3 rank at
+            // the current entropy drops below r_max — entropy has started
+            // its stable decline and r_max over-provisions — subject to
+            // the 10% floor.
+            if window_entropy >= self.h_peak {
+                self.h_peak = window_entropy;
+                self.decline_windows = 0;
+            } else {
+                self.decline_windows += 1;
+            }
+            let r_new = cqm::rank_for_entropy_change(
+                self.bounds.r_max as f64,
+                self.h_peak,
+                window_entropy,
+                self.m,
+                self.n,
+            );
+            // Half-rank hysteresis: g⁻¹(g(r_max)) returns r_max only up to
+            // bisection error, so "<" alone would fire on the reference
+            // window itself. The ≥2-window sustained-decline requirement
+            // keeps transient dips of the instability phase from ending
+            // warm-up early.
+            if r_new < self.bounds.r_max as f64 - 0.5
+                && self.decline_windows >= 2
+                && step >= self.min_warmup_steps()
+            {
+                self.warmup_done = true;
+                // Re-anchor Constraint 1 at activation time.
+                self.activation = Some(ActivationRef { h_ini: window_entropy });
+                self.r_prev = self.bounds.r_max as f64;
+                self.rank_trace.push(self.r_prev);
+            }
+            return;
+        }
+
+        // Algorithm 1: window-based rank adjustment under fixed ε_ini.
+        let h_ini = self.activation.expect("active implies anchored").h_ini;
+        let r_raw = cqm::rank_for_entropy_change(
+            self.bounds.r_max as f64,
+            h_ini,
+            window_entropy,
+            self.m,
+            self.n,
+        );
+        let s = self.params.step_limit as f64;
+        let mut r_new = if (r_raw - self.r_prev).abs() > s {
+            if r_raw > self.r_prev {
+                self.r_prev + s
+            } else {
+                self.r_prev - s
+            }
+        } else {
+            r_raw
+        };
+        r_new = r_new.clamp(self.bounds.r_min as f64, self.bounds.r_max as f64);
+        self.r_prev = r_new;
+        self.rank_trace.push(r_new);
+    }
+
+    /// Stage-1 rank for the current window (None during warm-up).
+    pub fn stage1_rank(&self) -> Option<usize> {
+        if self.warmup_done {
+            Some(self.r_prev.round() as usize)
+        } else {
+            None
+        }
+    }
+
+    /// Algorithm 2 / Eq. 4: per-stage ranks aligned to stage 1's
+    /// communication completion. Stage i (1-indexed position offset i−1)
+    /// has (i−1)·T̄_microBack more budget: r_i = (T_com(r_1) + (i−1)·T̄b)/η.
+    pub fn stage_ranks(&self) -> Option<Vec<usize>> {
+        let r1 = self.stage1_rank()? as f64;
+        if !self.params.stage_aligned {
+            // Fig.-14 ablation: globally synchronized rank for all stages.
+            return Some(vec![r1.round() as usize; self.stages]);
+        }
+        let t1 = self.comm.predict(r1);
+        let mut out = Vec::with_capacity(self.stages);
+        for i in 0..self.stages {
+            let budget = t1 + i as f64 * self.microback;
+            let ri = self.comm.rank_for_time(budget);
+            let ri = ri.clamp(self.bounds.r_min as f64, self.bounds.r_max as f64);
+            out.push(ri.round() as usize);
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(total_steps: usize, window: usize) -> Dac {
+        Dac::new(
+            EdgcParams { window, step_limit: 8, ..Default::default() },
+            RankBounds { r_min: 12, r_max: 64 },
+            512,
+            128,
+            LinearCommModel { eta: 1e-4, mape: 0.0 },
+            2e-3,
+            4,
+            total_steps,
+        )
+    }
+
+    #[test]
+    fn warmup_respects_floor_even_if_entropy_drops() {
+        let mut d = mk(1000, 10);
+        d.on_window(10, 4.0);
+        d.on_window(20, 3.0); // sustained drop...
+        d.on_window(30, 2.95); // ...but before the 10% floor (100 steps)
+        assert!(!d.active());
+        assert_eq!(d.stage1_rank(), None);
+        d.on_window(120, 2.9); // past floor, still declining
+        assert!(d.active());
+    }
+
+    #[test]
+    fn warmup_requires_sustained_decline() {
+        let mut d = mk(100, 10);
+        d.on_window(20, 4.0);
+        d.on_window(40, 4.2); // entropy rising: not stabilized
+        assert!(!d.active());
+        d.on_window(50, 3.9); // one window below the 4.2 peak
+        assert!(!d.active(), "transient dip must not end warm-up");
+        d.on_window(60, 3.85); // second consecutive decline
+        assert!(d.active());
+    }
+
+    #[test]
+    fn algorithm1_rank_decreases_with_entropy_and_is_rate_limited() {
+        let mut d = mk(100, 10);
+        d.on_window(10, 4.0);
+        d.on_window(20, 3.97);
+        d.on_window(25, 3.95); // second decline: activates (past floor)
+        assert!(d.active());
+        let r0 = d.stage1_rank().unwrap();
+        // huge entropy drop: rank wants to fall a lot but is capped at s=8
+        d.on_window(30, 2.0);
+        let r1 = d.stage1_rank().unwrap();
+        assert!(r0 - r1 == 8, "r0={r0} r1={r1}");
+        // keeps falling but never below r_min
+        for w in 0..20 {
+            d.on_window(40 + w * 10, 1.5);
+        }
+        assert_eq!(d.stage1_rank().unwrap(), 12);
+    }
+
+    #[test]
+    fn algorithm1_rank_rises_when_entropy_rises() {
+        let mut d = mk(100, 10);
+        d.on_window(10, 4.0);
+        d.on_window(20, 3.9);
+        d.on_window(25, 3.85);
+        for w in 0..5 {
+            d.on_window(30 + w * 10, 3.0); // drive rank down
+        }
+        let low = d.stage1_rank().unwrap();
+        d.on_window(90, 3.9); // entropy back up
+        let up = d.stage1_rank().unwrap();
+        assert!(up > low, "{low} -> {up}");
+        assert!(up <= 64);
+    }
+
+    #[test]
+    fn algorithm2_stage_ranks_monotone_and_bounded() {
+        let mut d = mk(100, 10);
+        d.on_window(10, 4.0);
+        d.on_window(20, 3.9);
+        d.on_window(25, 3.8);
+        let ranks = d.stage_ranks().unwrap();
+        assert_eq!(ranks.len(), 4);
+        // later stages have more slack -> larger (or equal, at the clamp) ranks
+        for w in ranks.windows(2) {
+            assert!(w[1] >= w[0], "{ranks:?}");
+        }
+        assert!(ranks.iter().all(|&r| r >= 12 && r <= 64), "{ranks:?}");
+        // Eq. 4 arithmetic: stage 2 budget = t1 + microback
+        let r1 = ranks[0] as f64;
+        let expect2 = ((d.comm.predict(r1) + d.microback) / d.comm.eta).min(64.0);
+        assert!((ranks[1] as f64 - expect2).abs() <= 1.0, "{ranks:?} vs {expect2}");
+    }
+
+    #[test]
+    fn no_stage_ranks_during_warmup() {
+        let d = mk(100, 10);
+        assert!(d.stage_ranks().is_none());
+    }
+
+    #[test]
+    fn traces_record_windows() {
+        let mut d = mk(100, 10);
+        for w in 0..6 {
+            d.on_window(10 + w * 10, 4.0 - 0.2 * w as f64);
+        }
+        assert_eq!(d.entropy_trace.len(), 6);
+        assert!(!d.rank_trace.is_empty());
+    }
+}

@@ -1,0 +1,423 @@
+//! Compression engine: applies the per-step rank decision to every
+//! gradient tensor and performs the (simulated-network) data-parallel
+//! all-reduce, through either execution backend:
+//!
+//! * [`Backend::Artifact`] — the production path: PowerSGD phases run as
+//!   PJRT executables lowered from the Pallas-backed L2 graphs;
+//! * [`Backend::Host`] — the pure-rust reference path (identical
+//!   semantics, used for large sweeps and cross-checked in tests).
+//!
+//! Tensor→stage assignment mirrors Megatron layer partitioning:
+//! embeddings on stage 0, transformer block i on stage ⌊i·pp/L⌋, final
+//! layernorm on the last stage. 1-D tensors are never compressed.
+
+use anyhow::{Context, Result};
+
+use crate::compress::{allreduce_mean, TensorCompressor, Volume};
+use crate::runtime::{lit_f32, to_f32, Bucket, Manifest, ParamSpec, Runtime};
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+/// Which implementation executes the PowerSGD phases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Artifact,
+    Host,
+}
+
+/// One compressible (2-D) tensor with its persistent PowerSGD state.
+pub struct CompTensor {
+    pub spec: ParamSpec,
+    pub bucket: Bucket,
+    pub stage: usize,
+    pub comp: TensorCompressor,
+}
+
+/// Megatron-style stage assignment for a parameter name.
+pub fn stage_of(name: &str, n_layer: usize, pp: usize) -> usize {
+    if let Some(rest) = name.strip_prefix('h') {
+        if let Some((idx, _)) = rest.split_once('.') {
+            if let Ok(i) = idx.parse::<usize>() {
+                return (i * pp) / n_layer.max(1);
+            }
+        }
+    }
+    if name.starts_with("lnf") {
+        return pp.saturating_sub(1);
+    }
+    0 // embeddings
+}
+
+/// Per-step all-reduce report (feeds netsim pricing + Fig. 10 curves).
+#[derive(Clone, Debug)]
+pub struct AllreduceReport {
+    /// Averaged (decompressed) flat gradient.
+    pub avg: Vec<f32>,
+    /// Per-stage floats moved by this step's DP sync (compressed path).
+    pub stage_compressed: Vec<usize>,
+    /// Per-stage floats an uncompressed sync would have moved.
+    pub stage_original: Vec<usize>,
+    /// Volume-weighted mean relative compression error (0 when
+    /// uncompressed).
+    pub mean_rel_error: f64,
+    /// (tensor, stage, rel_error) for compressed tensors.
+    pub tensor_errors: Vec<(String, usize, f64)>,
+}
+
+impl AllreduceReport {
+    pub fn total_compressed(&self) -> usize {
+        self.stage_compressed.iter().sum()
+    }
+    pub fn total_original(&self) -> usize {
+        self.stage_original.iter().sum()
+    }
+}
+
+/// The engine: owns all per-tensor compressor state for one model.
+pub struct Engine {
+    pub backend: Backend,
+    pub pp: usize,
+    pub tensors: Vec<CompTensor>,
+    /// Specs of non-compressible params (1-D + matrices without buckets).
+    pub plain: Vec<ParamSpec>,
+    pub n_params: usize,
+}
+
+impl Engine {
+    pub fn new(
+        manifest: &Manifest,
+        pp: usize,
+        replicas: usize,
+        error_feedback: bool,
+        backend: Backend,
+        seed: u64,
+    ) -> Engine {
+        let mut rng = Rng::new(seed).fork(TAG_ENGINE);
+        let mut tensors = Vec::new();
+        let mut plain = Vec::new();
+        for spec in &manifest.params {
+            match manifest.bucket_for(&spec.shape) {
+                Some(bucket) if spec.is_matrix() => {
+                    let stage = stage_of(&spec.name, manifest.n_layer, pp);
+                    let comp = TensorCompressor::new(
+                        bucket.m,
+                        bucket.n,
+                        bucket.r_max,
+                        replicas,
+                        error_feedback,
+                        &mut rng,
+                    );
+                    tensors.push(CompTensor { spec: spec.clone(), bucket, stage, comp });
+                }
+                _ => plain.push(spec.clone()),
+            }
+        }
+        Engine { backend, pp, tensors, plain, n_params: manifest.n_params }
+    }
+
+    /// Floats per stage if synced uncompressed (constant per model).
+    pub fn stage_full_volume(&self) -> Vec<usize> {
+        let mut v = vec![0usize; self.pp];
+        for t in &self.tensors {
+            v[t.stage] += t.spec.size();
+        }
+        for p in &self.plain {
+            v[stage_of(&p.name, usize::MAX, self.pp).min(self.pp - 1)] += p.size();
+        }
+        v
+    }
+
+    /// Perform the DP gradient all-reduce for one step.
+    ///
+    /// `grads[i]` is replica i's full flat gradient. `ranks` is the
+    /// per-stage effective rank (None = uncompressed step). `rt` is
+    /// required for the Artifact backend.
+    pub fn allreduce(
+        &mut self,
+        rt: Option<&Runtime>,
+        grads: &[Vec<f32>],
+        ranks: Option<&[usize]>,
+    ) -> Result<AllreduceReport> {
+        let k = grads.len();
+        assert!(k > 0);
+        for g in grads {
+            assert_eq!(g.len(), self.n_params);
+        }
+        let mut avg = vec![0.0f32; self.n_params];
+        let mut stage_compressed = vec![0usize; self.pp];
+        let mut stage_original = vec![0usize; self.pp];
+        let mut tensor_errors = Vec::new();
+        let mut err_weighted = 0.0f64;
+        let mut err_weight = 0.0f64;
+
+        // Plain tensors (and everything when ranks=None): exact mean.
+        let mean_range = |avg: &mut Vec<f32>, off: usize, len: usize| {
+            let slices: Vec<&[f32]> = grads.iter().map(|g| &g[off..off + len]).collect();
+            let (mean, _) = allreduce_mean(&slices);
+            avg[off..off + len].copy_from_slice(&mean);
+        };
+
+        for p in &self.plain {
+            mean_range(&mut avg, p.offset, p.size());
+            let st = stage_of(&p.name, usize::MAX, self.pp).min(self.pp - 1);
+            stage_compressed[st] += p.size();
+            stage_original[st] += p.size();
+        }
+
+        for t in &mut self.tensors {
+            let off = t.spec.offset;
+            let len = t.spec.size();
+            stage_original[t.stage] += len;
+            let r_eff = ranks.map(|rs| {
+                rs[t.stage.min(rs.len() - 1)].clamp(1, t.bucket.r_max)
+            });
+            match r_eff {
+                None => {
+                    let slices: Vec<&[f32]> = grads.iter().map(|g| &g[off..off + len]).collect();
+                    let (mean, _) = allreduce_mean(&slices);
+                    avg[off..off + len].copy_from_slice(&mean);
+                    stage_compressed[t.stage] += len;
+                }
+                Some(r) => {
+                    let slices: Vec<&[f32]> = grads.iter().map(|g| &g[off..off + len]).collect();
+                    let round = match self.backend {
+                        Backend::Host => t.comp.round_host(&slices, r),
+                        Backend::Artifact => round_artifact(
+                            rt.context("Artifact backend requires a Runtime")?,
+                            t,
+                            &slices,
+                            r,
+                        )?,
+                    };
+                    avg[off..off + len].copy_from_slice(&round.approx);
+                    stage_compressed[t.stage] += round.volume.compressed;
+                    err_weighted += round.rel_error * len as f64;
+                    err_weight += len as f64;
+                    tensor_errors.push((t.spec.name.clone(), t.stage, round.rel_error));
+                }
+            }
+        }
+
+        Ok(AllreduceReport {
+            avg,
+            stage_compressed,
+            stage_original,
+            mean_rel_error: if err_weight > 0.0 { err_weighted / err_weight } else { 0.0 },
+            tensor_errors,
+        })
+    }
+}
+
+const TAG_ENGINE: u64 = 0xE561_0001;
+
+/// PowerSGD round through the PJRT artifacts — semantics mirror
+/// [`TensorCompressor::round_host`] exactly (integration-tested).
+fn round_artifact(
+    rt: &Runtime,
+    t: &mut CompTensor,
+    grads: &[&[f32]],
+    r_eff: usize,
+) -> Result<crate::compress::Round> {
+    let k = grads.len();
+    let (m, n, r_max) = (t.bucket.m, t.bucket.n, t.bucket.r_max);
+    let r_eff = r_eff.clamp(1, r_max);
+    let tag = t.bucket.tag();
+    // dead masked columns must be re-seeded before a rank increase can
+    // use them (see TensorCompressor::ensure_active_columns)
+    t.comp.ensure_active_columns(r_eff);
+    let mask = t.comp.mask(r_eff);
+    let mask_lit = || lit_f32(&mask, &[r_max as i64]);
+
+    // error feedback: Mᵢ = Gᵢ + Eᵢ (host add; the memory lives host-side)
+    let ms: Vec<Vec<f32>> = (0..k)
+        .map(|i| {
+            let mut d = grads[i].to_vec();
+            if t.comp.error_feedback {
+                for (x, e) in d.iter_mut().zip(&t.comp.errors[i]) {
+                    *x += e;
+                }
+            }
+            d
+        })
+        .collect();
+
+    // phase 1 per replica, then all-reduce-mean P host-side
+    let q_flat = &t.comp.q.data;
+    let mut p_avg = vec![0.0f32; m * r_max];
+    for mi in &ms {
+        let out = rt.run(
+            &format!("ps_phase1_{tag}"),
+            &[
+                lit_f32(mi, &[m as i64, n as i64])?,
+                lit_f32(q_flat, &[n as i64, r_max as i64])?,
+                mask_lit()?,
+            ],
+        )?;
+        let p = to_f32(&out[0])?;
+        for (a, &x) in p_avg.iter_mut().zip(&p) {
+            *a += x;
+        }
+    }
+    let inv = 1.0 / k as f32;
+    p_avg.iter_mut().for_each(|x| *x *= inv);
+
+    // phase 2 per replica (P̂ identical across replicas); mean Q'
+    let mut q_avg = vec![0.0f32; n * r_max];
+    let mut p_hat: Option<Vec<f32>> = None;
+    for mi in &ms {
+        let out = rt.run(
+            &format!("ps_phase2_{tag}"),
+            &[
+                lit_f32(mi, &[m as i64, n as i64])?,
+                lit_f32(&p_avg, &[m as i64, r_max as i64])?,
+                mask_lit()?,
+            ],
+        )?;
+        if p_hat.is_none() {
+            p_hat = Some(to_f32(&out[0])?);
+        }
+        let q = to_f32(&out[1])?;
+        for (a, &x) in q_avg.iter_mut().zip(&q) {
+            *a += x;
+        }
+    }
+    q_avg.iter_mut().for_each(|x| *x *= inv);
+    let p_hat = p_hat.unwrap();
+
+    // finalize per replica: shared approx + per-replica residual (EF)
+    let mut approx: Option<Vec<f32>> = None;
+    for (i, mi) in ms.iter().enumerate() {
+        let out = rt.run(
+            &format!("ps_finalize_{tag}"),
+            &[
+                lit_f32(mi, &[m as i64, n as i64])?,
+                lit_f32(&p_hat, &[m as i64, r_max as i64])?,
+                lit_f32(&q_avg, &[n as i64, r_max as i64])?,
+            ],
+        )?;
+        if approx.is_none() {
+            approx = Some(to_f32(&out[0])?);
+        }
+        if t.comp.error_feedback {
+            t.comp.errors[i] = to_f32(&out[1])?;
+        }
+    }
+    let approx = approx.unwrap();
+
+    // bookkeeping identical to the host path
+    t.comp.q = Mat::from_vec(n, r_max, q_avg);
+    let mut m_mean = vec![0.0f64; m * n];
+    for mi in &ms {
+        for (a, &x) in m_mean.iter_mut().zip(mi.iter()) {
+            *a += x as f64;
+        }
+    }
+    let kf = k as f64;
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (j, a) in m_mean.iter().enumerate() {
+        let mm = a / kf;
+        num += (mm - approx[j] as f64).powi(2);
+        den += mm * mm;
+    }
+    Ok(crate::compress::Round {
+        approx,
+        rel_error: (num.sqrt()) / den.sqrt().max(1e-30),
+        volume: Volume { compressed: r_eff * (m + n), original: m * n },
+        rank_used: r_eff,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_assignment() {
+        assert_eq!(stage_of("tok_emb", 8, 4), 0);
+        assert_eq!(stage_of("pos_emb", 8, 4), 0);
+        assert_eq!(stage_of("h0.qkv_w", 8, 4), 0);
+        assert_eq!(stage_of("h3.fc_w", 8, 4), 1);
+        assert_eq!(stage_of("h7.proj_w", 8, 4), 3);
+        assert_eq!(stage_of("lnf_g", 8, 4), 3);
+        // uneven split still lands in range
+        assert!(stage_of("h11.fc_w", 12, 4) < 4);
+    }
+
+    fn mini_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "preset": "t", "seed": 0, "batch": 2,
+          "model": {"vocab": 8, "d_model": 4, "n_head": 1, "n_layer": 2,
+                    "seq_len": 4, "n_params": 56},
+          "entropy_sample": 4096, "entropy_bins": 16,
+          "params": [
+            {"name": "tok_emb", "shape": [8, 4], "offset": 0},
+            {"name": "h0.qkv_w", "shape": [4, 2], "offset": 32},
+            {"name": "h0.ln1_g", "shape": [4], "offset": 40},
+            {"name": "h1.qkv_w", "shape": [4, 2], "offset": 44},
+            {"name": "lnf_g", "shape": [4], "offset": 52}
+          ],
+          "buckets": [{"m": 8, "n": 4, "r_max": 2}, {"m": 4, "n": 2, "r_max": 2}],
+          "artifacts": {}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn engine_partitions_tensors() {
+        let e = Engine::new(&mini_manifest(), 2, 2, true, Backend::Host, 0);
+        assert_eq!(e.tensors.len(), 3);
+        assert_eq!(e.plain.len(), 2);
+        assert_eq!(e.tensors[0].stage, 0);
+        assert_eq!(e.tensors[2].stage, 1); // h1 on stage 1 of 2
+        let full = e.stage_full_volume();
+        assert_eq!(full.iter().sum::<usize>(), 56);
+    }
+
+    #[test]
+    fn uncompressed_allreduce_is_exact_mean() {
+        let mut e = Engine::new(&mini_manifest(), 2, 2, true, Backend::Host, 0);
+        let g1: Vec<f32> = (0..56).map(|i| i as f32).collect();
+        let g2: Vec<f32> = (0..56).map(|i| (i * 3) as f32).collect();
+        let rep = e.allreduce(None, &[g1.clone(), g2.clone()], None).unwrap();
+        for i in 0..56 {
+            assert!((rep.avg[i] - (g1[i] + g2[i]) / 2.0).abs() < 1e-6);
+        }
+        assert_eq!(rep.mean_rel_error, 0.0);
+        assert_eq!(rep.total_compressed(), rep.total_original());
+    }
+
+    #[test]
+    fn compressed_allreduce_reduces_volume_and_reports_error() {
+        let mut e = Engine::new(&mini_manifest(), 2, 1, true, Backend::Host, 1);
+        let mut rng = Rng::new(9);
+        let g: Vec<f32> = rng.normal_vec(56, 1.0);
+        let rep = e.allreduce(None, &[g.clone()], Some(&[1, 1])).unwrap();
+        // 8x4 at r=1: 12 floats vs 32; 4x2 at r=1: 6 vs 8 (x2 tensors)
+        assert!(rep.total_compressed() < rep.total_original());
+        assert!(rep.mean_rel_error > 0.0 && rep.mean_rel_error < 1.0);
+        assert_eq!(rep.tensor_errors.len(), 3);
+        // plain params still exact
+        for i in 40..44 {
+            assert!((rep.avg[i] - g[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn per_stage_ranks_apply() {
+        let mut e = Engine::new(&mini_manifest(), 2, 1, false, Backend::Host, 2);
+        let mut rng = Rng::new(10);
+        let g: Vec<f32> = rng.normal_vec(56, 1.0);
+        let rep = e.allreduce(None, &[g], Some(&[1, 2])).unwrap();
+        // stage-1 tensor (4x2) at rank 2 = full rank for that bucket
+        let s1_err = rep
+            .tensor_errors
+            .iter()
+            .find(|(n, s, _)| n == "h1.qkv_w" && *s == 1)
+            .unwrap()
+            .2;
+        assert!(s1_err < 1e-3, "full-rank stage should be near-exact: {s1_err}");
+    }
+}

@@ -1,0 +1,16 @@
+//! Layer-3 coordinator: the paper's system contribution.
+//!
+//! * [`dac`] — the EDGC controller (warm-up, Algorithm 1, Algorithm 2)
+//! * [`engine`] — compressed DP all-reduce over PJRT artifacts / host
+//! * [`clock`] — virtual wall-clock (pipesim × netsim composition)
+//! * [`trainer`] — the training orchestrator tying it all together
+
+pub mod clock;
+pub mod dac;
+pub mod engine;
+pub mod trainer;
+
+pub use clock::VirtualClock;
+pub use dac::{Dac, RankBounds};
+pub use engine::{Backend, Engine};
+pub use trainer::{RunSummary, Trainer};

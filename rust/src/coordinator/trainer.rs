@@ -1,0 +1,407 @@
+//! The training orchestrator: the paper's full system composed.
+//!
+//! Per optimizer step (leader loop, Python-free):
+//!   1. one `train_step` PJRT execution per DP replica (own data shard);
+//!   2. the rank decision for this step (baseline policy or DAC);
+//!   3. compressed DP all-reduce through the engine (PowerSGD artifacts
+//!      or host path), with error feedback;
+//!   4. fused-Adam PJRT update of the flat parameter vector;
+//!   5. GDS entropy measurement on the ISR schedule; window roll → DAC
+//!      (Algorithms 1 + 2);
+//!   6. virtual-clock advance (pipesim × netsim) for the paper's
+//!      time axis.
+
+use anyhow::Result;
+
+use crate::baselines;
+use crate::config::{Method, TrainConfig};
+use crate::coordinator::clock::VirtualClock;
+use crate::coordinator::dac::{Dac, RankBounds};
+use crate::coordinator::engine::{Backend, Engine};
+use crate::data::{build_probes, Batcher, SynthCorpus};
+use crate::entropy::{Gds, GdsConfig, WindowStats};
+use crate::eval;
+use crate::metrics::{ppl, Table};
+use crate::netsim::{self, fit_eta};
+use crate::runtime::{lit_f32, lit_i32, to_f32, to_scalar, Runtime};
+
+/// Everything a finished run reports (feeds Tables III/IV/VI, Figs 10-13).
+pub struct RunSummary {
+    pub method: String,
+    /// step, loss, val_loss (NaN when unmeasured), rel_err, rank_s1
+    /// (0 = uncompressed), comm_floats, iter_time, virtual_time
+    pub curve: Table,
+    pub final_train_loss: f64,
+    pub final_val_loss: f64,
+    pub final_ppl: f64,
+    pub probe_accuracy: f64,
+    pub virtual_time: f64,
+    pub virtual_comm_time: f64,
+    pub virtual_compute_time: f64,
+    pub wall_time: f64,
+    pub total_comm_floats: usize,
+    pub total_uncompressed_floats: usize,
+    pub entropy_trace: Vec<f64>,
+    pub rank_trace: Vec<f64>,
+    /// (tensor, stage, rel_error) samples recorded every eval interval.
+    pub error_samples: Vec<(usize, String, usize, f64)>,
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub rt: Runtime,
+    pub backend: Backend,
+    pub engine: Engine,
+    pub dac: Option<Dac>,
+    params: Vec<f32>,
+    opt_m: Vec<f32>,
+    opt_v: Vec<f32>,
+    batchers: Vec<Batcher>,
+    corpus: SynthCorpus,
+    gds: Gds,
+    window: WindowStats,
+    clock: VirtualClock,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig, backend: Backend) -> Result<Trainer> {
+        let rt = Runtime::load(&cfg.artifacts)?;
+        let man = rt.manifest.clone();
+        let params = rt.init_params()?;
+        let n = params.len();
+
+        let engine = Engine::new(
+            &man,
+            cfg.pp,
+            cfg.dp,
+            baselines::uses_error_feedback(cfg.method),
+            backend,
+            cfg.seed,
+        );
+
+        let corpus = SynthCorpus::new(man.vocab, cfg.seed ^ 0xDA7A);
+        let batchers: Vec<Batcher> = (0..cfg.dp)
+            .map(|i| {
+                Batcher::new(&corpus, man.batch, man.seq_len, cfg.corpus_tokens, cfg.seed + i as u64)
+            })
+            .collect();
+
+        // The clock prices the paper-scale model (cfg.sim_params) while
+        // numerics run on the artifact model; byte volumes are scaled by
+        // the parameter ratio.
+        let mut clock = VirtualClock::new(
+            cfg.cluster,
+            cfg.dp,
+            cfg.tp,
+            cfg.pp,
+            cfg.microbatches,
+            cfg.sim_params,
+            cfg.sim_tokens,
+        );
+        clock.volume_scale = (cfg.sim_params as f64 / n as f64).max(1.0);
+
+        let dac = if cfg.method == Method::Edgc {
+            Some(Self::build_dac(&cfg, &engine, &clock)?)
+        } else {
+            None
+        };
+
+        Ok(Trainer {
+            gds: Gds::new(GdsConfig {
+                alpha: cfg.edgc.alpha,
+                beta: cfg.edgc.beta,
+                max_sample: man.entropy_sample,
+            }),
+            window: WindowStats::default(),
+            opt_m: vec![0.0; n],
+            opt_v: vec![0.0; n],
+            params,
+            batchers,
+            corpus,
+            engine,
+            dac,
+            clock,
+            rt,
+            backend,
+            cfg,
+        })
+    }
+
+    /// Calibrate η + rank bounds the way the paper does (Fig. 9): price
+    /// the stage-1 aggregate at a rank grid through the netsim model, fit
+    /// the linear T_com(r) = ηr, and find the Eq.-2 crossover.
+    fn build_dac(cfg: &TrainConfig, engine: &Engine, clock: &VirtualClock) -> Result<Dac> {
+        // stage-1 (index 0) aggregate: sum of its compressible tensors
+        let s1: Vec<_> = engine.tensors.iter().filter(|t| t.stage == 0).collect();
+        anyhow::ensure!(!s1.is_empty(), "stage 0 has no compressible tensors");
+        let orig: usize = s1.iter().map(|t| t.spec.size()).sum();
+        let ceil = s1.iter().map(|t| t.bucket.r_max).min().unwrap();
+        // largest bucket is the CQM reference shape
+        let big = s1.iter().max_by_key(|t| t.spec.size()).unwrap();
+
+        // Eq.-2 bound on the aggregate, on the Eq.-3 grid
+        let factors_per_rank: usize = s1.iter().map(|t| t.bucket.m + t.bucket.n).sum();
+        let budget = clock.stage_dp_time(orig, orig, None);
+        let grid_step = 4usize;
+        let mut pts = Vec::new();
+        let mut r_max_eq2 = 0usize;
+        let mut r = grid_step;
+        while r <= ceil {
+            let t = clock.stage_dp_time(r * factors_per_rank, orig, Some(r));
+            pts.push((r, t));
+            if t <= budget || cfg.dp <= 1 {
+                r_max_eq2 = r;
+            }
+            r += grid_step;
+        }
+        anyhow::ensure!(!pts.is_empty(), "empty calibration grid");
+        let r_max = if r_max_eq2 == 0 { ceil } else { r_max_eq2.min(ceil) };
+        let bounds = RankBounds { r_min: netsim::rank_min(r_max), r_max };
+        let comm = fit_eta(&pts);
+        Ok(Dac::new(
+            cfg.edgc,
+            bounds,
+            big.bucket.m,
+            big.bucket.n,
+            comm,
+            clock.t_bwd,
+            cfg.pp,
+            cfg.steps,
+        ))
+    }
+
+    fn run_train_step(&self, batch: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let man = &self.rt.manifest;
+        let out = self.rt.run(
+            "train_step",
+            &[
+                lit_f32(&self.params, &[man.n_params as i64])?,
+                lit_i32(batch, &[man.batch as i64, (man.seq_len + 1) as i64])?,
+            ],
+        )?;
+        Ok((to_scalar(&out[0])?, to_f32(&out[1])?))
+    }
+
+    fn adam_update(&mut self, grads: &[f32], t: usize) -> Result<()> {
+        let n = self.params.len() as i64;
+        let (b1, b2) = (0.9f64, 0.999f64);
+        let scalars = [
+            self.cfg.lr as f32,
+            b1 as f32,
+            b2 as f32,
+            1e-8,
+            (1.0 - b1.powi(t as i32)) as f32,
+            (1.0 - b2.powi(t as i32)) as f32,
+        ];
+        let out = self.rt.run(
+            "adam",
+            &[
+                lit_f32(&self.params, &[n])?,
+                lit_f32(&self.opt_m, &[n])?,
+                lit_f32(&self.opt_v, &[n])?,
+                lit_f32(grads, &[n])?,
+                lit_f32(&scalars, &[6])?,
+            ],
+        )?;
+        self.params = to_f32(&out[0])?;
+        self.opt_m = to_f32(&out[1])?;
+        self.opt_v = to_f32(&out[2])?;
+        Ok(())
+    }
+
+    /// Measure gradient entropy (GDS). Artifact backend routes the sample
+    /// through the Pallas histogram executable; host backend computes the
+    /// identical estimator in-process.
+    fn measure_entropy(&mut self, grads: &[f32]) -> Result<crate::entropy::Estimate> {
+        if self.backend == Backend::Artifact {
+            let man = &self.rt.manifest;
+            let want = man.entropy_sample;
+            let mut buf = Vec::with_capacity(want);
+            crate::entropy::subsample(grads, self.gds.cfg.beta, 0, &mut buf);
+            // pad to the fixed artifact size by wrapping
+            if buf.is_empty() {
+                buf.push(0.0);
+            }
+            let mut i = 0usize;
+            while buf.len() < want {
+                buf.push(buf[i]);
+                i += 1;
+            }
+            buf.truncate(want);
+            let out = self.rt.run("entropy", &[lit_f32(&buf, &[want as i64])?])?;
+            Ok(crate::entropy::Estimate {
+                h_hist: to_scalar(&out[0])? as f64,
+                h_gauss: to_scalar(&out[1])? as f64,
+                sigma: to_scalar(&out[2])? as f64,
+                mean: to_scalar(&out[3])? as f64,
+                n: want,
+            })
+        } else {
+            Ok(self.gds.measure(grads))
+        }
+    }
+
+    fn validation_loss(&self, batches: usize) -> Result<f64> {
+        let man = &self.rt.manifest;
+        let mut total = 0.0;
+        let mut count = 0usize;
+        for k in 0..batches {
+            let b = self.batchers[0].valid_batch(k);
+            let out = self.rt.run(
+                "eval_step",
+                &[
+                    lit_f32(&self.params, &[man.n_params as i64])?,
+                    lit_i32(&b, &[man.batch as i64, (man.seq_len + 1) as i64])?,
+                ],
+            )?;
+            let losses = to_f32(&out[0])?;
+            total += losses.iter().map(|&x| x as f64).sum::<f64>();
+            count += losses.len();
+        }
+        Ok(total / count.max(1) as f64)
+    }
+
+    /// Run the configured number of steps; returns the full summary.
+    pub fn run(&mut self) -> Result<RunSummary> {
+        let wall = crate::metrics::Stopwatch::start();
+        let mut curve = Table::new(
+            &format!("curve-{}", self.cfg.method.name()),
+            &[
+                "step",
+                "loss",
+                "val_loss",
+                "rel_err",
+                "rank_s1",
+                "comm_floats",
+                "iter_time",
+                "virtual_time",
+            ],
+        );
+        let mut total_comm = 0usize;
+        let mut total_orig = 0usize;
+        let mut error_samples = Vec::new();
+        let window_len = self.cfg.edgc.window.max(1);
+
+        let mut last_val = f64::NAN;
+        let mut last_loss = f64::NAN;
+        for step in 0..self.cfg.steps {
+            // 1. per-replica train steps
+            let mut losses = Vec::with_capacity(self.cfg.dp);
+            let mut grads = Vec::with_capacity(self.cfg.dp);
+            for i in 0..self.cfg.dp {
+                let batch = self.batchers[i].next_train();
+                let (loss, g) = self.run_train_step(&batch)?;
+                losses.push(loss);
+                grads.push(g);
+            }
+            let loss = losses.iter().map(|&x| x as f64).sum::<f64>() / losses.len() as f64;
+            last_loss = loss;
+
+            // 2. rank decision
+            let ranks = baselines::ranks_for(
+                self.cfg.method,
+                step,
+                self.cfg.steps,
+                self.cfg.pp,
+                self.dac.as_ref(),
+            );
+
+            // 3. compressed all-reduce
+            let rt_opt = if self.backend == Backend::Artifact { Some(&self.rt) } else { None };
+            let report = self.engine.allreduce(rt_opt, &grads, ranks.as_deref())?;
+            total_comm += report.total_compressed();
+            total_orig += report.total_original();
+
+            // 4. optimizer
+            let avg = report.avg.clone();
+            self.adam_update(&avg, step + 1)?;
+
+            // 5. GDS + window + DAC
+            if self.gds.due(step) {
+                let est = self.measure_entropy(&grads[0])?;
+                self.window.push(&est);
+            }
+            if (step + 1) % window_len == 0 {
+                if let Some(mean) = self.window.roll() {
+                    if let Some(dac) = self.dac.as_mut() {
+                        dac.on_window(step + 1, mean);
+                    }
+                }
+            }
+
+            // 6. virtual clock
+            let (iter_time, _comm_time) = self.clock.step(
+                &report.stage_compressed,
+                &report.stage_original,
+                ranks.as_deref(),
+            );
+
+            // bookkeeping
+            if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
+                last_val = self.validation_loss(2)?;
+                for (name, stage, err) in &report.tensor_errors {
+                    error_samples.push((step, name.clone(), *stage, *err));
+                }
+            }
+            curve.push(vec![
+                step as f64,
+                loss,
+                last_val,
+                report.mean_rel_error,
+                ranks.as_ref().map_or(0.0, |r| r[0] as f64),
+                report.total_compressed() as f64,
+                iter_time,
+                self.clock.total,
+            ]);
+        }
+
+        // final evaluation
+        let final_val = self.validation_loss(4)?;
+        let probes = build_probes(&self.corpus, 48, 4, self.rt.manifest.seq_len, 4, 99);
+        let man_batch = self.rt.manifest.batch;
+        let rt = &self.rt;
+        let params = &self.params;
+        let man = &self.rt.manifest;
+        let mut loss_fn = |flat_tokens: &[i32]| -> Result<Vec<f32>> {
+            let out = rt.run(
+                "eval_step",
+                &[
+                    lit_f32(params, &[man.n_params as i64])?,
+                    lit_i32(flat_tokens, &[man_batch as i64, (man.seq_len + 1) as i64])?,
+                ],
+            )?;
+            to_f32(&out[0])
+        };
+        let probe = eval::run_probes(&mut loss_fn, &probes, man_batch)?;
+
+        Ok(RunSummary {
+            method: self.cfg.method.name(),
+            final_train_loss: last_loss,
+            final_val_loss: final_val,
+            final_ppl: ppl(final_val),
+            probe_accuracy: probe.accuracy,
+            virtual_time: self.clock.total,
+            virtual_comm_time: self.clock.comm_total,
+            virtual_compute_time: self.clock.compute_total,
+            wall_time: wall.secs(),
+            total_comm_floats: total_comm,
+            total_uncompressed_floats: total_orig,
+            entropy_trace: self.dac.as_ref().map(|d| d.entropy_trace.clone()).unwrap_or_else(
+                || self.window.history.clone(),
+            ),
+            rank_trace: self.dac.as_ref().map(|d| d.rank_trace.clone()).unwrap_or_default(),
+            error_samples,
+            curve,
+        })
+    }
+
+    /// Current flat parameters (for checkpoint-style tests).
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    /// Window-entropy history (for ablations that bypass run()).
+    pub fn window_history(&self) -> &[f64] {
+        &self.window.history
+    }
+}

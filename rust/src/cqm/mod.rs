@@ -1,0 +1,337 @@
+//! CQM — Compression Quantification Model (paper §IV-C + Appendix A).
+//!
+//! The theoretical core of EDGC: a closed-form link between compression
+//! rank, compression error, gradient standard deviation, and gradient
+//! entropy, built on the Marchenko–Pastur law for the eigenvalues of
+//! A·Aᵀ when A is an m×n random gradient matrix.
+//!
+//! * [`MarchenkoPastur`] — Lemma 1: the eigenvalue CDF on [a, b] with
+//!   a = (√n−√m)², b = (√n+√m)².
+//! * [`g`] — Theorem 1: ε = g(r; m, n), the expected Frobenius error of
+//!   the best rank-r approximation of a standard-normal matrix, via the
+//!   deterministic quantile integral (the paper's Monte-Carlo procedure is
+//!   [`g_monte_carlo`]; both agree, the deterministic form is used at
+//!   runtime because it is noise-free and cacheable).
+//! * [`g_inv`] — continuous inverse in r (monotone bisection).
+//! * [`rank_for_sigma_change`] — Theorem 2: r₁ = g⁻¹((σ₀/σ₁)·g(r₀)).
+//! * [`rank_for_entropy_change`] — Theorem 3: r₁ = g⁻¹(e^{H₀−H₁}·g(r₀))
+//!   (via Lemma 2, σ₀/σ₁ = e^{H₀−H₁} for Gaussian gradients).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::util::rng::Rng;
+
+/// Lemma 1: Marchenko–Pastur eigenvalue distribution of A·Aᵀ for an m×n
+/// matrix A of i.i.d. unit-variance entries. Orientation is normalized so
+/// m ≤ n (compression error is symmetric under transpose).
+#[derive(Clone, Copy, Debug)]
+pub struct MarchenkoPastur {
+    pub m: usize,
+    pub n: usize,
+    pub a: f64,
+    pub b: f64,
+}
+
+impl MarchenkoPastur {
+    pub fn new(m: usize, n: usize) -> Self {
+        let (m, n) = if m <= n { (m, n) } else { (n, m) };
+        let (sm, sn) = ((m as f64).sqrt(), (n as f64).sqrt());
+        MarchenkoPastur { m, n, a: (sn - sm) * (sn - sm), b: (sn + sm) * (sn + sm) }
+    }
+
+    /// Lemma-1 antiderivative F(λ; a, b) (un-normalized).
+    fn f_raw(&self, lam: f64) -> f64 {
+        let (a, b) = (self.a, self.b);
+        let lam = lam.clamp(a, b);
+        if lam <= a {
+            return 0.0;
+        }
+        let t1 = if lam >= b {
+            std::f64::consts::FRAC_PI_2
+        } else {
+            ((b * (lam - a)) / (a * (b - lam)).max(1e-300)).sqrt().atan()
+        };
+        let t2 = (((lam - a) / (b - a)).sqrt()).clamp(0.0, 1.0).asin();
+        -2.0 * (a * b).sqrt() * t1 + (a + b) * t2 + ((lam - a) * (b - lam)).max(0.0).sqrt()
+    }
+
+    /// CDF of a single eigenvalue of A·Aᵀ: F(λ)/(2πm) normalized to [0,1].
+    pub fn cdf(&self, lam: f64) -> f64 {
+        let total = self.f_raw(self.b);
+        (self.f_raw(lam) / total).clamp(0.0, 1.0)
+    }
+
+    /// Quantile (inverse CDF) by bisection — the CDF is strictly
+    /// increasing on [a, b].
+    pub fn quantile(&self, p: f64) -> f64 {
+        let p = p.clamp(0.0, 1.0);
+        let (mut lo, mut hi) = (self.a, self.b);
+        for _ in 0..80 {
+            let mid = 0.5 * (lo + hi);
+            if self.cdf(mid) < p {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// Deterministic m-point eigenvalue grid: the (i+½)/m quantiles,
+    /// ascending. This is the noise-free version of Theorem 1 steps a–c.
+    pub fn eigenvalue_grid(&self) -> Vec<f64> {
+        (0..self.m).map(|i| self.quantile((i as f64 + 0.5) / self.m as f64)).collect()
+    }
+}
+
+fn grid_cached(m: usize, n: usize) -> Vec<f64> {
+    static CACHE: Mutex<Option<HashMap<(usize, usize), Vec<f64>>>> = Mutex::new(None);
+    let mut guard = CACHE.lock().unwrap();
+    let map = guard.get_or_insert_with(HashMap::new);
+    map.entry((m.min(n), m.max(n)))
+        .or_insert_with(|| MarchenkoPastur::new(m, n).eigenvalue_grid())
+        .clone()
+}
+
+/// Theorem 1: expected Frobenius compression error ε = g(r; m, n) of the
+/// best rank-r approximation of an m×n standard-normal matrix:
+/// sqrt(Σ of the smallest min(m,n)−r MP eigenvalues).
+///
+/// Continuous in r (linear interpolation between integer ranks) so the
+/// inverse is well-defined; g(0) ≈ E‖A‖_F, g(min(m,n)) = 0.
+pub fn g(r: f64, m: usize, n: usize) -> f64 {
+    let grid = grid_cached(m, n);
+    let mm = grid.len();
+    let r = r.clamp(0.0, mm as f64);
+    let keep = mm as f64 - r; // number of smallest eigenvalues summed
+    let whole = keep.floor() as usize;
+    let frac = keep - whole as f64;
+    let mut sum: f64 = grid.iter().take(whole).sum();
+    if whole < mm && frac > 0.0 {
+        sum += frac * grid[whole];
+    }
+    sum.max(0.0).sqrt()
+}
+
+/// Theorem 1 as literally stated: Monte-Carlo sampling of the eigenvalue
+/// distribution. Kept for validation (tests assert it converges to [`g`]).
+pub fn g_monte_carlo(r: usize, m: usize, n: usize, rng: &mut Rng, trials: usize) -> f64 {
+    let mp = MarchenkoPastur::new(m, n);
+    // Pre-tabulated (λ0, p0) pairs, as in steps a–b of Theorem 1.
+    let grid: Vec<(f64, f64)> = (0..=2048)
+        .map(|i| {
+            let lam = mp.a + (mp.b - mp.a) * i as f64 / 2048.0;
+            (lam, mp.cdf(lam))
+        })
+        .collect();
+    let lookup = |p: f64| -> f64 {
+        match grid.binary_search_by(|&(_, p0)| p0.partial_cmp(&p).unwrap()) {
+            Ok(i) => grid[i].0,
+            Err(0) => grid[0].0,
+            Err(i) if i >= grid.len() => grid[grid.len() - 1].0,
+            Err(i) => {
+                let (l0, p0) = grid[i - 1];
+                let (l1, p1) = grid[i];
+                if p1 > p0 {
+                    l0 + (l1 - l0) * (p - p0) / (p1 - p0)
+                } else {
+                    l0
+                }
+            }
+        }
+    };
+    let mm = mp.m;
+    let mut acc = 0.0;
+    for _ in 0..trials {
+        let mut eig: Vec<f64> = (0..mm).map(|_| lookup(rng.uniform())).collect();
+        eig.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        acc += eig.iter().take(mm.saturating_sub(r)).sum::<f64>();
+    }
+    (acc / trials as f64).max(0.0).sqrt()
+}
+
+/// Continuous inverse of [`g`] in r: the rank at which the expected error
+/// equals `target` (clamped to [0, min(m,n)]). g is strictly decreasing.
+pub fn g_inv(target: f64, m: usize, n: usize) -> f64 {
+    let mm = m.min(n) as f64;
+    if target <= 0.0 {
+        return mm;
+    }
+    if target >= g(0.0, m, n) {
+        return 0.0;
+    }
+    let (mut lo, mut hi) = (0.0, mm);
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if g(mid, m, n) > target {
+            lo = mid; // error too big -> need more rank
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Theorem 2: keep the *absolute* compression error fixed while the
+/// gradient standard deviation moves σ₀ → σ₁:  r₁ = g⁻¹((σ₀/σ₁)·g(r₀)).
+pub fn rank_for_sigma_change(r0: f64, sigma0: f64, sigma1: f64, m: usize, n: usize) -> f64 {
+    g_inv((sigma0 / sigma1.max(1e-30)) * g(r0, m, n), m, n)
+}
+
+/// Theorem 3: the entropy form. By Lemma 2 (Gaussian gradients),
+/// σ₀/σ₁ = e^{H₀−H₁}, hence r₁ = g⁻¹(e^{H₀−H₁}·g(r₀)).
+pub fn rank_for_entropy_change(r0: f64, h0: f64, h1: f64, m: usize, n: usize) -> f64 {
+    g_inv((h0 - h1).exp() * g(r0, m, n), m, n)
+}
+
+/// Lemma 2: differential entropy of N(μ, σ²): H = ln σ + ½ ln 2πe (nats).
+pub fn gaussian_entropy(sigma: f64) -> f64 {
+    sigma.max(1e-300).ln() + 0.5 * (2.0 * std::f64::consts::PI * std::f64::consts::E).ln()
+}
+
+/// Inverse of Lemma 2.
+pub fn sigma_from_entropy(h: f64) -> f64 {
+    (h - 0.5 * (2.0 * std::f64::consts::PI * std::f64::consts::E).ln()).exp()
+}
+
+/// Relative (normalized) expected error g(r)/g(0) — what Fig. 10 plots.
+pub fn relative_error(r: f64, m: usize, n: usize) -> f64 {
+    g(r, m, n) / g(0.0, m, n).max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+
+    #[test]
+    fn cdf_endpoints_and_monotonicity() {
+        let mp = MarchenkoPastur::new(64, 256);
+        assert!(mp.cdf(mp.a) < 1e-12);
+        assert!((mp.cdf(mp.b) - 1.0).abs() < 1e-12);
+        let mut prev = -1.0;
+        for i in 0..=50 {
+            let lam = mp.a + (mp.b - mp.a) * i as f64 / 50.0;
+            let c = mp.cdf(lam);
+            assert!(c >= prev - 1e-12, "CDF not monotone at {lam}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        let mp = MarchenkoPastur::new(100, 300);
+        for &p in &[0.01, 0.25, 0.5, 0.75, 0.99] {
+            let lam = mp.quantile(p);
+            assert!((mp.cdf(lam) - p).abs() < 1e-6, "p={p}");
+        }
+    }
+
+    #[test]
+    fn orientation_symmetry() {
+        assert!((g(10.0, 64, 256) - g(10.0, 256, 64)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn g_endpoints() {
+        // g(0)² = E‖A‖²_F = m·n ; g(min(m,n)) = 0.
+        let (m, n) = (48, 96);
+        let total = g(0.0, m, n).powi(2);
+        assert!((total / (m * n) as f64 - 1.0).abs() < 0.02, "got {total}");
+        assert!(g(48.0, m, n) < 1e-9);
+    }
+
+    #[test]
+    fn g_strictly_decreasing() {
+        let (m, n) = (64, 128);
+        let mut prev = f64::INFINITY;
+        for r in 0..=64 {
+            let e = g(r as f64, m, n);
+            assert!(e < prev, "g not decreasing at r={r}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn g_inv_roundtrip() {
+        let (m, n) = (64, 512);
+        for &r in &[4.0, 16.0, 33.0, 60.0] {
+            let e = g(r, m, n);
+            assert!((g_inv(e, m, n) - r).abs() < 1e-3, "r={r}");
+        }
+        assert_eq!(g_inv(0.0, m, n), 64.0);
+        assert_eq!(g_inv(1e9, m, n), 0.0);
+    }
+
+    #[test]
+    fn monte_carlo_converges_to_deterministic() {
+        let (m, n) = (32, 128);
+        let mut rng = Rng::new(11);
+        for &r in &[4usize, 16, 24] {
+            let det = g(r as f64, m, n);
+            let mc = g_monte_carlo(r, m, n, &mut rng, 400);
+            assert!((mc - det).abs() / det < 0.05, "r={r}: mc={mc} det={det}");
+        }
+    }
+
+    #[test]
+    fn g_predicts_actual_gaussian_matrix_error() {
+        // Theorem 1 against ground truth: best-rank-r error of an actual
+        // standard-normal matrix (Jacobi SVD oracle) within a few percent.
+        let (m, n) = (48, 120);
+        let mut rng = Rng::new(7);
+        let a = Mat::randn(m, n, 1.0, &mut rng);
+        for &r in &[4usize, 12, 24] {
+            let actual = a.best_rank_error(r);
+            let pred = g(r as f64, m, n);
+            let rel = (actual - pred).abs() / actual;
+            assert!(rel < 0.08, "r={r}: actual={actual:.2} pred={pred:.2} rel={rel:.3}");
+        }
+    }
+
+    #[test]
+    fn theorem2_sigma_shrink_reduces_rank() {
+        // σ halves -> the same absolute error budget tolerates a smaller
+        // rank (the gradients carry less energy).
+        let (m, n) = (64, 256);
+        let r1 = rank_for_sigma_change(32.0, 1.0, 0.5, m, n);
+        assert!(r1 < 32.0, "r1={r1}");
+        // identity when nothing changes
+        assert!((rank_for_sigma_change(32.0, 1.0, 1.0, m, n) - 32.0).abs() < 1e-6);
+        // σ growing -> rank must rise
+        assert!(rank_for_sigma_change(32.0, 1.0, 2.0, m, n) > 32.0);
+    }
+
+    #[test]
+    fn theorem3_matches_theorem2_via_lemma2() {
+        let (m, n) = (64, 256);
+        let (s0, s1) = (0.8, 0.45);
+        let (h0, h1) = (gaussian_entropy(s0), gaussian_entropy(s1));
+        let via_sigma = rank_for_sigma_change(24.0, s0, s1, m, n);
+        let via_entropy = rank_for_entropy_change(24.0, h0, h1, m, n);
+        assert!((via_sigma - via_entropy).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lemma2_roundtrip() {
+        for &s in &[0.01, 0.37, 1.0, 5.0] {
+            assert!((sigma_from_entropy(gaussian_entropy(s)) - s).abs() / s < 1e-12);
+        }
+    }
+
+    #[test]
+    fn entropy_drop_of_ln2_equals_sigma_halving() {
+        // H0 - H1 = ln 2 is exactly σ halving (Lemma 2 consistency).
+        let (m, n) = (32, 64);
+        let a = rank_for_entropy_change(16.0, 1.0, 1.0 - std::f64::consts::LN_2, m, n);
+        let b = rank_for_sigma_change(16.0, 1.0, 0.5, m, n);
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn relative_error_normalized() {
+        assert!((relative_error(0.0, 64, 64) - 1.0).abs() < 1e-12);
+        assert!(relative_error(64.0, 64, 64) < 1e-9);
+    }
+}

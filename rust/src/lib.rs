@@ -1,0 +1,45 @@
+//! # EDGC — Entropy-driven Dynamic Gradient Compression
+//!
+//! Reproduction of *"EDGC: Entropy-driven Dynamic Gradient Compression for
+//! Efficient LLM Training"* (Yi et al., 2025) as a three-layer
+//! rust + JAX + Pallas stack: Pallas kernels and JAX graphs are AOT-lowered
+//! to HLO text at build time (`make artifacts`), and this crate — the
+//! Layer-3 coordinator — loads them through PJRT and runs the distributed
+//! training loop with dynamic entropy-driven gradient compression. Python
+//! never appears on the training hot path.
+//!
+//! Map of the crate (see DESIGN.md for the full inventory):
+//!
+//! * [`runtime`] — PJRT artifact loading/execution (the only xla-crate user)
+//! * [`tensor`] — host f32 linear algebra substrate
+//! * [`entropy`] — GDS: two-level gradient down-sampling + entropy estimate
+//! * [`cqm`] — CQM: Marchenko–Pastur error model `g(r; m, n)` and the
+//!   Theorem-3 rank update
+//! * [`compress`] — PowerSGD engine: factor state, error feedback, masks
+//! * [`netsim`] — cluster network model (ring all-reduce, paper clusters)
+//! * [`pipesim`] — discrete-event 1F1B pipeline simulator
+//! * [`coordinator`] — the training orchestrator + EDGC controller (DAC)
+//! * [`baselines`] — Megatron-LM (no compression), fixed-rank PowerSGD,
+//!   Optimus-CC
+//! * [`data`] — synthetic corpus + tokenizer + deterministic batcher
+//! * [`config`] — TOML-subset config system with paper presets
+//! * [`metrics`] — run records, CSV/JSON writers
+//! * [`eval`] — PPL + probe-task evaluation (Table IV substitute)
+//! * [`util`] — in-tree substrates for the offline environment (PRNG,
+//!   JSON, bench harness, property testing, CLI)
+
+pub mod baselines;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod cqm;
+pub mod data;
+pub mod entropy;
+pub mod eval;
+pub mod metrics;
+pub mod netsim;
+pub mod pipesim;
+pub mod repro;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

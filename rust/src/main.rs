@@ -1,0 +1,195 @@
+//! `edgc` — the leader CLI.
+//!
+//! Subcommands:
+//!   train              run one training job (method/cluster/... flags)
+//!   reproduce <exp>    regenerate a paper table/figure (or `all`)
+//!   projection         paper-scale Table-III projection (simulator only)
+//!   info               print the artifact manifest summary
+//!
+//! Examples:
+//!   edgc train --artifacts artifacts/tiny --method edgc --steps 200
+//!   edgc reproduce table3 --steps 240 --out runs
+//!   edgc projection --cluster cluster2 --params 12100000000 --dp 4
+
+use anyhow::Result;
+
+use edgc::config::{cluster_by_name, Method, TrainConfig};
+use edgc::coordinator::{Backend, Trainer};
+use edgc::repro;
+use edgc::runtime::Runtime;
+use edgc::util::cli::{Args, Spec};
+
+fn spec() -> Spec {
+    Spec {
+        name: "edgc",
+        about: "Entropy-driven Dynamic Gradient Compression (paper reproduction)",
+        flags: vec![
+            ("artifacts", "DIR", "artifact directory (default artifacts/tiny)"),
+            ("steps", "N", "training steps / experiment scale (default 200)"),
+            ("method", "NAME", "megatron|powersgd|optimus-cc|edgc (default edgc)"),
+            ("rank", "R", "fixed rank for powersgd/optimus-cc (default 32)"),
+            ("dp", "N", "data-parallel degree (default 2)"),
+            ("pp", "N", "pipeline stages (default 4)"),
+            ("tp", "N", "tensor-parallel degree, timing model only (default 4)"),
+            ("micro", "N", "microbatches per iteration (default 8)"),
+            ("lr", "X", "learning rate (default 2e-3)"),
+            ("window", "N", "EDGC window size in steps"),
+            ("alpha", "X", "GDS iteration sampling rate (default 0.1)"),
+            ("beta", "X", "GDS gradient sampling rate (default 0.25)"),
+            ("cluster", "NAME", "cluster1|cluster2|cluster3 (default cluster1)"),
+            ("backend", "NAME", "artifact|host compression path (default artifact)"),
+            ("config", "FILE", "TOML config file (flags override)"),
+            ("out", "DIR", "output directory for tables (default runs)"),
+            ("seed", "N", "random seed (default 7)"),
+            ("params", "N", "projection: model parameter count"),
+            ("eval-every", "N", "validation interval in steps"),
+            ("help", "", "print this help"),
+        ],
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let spec = spec();
+    let args = Args::parse(&argv, &spec)?;
+    if args.switch("help") || args.subcommand.is_empty() {
+        print!("{}", spec.help());
+        println!("\nsubcommands: train | reproduce <exp|all> | projection | info");
+        println!("experiments: {}", repro::ALL.join(", "));
+        return Ok(());
+    }
+    match args.require_subcommand(&["train", "reproduce", "projection", "info"])? {
+        "train" => cmd_train(&args),
+        "reproduce" => cmd_reproduce(&args),
+        "projection" => cmd_projection(&args),
+        "info" => cmd_info(&args),
+        _ => unreachable!(),
+    }
+}
+
+fn build_config(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => TrainConfig::from_toml(&std::fs::read_to_string(path)?)?,
+        None => TrainConfig::default(),
+    };
+    cfg.artifacts = args.str_or("artifacts", &cfg.artifacts);
+    cfg.steps = args.usize_or("steps", cfg.steps)?;
+    cfg.dp = args.usize_or("dp", cfg.dp)?;
+    cfg.pp = args.usize_or("pp", cfg.pp)?;
+    cfg.tp = args.usize_or("tp", cfg.tp)?;
+    cfg.microbatches = args.usize_or("micro", cfg.microbatches)?;
+    cfg.lr = args.f64_or("lr", cfg.lr)?;
+    cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
+    cfg.out_dir = args.str_or("out", &cfg.out_dir);
+    let rank = args.usize_or("rank", 32)?;
+    if let Some(m) = args.opt("method") {
+        cfg.method = Method::parse(m, rank)?;
+    }
+    if let Some(c) = args.opt("cluster") {
+        cfg.cluster = cluster_by_name(c)?;
+    }
+    cfg.edgc.window = args.usize_or("window", cfg.edgc.window.min((cfg.steps / 10).max(4)))?;
+    cfg.edgc.alpha = args.f64_or("alpha", cfg.edgc.alpha)?;
+    cfg.edgc.beta = args.f64_or("beta", cfg.edgc.beta)?;
+    Ok(cfg)
+}
+
+fn backend_of(args: &Args) -> Result<Backend> {
+    Ok(match args.str_or("backend", "artifact").as_str() {
+        "artifact" => Backend::Artifact,
+        "host" => Backend::Host,
+        other => anyhow::bail!("unknown backend {other:?} (artifact|host)"),
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let backend = backend_of(args)?;
+    println!(
+        "[edgc] training {} steps, method={}, dp={}, pp={}, cluster={}, backend={:?}",
+        cfg.steps,
+        cfg.method.name(),
+        cfg.dp,
+        cfg.pp,
+        cfg.cluster.name,
+        backend
+    );
+    let out_dir = cfg.out_dir.clone();
+    let mut tr = Trainer::new(cfg, backend)?;
+    let s = tr.run()?;
+    s.curve.write(&out_dir)?;
+    println!("\nmethod              : {}", s.method);
+    println!("final train loss    : {:.4}", s.final_train_loss);
+    println!("final val loss / PPL: {:.4} / {:.2}", s.final_val_loss, s.final_ppl);
+    println!("probe accuracy      : {:.1}% (chance 25%)", s.probe_accuracy * 100.0);
+    println!(
+        "virtual time        : {:.2}s (comm {:.2}s, compute {:.2}s)",
+        s.virtual_time, s.virtual_comm_time, s.virtual_compute_time
+    );
+    println!(
+        "comm volume         : {} floats ({:.2}x reduction)",
+        s.total_comm_floats,
+        s.total_uncompressed_floats as f64 / s.total_comm_floats.max(1) as f64
+    );
+    println!("wall time           : {:.1}s", s.wall_time);
+    println!("curve table         : {}/{}.csv", out_dir, s.curve.name);
+    Ok(())
+}
+
+fn cmd_reproduce(args: &Args) -> Result<()> {
+    let opts = repro::Opts {
+        artifacts: args.str_or("artifacts", "artifacts/tiny"),
+        out_dir: args.str_or("out", "runs"),
+        steps: args.usize_or("steps", 240)?,
+        seed: args.usize_or("seed", 7)? as u64,
+    };
+    let which = args.positionals.first().map(String::as_str).unwrap_or("all");
+    if which == "all" {
+        for name in repro::ALL {
+            // joint entries: table3/5/6 are produced by fig11/fig12/fig13
+            if matches!(*name, "table3" | "table5" | "table6") {
+                continue;
+            }
+            repro::run(name, &opts)?;
+        }
+    } else {
+        repro::run(which, &opts)?;
+    }
+    Ok(())
+}
+
+fn cmd_projection(args: &Args) -> Result<()> {
+    let cluster = cluster_by_name(&args.str_or("cluster", "cluster1"))?;
+    let n_params = args.usize_or("params", 2_500_000_000)?;
+    let dp = args.usize_or("dp", 2)?;
+    let t = repro::paper_scale_projection(cluster, n_params, dp);
+    println!("# {} ({} params on {})\n{}", t.name, n_params, cluster.name, t.render());
+    t.write(args.str_or("out", "runs"))?;
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = Runtime::load(args.str_or("artifacts", "artifacts/tiny"))?;
+    let m = &rt.manifest;
+    println!("preset       : {}", m.preset);
+    println!(
+        "model        : d={} L={} heads={} vocab={} seq={}",
+        m.d_model, m.n_layer, m.n_head, m.vocab, m.seq_len
+    );
+    println!("params       : {}", m.n_params);
+    println!("batch        : {}", m.batch);
+    println!("artifacts    : {}", m.artifact_names.len());
+    println!("buckets      :");
+    for b in &m.buckets {
+        println!("  {:>5} x {:<5} r_max {}", b.m, b.n, b.r_max);
+    }
+    println!("platform     : {}", rt.platform());
+    let params = rt.init_params()?;
+    println!(
+        "init params  : {} floats, expected initial loss ≈ ln(vocab) = {:.3}",
+        params.len(),
+        (m.vocab as f64).ln()
+    );
+    Ok(())
+}

@@ -1,0 +1,226 @@
+//! Metrics substrate: tabular run records with CSV/JSON writers.
+//!
+//! Every experiment driver (examples/, `edgc reproduce ...`, benches)
+//! emits its series through [`Table`] so EXPERIMENTS.md numbers are
+//! regenerable from files under `runs/`.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{obj, Json};
+
+/// A named table: fixed column headers, f64 rows.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn new(name: &str, columns: &[&str]) -> Self {
+        Table {
+            name: name.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(row.len(), self.columns.len(), "row arity mismatch in {}", self.name);
+        self.rows.push(row);
+    }
+
+    pub fn col_index(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c == name)
+    }
+
+    /// All values of one column.
+    pub fn column(&self, name: &str) -> Vec<f64> {
+        let i = self.col_index(name).unwrap_or_else(|| panic!("no column {name}"));
+        self.rows.iter().map(|r| r[i]).collect()
+    }
+
+    /// Last value of a column (e.g. final loss).
+    pub fn last(&self, name: &str) -> Option<f64> {
+        let i = self.col_index(name)?;
+        self.rows.last().map(|r| r[i])
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.columns.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            let line: Vec<String> = row.iter().map(|x| format!("{x}")).collect();
+            s.push_str(&line.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("columns", Json::Arr(self.columns.iter().map(|c| Json::from(c.as_str())).collect())),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|&x| Json::Num(x)).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write `<dir>/<name>.csv` and `<dir>/<name>.json`.
+    pub fn write(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let base = dir.join(&self.name);
+        std::fs::write(base.with_extension("csv"), self.to_csv())
+            .with_context(|| format!("writing {}", base.display()))?;
+        std::fs::write(base.with_extension("json"), self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Render as an aligned text table (for stdout / EXPERIMENTS.md).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        let cells: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| r.iter().map(|x| trim_float(*x)).collect::<Vec<_>>())
+            .collect();
+        for row in &cells {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let mut line = Vec::new();
+        for (c, w) in self.columns.iter().zip(&widths) {
+            line.push(format!("{c:>w$}", w = w));
+        }
+        out.push_str(&line.join("  "));
+        out.push('\n');
+        for row in &cells {
+            let mut line = Vec::new();
+            for (c, w) in row.iter().zip(&widths) {
+                line.push(format!("{c:>w$}", w = w));
+            }
+            out.push_str(&line.join("  "));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn trim_float(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    if x.fract() == 0.0 && x.abs() < 1e12 {
+        return format!("{}", x as i64);
+    }
+    if x.abs() >= 0.001 && x.abs() < 1e6 {
+        format!("{x:.4}")
+    } else {
+        format!("{x:.3e}")
+    }
+}
+
+/// Perplexity from mean cross-entropy (nats).
+pub fn ppl(loss: f64) -> f64 {
+    loss.exp()
+}
+
+/// Simple wall-clock scope timer (seconds).
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Append a line to a log file (used by long e2e runs for tail -f).
+pub fn append_line(path: impl AsRef<Path>, line: &str) -> Result<()> {
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "{line}")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_push_and_columns() {
+        let mut t = Table::new("demo", &["step", "loss"]);
+        t.push(vec![0.0, 3.5]);
+        t.push(vec![1.0, 3.1]);
+        assert_eq!(t.column("loss"), vec![3.5, 3.1]);
+        assert_eq!(t.last("loss"), Some(3.1));
+        assert_eq!(t.col_index("step"), Some(0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("demo", &["a"]);
+        t.push(vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.push(vec![1.0, 2.5]);
+        assert_eq!(t.to_csv(), "a,b\n1,2.5\n");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = Table::new("demo", &["a"]);
+        t.push(vec![1.5]);
+        let j = t.to_json();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "demo");
+        assert_eq!(
+            j.get("rows").unwrap().as_arr().unwrap()[0].as_arr().unwrap()[0].as_f64().unwrap(),
+            1.5
+        );
+    }
+
+    #[test]
+    fn write_files() {
+        let dir = std::env::temp_dir().join(format!("edgc-metrics-{}", std::process::id()));
+        let mut t = Table::new("demo", &["a"]);
+        t.push(vec![1.0]);
+        t.write(&dir).unwrap();
+        assert!(dir.join("demo.csv").exists());
+        assert!(dir.join("demo.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn render_aligns() {
+        let mut t = Table::new("demo", &["metric", "v"]);
+        t.push(vec![1.0, 17.95]);
+        let r = t.render();
+        assert!(r.contains("metric"));
+        assert!(r.contains("17.95"));
+    }
+
+    #[test]
+    fn ppl_known() {
+        assert!((ppl(0.0) - 1.0).abs() < 1e-12);
+        assert!((ppl(2.887) - 17.94).abs() < 0.05);
+    }
+}

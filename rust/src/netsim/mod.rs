@@ -1,0 +1,262 @@
+//! Network/cluster model — the substitute for the paper's physical
+//! testbeds (32×V100/32 Gbps Ethernet, 64×H100/400 Gbps IB; Table II).
+//!
+//! An α–β (latency–bandwidth) link model prices each communication, and a
+//! ring all-reduce cost model prices the DP gradient synchronization that
+//! EDGC compresses. Compression/decompression compute is priced from GEMM
+//! flop counts at an effective-throughput parameter per GPU generation.
+//! Everything is analytic and deterministic; the *measured* quantities in
+//! the real training loop (bytes, ranks) feed these models to produce the
+//! virtual wall-clock used by Fig. 11 / Table III / Table VI.
+//!
+//! Calibration mirrors the paper's own: Fig. 9 fits the linear model
+//! T_com(r) = ηr from measured (rank, time) pairs and reports MAPE
+//! (the paper reports 2.85%).
+
+/// One bidirectional link.
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    /// Bandwidth in Gbit/s.
+    pub gbps: f64,
+    /// Per-message latency in µs.
+    pub latency_us: f64,
+}
+
+impl Link {
+    /// Seconds to move `bytes` once over this link.
+    pub fn time(&self, bytes: usize) -> f64 {
+        self.latency_us * 1e-6 + (bytes as f64 * 8.0) / (self.gbps * 1e9)
+    }
+}
+
+/// Cluster description (Table II rows + the local testbed).
+#[derive(Clone, Copy, Debug)]
+pub struct Cluster {
+    pub name: &'static str,
+    pub inter_node: Link,
+    pub intra_node: Link,
+    /// Effective per-GPU GEMM throughput (TFLOP/s, f32-equivalent) used to
+    /// price compression/decompression compute.
+    pub gpu_tflops: f64,
+    pub gpus_per_node: usize,
+    /// Calibrated multiplier on analytic all-reduce time, covering NIC
+    /// contention across the TP group, software overhead, and the
+    /// unmodeled TP/PP/embedding traffic the paper's measured
+    /// "communication latency" includes (see DESIGN.md §Hardware-
+    /// Adaptation; calibrated so the Megatron baseline's comm share
+    /// matches the paper's §VI figures).
+    pub comm_overhead: f64,
+}
+
+/// Paper Cluster 1: 8 nodes × 4 V100, 32 Gbps Ethernet, NVLink 300 Gbps.
+pub const CLUSTER1_V100: Cluster = Cluster {
+    name: "cluster1-v100-32gbps",
+    inter_node: Link { gbps: 32.0, latency_us: 30.0 },
+    intra_node: Link { gbps: 300.0, latency_us: 3.0 },
+    gpu_tflops: 14.0,
+    gpus_per_node: 4,
+    comm_overhead: 5.0,
+};
+
+/// Paper Cluster 2: 16 nodes × 4 H100, 400 Gbps IB NDR, NVLink 900 Gbps.
+pub const CLUSTER2_H100: Cluster = Cluster {
+    name: "cluster2-h100-400gbps",
+    inter_node: Link { gbps: 400.0, latency_us: 5.0 },
+    intra_node: Link { gbps: 900.0, latency_us: 2.0 },
+    gpu_tflops: 60.0,
+    gpus_per_node: 4,
+    comm_overhead: 4.0,
+};
+
+/// Llama-34B scaling note setup (§V-B2): 32 GPUs, 400 Gbps.
+pub const CLUSTER3_SCALING: Cluster = Cluster {
+    name: "cluster3-400gbps-32gpu",
+    inter_node: Link { gbps: 400.0, latency_us: 5.0 },
+    intra_node: Link { gbps: 900.0, latency_us: 2.0 },
+    gpu_tflops: 50.0,
+    gpus_per_node: 8,
+    comm_overhead: 4.0,
+};
+
+/// Ring all-reduce of `bytes` over `k` participants: 2(k−1)/k·bytes of
+/// traffic per participant in 2(k−1) latency-bound steps.
+pub fn ring_allreduce_time(link: Link, k: usize, bytes: usize) -> f64 {
+    if k <= 1 {
+        return 0.0;
+    }
+    let steps = 2 * (k - 1);
+    let chunk = bytes as f64 / k as f64;
+    steps as f64 * (link.latency_us * 1e-6 + chunk * 8.0 / (link.gbps * 1e9))
+}
+
+/// PowerSGD compression compute time for an m×n matrix at rank r:
+/// two GEMMs (2·m·n·r flops each) + Gram–Schmidt (≈2·m·r²).
+pub fn compress_time(c: &Cluster, m: usize, n: usize, r: usize) -> f64 {
+    let flops = 2.0 * (m * n * r) as f64 * 2.0 + 2.0 * (m * r * r) as f64;
+    flops / (c.gpu_tflops * 1e12)
+}
+
+/// Decompression (P̂·Q'ᵀ): one GEMM.
+pub fn decompress_time(c: &Cluster, m: usize, n: usize, r: usize) -> f64 {
+    2.0 * (m * n * r) as f64 / (c.gpu_tflops * 1e12)
+}
+
+/// Eq. 2 total communication time for one compressed tensor all-reduce.
+pub fn t_com(c: &Cluster, dp: usize, m: usize, n: usize, r: usize) -> f64 {
+    let bytes = 4 * r * (m + n);
+    compress_time(c, m, n, r)
+        + ring_allreduce_time(c.inter_node, dp, bytes)
+        + decompress_time(c, m, n, r)
+}
+
+/// Uncompressed all-reduce time for the same tensor (the Eq. 2 RHS).
+pub fn t_uncompressed(c: &Cluster, dp: usize, m: usize, n: usize) -> f64 {
+    ring_allreduce_time(c.inter_node, dp, 4 * m * n)
+}
+
+/// Eq. 2 rank ceiling: the largest r (multiple of `step`) for which
+/// compression still beats the uncompressed all-reduce.
+pub fn rank_max(c: &Cluster, dp: usize, m: usize, n: usize, step: usize) -> usize {
+    let budget = t_uncompressed(c, dp, m, n);
+    let mut best = 0;
+    let mut r = step.max(1);
+    while r <= m.min(n) {
+        if t_com(c, dp, m, n, r) <= budget {
+            best = r;
+        } else {
+            break;
+        }
+        r += step.max(1);
+    }
+    best
+}
+
+/// Footnote-1 floor: r_min ∈ [r_max/6, r_max/4]; we take r_max/5 rounded
+/// to the adjustment grid, ≥ 1.
+pub fn rank_min(r_max: usize) -> usize {
+    (r_max / 5).max(1)
+}
+
+/// Linear communication model T_com(r) = ηr (Eq. 3), least-squares
+/// through the origin, with the paper's MAPE diagnostic (Fig. 9).
+#[derive(Clone, Copy, Debug)]
+pub struct LinearCommModel {
+    pub eta: f64,
+    pub mape: f64,
+}
+
+pub fn fit_eta(points: &[(usize, f64)]) -> LinearCommModel {
+    assert!(!points.is_empty());
+    let num: f64 = points.iter().map(|&(r, t)| r as f64 * t).sum();
+    let den: f64 = points.iter().map(|&(r, _)| (r as f64) * (r as f64)).sum();
+    let eta = num / den.max(1e-300);
+    let mape = points
+        .iter()
+        .filter(|&&(_, t)| t > 0.0)
+        .map(|&(r, t)| ((eta * r as f64 - t) / t).abs())
+        .sum::<f64>()
+        / points.len() as f64
+        * 100.0;
+    LinearCommModel { eta, mape }
+}
+
+impl LinearCommModel {
+    /// Predicted communication time at rank r (Eq. 3).
+    pub fn predict(&self, r: f64) -> f64 {
+        self.eta * r
+    }
+
+    /// Inverse: the rank whose predicted time equals `t` (Eq. 4).
+    pub fn rank_for_time(&self, t: f64) -> f64 {
+        t / self.eta.max(1e-300)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_time_scales_with_bytes_and_bandwidth() {
+        let l = Link { gbps: 32.0, latency_us: 0.0 };
+        let t = l.time(4_000_000); // 4 MB over 32 Gbps = 1 ms
+        assert!((t - 1e-3).abs() < 1e-9, "{t}");
+        let fast = Link { gbps: 400.0, latency_us: 0.0 };
+        assert!((l.time(1000) / fast.time(1000) - 12.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_allreduce_degenerate_and_scaling() {
+        let l = Link { gbps: 100.0, latency_us: 0.0 };
+        assert_eq!(ring_allreduce_time(l, 1, 1 << 20), 0.0);
+        // traffic per participant ~2(k-1)/k·bytes: k=2 vs k=8 ratio = 1/1.75
+        let t2 = ring_allreduce_time(l, 2, 1 << 20);
+        let t8 = ring_allreduce_time(l, 8, 1 << 20);
+        assert!((t2 / t8 - (1.0 / 1.75)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compression_beats_uncompressed_at_low_rank() {
+        // GPT2-2.5B-ish bucket on cluster 1: low rank must win (Eq. 2).
+        let (m, n) = (1920, 7680);
+        let r = 64;
+        assert!(t_com(&CLUSTER1_V100, 2, m, n, r) < t_uncompressed(&CLUSTER1_V100, 2, m, n));
+    }
+
+    #[test]
+    fn rank_max_monotone_in_bandwidth() {
+        // Higher bandwidth -> uncompressed is cheaper -> r_max shrinks
+        // (or at least never grows).
+        let (m, n) = (1920, 1920);
+        let r1 = rank_max(&CLUSTER1_V100, 2, m, n, 4);
+        let r2 = rank_max(&CLUSTER2_H100, 2, m, n, 4);
+        assert!(r1 >= r2, "r1={r1} r2={r2}");
+        assert!(r1 > 0);
+    }
+
+    #[test]
+    fn rank_min_band() {
+        assert_eq!(rank_min(64), 12); // 64/5
+        assert!(rank_min(64) >= 64 / 6 && rank_min(64) <= 64 / 4);
+        assert_eq!(rank_min(2), 1);
+    }
+
+    #[test]
+    fn eta_fit_exact_linear() {
+        let pts: Vec<(usize, f64)> = (1..=10).map(|r| (r * 8, 0.25e-3 * (r * 8) as f64)).collect();
+        let m = fit_eta(&pts);
+        assert!((m.eta - 0.25e-3).abs() < 1e-12);
+        assert!(m.mape < 1e-9);
+        assert!((m.rank_for_time(m.predict(32.0)) - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eta_fit_on_modeled_times_is_nearly_linear() {
+        // Fig. 9 reproduction in miniature: the Eq.-2 model over the rank
+        // grid is ≈ linear once the tensor is stage-aggregate-sized (the
+        // paper measures whole-stage DP traffic; constant latency terms
+        // are then negligible). Paper reports MAPE 2.85%.
+        let (m, n, dp) = (1920, 49152, 2); // one stage's stacked matrices
+        let pts: Vec<(usize, f64)> =
+            (1..=16).map(|i| (i * 8, t_com(&CLUSTER1_V100, dp, m, n, i * 8))).collect();
+        let fit = fit_eta(&pts);
+        assert!(fit.mape < 5.0, "MAPE={}", fit.mape);
+    }
+
+    #[test]
+    fn compress_time_scales_with_rank() {
+        let a = compress_time(&CLUSTER1_V100, 1024, 1024, 16);
+        let b = compress_time(&CLUSTER1_V100, 1024, 1024, 64);
+        assert!(b > 3.5 * a && b < 4.5 * a);
+    }
+
+    #[test]
+    fn paper_bandwidth_ratio_sanity() {
+        // §VI: at 32 Gbps comm dominates vs 400 Gbps — the model must show
+        // a large gap for the same tensor.
+        let (m, n) = (3584, 3584);
+        let slow = t_uncompressed(&CLUSTER1_V100, 4, m, n);
+        let fast = t_uncompressed(&CLUSTER2_H100, 4, m, n);
+        assert!(slow / fast > 10.0);
+    }
+}

@@ -1,0 +1,330 @@
+//! Discrete-event simulator of a 1F1B pipeline-parallel training
+//! iteration (paper §IV-D, Fig. 8).
+//!
+//! This substrate regenerates the paper's timing phenomena: stage 1 (the
+//! first pipeline stage) finishes its backward pass *last*, so its DP
+//! gradient all-reduce starts latest and becomes the synchronization
+//! bottleneck; later stages have `(i−1)·T̄_microBack` of slack that DAC
+//! spends on *larger* (more accurate) compression ranks (Eq. 4).
+//!
+//! The simulator is a deterministic list scheduler over the standard
+//! non-interleaved 1F1B order; correctness is pinned by conservation
+//! tests (per-stage busy time, classic bubble formula) rather than wall
+//! clock.
+
+/// Per-iteration pipeline timing inputs. Times in seconds.
+#[derive(Clone, Debug)]
+pub struct PipeSpec {
+    /// Forward time of one microbatch, per stage.
+    pub t_fwd: Vec<f64>,
+    /// Backward time of one microbatch, per stage.
+    pub t_bwd: Vec<f64>,
+    /// Number of microbatches per iteration.
+    pub microbatches: usize,
+    /// Inter-stage activation/grad p2p time per microbatch hop.
+    pub t_p2p: f64,
+    /// Per-stage DP gradient synchronization time (possibly compressed).
+    pub dp_comm: Vec<f64>,
+    /// Optimizer step (after all comm completes).
+    pub t_opt: f64,
+}
+
+impl PipeSpec {
+    /// Homogeneous helper: equal stage times.
+    pub fn uniform(stages: usize, t_fwd: f64, t_bwd: f64, microbatches: usize) -> Self {
+        PipeSpec {
+            t_fwd: vec![t_fwd; stages],
+            t_bwd: vec![t_bwd; stages],
+            microbatches,
+            t_p2p: 0.0,
+            dp_comm: vec![0.0; stages],
+            t_opt: 0.0,
+        }
+    }
+
+    pub fn stages(&self) -> usize {
+        self.t_fwd.len()
+    }
+
+    /// T̄_microBack of Eq. 4: mean per-stage microbatch backward time.
+    pub fn mean_microback(&self) -> f64 {
+        self.t_bwd.iter().sum::<f64>() / self.t_bwd.len() as f64
+    }
+}
+
+/// Simulated iteration timeline.
+#[derive(Clone, Debug)]
+pub struct PipeResult {
+    /// When each stage finishes its *last* microbatch backward.
+    pub last_bwd: Vec<f64>,
+    /// When each stage finishes its DP all-reduce (last_bwd + dp_comm).
+    pub comm_done: Vec<f64>,
+    /// End-to-end iteration time (max comm_done + optimizer).
+    pub iteration: f64,
+    /// Σ busy compute time per stage (conservation check).
+    pub busy: Vec<f64>,
+    /// Pipeline bubble fraction at the bottleneck stage.
+    pub bubble_frac: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Op {
+    F(usize),
+    B(usize),
+}
+
+/// The standard non-interleaved 1F1B op order for one stage.
+fn stage_ops(stage: usize, stages: usize, micro: usize) -> Vec<Op> {
+    let warmup = (stages - 1 - stage).min(micro);
+    let mut ops = Vec::with_capacity(2 * micro);
+    let mut f = 0;
+    let mut b = 0;
+    for _ in 0..warmup {
+        ops.push(Op::F(f));
+        f += 1;
+    }
+    while f < micro {
+        ops.push(Op::F(f));
+        f += 1;
+        ops.push(Op::B(b));
+        b += 1;
+    }
+    while b < micro {
+        ops.push(Op::B(b));
+        b += 1;
+    }
+    ops
+}
+
+/// Run the list scheduler; returns the full timeline.
+pub fn simulate(spec: &PipeSpec) -> PipeResult {
+    let s = spec.stages();
+    let m = spec.microbatches;
+    assert!(s >= 1 && m >= 1);
+    assert_eq!(spec.t_bwd.len(), s);
+    assert_eq!(spec.dp_comm.len(), s);
+
+    let ops: Vec<Vec<Op>> = (0..s).map(|i| stage_ops(i, s, m)).collect();
+    let mut ptr = vec![0usize; s]; // next op index per stage
+    let mut cursor = vec![0.0f64; s]; // stage-free time
+    let mut f_done = vec![vec![f64::NAN; m]; s];
+    let mut b_done = vec![vec![f64::NAN; m]; s];
+    let mut busy = vec![0.0f64; s];
+
+    let total_ops: usize = ops.iter().map(|o| o.len()).sum();
+    let mut executed = 0;
+    while executed < total_ops {
+        // Among stages whose next op is ready, run the earliest-start one.
+        let mut best: Option<(f64, usize)> = None;
+        for st in 0..s {
+            if ptr[st] >= ops[st].len() {
+                continue;
+            }
+            let ready = match ops[st][ptr[st]] {
+                Op::F(i) => {
+                    if st == 0 {
+                        Some(cursor[st])
+                    } else {
+                        let dep = f_done[st - 1][i];
+                        if dep.is_nan() {
+                            None
+                        } else {
+                            Some(cursor[st].max(dep + spec.t_p2p))
+                        }
+                    }
+                }
+                Op::B(i) => {
+                    if st == s - 1 {
+                        let dep = f_done[st][i];
+                        if dep.is_nan() {
+                            None
+                        } else {
+                            Some(cursor[st].max(dep))
+                        }
+                    } else {
+                        let dep = b_done[st + 1][i];
+                        if dep.is_nan() {
+                            None
+                        } else {
+                            Some(cursor[st].max(dep + spec.t_p2p))
+                        }
+                    }
+                }
+            };
+            if let Some(t) = ready {
+                if best.map_or(true, |(bt, _)| t < bt) {
+                    best = Some((t, st));
+                }
+            }
+        }
+        let (start, st) =
+            best.expect("deadlock: no ready op — 1F1B order violated (bug in stage_ops)");
+        let (dur, record) = match ops[st][ptr[st]] {
+            Op::F(i) => (spec.t_fwd[st], (true, i)),
+            Op::B(i) => (spec.t_bwd[st], (false, i)),
+        };
+        let end = start + dur;
+        cursor[st] = end;
+        busy[st] += dur;
+        let (is_f, i) = record;
+        if is_f {
+            f_done[st][i] = end;
+        } else {
+            b_done[st][i] = end;
+        }
+        ptr[st] += 1;
+        executed += 1;
+    }
+
+    let last_bwd: Vec<f64> =
+        (0..s).map(|st| b_done[st].iter().cloned().fold(0.0, f64::max)).collect();
+    let comm_done: Vec<f64> = (0..s).map(|st| last_bwd[st] + spec.dp_comm[st]).collect();
+    let iteration = comm_done.iter().cloned().fold(0.0, f64::max) + spec.t_opt;
+    let span = last_bwd.iter().cloned().fold(0.0, f64::max);
+    let max_busy = busy.iter().cloned().fold(0.0, f64::max);
+    PipeResult {
+        last_bwd,
+        comm_done,
+        iteration,
+        busy,
+        bubble_frac: if span > 0.0 { 1.0 - max_busy / span } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_order_counts() {
+        for s in 1..5 {
+            for m in 1..8 {
+                for st in 0..s {
+                    let ops = stage_ops(st, s, m);
+                    assert_eq!(ops.len(), 2 * m);
+                    let f = ops.iter().filter(|o| matches!(o, Op::F(_))).count();
+                    assert_eq!(f, m);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_stage_no_bubble() {
+        let spec = PipeSpec::uniform(1, 2.0, 3.0, 4);
+        let r = simulate(&spec);
+        assert!((r.iteration - 4.0 * 5.0).abs() < 1e-9);
+        assert!(r.bubble_frac.abs() < 1e-9);
+    }
+
+    #[test]
+    fn classic_bubble_formula() {
+        // Equal stages, tf=tb=1: iteration span = (M + S - 1)·(tf+tb).
+        let (s, m) = (4, 8);
+        let spec = PipeSpec::uniform(s, 1.0, 1.0, m);
+        let r = simulate(&spec);
+        let want = (m + s - 1) as f64 * 2.0;
+        assert!((r.iteration - want).abs() < 1e-9, "{} vs {want}", r.iteration);
+    }
+
+    #[test]
+    fn busy_time_conservation() {
+        let spec = PipeSpec::uniform(4, 0.7, 1.3, 6);
+        let r = simulate(&spec);
+        for st in 0..4 {
+            assert!((r.busy[st] - 6.0 * 2.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn stage1_finishes_backward_last() {
+        // The paper's Fig. 8 phenomenon: first stage completes backward
+        // last (backprop flows tail -> head).
+        let spec = PipeSpec::uniform(4, 1.0, 1.0, 8);
+        let r = simulate(&spec);
+        for st in 1..4 {
+            assert!(
+                r.last_bwd[0] >= r.last_bwd[st],
+                "stage0 {} < stage{st} {}",
+                r.last_bwd[0],
+                r.last_bwd[st]
+            );
+        }
+        // successive stages finish earlier by ≈ t_bwd each
+        let gap = r.last_bwd[0] - r.last_bwd[1];
+        assert!(gap > 0.0);
+    }
+
+    #[test]
+    fn stage_slack_matches_eq4_shape() {
+        // last_bwd gaps ≈ (i-1)·T̄_microBack for uniform stages — exactly
+        // the slack Eq. 4 converts into extra rank.
+        let spec = PipeSpec::uniform(4, 1.0, 1.0, 8);
+        let r = simulate(&spec);
+        let tb = spec.mean_microback();
+        for i in 1..4 {
+            let slack = r.last_bwd[0] - r.last_bwd[i];
+            assert!(
+                (slack - i as f64 * tb).abs() < 1e-9,
+                "stage {i}: slack {slack} vs {}",
+                i as f64 * tb
+            );
+        }
+    }
+
+    #[test]
+    fn aligned_dp_comm_equalizes_completion() {
+        // Give stage i exactly the Eq.-4 budget: completion times align.
+        let mut spec = PipeSpec::uniform(4, 1.0, 1.0, 8);
+        let base = 0.5;
+        let tb = spec.mean_microback();
+        let r0 = simulate(&spec);
+        for i in 0..4 {
+            let slack = r0.last_bwd[0] - r0.last_bwd[i];
+            spec.dp_comm[i] = base + slack;
+        }
+        let r = simulate(&spec);
+        let t0 = r.comm_done[0];
+        for i in 1..4 {
+            assert!((r.comm_done[i] - t0).abs() < 1e-9 * (1.0 + tb));
+        }
+    }
+
+    #[test]
+    fn p2p_latency_stretches_pipeline() {
+        let mut spec = PipeSpec::uniform(4, 1.0, 1.0, 4);
+        let base = simulate(&spec).iteration;
+        spec.t_p2p = 0.1;
+        assert!(simulate(&spec).iteration > base);
+    }
+
+    #[test]
+    fn heterogeneous_stage_is_bottleneck() {
+        let mut spec = PipeSpec::uniform(4, 1.0, 1.0, 4);
+        spec.t_fwd[2] = 3.0; // slow stage dominates
+        let r = simulate(&spec);
+        assert!(r.busy[2] > r.busy[0]);
+        assert!(r.iteration >= 4.0 * (3.0 + 1.0));
+    }
+
+    #[test]
+    fn dp_comm_extends_iteration_only_past_bottleneck() {
+        let mut spec = PipeSpec::uniform(2, 1.0, 1.0, 4);
+        let base = simulate(&spec).iteration;
+        spec.dp_comm = vec![0.0, 0.2]; // stage 1 finishes earlier; small
+                                       // comm hides in stage-0 tail
+        let r = simulate(&spec);
+        assert!((r.iteration - base).abs() < 1e-9);
+        spec.dp_comm = vec![1.5, 0.0]; // bottleneck stage pays fully
+        let r2 = simulate(&spec);
+        assert!((r2.iteration - (base + 1.5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn optimizer_time_additive() {
+        let mut spec = PipeSpec::uniform(3, 1.0, 1.0, 3);
+        let base = simulate(&spec).iteration;
+        spec.t_opt = 0.25;
+        assert!((simulate(&spec).iteration - base - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,72 @@
+//! Gradient-trace recorder: runs plain (uncompressed) training through
+//! the PJRT artifacts and captures replica-0 gradients at a fixed cadence.
+//! Shared by the observation-section reproductions (Figs. 2/3/4, the GDS
+//! ablations of Fig. 12 / Table V, and the window study of Table VII),
+//! which all analyze the *same* gradient stream offline — mirroring how
+//! the paper instruments a pre-training run.
+
+use anyhow::Result;
+
+use crate::data::{Batcher, SynthCorpus};
+use crate::runtime::{lit_f32, lit_i32, to_f32, Runtime};
+
+/// A recorded training trace.
+pub struct GradTrace {
+    /// (step, full flat gradient) at every `every`-step checkpoint.
+    pub grads: Vec<(usize, Vec<f32>)>,
+    /// Training loss at every step.
+    pub losses: Vec<f64>,
+}
+
+/// Train `steps` uncompressed steps (Adam via the artifact) and record
+/// gradients every `every` steps.
+pub fn record(rt: &Runtime, steps: usize, every: usize, seed: u64) -> Result<GradTrace> {
+    let man = rt.manifest.clone();
+    let mut params = rt.init_params()?;
+    let n = man.n_params as i64;
+    let mut m = vec![0.0f32; man.n_params];
+    let mut v = vec![0.0f32; man.n_params];
+    let corpus = SynthCorpus::new(man.vocab, seed ^ 0xDA7A);
+    let mut batcher = Batcher::new(&corpus, man.batch, man.seq_len, 200_000, seed);
+    let mut out_trace = GradTrace { grads: Vec::new(), losses: Vec::new() };
+    let (b1, b2) = (0.9f64, 0.999f64);
+    for step in 0..steps {
+        let batch = batcher.next_train();
+        let out = rt.run(
+            "train_step",
+            &[
+                lit_f32(&params, &[n])?,
+                lit_i32(&batch, &[man.batch as i64, (man.seq_len + 1) as i64])?,
+            ],
+        )?;
+        let loss = crate::runtime::to_scalar(&out[0])? as f64;
+        let grads = to_f32(&out[1])?;
+        if step % every == 0 {
+            out_trace.grads.push((step, grads.clone()));
+        }
+        out_trace.losses.push(loss);
+        let t = step + 1;
+        let scalars = [
+            2e-3f32,
+            b1 as f32,
+            b2 as f32,
+            1e-8,
+            (1.0 - b1.powi(t as i32)) as f32,
+            (1.0 - b2.powi(t as i32)) as f32,
+        ];
+        let upd = rt.run(
+            "adam",
+            &[
+                lit_f32(&params, &[n])?,
+                lit_f32(&m, &[n])?,
+                lit_f32(&v, &[n])?,
+                lit_f32(&grads, &[n])?,
+                lit_f32(&scalars, &[6])?,
+            ],
+        )?;
+        params = to_f32(&upd[0])?;
+        m = to_f32(&upd[1])?;
+        v = to_f32(&upd[2])?;
+    }
+    Ok(out_trace)
+}

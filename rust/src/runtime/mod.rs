@@ -1,0 +1,286 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! This is the only module that talks to the `xla` crate. The coordinator
+//! sees named executables keyed by the manifest that `python -m
+//! compile.aot` wrote next to the HLO files. Executables are compiled once
+//! and cached; the training hot loop then runs pure rust + PJRT.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One entry of the flat-parameter layout (mirrors python param_table).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl ParamSpec {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// 2-D tensors are compression candidates (PowerSGD policy).
+    pub fn is_matrix(&self) -> bool {
+        self.shape.len() == 2
+    }
+}
+
+/// A gradient-matrix shape bucket with its artifact-time rank ceiling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Bucket {
+    pub m: usize,
+    pub n: usize,
+    pub r_max: usize,
+}
+
+impl Bucket {
+    pub fn tag(&self) -> String {
+        format!("{}x{}", self.m, self.n)
+    }
+}
+
+/// Parsed artifacts/<preset>/manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub seed: u64,
+    pub batch: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub n_layer: usize,
+    pub seq_len: usize,
+    pub n_params: usize,
+    pub entropy_sample: usize,
+    pub entropy_bins: usize,
+    pub params: Vec<ParamSpec>,
+    pub buckets: Vec<Bucket>,
+    pub artifact_names: Vec<String>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json")?;
+        let model = j.get("model")?;
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| x.as_usize())
+                        .collect::<Result<_>>()?,
+                    offset: p.get("offset")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let buckets = j
+            .get("buckets")?
+            .as_arr()?
+            .iter()
+            .map(|b| {
+                Ok(Bucket {
+                    m: b.get("m")?.as_usize()?,
+                    n: b.get("n")?.as_usize()?,
+                    r_max: b.get("r_max")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            preset: j.get("preset")?.as_str()?.to_string(),
+            seed: j.get("seed")?.as_usize()? as u64,
+            batch: j.get("batch")?.as_usize()?,
+            vocab: model.get("vocab")?.as_usize()?,
+            d_model: model.get("d_model")?.as_usize()?,
+            n_head: model.get("n_head")?.as_usize()?,
+            n_layer: model.get("n_layer")?.as_usize()?,
+            seq_len: model.get("seq_len")?.as_usize()?,
+            n_params: model.get("n_params")?.as_usize()?,
+            entropy_sample: j.get("entropy_sample")?.as_usize()?,
+            entropy_bins: j.get("entropy_bins")?.as_usize()?,
+            params,
+            buckets,
+            artifact_names: j.get("artifacts")?.as_obj()?.keys().cloned().collect(),
+        })
+    }
+
+    pub fn param(&self, name: &str) -> Result<&ParamSpec> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow!("unknown param {name:?}"))
+    }
+
+    pub fn bucket_for(&self, shape: &[usize]) -> Option<Bucket> {
+        if shape.len() != 2 {
+            return None;
+        }
+        self.buckets.iter().copied().find(|b| b.m == shape[0] && b.n == shape[1])
+    }
+}
+
+/// Compiled-executable cache over one artifact directory + PJRT client.
+pub struct Runtime {
+    pub manifest: Manifest,
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    exes: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open an artifact directory produced by `make artifacts`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", mpath.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(Runtime { manifest, dir, client, exes: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Initial flat parameter vector written by the AOT step.
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join("init_params.bin");
+        let bytes = std::fs::read(&path).with_context(|| format!("{}", path.display()))?;
+        if bytes.len() != self.manifest.n_params * 4 {
+            bail!(
+                "init_params.bin has {} bytes, expected {}",
+                bytes.len(),
+                self.manifest.n_params * 4
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Compile (or fetch from cache) a named artifact.
+    pub fn exe(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(wrap)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp).map_err(wrap)?);
+        self.exes.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a named artifact on literal inputs; returns the decomposed
+    /// output tuple (aot.py lowers with return_tuple=True).
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exe(name)?;
+        let out = exe.execute::<xla::Literal>(inputs).map_err(wrap)?;
+        let lit = out[0][0].to_literal_sync().map_err(wrap)?;
+        lit.to_tuple().map_err(wrap)
+    }
+
+    /// Pre-compile a list of artifacts (hides compile latency up front).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.exe(n)?;
+        }
+        Ok(())
+    }
+}
+
+/// xla::Error -> anyhow::Error.
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+// ---------------------------------------------------------------- literals
+
+/// f32 literal with the given dims.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("lit_f32: {} elements for dims {:?}", data.len(), dims);
+    }
+    if dims.len() == 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    xla::Literal::vec1(data).reshape(dims).map_err(wrap)
+}
+
+/// i32 literal with the given dims.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("lit_i32: {} elements for dims {:?}", data.len(), dims);
+    }
+    if dims.len() == 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    xla::Literal::vec1(data).reshape(dims).map_err(wrap)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(wrap)
+}
+
+/// Extract the single f32 scalar from a literal.
+pub fn to_scalar(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(wrap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "preset": "tiny", "seed": 0, "batch": 2,
+      "model": {"vocab": 512, "d_model": 128, "n_head": 4, "n_layer": 2,
+                "seq_len": 64, "n_params": 470528},
+      "entropy_sample": 65536, "entropy_bins": 256,
+      "params": [{"name": "tok_emb", "shape": [512, 128], "offset": 0},
+                  {"name": "lnf_g", "shape": [128], "offset": 65536}],
+      "buckets": [{"m": 512, "n": 128, "r_max": 64}],
+      "artifacts": {"train_step": {"file": "train_step.hlo.txt", "bytes": 1}}
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.n_params, 470528);
+        assert_eq!(m.params.len(), 2);
+        assert!(m.params[0].is_matrix());
+        assert!(!m.params[1].is_matrix());
+        assert_eq!(m.bucket_for(&[512, 128]).unwrap().r_max, 64);
+        assert!(m.bucket_for(&[128]).is_none());
+        assert_eq!(m.artifact_names, vec!["train_step".to_string()]);
+    }
+
+    #[test]
+    fn manifest_rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+
+    #[test]
+    fn param_lookup() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.param("tok_emb").unwrap().size(), 65536);
+        assert!(m.param("nope").is_err());
+    }
+}

@@ -1,0 +1,361 @@
+//! Host-side f32 tensor substrate.
+//!
+//! The hot numerical path runs inside PJRT executables; this module is the
+//! coordinator's own linear algebra: buffer views over the flat parameter
+//! vector, the pure-rust PowerSGD reference (tested against the python
+//! oracle via golden files), Pearson correlation for the Fig.-4 analysis,
+//! and the statistics the GDS/CQM controllers consume.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn randn(rows: usize, cols: usize, scale: f32, rng: &mut Rng) -> Self {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols, scale) }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// C = A·B, f32 with f64 accumulation per dot (matches the kernel's
+    /// f32-accumulate behaviour within test tolerances, and is the more
+    /// accurate host oracle).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul inner dim");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        // ikj loop order: streams B rows, vectorizes the inner j loop.
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Eps-guarded classical Gram–Schmidt over columns; zero columns stay
+    /// zero (same contract as the L2 graph — see python kernels/ref.py).
+    pub fn gram_schmidt(&self, eps: f32) -> Mat {
+        let (m, r) = (self.rows, self.cols);
+        let mut q = Mat::zeros(m, r);
+        let mut col = vec![0.0f32; m];
+        for i in 0..r {
+            for rr in 0..m {
+                col[rr] = self.at(rr, i);
+            }
+            for j in 0..i {
+                let mut dot = 0.0f64;
+                for rr in 0..m {
+                    dot += q.at(rr, j) as f64 * col[rr] as f64;
+                }
+                for rr in 0..m {
+                    col[rr] -= dot as f32 * q.at(rr, j);
+                }
+            }
+            let norm = col.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32;
+            let inv = 1.0 / (norm + eps);
+            for rr in 0..m {
+                *q.at_mut(rr, i) = col[rr] * inv;
+            }
+        }
+        q
+    }
+}
+
+impl Mat {
+    /// Singular values (descending) via one-sided Jacobi — the in-tree
+    /// oracle for compression-error ground truth (Eckart–Young): used by
+    /// tests and the Fig. 10 reference curves, not the hot path.
+    pub fn singular_values(&self) -> Vec<f64> {
+        // Work on the thinner orientation: columns ≤ rows.
+        let a = if self.cols > self.rows { self.t() } else { self.clone() };
+        let (m, n) = (a.rows, a.cols);
+        // Column-major copy for cache-friendly column ops.
+        let mut u: Vec<Vec<f64>> = (0..n)
+            .map(|j| (0..m).map(|i| a.at(i, j) as f64).collect())
+            .collect();
+        let eps = 1e-12;
+        for _sweep in 0..60 {
+            let mut off = 0.0f64;
+            for p in 0..n {
+                for q in (p + 1)..n {
+                    let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                    for i in 0..m {
+                        app += u[p][i] * u[p][i];
+                        aqq += u[q][i] * u[q][i];
+                        apq += u[p][i] * u[q][i];
+                    }
+                    if apq.abs() <= eps * (app * aqq).sqrt().max(1e-300) {
+                        continue;
+                    }
+                    off += apq.abs();
+                    let tau = (aqq - app) / (2.0 * apq);
+                    let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                    let c = 1.0 / (1.0 + t * t).sqrt();
+                    let s = c * t;
+                    for i in 0..m {
+                        let up = u[p][i];
+                        let uq = u[q][i];
+                        u[p][i] = c * up - s * uq;
+                        u[q][i] = s * up + c * uq;
+                    }
+                }
+            }
+            if off < 1e-14 {
+                break;
+            }
+        }
+        let mut sv: Vec<f64> = u
+            .iter()
+            .map(|col| col.iter().map(|x| x * x).sum::<f64>().sqrt())
+            .collect();
+        sv.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        sv
+    }
+
+    /// Frobenius error of the best rank-r approximation (Eckart–Young):
+    /// sqrt(Σ_{i>r} σ_i²).
+    pub fn best_rank_error(&self, r: usize) -> f64 {
+        let sv = self.singular_values();
+        sv.iter().skip(r).map(|s| s * s).sum::<f64>().sqrt()
+    }
+}
+
+/// Pearson correlation coefficient of two equal-length slices.
+pub fn pearson(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    let ma = a.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let mb = b.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let (mut cov, mut va, mut vb) = (0.0, 0.0, 0.0);
+    for (&x, &y) in a.iter().zip(b) {
+        let dx = x as f64 - ma;
+        let dy = y as f64 - mb;
+        cov += dx * dy;
+        va += dx * dx;
+        vb += dy * dy;
+    }
+    if va == 0.0 || vb == 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Mean and (population) standard deviation.
+pub fn mean_std(xs: &[f32]) -> (f64, f64) {
+    let n = xs.len().max(1) as f64;
+    let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = xs.iter().map(|&x| (x as f64 - mean) * (x as f64 - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+/// Mean squared error between two series.
+pub fn mse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>() / a.len() as f64
+}
+
+/// Pearson correlation for f64 series (Table VII CC metric).
+pub fn pearson64(a: &[f64], b: &[f64]) -> f64 {
+    let af: Vec<f32> = a.iter().map(|&x| x as f32).collect();
+    let bf: Vec<f32> = b.iter().map(|&x| x as f32).collect();
+    pearson(&af, &bf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut eye = Mat::zeros(3, 3);
+        for i in 0..3 {
+            *eye.at_mut(i, i) = 1.0;
+        }
+        let a = Mat::from_vec(3, 3, (0..9).map(|x| x as f32).collect());
+        assert_eq!(a.matmul(&eye), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(0);
+        let a = Mat::randn(5, 7, 1.0, &mut rng);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn gram_schmidt_orthonormal() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(32, 8, 1.0, &mut rng);
+        let q = a.gram_schmidt(1e-8);
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut dot = 0.0f64;
+                for r in 0..32 {
+                    dot += q.at(r, i) as f64 * q.at(r, j) as f64;
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-4, "({i},{j}) dot={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn gram_schmidt_zero_columns_stay_zero() {
+        let mut rng = Rng::new(2);
+        let mut a = Mat::randn(16, 6, 1.0, &mut rng);
+        for r in 0..16 {
+            *a.at_mut(r, 4) = 0.0;
+            *a.at_mut(r, 5) = 0.0;
+        }
+        let q = a.gram_schmidt(1e-8);
+        for r in 0..16 {
+            assert_eq!(q.at(r, 4), 0.0);
+            assert_eq!(q.at(r, 5), 0.0);
+        }
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [2.0f32, 4.0, 6.0, 8.0];
+        let c = [8.0f32, 6.0, 4.0, 2.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-9);
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_uncorrelated_random() {
+        let mut rng = Rng::new(3);
+        let a: Vec<f32> = rng.normal_vec(5000, 1.0);
+        let b: Vec<f32> = rng.normal_vec(5000, 1.0);
+        assert!(pearson(&a, &b).abs() < 0.05);
+    }
+
+    #[test]
+    fn mean_std_known() {
+        let (m, s) = mean_std(&[1.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-9 && (s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn singular_values_of_diagonal() {
+        let mut a = Mat::zeros(3, 3);
+        *a.at_mut(0, 0) = 3.0;
+        *a.at_mut(1, 1) = 1.0;
+        *a.at_mut(2, 2) = 2.0;
+        let sv = a.singular_values();
+        assert!((sv[0] - 3.0).abs() < 1e-9 && (sv[1] - 2.0).abs() < 1e-9 && (sv[2] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn singular_values_match_fro_norm() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(20, 12, 1.0, &mut rng);
+        let sv = a.singular_values();
+        let fro2: f64 = sv.iter().map(|s| s * s).sum();
+        assert!((fro2.sqrt() - a.fro_norm()).abs() < 1e-6);
+        assert_eq!(sv.len(), 12);
+    }
+
+    #[test]
+    fn best_rank_error_full_rank_is_zero() {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(10, 6, 1.0, &mut rng);
+        assert!(a.best_rank_error(6) < 1e-9);
+        assert!(a.best_rank_error(0) - a.fro_norm() < 1e-9);
+    }
+
+    #[test]
+    fn best_rank_error_monotone_in_r() {
+        let mut rng = Rng::new(6);
+        let a = Mat::randn(24, 24, 1.0, &mut rng);
+        let errs: Vec<f64> = (0..24).map(|r| a.best_rank_error(r)).collect();
+        for w in errs.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn fro_norm_known() {
+        let a = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-9);
+    }
+}

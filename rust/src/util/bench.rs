@@ -1,0 +1,113 @@
+//! Micro-benchmark harness (offline registry: no criterion).
+//!
+//! `cargo bench` targets are plain binaries (`harness = false`) that call
+//! [`bench`] / [`BenchSet`]. Methodology: warm-up runs, then timed
+//! batches sized to a target duration, reporting min/mean/p50 per
+//! iteration — min is the headline number (least scheduler noise).
+
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchResult {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+}
+
+impl BenchResult {
+    pub fn human(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.0} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    }
+}
+
+/// Time `f` adaptively for ~`budget_ms` total; returns stats.
+pub fn bench<F: FnMut()>(warmup: usize, budget_ms: u64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    // estimate single-shot duration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let budget = budget_ms as f64 * 1e6;
+    let batches = 16usize;
+    let per_batch = ((budget / once / batches as f64).ceil() as usize).max(1);
+    let mut samples = Vec::with_capacity(batches);
+    let mut total = 0usize;
+    for _ in 0..batches {
+        let t = Instant::now();
+        for _ in 0..per_batch {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / per_batch as f64);
+        total += per_batch;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        iters: total,
+        mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+        min_ns: samples[0],
+        p50_ns: samples[samples.len() / 2],
+    }
+}
+
+/// Named group of benches with aligned output.
+pub struct BenchSet {
+    pub group: String,
+    results: Vec<(String, BenchResult)>,
+}
+
+impl BenchSet {
+    pub fn new(group: &str) -> Self {
+        println!("== bench group: {group} ==");
+        BenchSet { group: group.to_string(), results: Vec::new() }
+    }
+
+    pub fn run<F: FnMut()>(&mut self, name: &str, f: F) -> BenchResult {
+        let r = bench(2, 300, f);
+        println!(
+            "{:<44} min {:>12}  p50 {:>12}  mean {:>12}  ({} iters)",
+            format!("{}/{}", self.group, name),
+            BenchResult::human(r.min_ns),
+            BenchResult::human(r.p50_ns),
+            BenchResult::human(r.mean_ns),
+            r.iters
+        );
+        self.results.push((name.to_string(), r));
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let mut x = 0u64;
+        let r = bench(1, 10, || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(r.iters > 0);
+        assert!(r.min_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns * 1.5);
+    }
+
+    #[test]
+    fn human_units() {
+        assert_eq!(BenchResult::human(500.0), "500 ns");
+        assert!(BenchResult::human(5_000.0).ends_with("µs"));
+        assert!(BenchResult::human(5e6).ends_with("ms"));
+        assert!(BenchResult::human(5e9).ends_with(" s"));
+    }
+}

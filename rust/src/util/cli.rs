@@ -1,0 +1,172 @@
+//! CLI argument parsing substrate (offline registry: no clap).
+//!
+//! Conventions: `edgc <subcommand> [positionals] [--key value] [--flag]`.
+//! Unknown flags are an error so typos fail fast.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    switches: BTreeSet<String>,
+}
+
+/// Declarative spec for validation + help text.
+pub struct Spec {
+    pub name: &'static str,
+    pub about: &'static str,
+    /// (flag, value-name-or-empty, help). Empty value name = boolean switch.
+    pub flags: Vec<(&'static str, &'static str, &'static str)>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first non-flag token is the subcommand.
+    pub fn parse(argv: &[String], spec: &Spec) -> Result<Args> {
+        let known: BTreeMap<&str, bool> =
+            spec.flags.iter().map(|(f, v, _)| (*f, v.is_empty())).collect();
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                let is_switch = *known
+                    .get(name)
+                    .ok_or_else(|| anyhow!("unknown flag --{name}\n\n{}", spec.help()))?;
+                if is_switch {
+                    out.switches.insert(name.to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| anyhow!("flag --{name} expects a value"))?;
+                    out.options.insert(name.to_string(), val.clone());
+                }
+            } else if out.subcommand.is_empty() {
+                out.subcommand = tok.clone();
+            } else {
+                out.positionals.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("--{name} expects a number, got {s:?}")),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.contains(name)
+    }
+
+    pub fn require_subcommand(&self, allowed: &[&str]) -> Result<&str> {
+        if self.subcommand.is_empty() {
+            bail!("missing subcommand (one of: {})", allowed.join(", "));
+        }
+        if !allowed.contains(&self.subcommand.as_str()) {
+            bail!("unknown subcommand {:?} (one of: {})", self.subcommand, allowed.join(", "));
+        }
+        Ok(&self.subcommand)
+    }
+}
+
+impl Spec {
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nflags:\n", self.name, self.about);
+        for (f, v, h) in &self.flags {
+            let lhs = if v.is_empty() { format!("--{f}") } else { format!("--{f} <{v}>") };
+            s.push_str(&format!("  {lhs:<28} {h}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec {
+            name: "edgc",
+            about: "test",
+            flags: vec![
+                ("steps", "N", "number of steps"),
+                ("method", "NAME", "compression method"),
+                ("verbose", "", "chatty"),
+            ],
+        }
+    }
+
+    fn parse(s: &str) -> Result<Args> {
+        let argv: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&argv, &spec())
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positionals() {
+        let a = parse("train artifacts/tiny --steps 100 --verbose --method edgc").unwrap();
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.positionals, vec!["artifacts/tiny"]);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert_eq!(a.str_or("method", "x"), "edgc");
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("train").unwrap();
+        assert_eq!(a.usize_or("steps", 42).unwrap(), 42);
+        assert_eq!(a.f64_or("lr", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(parse("train --bogus 1").is_err());
+    }
+
+    #[test]
+    fn bad_int_rejected() {
+        assert!(parse("train --steps abc").unwrap().usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse("train --steps").is_err());
+    }
+
+    #[test]
+    fn subcommand_validation() {
+        let a = parse("train").unwrap();
+        assert_eq!(a.require_subcommand(&["train", "bench"]).unwrap(), "train");
+        assert!(a.require_subcommand(&["bench"]).is_err());
+        assert!(parse("").unwrap().require_subcommand(&["x"]).is_err());
+    }
+
+    #[test]
+    fn help_mentions_flags() {
+        let h = spec().help();
+        assert!(h.contains("--steps <N>"));
+        assert!(h.contains("--verbose "));
+    }
+}

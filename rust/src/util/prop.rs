@@ -1,0 +1,94 @@
+//! Property-test harness (offline registry: no proptest).
+//!
+//! Seeded random-case runner with failure reporting and integer-shrink
+//! support. Used for the coordinator/CQM/compressor invariants:
+//!
+//! ```ignore
+//! prop::check("g monotone", 200, |rng| {
+//!     let m = 4 + rng.below(60);
+//!     ...
+//!     prop::expect(cond, format!("context"))
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Succeed/fail helper.
+pub fn expect(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `prop` over `cases` seeded random cases. Panics (test failure) on
+/// the first violated case, reporting the case index and seed so the
+/// failure replays deterministically.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let base = 0xED6C_0000u64;
+    for case in 0..cases {
+        let seed = base + case as u64;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Like [`check`] but with an explicit size parameter that grows over the
+/// run — small cases first (cheap shrinking-by-construction).
+pub fn check_sized<F>(name: &str, cases: usize, max_size: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> PropResult,
+{
+    let base = 0xED6C_1000u64;
+    for case in 0..cases {
+        let seed = base + case as u64;
+        // size ramps 1..=max_size over the first half, then stays max.
+        let size = ((case * 2 + 1) * max_size / cases.max(1)).clamp(1, max_size);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x}, size {size}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivially true", 50, |rng| {
+            count += 1;
+            expect(rng.uniform() < 1.0, "uniform in range")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always false\" failed")]
+    fn failing_property_panics_with_seed() {
+        check("always false", 5, |_| expect(false, "nope"));
+    }
+
+    #[test]
+    fn sized_ramps_up() {
+        let mut max_seen = 0;
+        check_sized("size ramp", 20, 10, |_, size| {
+            max_seen = max_seen.max(size);
+            expect(size >= 1 && size <= 10, "size bounds")
+        });
+        assert_eq!(max_seen, 10);
+    }
+}

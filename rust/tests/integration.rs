@@ -1,0 +1,196 @@
+//! Integration tests over the real AOT artifacts (run `make artifacts`
+//! first; these tests skip gracefully when artifacts/tiny is absent so
+//! `cargo test` works in a fresh checkout, and the Makefile test target
+//! guarantees artifacts exist in CI).
+
+use edgc::config::{Method, TrainConfig};
+use edgc::coordinator::{Backend, Trainer};
+use edgc::runtime::{lit_f32, lit_i32, to_f32, to_scalar, Runtime};
+use edgc::util::rng::Rng;
+
+const ART: &str = "artifacts/tiny";
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(ART).join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: {ART} missing (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn tiny_cfg(method: Method, steps: usize) -> TrainConfig {
+    TrainConfig {
+        artifacts: ART.into(),
+        steps,
+        dp: 2,
+        pp: 2,
+        tp: 1,
+        microbatches: 4,
+        lr: 2e-3,
+        seed: 7,
+        method,
+        edgc: edgc::config::EdgcParams {
+            window: 5,
+            alpha: 0.5,
+            beta: 0.25,
+            step_limit: 8,
+            min_warmup_frac: 0.1,
+            stage_aligned: true,
+        },
+        cluster: edgc::netsim::CLUSTER1_V100,
+        corpus_tokens: 60_000,
+        sim_params: 2_500_000_000,
+        sim_tokens: 32 * 1024,
+        eval_every: 10,
+        out_dir: "/tmp/edgc-test-runs".into(),
+    }
+}
+
+#[test]
+fn train_step_artifact_runs_and_loss_is_sane() {
+    require_artifacts!();
+    let rt = Runtime::load(ART).unwrap();
+    let m = rt.manifest.clone();
+    let params = rt.init_params().unwrap();
+    let tokens: Vec<i32> = (0..m.batch * (m.seq_len + 1)).map(|i| (i % m.vocab) as i32).collect();
+    let out = rt
+        .run(
+            "train_step",
+            &[
+                lit_f32(&params, &[m.n_params as i64]).unwrap(),
+                lit_i32(&tokens, &[m.batch as i64, (m.seq_len + 1) as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let loss = to_scalar(&out[0]).unwrap();
+    assert!((loss - (m.vocab as f32).ln()).abs() < 0.5, "initial loss {loss}");
+    let grads = to_f32(&out[1]).unwrap();
+    assert_eq!(grads.len(), m.n_params);
+    assert!(grads.iter().all(|g| g.is_finite()));
+}
+
+#[test]
+fn artifact_and_host_compression_paths_agree() {
+    require_artifacts!();
+    let rt = Runtime::load(ART).unwrap();
+    let man = rt.manifest.clone();
+    // Build two engines with identical state, run one round each way.
+    let mut host = edgc::coordinator::Engine::new(&man, 2, 2, true, Backend::Host, 3);
+    let mut art = edgc::coordinator::Engine::new(&man, 2, 2, true, Backend::Artifact, 3);
+    let mut rng = Rng::new(42);
+    let g1: Vec<f32> = rng.normal_vec(man.n_params, 0.02);
+    let g2: Vec<f32> = rng.normal_vec(man.n_params, 0.02);
+    let ranks = vec![8usize, 8];
+    let rep_h = host.allreduce(None, &[g1.clone(), g2.clone()], Some(&ranks)).unwrap();
+    let rep_a = art.allreduce(Some(&rt), &[g1, g2], Some(&ranks)).unwrap();
+    assert_eq!(rep_h.total_compressed(), rep_a.total_compressed());
+    // same numerics up to f32 matmul association differences
+    let mut max_diff = 0.0f32;
+    for (a, b) in rep_h.avg.iter().zip(&rep_a.avg) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 5e-3, "host vs artifact divergence {max_diff}");
+    assert!((rep_h.mean_rel_error - rep_a.mean_rel_error).abs() < 1e-2);
+}
+
+#[test]
+fn entropy_artifact_matches_host_estimator() {
+    require_artifacts!();
+    let rt = Runtime::load(ART).unwrap();
+    let n = rt.manifest.entropy_sample;
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> = rng.normal_vec(n, 0.37);
+    let out = rt.run("entropy", &[lit_f32(&x, &[n as i64]).unwrap()]).unwrap();
+    let h_art = to_scalar(&out[0]).unwrap() as f64;
+    let est = edgc::entropy::estimate(&x);
+    assert!((h_art - est.h_hist).abs() < 1e-3, "artifact {h_art} vs host {}", est.h_hist);
+    let sigma_art = to_scalar(&out[2]).unwrap() as f64;
+    assert!((sigma_art - est.sigma).abs() < 1e-4);
+}
+
+#[test]
+fn megatron_short_run_decreases_loss() {
+    require_artifacts!();
+    let mut t = Trainer::new(tiny_cfg(Method::Megatron, 30), Backend::Host).unwrap();
+    let s = t.run().unwrap();
+    let first = s.curve.column("loss")[0];
+    assert!(
+        s.final_train_loss < first - 0.5,
+        "loss {} -> {}",
+        first,
+        s.final_train_loss
+    );
+    assert!(s.total_comm_floats == s.total_uncompressed_floats);
+    assert!(s.virtual_time > 0.0 && s.virtual_comm_time > 0.0);
+    assert_eq!(s.rank_trace.len(), 0);
+}
+
+#[test]
+fn edgc_run_compresses_after_warmup_and_trains() {
+    require_artifacts!();
+    let mut t = Trainer::new(tiny_cfg(Method::Edgc, 40), Backend::Host).unwrap();
+    let s = t.run().unwrap();
+    // compression must have kicked in: fewer floats than uncompressed
+    assert!(
+        s.total_comm_floats < s.total_uncompressed_floats,
+        "{} vs {}",
+        s.total_comm_floats,
+        s.total_uncompressed_floats
+    );
+    // rank trace exists and stays within bounds
+    assert!(!s.rank_trace.is_empty());
+    // loss still decreases
+    let first = s.curve.column("loss")[0];
+    assert!(s.final_train_loss < first - 0.4);
+    // entropy was measured
+    assert!(!s.entropy_trace.is_empty());
+}
+
+#[test]
+fn edgc_artifact_backend_smoke() {
+    require_artifacts!();
+    // short, but exercises the full PJRT path: train_step + powersgd
+    // artifacts + entropy artifact + adam artifact
+    let mut cfg = tiny_cfg(Method::Edgc, 12);
+    cfg.edgc.window = 3;
+    cfg.eval_every = 6;
+    let mut t = Trainer::new(cfg, Backend::Artifact).unwrap();
+    let s = t.run().unwrap();
+    assert!(s.final_train_loss.is_finite());
+    assert!(s.curve.rows.len() == 12);
+}
+
+#[test]
+fn fixed_rank_compresses_from_step_zero() {
+    require_artifacts!();
+    let mut t = Trainer::new(tiny_cfg(Method::FixedRank(8), 10), Backend::Host).unwrap();
+    let s = t.run().unwrap();
+    assert!(s.total_comm_floats < s.total_uncompressed_floats);
+    // every step compressed: rank_s1 column all 8
+    assert!(s.curve.column("rank_s1").iter().all(|&r| r == 8.0));
+}
+
+#[test]
+fn optimus_cc_waits_out_warmup_then_compresses() {
+    require_artifacts!();
+    let mut t = Trainer::new(tiny_cfg(Method::OptimusCc(8), 20), Backend::Host).unwrap();
+    let s = t.run().unwrap();
+    let ranks = s.curve.column("rank_s1");
+    assert!(ranks[0] == 0.0 && ranks[1] == 0.0);
+    assert!(*ranks.last().unwrap() == 8.0);
+}
+
+#[test]
+fn runs_are_deterministic() {
+    require_artifacts!();
+    let run = || {
+        let mut t = Trainer::new(tiny_cfg(Method::Edgc, 8), Backend::Host).unwrap();
+        t.run().unwrap().final_train_loss
+    };
+    assert_eq!(run().to_bits(), run().to_bits());
+}

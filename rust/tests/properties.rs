@@ -1,0 +1,329 @@
+//! Property-based tests over randomized inputs (in-tree harness
+//! `util::prop`; the registry carries no proptest — see DESIGN.md
+//! §Substrates). Each property runs across seeded cases and panics with
+//! a replayable seed on violation. These pin the *invariants* the
+//! coordinator relies on, complementing the example-based unit tests.
+
+use edgc::compress::{allreduce_mean, TensorCompressor};
+use edgc::cqm;
+use edgc::entropy;
+use edgc::pipesim::{simulate, PipeSpec};
+use edgc::tensor::Mat;
+use edgc::util::prop::{check, check_sized, expect};
+use edgc::util::rng::Rng;
+
+// ------------------------------------------------------------------- cqm
+
+#[test]
+fn prop_g_monotone_decreasing_in_rank() {
+    check("g monotone in r", 40, |rng| {
+        let m = 4 + rng.below(60);
+        let n = 4 + rng.below(200);
+        let r1 = rng.below(m.min(n)) as f64;
+        let r2 = r1 + 1.0 + rng.below(8) as f64;
+        let (g1, g2) = (cqm::g(r1, m, n), cqm::g(r2.min(m.min(n) as f64), m, n));
+        expect(g2 <= g1 + 1e-12, format!("g({r1})={g1} < g({r2})={g2} at {m}x{n}"))
+    });
+}
+
+#[test]
+fn prop_g_inv_is_right_inverse() {
+    check("g_inv(g(r)) = r", 40, |rng| {
+        let m = 8 + rng.below(56);
+        let n = 8 + rng.below(120);
+        let r = 1.0 + rng.below(m.min(n) - 1) as f64;
+        let back = cqm::g_inv(cqm::g(r, m, n), m, n);
+        expect((back - r).abs() < 1e-2, format!("roundtrip {r} -> {back} at {m}x{n}"))
+    });
+}
+
+#[test]
+fn prop_theorem2_direction() {
+    // σ shrinking never raises the rank; σ growing never lowers it.
+    check("theorem-2 monotone", 40, |rng| {
+        let m = 8 + rng.below(56);
+        let n = 8 + rng.below(120);
+        let r0 = 2.0 + rng.below(m.min(n) - 2) as f64;
+        let s0 = 0.1 + rng.uniform();
+        let shrink = s0 * (0.3 + 0.7 * rng.uniform());
+        let r_shrink = cqm::rank_for_sigma_change(r0, s0, shrink, m, n);
+        let r_grow = cqm::rank_for_sigma_change(r0, s0, s0 * 1.5, m, n);
+        expect(
+            r_shrink <= r0 + 1e-9 && r_grow >= r0 - 1e-9,
+            format!("r0={r0} shrink->{r_shrink} grow->{r_grow}"),
+        )
+    });
+}
+
+#[test]
+fn prop_mp_cdf_monotone_normalized() {
+    check("MP cdf", 30, |rng| {
+        let mp = cqm::MarchenkoPastur::new(2 + rng.below(100), 2 + rng.below(300));
+        let mut prev = -1.0;
+        for i in 0..=20 {
+            let lam = mp.a + (mp.b - mp.a) * i as f64 / 20.0;
+            let c = mp.cdf(lam);
+            if c < prev - 1e-12 || !(0.0..=1.0).contains(&c) {
+                return Err(format!("cdf not monotone/normalized at {lam}: {c}"));
+            }
+            prev = c;
+        }
+        Ok(())
+    });
+}
+
+// -------------------------------------------------------------- compress
+
+#[test]
+fn prop_error_feedback_identity() {
+    // E_i = M_i − Ĝ exactly: what goes missing this round is exactly what
+    // feeds back next round.
+    check_sized("EF identity", 20, 24, |rng, size| {
+        let (m, n) = (4 + size, 4 + rng.below(20));
+        let r_max = (m.min(n)).min(6).max(1);
+        let mut c = TensorCompressor::new(m, n, r_max, 1, true, rng);
+        let g: Vec<f32> = rng.normal_vec(m * n, 1.0);
+        let round = c.round_host(&[&g], r_max);
+        for j in 0..m * n {
+            let want = g[j] - round.approx[j];
+            if (c.errors[0][j] - want).abs() > 1e-4 {
+                return Err(format!("EF mismatch at {j}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_volume_accounting() {
+    check("volume = r(m+n) vs mn", 30, |rng| {
+        let (m, n) = (4 + rng.below(60), 4 + rng.below(60));
+        let r_max = m.min(n).min(8).max(1);
+        let r = 1 + rng.below(r_max);
+        let mut c = TensorCompressor::new(m, n, r_max, 1, false, rng);
+        let g: Vec<f32> = rng.normal_vec(m * n, 1.0);
+        let round = c.round_host(&[&g], r);
+        expect(
+            round.volume.compressed == r * (m + n) && round.volume.original == m * n,
+            format!("volume {:?} for r={r} {m}x{n}", round.volume),
+        )
+    });
+}
+
+#[test]
+fn prop_full_rank_multi_replica_is_exact_mean() {
+    check("full-rank compression = exact mean", 15, |rng| {
+        let d = 6 + rng.below(18);
+        let k = 1 + rng.below(3);
+        let mut c = TensorCompressor::new(d, d, d, k, false, rng);
+        let gs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d * d, 1.0)).collect();
+        let refs: Vec<&[f32]> = gs.iter().map(|g| g.as_slice()).collect();
+        let round = c.round_host(&refs, d);
+        let (mean, _) = allreduce_mean(&refs);
+        for j in 0..d * d {
+            if (round.approx[j] - mean[j]).abs() > 2e-2 {
+                return Err(format!("not mean at {j}: {} vs {}", round.approx[j], mean[j]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allreduce_mean_linearity() {
+    check("allreduce mean linear", 30, |rng| {
+        let n = 1 + rng.below(200);
+        let a: Vec<f32> = rng.normal_vec(n, 1.0);
+        let b: Vec<f32> = rng.normal_vec(n, 1.0);
+        let (mean, vol) = allreduce_mean(&[&a, &b]);
+        for j in 0..n {
+            if (mean[j] - 0.5 * (a[j] + b[j])).abs() > 1e-6 {
+                return Err(format!("mean wrong at {j}"));
+            }
+        }
+        expect(vol.compressed == n, "volume".to_string())
+    });
+}
+
+// --------------------------------------------------------------- pipesim
+
+#[test]
+fn prop_pipeline_busy_conservation() {
+    check("per-stage busy = M(tf+tb)", 30, |rng| {
+        let s = 1 + rng.below(6);
+        let m = 1 + rng.below(12);
+        let tf = 0.1 + rng.uniform();
+        let tb = 0.1 + rng.uniform();
+        let r = simulate(&PipeSpec::uniform(s, tf, tb, m));
+        for st in 0..s {
+            let want = m as f64 * (tf + tb);
+            if (r.busy[st] - want).abs() > 1e-9 {
+                return Err(format!("stage {st} busy {} != {want}", r.busy[st]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipeline_critical_path_lower_bound() {
+    check("iteration >= critical path", 30, |rng| {
+        let s = 1 + rng.below(6);
+        let m = 1 + rng.below(12);
+        let tf = 0.1 + rng.uniform();
+        let tb = 0.1 + rng.uniform();
+        let r = simulate(&PipeSpec::uniform(s, tf, tb, m));
+        let bound = (m + s - 1) as f64 * (tf + tb) - 1e-9;
+        expect(r.iteration >= bound, format!("{} < {bound}", r.iteration))
+    });
+}
+
+#[test]
+fn prop_dp_comm_never_speeds_up_iteration() {
+    check("dp comm monotone", 30, |rng| {
+        let s = 2 + rng.below(4);
+        let mut spec = PipeSpec::uniform(s, 0.5, 1.0, 4);
+        let base = simulate(&spec).iteration;
+        for st in 0..s {
+            spec.dp_comm[st] = rng.uniform();
+        }
+        let with = simulate(&spec).iteration;
+        expect(with >= base - 1e-12, format!("{with} < {base}"))
+    });
+}
+
+#[test]
+fn prop_first_stage_finishes_backward_last() {
+    check("stage-0 last backward is max", 30, |rng| {
+        let s = 2 + rng.below(5);
+        let m = s + rng.below(10); // enough microbatches to fill
+        let r = simulate(&PipeSpec::uniform(s, 0.3 + rng.uniform(), 0.3 + rng.uniform(), m));
+        for st in 1..s {
+            if r.last_bwd[0] < r.last_bwd[st] - 1e-9 {
+                return Err(format!("stage {st} later than stage 0"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// --------------------------------------------------------------- entropy
+
+#[test]
+fn prop_entropy_scale_equivariance() {
+    // H(c·X) = H(X) + ln c for differential entropy.
+    check("entropy scale equivariance", 15, |rng| {
+        let x: Vec<f32> = rng.normal_vec(40_000, 1.0);
+        let c = 0.25 + 3.0 * rng.uniform();
+        let scaled: Vec<f32> = x.iter().map(|&v| v * c as f32).collect();
+        let h1 = entropy::estimate(&x).h_hist;
+        let h2 = entropy::estimate(&scaled).h_hist;
+        expect(
+            ((h2 - h1) - c.ln()).abs() < 0.05,
+            format!("H({c}X)-H(X)={} vs ln c={}", h2 - h1, c.ln()),
+        )
+    });
+}
+
+#[test]
+fn prop_subsample_is_subset_with_requested_size() {
+    check("subsample subset+size", 40, |rng| {
+        let n = 10 + rng.below(5000);
+        let grad: Vec<f32> = rng.normal_vec(n, 1.0);
+        let beta = 0.01 + rng.uniform() * 0.99;
+        let mut out = Vec::new();
+        entropy::subsample(&grad, beta, rng.below(1000), &mut out);
+        let want = ((n as f64 * beta).ceil() as usize).clamp(1, n);
+        if out.len() > want {
+            return Err(format!("len {} > want {want}", out.len()));
+        }
+        // every sampled value occurs in the source
+        for v in &out {
+            if !grad.iter().any(|g| g == v) {
+                return Err("sampled value not from source".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+// ----------------------------------------------------------------- misc
+
+#[test]
+fn prop_gram_schmidt_orthonormal_active() {
+    check_sized("GS orthonormal", 20, 20, |rng, size| {
+        let m = 8 + size;
+        let r = 2 + rng.below(6.min(m - 2));
+        let a = Mat::randn(m, r, 1.0, rng);
+        let q = a.gram_schmidt(1e-8);
+        for i in 0..r {
+            for j in 0..r {
+                let mut dot = 0.0f64;
+                for row in 0..m {
+                    dot += q.at(row, i) as f64 * q.at(row, j) as f64;
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                if (dot - want).abs() > 1e-3 {
+                    return Err(format!("({i},{j}) dot {dot}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_tables() {
+    use edgc::metrics::Table;
+    use edgc::util::json::Json;
+    check("table json roundtrip", 25, |rng| {
+        let cols = 1 + rng.below(5);
+        let names: Vec<String> = (0..cols).map(|i| format!("c{i}")).collect();
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new("prop", &refs);
+        for _ in 0..rng.below(10) {
+            t.push((0..cols).map(|_| (rng.normal() * 100.0).round() / 8.0).collect());
+        }
+        let parsed = Json::parse(&t.to_json().to_string_pretty())
+            .map_err(|e| format!("parse failed: {e}"))?;
+        let rows = parsed.get("rows").map_err(|e| e.to_string())?.as_arr().unwrap();
+        expect(rows.len() == t.rows.len(), "row count".to_string())
+    });
+}
+
+#[test]
+fn prop_stage_assignment_total_and_ordered() {
+    use edgc::coordinator::engine::stage_of;
+    check("stage_of covers and orders", 40, |rng| {
+        let layers = 1 + rng.below(32);
+        let pp = 1 + rng.below(8);
+        let mut prev = 0usize;
+        for i in 0..layers {
+            let s = stage_of(&format!("h{i}.fc_w"), layers, pp);
+            if s >= pp {
+                return Err(format!("layer {i} -> stage {s} out of {pp}"));
+            }
+            if s < prev {
+                return Err(format!("stage order violated at layer {i}"));
+            }
+            prev = s;
+        }
+        expect(
+            stage_of("tok_emb", layers, pp) == 0
+                && stage_of("lnf_g", layers, pp) == pp - 1,
+            "embedding/lnf placement".to_string(),
+        )
+    });
+}
+
+#[test]
+fn prop_rng_streams_reproducible_and_distinct() {
+    check("rng fork", 30, |rng| {
+        let seed = rng.next_u64();
+        let mut a = Rng::new(seed);
+        let mut b = Rng::new(seed);
+        let mut c = Rng::new(seed ^ 1);
+        let (x, y, z) = (a.next_u64(), b.next_u64(), c.next_u64());
+        expect(x == y && x != z, format!("{x} {y} {z}"))
+    });
+}
