@@ -5,7 +5,7 @@
 //!
 //!     cargo run --release --example cluster_sim
 
-use anyhow::Result;
+use edgc::util::error::Result;
 use edgc::coordinator::VirtualClock;
 use edgc::metrics::Table;
 use edgc::netsim::{self, CLUSTER1_V100, CLUSTER2_H100};

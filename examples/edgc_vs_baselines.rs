@@ -4,7 +4,7 @@
 //!
 //!     cargo run --release --example edgc_vs_baselines -- artifacts/tiny 200
 
-use anyhow::Result;
+use edgc::util::error::Result;
 use edgc::config::{Method, TrainConfig};
 use edgc::coordinator::{Backend, Trainer};
 use edgc::metrics::Table;

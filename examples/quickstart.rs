@@ -7,7 +7,7 @@
 //! (artifact loading), a real `train_step` execution, and one masked-rank
 //! PowerSGD compression of the largest gradient matrix.
 
-use anyhow::Result;
+use edgc::util::error::Result;
 use edgc::runtime::{lit_f32, lit_i32, to_f32, to_scalar, Runtime};
 
 fn main() -> Result<()> {

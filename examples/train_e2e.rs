@@ -10,7 +10,7 @@
 //! Defaults to artifacts/tiny + 300 steps when run bare. The run is
 //! recorded in EXPERIMENTS.md §End-to-end.
 
-use anyhow::Result;
+use edgc::util::error::Result;
 use edgc::config::{Method, TrainConfig};
 use edgc::coordinator::{Backend, Trainer};
 use edgc::metrics::append_line;

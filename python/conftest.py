@@ -1,0 +1,9 @@
+"""Make `python -m pytest python/tests -q` work from the repository root:
+the test modules import the `compile` package, which lives next to this
+conftest (pytest imports conftest before collecting, so the path edit
+lands before any test import)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

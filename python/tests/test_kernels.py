@@ -8,6 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, not error, when absent
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import adam, entropy, matmul, ref

@@ -2,6 +2,9 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, not error, when absent
 from hypothesis import given, settings, strategies as st
 
 from compile import model as M

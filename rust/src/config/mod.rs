@@ -8,7 +8,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
 
 use crate::netsim::{Cluster, CLUSTER1_V100, CLUSTER2_H100, CLUSTER3_SCALING};
 
@@ -77,7 +78,7 @@ impl Toml {
             }
             let eq = line
                 .find('=')
-                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+                .ok_or_else(|| err!("line {}: expected key = value", lineno + 1))?;
             let key = line[..eq].trim();
             let value = parse_value(line[eq + 1..].trim())
                 .with_context(|| format!("line {}", lineno + 1))?;
@@ -126,7 +127,7 @@ fn parse_value(s: &str) -> Result<Value> {
         bail!("empty value");
     }
     if let Some(stripped) = s.strip_prefix('"') {
-        let end = stripped.rfind('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        let end = stripped.rfind('"').ok_or_else(|| err!("unterminated string"))?;
         return Ok(Value::Str(stripped[..end].to_string()));
     }
     if s == "true" {

@@ -11,7 +11,7 @@
 //! embeddings on stage 0, transformer block i on stage ⌊i·pp/L⌋, final
 //! layernorm on the last stage. 1-D tensors are never compressed.
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::compress::{allreduce_mean, TensorCompressor, Volume};
 use crate::runtime::{lit_f32, to_f32, Bucket, Manifest, ParamSpec, Runtime};

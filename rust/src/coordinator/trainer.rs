@@ -11,7 +11,7 @@
 //!   6. virtual-clock advance (pipesim × netsim) for the paper's
 //!      time axis.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::baselines;
 use crate::config::{Method, TrainConfig};
@@ -133,7 +133,7 @@ impl Trainer {
     fn build_dac(cfg: &TrainConfig, engine: &Engine, clock: &VirtualClock) -> Result<Dac> {
         // stage-1 (index 0) aggregate: sum of its compressible tensors
         let s1: Vec<_> = engine.tensors.iter().filter(|t| t.stage == 0).collect();
-        anyhow::ensure!(!s1.is_empty(), "stage 0 has no compressible tensors");
+        crate::ensure!(!s1.is_empty(), "stage 0 has no compressible tensors");
         let orig: usize = s1.iter().map(|t| t.spec.size()).sum();
         let ceil = s1.iter().map(|t| t.bucket.r_max).min().unwrap();
         // largest bucket is the CQM reference shape
@@ -154,7 +154,7 @@ impl Trainer {
             }
             r += grid_step;
         }
-        anyhow::ensure!(!pts.is_empty(), "empty calibration grid");
+        crate::ensure!(!pts.is_empty(), "empty calibration grid");
         let r_max = if r_max_eq2 == 0 { ceil } else { r_max_eq2.min(ceil) };
         let bounds = RankBounds { r_min: netsim::rank_min(r_max), r_max };
         let comm = fit_eta(&pts);

@@ -6,7 +6,7 @@
 //! `eval_step` PJRT executable — so evaluation exercises the same
 //! artifact path as training.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::data::ProbeItem;
 

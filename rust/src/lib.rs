@@ -8,9 +8,12 @@
 //! training loop with dynamic entropy-driven gradient compression. Python
 //! never appears on the training hot path.
 //!
-//! Map of the crate (see DESIGN.md for the full inventory):
+//! Map of the crate (see DESIGN.md for the full inventory and the
+//! `pjrt` feature matrix):
 //!
-//! * [`runtime`] — PJRT artifact loading/execution (the only xla-crate user)
+//! * [`runtime`] — named-executable dispatch: pure-host executor by
+//!   default, PJRT artifact execution behind the `pjrt` cargo feature
+//!   (the only xla-crate user)
 //! * [`tensor`] — host f32 linear algebra substrate
 //! * [`entropy`] — GDS: two-level gradient down-sampling + entropy estimate
 //! * [`cqm`] — CQM: Marchenko–Pastur error model `g(r; m, n)` and the
@@ -19,6 +22,7 @@
 //! * [`netsim`] — cluster network model (ring all-reduce, paper clusters)
 //! * [`pipesim`] — discrete-event 1F1B pipeline simulator
 //! * [`coordinator`] — the training orchestrator + EDGC controller (DAC)
+//! * [`repro`] — the experiment harness + parallel campaign runner
 //! * [`baselines`] — Megatron-LM (no compression), fixed-rank PowerSGD,
 //!   Optimus-CC
 //! * [`data`] — synthetic corpus + tokenizer + deterministic batcher

@@ -11,7 +11,7 @@
 //!   edgc reproduce table3 --steps 240 --out runs
 //!   edgc projection --cluster cluster2 --params 12100000000 --dp 4
 
-use anyhow::Result;
+use edgc::util::error::Result;
 
 use edgc::config::{cluster_by_name, Method, TrainConfig};
 use edgc::coordinator::{Backend, Trainer};
@@ -40,6 +40,7 @@ fn spec() -> Spec {
             ("backend", "NAME", "artifact|host compression path (default artifact)"),
             ("config", "FILE", "TOML config file (flags override)"),
             ("out", "DIR", "output directory for tables (default runs)"),
+            ("jobs", "N", "reproduce: parallel experiment workers (default: all cores)"),
             ("seed", "N", "random seed (default 7)"),
             ("params", "N", "projection: model parameter count"),
             ("eval-every", "N", "validation interval in steps"),
@@ -99,7 +100,7 @@ fn backend_of(args: &Args) -> Result<Backend> {
     Ok(match args.str_or("backend", "artifact").as_str() {
         "artifact" => Backend::Artifact,
         "host" => Backend::Host,
-        other => anyhow::bail!("unknown backend {other:?} (artifact|host)"),
+        other => edgc::bail!("unknown backend {other:?} (artifact|host)"),
     })
 }
 
@@ -144,18 +145,14 @@ fn cmd_reproduce(args: &Args) -> Result<()> {
         steps: args.usize_or("steps", 240)?,
         seed: args.usize_or("seed", 7)? as u64,
     };
+    // 0 (or unset) = one worker per core; outputs are byte-identical for
+    // any worker count (see repro::campaign).
+    let jobs = match args.usize_or("jobs", 0)? {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    };
     let which = args.positionals.first().map(String::as_str).unwrap_or("all");
-    if which == "all" {
-        for name in repro::ALL {
-            // joint entries: table3/5/6 are produced by fig11/fig12/fig13
-            if matches!(*name, "table3" | "table5" | "table6") {
-                continue;
-            }
-            repro::run(name, &opts)?;
-        }
-    } else {
-        repro::run(which, &opts)?;
-    }
+    repro::campaign::run_campaign(which, &opts, jobs)?;
     Ok(())
 }
 

@@ -7,7 +7,7 @@
 use std::io::Write;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::util::json::{obj, Json};
 

@@ -1,0 +1,214 @@
+//! Parallel repro campaign runner: decompose `reproduce <exp...|all>`
+//! into independent [`Job`] units and execute them across `std::thread`
+//! workers.
+//!
+//! Determinism contract: every training run inside an experiment seeds
+//! itself via [`job_seed`]`(base, experiment, method, cluster)` — a pure
+//! function of the job's coordinates, never of scheduling — and each job
+//! owns its trainers, RNGs and output files outright. Output files are
+//! therefore byte-identical for any `--jobs N` (integration-tested for
+//! N=1 vs N=4), while `reproduce all` saturates all cores instead of
+//! running the experiment list serially. Table renders are buffered per
+//! job and printed in submission order after the join, so stdout is
+//! deterministic too.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::metrics::{Stopwatch, Table};
+use crate::util::error::{EdgcError, Result};
+use crate::{bail, ensure};
+
+use super::Opts;
+
+/// One schedulable unit: a single experiment entry (internally serial;
+/// experiments are mutually independent).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Job {
+    pub experiment: &'static str,
+}
+
+/// A finished job: its tables (already written to disk) and timing.
+#[derive(Debug)]
+pub struct JobResult {
+    pub experiment: &'static str,
+    pub tables: Vec<Table>,
+    pub secs: f64,
+}
+
+/// Deterministic per-run seed from the job coordinates (FNV-1a over the
+/// `(experiment, method, cluster)` triple, mixed with the base seed).
+/// Scheduling order and worker count never enter the hash.
+pub fn job_seed(base: u64, experiment: &str, method: &str, cluster: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ base.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    for part in [experiment, method, cluster] {
+        for b in part.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        // field separator so ("ab","c") != ("a","bc")
+        h ^= 0x1f;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Expand an experiment selector into jobs. `all` covers every entry of
+/// [`super::ALL`] except the joint aliases (table3/5/6 are produced by
+/// fig11/fig12/fig13).
+pub fn plan(which: &str) -> Result<Vec<Job>> {
+    if which == "all" {
+        return Ok(super::ALL
+            .iter()
+            .copied()
+            .filter(|n| !matches!(*n, "table3" | "table5" | "table6"))
+            .map(|n| Job { experiment: n })
+            .collect());
+    }
+    match super::ALL.iter().copied().find(|n| *n == which) {
+        Some(n) => Ok(vec![Job { experiment: n }]),
+        None => bail!("unknown experiment {which:?}; available: {}", super::ALL.join(", ")),
+    }
+}
+
+/// The worker count actually used for a job list (single place, so the
+/// summary line can never drift from the scheduler).
+fn effective_workers(requested: usize, jobs: &[Job]) -> usize {
+    requested.clamp(1, jobs.len().max(1))
+}
+
+/// Run a set of jobs across `workers` threads: completed results in job
+/// order plus the first error (in job order), if any. The first failure
+/// stops further claims — in-flight jobs still finish — matching the
+/// old serial loop's abort-on-first-error behavior.
+fn run_jobs_partial(
+    jobs: &[Job],
+    opts: &Opts,
+    workers: usize,
+) -> (Vec<JobResult>, Option<EdgcError>) {
+    let workers = effective_workers(workers, jobs);
+    let next = Mutex::new(0usize);
+    let failed = AtomicBool::new(false);
+    let slots: Vec<Mutex<Option<Result<JobResult>>>> =
+        jobs.iter().map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let idx = {
+                    let mut n = next.lock().unwrap();
+                    if *n >= jobs.len() || failed.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let i = *n;
+                    *n += 1;
+                    i
+                };
+                let job = jobs[idx];
+                let sw = Stopwatch::start();
+                let out = super::run_tables(job.experiment, opts).map(|tables| JobResult {
+                    experiment: job.experiment,
+                    tables,
+                    secs: sw.secs(),
+                });
+                if out.is_err() {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                *slots[idx].lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    let mut results = Vec::with_capacity(jobs.len());
+    let mut first_err = None;
+    for (job, slot) in jobs.iter().zip(slots) {
+        match slot.into_inner().unwrap() {
+            Some(Ok(r)) => results.push(r),
+            Some(Err(e)) if first_err.is_none() => {
+                first_err = Some(e.context(format!("[{}]", job.experiment)));
+            }
+            Some(Err(_)) | None => {} // later failure / unclaimed after abort
+        }
+    }
+    (results, first_err)
+}
+
+/// Run a set of jobs across `workers` threads. Results come back in job
+/// order; the first job error (in job order) is propagated after all
+/// workers drain.
+pub fn run_jobs(jobs: &[Job], opts: &Opts, workers: usize) -> Result<Vec<JobResult>> {
+    ensure!(!jobs.is_empty(), "empty campaign");
+    let (results, err) = run_jobs_partial(jobs, opts, workers);
+    match err {
+        Some(e) => Err(e),
+        None => Ok(results),
+    }
+}
+
+/// The full `edgc reproduce` path: plan, execute in parallel, then print
+/// every job's tables in deterministic (submission) order. On failure,
+/// the jobs that did complete are still printed (as the serial loop did)
+/// before the error propagates.
+pub fn run_campaign(which: &str, opts: &Opts, workers: usize) -> Result<Vec<JobResult>> {
+    let jobs = plan(which)?;
+    let sw = Stopwatch::start();
+    let (results, err) = run_jobs_partial(&jobs, opts, workers);
+    for r in &results {
+        super::print_job(r.experiment, &r.tables, r.secs, &opts.out_dir);
+    }
+    if let Some(e) = err {
+        return Err(e);
+    }
+    if results.len() > 1 {
+        println!(
+            "[campaign] {} experiments in {:.1}s on {} worker(s)",
+            results.len(),
+            sw.secs(),
+            effective_workers(workers, &jobs),
+        );
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_seed_is_pure_and_separating() {
+        assert_eq!(job_seed(7, "fig9", "edgc", "c1"), job_seed(7, "fig9", "edgc", "c1"));
+        assert_ne!(job_seed(7, "fig9", "edgc", "c1"), job_seed(8, "fig9", "edgc", "c1"));
+        assert_ne!(job_seed(7, "fig9", "edgc", "c1"), job_seed(7, "fig10", "edgc", "c1"));
+        assert_ne!(job_seed(7, "fig9", "edgc", "c1"), job_seed(7, "fig9", "megatron", "c1"));
+        // concatenation ambiguity is separated
+        assert_ne!(job_seed(7, "ab", "c", "d"), job_seed(7, "a", "bc", "d"));
+    }
+
+    #[test]
+    fn plan_all_skips_joint_aliases() {
+        let jobs = plan("all").unwrap();
+        assert!(jobs.iter().all(|j| !matches!(j.experiment, "table3" | "table5" | "table6")));
+        assert!(jobs.iter().any(|j| j.experiment == "fig11"));
+        assert!(jobs.len() >= 10);
+        assert_eq!(plan("fig9").unwrap(), vec![Job { experiment: "fig9" }]);
+        assert!(plan("nope").is_err());
+    }
+
+    #[test]
+    fn run_jobs_propagates_worker_errors() {
+        // fig3 needs a runnable model; an Opts pointing at a manifest-less
+        // dir still synthesizes, so use an invalid preset dir instead.
+        let opts = Opts {
+            artifacts: "/nonexistent-edgc/artifacts/not-a-preset".into(),
+            out_dir: std::env::temp_dir()
+                .join(format!("edgc-campaign-err-{}", std::process::id()))
+                .to_string_lossy()
+                .into_owned(),
+            steps: 4,
+            seed: 1,
+        };
+        let jobs = plan("fig3").unwrap();
+        let err = run_jobs(&jobs, &opts, 2).unwrap_err().to_string();
+        assert!(err.contains("fig3"), "{err}");
+    }
+}

@@ -1,15 +1,20 @@
 //! Reproduction harness: one entry point per table/figure of the paper's
-//! evaluation (the DESIGN.md experiment index). Every entry prints its
-//! tables and writes CSV/JSON under `<out>/`.
+//! evaluation (the DESIGN.md experiment index). Every entry writes
+//! CSV/JSON under `<out>/`; [`campaign`] schedules entries across worker
+//! threads with scheduling-independent seeds.
 //!
 //! All entries run at laptop scale (tiny/small artifacts, hundreds of
 //! steps) with the paper's cluster geometry supplied by the netsim /
 //! pipesim models — see DESIGN.md §Hardware-Adaptation for what carries
 //! over (shapes, who-wins ordering) and what does not (absolute seconds).
 
+pub mod campaign;
 pub mod trace;
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
+
+use self::campaign::job_seed;
 
 use crate::config::{EdgcParams, Method, TrainConfig};
 use crate::coordinator::{Backend, Trainer};
@@ -41,9 +46,31 @@ impl Default for Opts {
     }
 }
 
-/// Run one experiment by id; returns its tables (already written to disk).
+/// Run one experiment by id; returns its tables (already written to
+/// disk) and prints their renders. `edgc reproduce` goes through
+/// [`campaign::run_campaign`] instead, which executes jobs across worker
+/// threads and buffers the printing per job.
 pub fn run(name: &str, opts: &Opts) -> Result<Vec<Table>> {
     let sw = Stopwatch::start();
+    let tables = run_tables(name, opts)?;
+    print_job(name, &tables, sw.secs(), &opts.out_dir);
+    Ok(tables)
+}
+
+/// Shared render of one finished experiment (also used by the campaign
+/// runner after its deterministic-order join).
+pub(crate) fn print_job(name: &str, tables: &[Table], secs: f64, out_dir: &str) {
+    for t in tables {
+        println!("\n# {}\n{}", t.name, t.render());
+    }
+    println!("[{name}] done in {secs:.1}s -> {out_dir}/");
+}
+
+/// Dispatch one experiment and write its tables — no printing. This is
+/// the campaign workers' entry point; everything under it derives its
+/// seeds from the job coordinates (see [`campaign::job_seed`]) so results
+/// do not depend on scheduling.
+pub fn run_tables(name: &str, opts: &Opts) -> Result<Vec<Table>> {
     let tables = match name {
         "fig2" => fig2_entropy_evolution(opts)?,
         "fig3" => fig3_gradient_distribution(opts)?,
@@ -61,13 +88,24 @@ pub fn run(name: &str, opts: &Opts) -> Result<Vec<Table>> {
     };
     for t in &tables {
         t.write(&opts.out_dir)?;
-        println!("\n# {}\n{}", t.name, t.render());
     }
-    println!("[{name}] done in {:.1}s -> {}/", sw.secs(), opts.out_dir);
     Ok(tables)
 }
 
-fn base_cfg(opts: &Opts, method: Method) -> TrainConfig {
+/// Seed for an experiment's shared (uncompressed, cluster-free) gradient
+/// trace — same derivation rule as training runs.
+fn trace_seed(opts: &Opts, exp: &str) -> u64 {
+    job_seed(opts.seed, exp, "trace", "none")
+}
+
+fn base_cfg(opts: &Opts, exp: &str, method: Method) -> TrainConfig {
+    // The method coordinate of the seed is held fixed: runs compared
+    // within one experiment (fig11/table3, table4, fig13, fig10) must
+    // share the corpus and batch stream so the method is the only
+    // variable — the paper's matched-seed protocol. Determinism across
+    // worker counts only needs the seed to be a pure function of the
+    // job coordinates, which (exp, cluster) already is.
+    let seed = job_seed(opts.seed, exp, "all-methods", CLUSTER1_V100.name);
     TrainConfig {
         artifacts: opts.artifacts.clone(),
         steps: opts.steps,
@@ -76,7 +114,7 @@ fn base_cfg(opts: &Opts, method: Method) -> TrainConfig {
         tp: 4,
         microbatches: 8,
         lr: 2e-3,
-        seed: opts.seed,
+        seed,
         method,
         edgc: EdgcParams {
             window: (opts.steps / 20).max(4),
@@ -100,7 +138,7 @@ fn base_cfg(opts: &Opts, method: Method) -> TrainConfig {
 /// Fig. 2: gradient information entropy over training — initial
 /// instability then a stabilizing decrease.
 fn fig2_entropy_evolution(opts: &Opts) -> Result<Vec<Table>> {
-    let mut cfg = base_cfg(opts, Method::Megatron);
+    let mut cfg = base_cfg(opts, "fig2", Method::Megatron);
     cfg.edgc.window = (opts.steps / 24).max(2); // fine-grained windows
     cfg.edgc.alpha = 1.0; // measure every step
     let mut tr = Trainer::new(cfg.clone(), Backend::Host)?;
@@ -120,7 +158,7 @@ fn fig3_gradient_distribution(opts: &Opts) -> Result<Vec<Table>> {
     let rt = Runtime::load(&opts.artifacts)?;
     let man = rt.manifest.clone();
     let steps = opts.steps.min(120);
-    let tr = trace::record(&rt, steps, (steps / 5).max(1), opts.seed)?;
+    let tr = trace::record(&rt, steps, (steps / 5).max(1), trace_seed(opts, "fig3"))?;
     let mut t = Table::new(
         "fig3_grad_distribution",
         &["iteration", "layer", "sigma", "p01", "p99", "mean"],
@@ -150,7 +188,7 @@ fn fig4_gradient_correlation(opts: &Opts) -> Result<Vec<Table>> {
     let man = rt.manifest.clone();
     let steps = opts.steps.min(160);
     // early = a few optimizer steps in (coupling strongest), late = end
-    let tr = trace::record(&rt, steps, 4, opts.seed)?;
+    let tr = trace::record(&rt, steps, 4, trace_seed(opts, "fig4"))?;
     let mut t = Table::new(
         "fig4_grad_correlation",
         &["step_or_random", "mean_abs_corr", "max_abs_corr", "pairs"],
@@ -218,7 +256,7 @@ fn fig10_error_vs_iteration(opts: &Opts) -> Result<Vec<Table>> {
     let ranks = [8usize, 16, 32, 64];
     let mut t = Table::new("fig10_error_vs_iteration", &["rank", "step", "rel_error"]);
     for &r in &ranks {
-        let mut cfg = base_cfg(opts, Method::FixedRank(r));
+        let mut cfg = base_cfg(opts, "fig10", Method::FixedRank(r));
         cfg.steps = opts.steps.min(160);
         let mut tr = Trainer::new(cfg, Backend::Host)?;
         let s = tr.run()?;
@@ -261,7 +299,7 @@ fn fig11_table3_convergence(opts: &Opts) -> Result<Vec<Table>> {
     );
     let mut mega: Option<(f64, f64)> = None;
     for (mi, &method) in methods.iter().enumerate() {
-        let cfg = base_cfg(opts, method);
+        let cfg = base_cfg(opts, "fig11", method);
         let mut tr = Trainer::new(cfg, Backend::Host)?;
         let s = tr.run()?;
         let steps = s.curve.column("step");
@@ -302,7 +340,7 @@ fn table4_probe_tasks(opts: &Opts) -> Result<Vec<Table>> {
     ];
     let mut t = Table::new("table4_probe_accuracy", &["method", "accuracy", "ppl"]);
     for (mi, &method) in methods.iter().enumerate() {
-        let mut tr = Trainer::new(base_cfg(opts, method), Backend::Host)?;
+        let mut tr = Trainer::new(base_cfg(opts, "table4", method), Backend::Host)?;
         let s = tr.run()?;
         t.push(vec![mi as f64, s.probe_accuracy, s.final_ppl]);
     }
@@ -316,7 +354,7 @@ fn table4_probe_tasks(opts: &Opts) -> Result<Vec<Table>> {
 fn fig12_table5_gds(opts: &Opts) -> Result<Vec<Table>> {
     let rt = Runtime::load(&opts.artifacts)?;
     let steps = opts.steps.min(120);
-    let tr = trace::record(&rt, steps, 1, opts.seed)?;
+    let tr = trace::record(&rt, steps, 1, trace_seed(opts, "fig12"))?;
 
     // Fig 12a: entropy trajectory under β
     let betas = [0.05, 0.25, 0.5, 1.0];
@@ -399,7 +437,7 @@ fn fig13_table6_cqm(opts: &Opts) -> Result<Vec<Table>> {
     let mut f13 = Table::new("fig13_ppl_trend", &["method", "step", "ppl"]);
     let mut t6 = Table::new("table6_comm_time", &["method", "comm_time_s", "comm_floats"]);
     for (mi, (_, method)) in methods.iter().enumerate() {
-        let mut cfg = base_cfg(opts, *method);
+        let mut cfg = base_cfg(opts, "fig13", *method);
         cfg.eval_every = (opts.steps / 16).max(2);
         let mut tr = Trainer::new(cfg, Backend::Host)?;
         let s = tr.run()?;
@@ -422,7 +460,7 @@ fn fig13_table6_cqm(opts: &Opts) -> Result<Vec<Table>> {
 fn table7_window_sizes(opts: &Opts) -> Result<Vec<Table>> {
     let rt = Runtime::load(&opts.artifacts)?;
     let steps = opts.steps.min(200);
-    let tr = trace::record(&rt, steps, 1, opts.seed)?;
+    let tr = trace::record(&rt, steps, 1, trace_seed(opts, "table7"))?;
     // per-iteration entropy (α=1, β=0.25)
     let per_iter: Vec<f64> = tr
         .grads
@@ -463,7 +501,7 @@ fn table7_window_sizes(opts: &Opts) -> Result<Vec<Table>> {
 /// ablation: aligned DAC achieves lower compression error.
 fn fig14_stage_alignment(opts: &Opts) -> Result<Vec<Table>> {
     let run_one = |aligned: bool| -> Result<Trainer> {
-        let mut cfg = base_cfg(opts, Method::Edgc);
+        let mut cfg = base_cfg(opts, "fig14", Method::Edgc);
         cfg.edgc.stage_aligned = aligned;
         cfg.eval_every = (opts.steps / 20).max(2);
         Ok(Trainer::new(cfg, Backend::Host)?)

@@ -5,7 +5,7 @@
 //! which all analyze the *same* gradient stream offline — mirroring how
 //! the paper instruments a pre-training run.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::data::{Batcher, SynthCorpus};
 use crate::runtime::{lit_f32, lit_i32, to_f32, Runtime};

@@ -1,17 +1,99 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Runtime: named-executable dispatch over an artifact manifest.
 //!
-//! This is the only module that talks to the `xla` crate. The coordinator
-//! sees named executables keyed by the manifest that `python -m
-//! compile.aot` wrote next to the HLO files. Executables are compiled once
-//! and cached; the training hot loop then runs pure rust + PJRT.
+//! The coordinator sees named executables (`train_step`, `eval_step`,
+//! `adam`, `entropy`, `ps_phase1_<tag>`, ...) keyed by the manifest that
+//! `python -m compile.aot` writes next to the HLO files. Two execution
+//! backends sit behind [`Runtime::run`]:
+//!
+//! * [`host`] — the default: a pure-rust implementation of every
+//!   executable (transformer forward/backward, fused Adam, the GDS
+//!   entropy estimator, the masked-rank PowerSGD phases). No external
+//!   crates, no network, no artifacts on disk required — when the
+//!   artifact directory is absent, the manifest and initial parameters
+//!   are synthesized from the preset named by the directory's basename
+//!   (`artifacts/tiny` → the `tiny` preset).
+//! * [`pjrt`] (cargo feature `pjrt`) — the PJRT path: artifacts are
+//!   compiled and executed through the `xla` crate. See DESIGN.md for
+//!   the feature matrix and how to supply the real `xla` bindings.
+//!
+//! Values cross the boundary as [`Value`] tensors (flat f32/i32 buffers
+//! plus dims), so callers are identical under both backends.
 
-use std::collections::HashMap;
+pub mod host;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
+use crate::{bail, err};
+
+// ---------------------------------------------------------------- values
+
+/// A tensor crossing the runtime boundary: flat buffer + dims.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+impl Value {
+    pub fn scalar(x: f32) -> Value {
+        Value::F32 { data: vec![x], dims: vec![] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Value::F32 { dims, .. } | Value::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            Value::I32 { .. } => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32 { data, .. } => Ok(data),
+            Value::F32 { .. } => bail!("expected i32 value, got f32"),
+        }
+    }
+}
+
+/// f32 value with the given dims.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<Value> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("lit_f32: {} elements for dims {:?}", data.len(), dims);
+    }
+    Ok(Value::F32 { data: data.to_vec(), dims: dims.iter().map(|&d| d as usize).collect() })
+}
+
+/// i32 value with the given dims.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<Value> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("lit_i32: {} elements for dims {:?}", data.len(), dims);
+    }
+    Ok(Value::I32 { data: data.to_vec(), dims: dims.iter().map(|&d| d as usize).collect() })
+}
+
+/// Extract an f32 vector from a value.
+pub fn to_f32(v: &Value) -> Result<Vec<f32>> {
+    Ok(v.f32s()?.to_vec())
+}
+
+/// Extract the single f32 scalar from a value.
+pub fn to_scalar(v: &Value) -> Result<f32> {
+    let xs = v.f32s()?;
+    xs.first().copied().context("to_scalar: empty value")
+}
+
+// -------------------------------------------------------------- manifest
 
 /// One entry of the flat-parameter layout (mirrors python param_table).
 #[derive(Clone, Debug)]
@@ -46,7 +128,7 @@ impl Bucket {
     }
 }
 
-/// Parsed artifacts/<preset>/manifest.json.
+/// Parsed (or synthesized) artifacts/<preset>/manifest.json.
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub preset: String,
@@ -63,6 +145,37 @@ pub struct Manifest {
     pub params: Vec<ParamSpec>,
     pub buckets: Vec<Bucket>,
     pub artifact_names: Vec<String>,
+}
+
+/// Model presets mirrored from python compile/model.py PRESETS (the
+/// executable ones; the paper-scale shape references are simulator-only
+/// and never instantiated here).
+pub const PRESETS: &[(&str, Dims)] = &[
+    ("tiny", Dims { vocab: 512, d_model: 128, n_head: 4, n_layer: 2, seq_len: 64 }),
+    ("small", Dims { vocab: 2048, d_model: 256, n_head: 8, n_layer: 8, seq_len: 128 }),
+    ("base", Dims { vocab: 4096, d_model: 512, n_head: 8, n_layer: 12, seq_len: 256 }),
+    ("e2e100m", Dims { vocab: 8192, d_model: 768, n_head: 12, n_layer: 12, seq_len: 256 }),
+];
+
+/// Model dimensions of a preset.
+#[derive(Clone, Copy, Debug)]
+pub struct Dims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub n_layer: usize,
+    pub seq_len: usize,
+}
+
+/// Fixed artifact sample size / bins (python ENTROPY_SAMPLE/ENTROPY_BINS).
+pub const ENTROPY_SAMPLE: usize = 65536;
+pub const ENTROPY_BINS: usize = 256;
+
+/// Artifact-time rank ceiling per bucket: min(m, n, 64) rounded to 4
+/// (python default_rank_max).
+pub fn default_rank_max(m: usize, n: usize) -> usize {
+    let r = m.min(n).min(64);
+    (r / 4 * 4).max(4)
 }
 
 impl Manifest {
@@ -116,11 +229,89 @@ impl Manifest {
         })
     }
 
+    /// Synthesize the manifest a `make artifacts` run would write for a
+    /// preset — same flat layout, buckets and artifact names — so the
+    /// host backend runs hermetically without the AOT step.
+    pub fn synthesize(preset: &str, batch: usize, seed: u64) -> Result<Manifest> {
+        let dims = PRESETS
+            .iter()
+            .find(|(n, _)| *n == preset)
+            .map(|(_, d)| *d)
+            .ok_or_else(|| {
+                let names: Vec<&str> = PRESETS.iter().map(|(n, _)| *n).collect();
+                err!("unknown preset {preset:?} (available: {})", names.join(", "))
+            })?;
+        let (v, d, s) = (dims.vocab, dims.d_model, dims.seq_len);
+        let f = 4 * d;
+        let mut params = Vec::new();
+        let mut off = 0usize;
+        let mut add = |name: String, shape: Vec<usize>, off: &mut usize| {
+            let size: usize = shape.iter().product();
+            params.push(ParamSpec { name, shape, offset: *off });
+            *off += size;
+        };
+        add("tok_emb".into(), vec![v, d], &mut off);
+        add("pos_emb".into(), vec![s, d], &mut off);
+        for i in 0..dims.n_layer {
+            add(format!("h{i}.ln1_g"), vec![d], &mut off);
+            add(format!("h{i}.ln1_b"), vec![d], &mut off);
+            add(format!("h{i}.qkv_w"), vec![d, 3 * d], &mut off);
+            add(format!("h{i}.qkv_b"), vec![3 * d], &mut off);
+            add(format!("h{i}.proj_w"), vec![d, d], &mut off);
+            add(format!("h{i}.proj_b"), vec![d], &mut off);
+            add(format!("h{i}.ln2_g"), vec![d], &mut off);
+            add(format!("h{i}.ln2_b"), vec![d], &mut off);
+            add(format!("h{i}.fc_w"), vec![d, f], &mut off);
+            add(format!("h{i}.fc_b"), vec![f], &mut off);
+            add(format!("h{i}.fc2_w"), vec![f, d], &mut off);
+            add(format!("h{i}.fc2_b"), vec![d], &mut off);
+        }
+        add("lnf_g".into(), vec![d], &mut off);
+        add("lnf_b".into(), vec![d], &mut off);
+
+        // distinct 2-D shapes, in first-appearance order
+        let mut buckets: Vec<Bucket> = Vec::new();
+        for p in &params {
+            if p.shape.len() == 2 {
+                let (m, n) = (p.shape[0], p.shape[1]);
+                if !buckets.iter().any(|b| b.m == m && b.n == n) {
+                    buckets.push(Bucket { m, n, r_max: default_rank_max(m, n) });
+                }
+            }
+        }
+
+        let mut artifact_names: Vec<String> =
+            ["train_step", "eval_step", "adam", "entropy"].iter().map(|s| s.to_string()).collect();
+        for b in &buckets {
+            let tag = b.tag();
+            artifact_names.push(format!("ps_phase1_{tag}"));
+            artifact_names.push(format!("ps_phase2_{tag}"));
+            artifact_names.push(format!("ps_finalize_{tag}"));
+        }
+
+        Ok(Manifest {
+            preset: preset.to_string(),
+            seed,
+            batch,
+            vocab: v,
+            d_model: d,
+            n_head: dims.n_head,
+            n_layer: dims.n_layer,
+            seq_len: s,
+            n_params: off,
+            entropy_sample: ENTROPY_SAMPLE,
+            entropy_bins: ENTROPY_BINS,
+            params,
+            buckets,
+            artifact_names,
+        })
+    }
+
     pub fn param(&self, name: &str) -> Result<&ParamSpec> {
         self.params
             .iter()
             .find(|p| p.name == name)
-            .ok_or_else(|| anyhow!("unknown param {name:?}"))
+            .ok_or_else(|| err!("unknown param {name:?}"))
     }
 
     pub fn bucket_for(&self, shape: &[usize]) -> Option<Bucket> {
@@ -129,35 +320,101 @@ impl Manifest {
         }
         self.buckets.iter().copied().find(|b| b.m == shape[0] && b.n == shape[1])
     }
+
+    pub fn bucket_by_tag(&self, tag: &str) -> Option<Bucket> {
+        self.buckets.iter().copied().find(|b| b.tag() == tag)
+    }
 }
 
-/// Compiled-executable cache over one artifact directory + PJRT client.
+// --------------------------------------------------------------- runtime
+
+enum Exec {
+    Host(host::HostExec),
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtRuntime),
+}
+
+/// Named-executable runtime over one artifact directory (or synthesized
+/// preset). The default build always uses the host executor; build with
+/// `--features pjrt` and call [`Runtime::load_pjrt`] for the PJRT path.
 pub struct Runtime {
     pub manifest: Manifest,
     dir: PathBuf,
-    client: xla::PjRtClient,
-    exes: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    exec: Exec,
 }
 
 impl Runtime {
-    /// Open an artifact directory produced by `make artifacts`.
+    /// Open an artifact directory, falling back to a synthesized preset
+    /// (named by the directory basename) when no manifest is on disk.
+    ///
+    /// Under `--features pjrt`, real artifacts on disk route through
+    /// PJRT automatically; the host executor remains the fallback for
+    /// synthesized presets.
     pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        #[cfg(feature = "pjrt")]
+        if dir.join("manifest.json").exists() {
+            return Self::load_pjrt(dir);
+        }
+        let manifest = Self::manifest_for(&dir)?;
+        let exec = Exec::Host(host::HostExec::new(&manifest)?);
+        Ok(Runtime { manifest, dir, exec })
+    }
+
+    /// Open an artifact directory through PJRT (requires real artifacts
+    /// on disk — there is no synthesized fallback for compiled HLO).
+    #[cfg(feature = "pjrt")]
+    pub fn load_pjrt(dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
         let mpath = dir.join("manifest.json");
         let text = std::fs::read_to_string(&mpath)
             .with_context(|| format!("reading {} (run `make artifacts`?)", mpath.display()))?;
         let manifest = Manifest::parse(&text)?;
-        let client = xla::PjRtClient::cpu().map_err(wrap)?;
-        Ok(Runtime { manifest, dir, client, exes: Mutex::new(HashMap::new()) })
+        let exec = Exec::Pjrt(pjrt::PjrtRuntime::new(&dir)?);
+        Ok(Runtime { manifest, dir, exec })
+    }
+
+    fn manifest_for(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        if mpath.exists() {
+            let text = std::fs::read_to_string(&mpath)
+                .with_context(|| format!("reading {}", mpath.display()))?;
+            return Manifest::parse(&text);
+        }
+        let preset = dir
+            .file_name()
+            .and_then(|s| s.to_str())
+            .filter(|s| !s.is_empty())
+            .unwrap_or("tiny");
+        // visible (once per process) so a typo'd artifact path is not
+        // mistaken for the real AOT artifacts it silently shadows; the
+        // hermetic path constructs many runtimes, so don't spam
+        static SYNTH_NOTICE: std::sync::Once = std::sync::Once::new();
+        SYNTH_NOTICE.call_once(|| {
+            eprintln!(
+                "[runtime] no manifest at {}; synthesizing preset {preset:?} (host backend)",
+                mpath.display()
+            );
+        });
+        Manifest::synthesize(preset, 8, 0)
+            .with_context(|| format!("no manifest at {} and no such preset", mpath.display()))
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.exec {
+            Exec::Host(_) => "host".to_string(),
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(p) => p.platform(),
+        }
     }
 
-    /// Initial flat parameter vector written by the AOT step.
+    /// Initial flat parameter vector: the AOT-written file when present,
+    /// otherwise the same GPT-2 initialization synthesized in-process.
     pub fn init_params(&self) -> Result<Vec<f32>> {
         let path = self.dir.join("init_params.bin");
+        if !path.exists() {
+            return Ok(host::init_params(&self.manifest));
+        }
         let bytes = std::fs::read(&path).with_context(|| format!("{}", path.display()))?;
         if bytes.len() != self.manifest.n_params * 4 {
             bail!(
@@ -172,76 +429,32 @@ impl Runtime {
             .collect())
     }
 
-    /// Compile (or fetch from cache) a named artifact.
-    pub fn exe(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.exes.lock().unwrap().get(name) {
-            return Ok(e.clone());
+    /// Execute a named artifact; returns the decomposed output tuple.
+    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        match &self.exec {
+            Exec::Host(h) => h.run(&self.manifest, name, inputs),
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(p) => p.run(name, inputs),
         }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(&path).map_err(wrap)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(self.client.compile(&comp).map_err(wrap)?);
-        self.exes.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
     }
 
-    /// Execute a named artifact on literal inputs; returns the decomposed
-    /// output tuple (aot.py lowers with return_tuple=True).
-    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self.exe(name)?;
-        let out = exe.execute::<xla::Literal>(inputs).map_err(wrap)?;
-        let lit = out[0][0].to_literal_sync().map_err(wrap)?;
-        lit.to_tuple().map_err(wrap)
-    }
-
-    /// Pre-compile a list of artifacts (hides compile latency up front).
+    /// Pre-compile a list of artifacts (hides compile latency up front;
+    /// a no-op on the host backend).
     pub fn warmup(&self, names: &[&str]) -> Result<()> {
-        for n in names {
-            self.exe(n)?;
+        match &self.exec {
+            Exec::Host(_) => {
+                let _ = names; // nothing to compile host-side
+                Ok(())
+            }
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(p) => {
+                for n in names {
+                    p.warmup(n)?;
+                }
+                Ok(())
+            }
         }
-        Ok(())
     }
-}
-
-/// xla::Error -> anyhow::Error.
-fn wrap(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e}")
-}
-
-// ---------------------------------------------------------------- literals
-
-/// f32 literal with the given dims.
-pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-    let n: i64 = dims.iter().product();
-    if n as usize != data.len() {
-        bail!("lit_f32: {} elements for dims {:?}", data.len(), dims);
-    }
-    if dims.len() == 1 {
-        return Ok(xla::Literal::vec1(data));
-    }
-    xla::Literal::vec1(data).reshape(dims).map_err(wrap)
-}
-
-/// i32 literal with the given dims.
-pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
-    let n: i64 = dims.iter().product();
-    if n as usize != data.len() {
-        bail!("lit_i32: {} elements for dims {:?}", data.len(), dims);
-    }
-    if dims.len() == 1 {
-        return Ok(xla::Literal::vec1(data));
-    }
-    xla::Literal::vec1(data).reshape(dims).map_err(wrap)
-}
-
-/// Extract an f32 vector from a literal.
-pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(wrap)
-}
-
-/// Extract the single f32 scalar from a literal.
-pub fn to_scalar(lit: &xla::Literal) -> Result<f32> {
-    lit.get_first_element::<f32>().map_err(wrap)
 }
 
 #[cfg(test)]
@@ -282,5 +495,51 @@ mod tests {
         let m = Manifest::parse(MANIFEST).unwrap();
         assert_eq!(m.param("tok_emb").unwrap().size(), 65536);
         assert!(m.param("nope").is_err());
+    }
+
+    #[test]
+    fn synthesized_tiny_matches_aot_layout() {
+        // Mirror of python param_table(tiny): n_params and key offsets.
+        let m = Manifest::synthesize("tiny", 8, 0).unwrap();
+        assert_eq!(m.n_params, 470528);
+        assert_eq!(m.param("tok_emb").unwrap().offset, 0);
+        assert_eq!(m.param("pos_emb").unwrap().offset, 512 * 128);
+        assert_eq!(m.params.len(), 2 + 12 * 2 + 2);
+        // buckets: (512,128) emb, (64,128) pos, (128,384) qkv,
+        // (128,128) proj, (128,512) fc, (512,128)... distinct shapes only
+        assert!(m.bucket_for(&[512, 128]).is_some());
+        assert!(m.bucket_for(&[128, 384]).is_some());
+        assert_eq!(m.bucket_for(&[128, 384]).unwrap().r_max, 64);
+        assert!(m.artifact_names.iter().any(|n| n == "ps_phase1_512x128"));
+        assert!(m.artifact_names.iter().any(|n| n == "train_step"));
+        // last param ends exactly at n_params
+        let last = m.params.last().unwrap();
+        assert_eq!(last.offset + last.size(), m.n_params);
+    }
+
+    #[test]
+    fn synthesize_rejects_unknown_preset() {
+        assert!(Manifest::synthesize("gpt5", 8, 0).is_err());
+    }
+
+    #[test]
+    fn runtime_load_synthesizes_when_dir_missing() {
+        let rt = Runtime::load("/nonexistent-edgc/artifacts/tiny").unwrap();
+        assert_eq!(rt.manifest.preset, "tiny");
+        assert_eq!(rt.platform(), "host");
+        let p = rt.init_params().unwrap();
+        assert_eq!(p.len(), rt.manifest.n_params);
+    }
+
+    #[test]
+    fn values_roundtrip() {
+        let v = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(v.dims(), &[2, 2]);
+        assert_eq!(to_f32(&v).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(to_scalar(&v).unwrap(), 1.0);
+        assert!(lit_f32(&[1.0], &[2]).is_err());
+        let i = lit_i32(&[5, 6], &[2]).unwrap();
+        assert_eq!(i.i32s().unwrap(), &[5, 6]);
+        assert!(i.f32s().is_err());
     }
 }

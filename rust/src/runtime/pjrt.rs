@@ -1,0 +1,88 @@
+//! PJRT executor (cargo feature `pjrt`): load AOT artifacts (HLO text)
+//! and execute them through the `xla` crate.
+//!
+//! This is the only module that talks to `xla`. Executables are compiled
+//! once and cached; the training hot loop then runs pure rust + PJRT.
+//! The default build ships `vendor/xla-stub` (API-compatible, erroring at
+//! runtime) so the feature always compiles offline — point the `xla`
+//! path dependency at the real bindings to execute (see DESIGN.md
+//! §PJRT).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::err;
+use crate::util::error::{EdgcError, Result};
+
+use super::Value;
+
+/// Compiled-executable cache over one artifact directory + PJRT client.
+pub struct PjrtRuntime {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    exes: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtRuntime {
+    pub fn new(dir: &Path) -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(PjrtRuntime { dir: dir.to_path_buf(), client, exes: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) a named artifact.
+    fn exe(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(wrap)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp).map_err(wrap)?);
+        self.exes.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        self.exe(name).map(|_| ())
+    }
+
+    /// Execute a named artifact; returns the decomposed output tuple
+    /// (aot.py lowers with return_tuple=True). Outputs are f32 tensors,
+    /// returned flat (the callers never consume output dims).
+    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let exe = self.exe(name)?;
+        let lits: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let out = exe.execute::<xla::Literal>(&lits).map_err(wrap)?;
+        let lit = out[0][0].to_literal_sync().map_err(wrap)?;
+        let parts = lit.to_tuple().map_err(wrap)?;
+        parts
+            .iter()
+            .map(|l| {
+                let data = l.to_vec::<f32>().map_err(wrap)?;
+                Ok(Value::F32 { dims: vec![data.len()], data })
+            })
+            .collect()
+    }
+}
+
+fn to_literal(v: &Value) -> Result<xla::Literal> {
+    let (lit, dims) = match v {
+        Value::F32 { data, dims } => (xla::Literal::vec1(data), dims),
+        Value::I32 { data, dims } => (xla::Literal::vec1(data), dims),
+    };
+    if dims.len() <= 1 {
+        return Ok(lit);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64).map_err(wrap)
+}
+
+/// xla::Error -> EdgcError.
+fn wrap(e: xla::Error) -> EdgcError {
+    err!("xla: {e}")
+}

@@ -5,7 +5,8 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{bail, err};
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -35,13 +36,13 @@ impl Args {
             if let Some(name) = tok.strip_prefix("--") {
                 let is_switch = *known
                     .get(name)
-                    .ok_or_else(|| anyhow!("unknown flag --{name}\n\n{}", spec.help()))?;
+                    .ok_or_else(|| err!("unknown flag --{name}\n\n{}", spec.help()))?;
                 if is_switch {
                     out.switches.insert(name.to_string());
                 } else {
                     let val = it
                         .next()
-                        .ok_or_else(|| anyhow!("flag --{name} expects a value"))?;
+                        .ok_or_else(|| err!("flag --{name} expects a value"))?;
                     out.options.insert(name.to_string(), val.clone());
                 }
             } else if out.subcommand.is_empty() {
@@ -64,14 +65,14 @@ impl Args {
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
         match self.opt(name) {
             None => Ok(default),
-            Some(s) => s.parse().map_err(|_| anyhow!("--{name} expects an integer, got {s:?}")),
+            Some(s) => s.parse().map_err(|_| err!("--{name} expects an integer, got {s:?}")),
         }
     }
 
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.opt(name) {
             None => Ok(default),
-            Some(s) => s.parse().map_err(|_| anyhow!("--{name} expects a number, got {s:?}")),
+            Some(s) => s.parse().map_err(|_| err!("--{name} expects a number, got {s:?}")),
         }
     }
 

@@ -1,0 +1,164 @@
+//! Error substrate (offline registry: no `anyhow`).
+//!
+//! One string-carrying error type for the whole crate, with the three
+//! ergonomic pieces the code actually uses: the [`err!`]/[`bail!`]/
+//! [`ensure!`](crate::ensure) macros for ad-hoc errors, a [`Context`]
+//! extension trait for annotating `Result`/`Option` chains, and `From`
+//! impls for the std error types that cross module boundaries here
+//! (I/O, UTF-8, number parsing).
+
+use std::fmt;
+
+/// The crate-wide error: a rendered message, context-prefixed as it
+/// bubbles up (`context: cause`).
+pub struct EdgcError {
+    msg: String,
+}
+
+impl EdgcError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        EdgcError { msg: msg.into() }
+    }
+
+    /// Prefix this error with a higher-level context line.
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        EdgcError { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for EdgcError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Debug mirrors Display so `fn main() -> Result<()>` exits with the
+// readable message, not a struct dump.
+impl fmt::Debug for EdgcError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for EdgcError {}
+
+pub type Result<T, E = EdgcError> = std::result::Result<T, E>;
+
+macro_rules! from_error {
+    ($($ty:ty => $label:literal),* $(,)?) => {
+        $(impl From<$ty> for EdgcError {
+            fn from(e: $ty) -> Self {
+                EdgcError::new(format!("{}: {}", $label, e))
+            }
+        })*
+    };
+}
+
+from_error! {
+    std::io::Error => "io",
+    std::str::Utf8Error => "utf8",
+    std::num::ParseIntError => "parse int",
+    std::num::ParseFloatError => "parse float",
+    std::fmt::Error => "fmt",
+}
+
+/// Context annotation for `Result` and `Option` chains (the `anyhow`
+/// idiom this crate grew up with).
+pub trait Context<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    fn with_context<S: fmt::Display>(self, f: impl FnOnce() -> S) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| EdgcError::new(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<S: fmt::Display>(self, f: impl FnOnce() -> S) -> Result<T> {
+        self.map_err(|e| EdgcError::new(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| EdgcError::new(ctx.to_string()))
+    }
+
+    fn with_context<S: fmt::Display>(self, f: impl FnOnce() -> S) -> Result<T> {
+        self.ok_or_else(|| EdgcError::new(f().to_string()))
+    }
+}
+
+/// Build an [`EdgcError`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::EdgcError::new(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`EdgcError`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "inner 42");
+        assert_eq!(format!("{e:?}"), "inner 42");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(-1).unwrap_err().to_string().contains("-1"));
+    }
+
+    #[test]
+    fn context_chains() {
+        let e: Result<()> = fails().context("outer");
+        assert_eq!(e.unwrap_err().to_string(), "outer: inner 42");
+        let o: Option<usize> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+        let w: Result<()> = fails().with_context(|| format!("step {}", 7));
+        assert_eq!(w.unwrap_err().to_string(), "step 7: inner 42");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/nonexistent/edgc")?)
+        }
+        assert!(read().unwrap_err().to_string().starts_with("io:"));
+        fn parse() -> Result<usize> {
+            Ok("abc".parse::<usize>()?)
+        }
+        assert!(parse().unwrap_err().to_string().starts_with("parse int:"));
+    }
+}

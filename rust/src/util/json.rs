@@ -7,7 +7,8 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{bail, err};
 
 /// A parsed JSON value. Objects use BTreeMap so serialization is stable.
 #[derive(Clone, Debug, PartialEq)]
@@ -36,7 +37,7 @@ impl Json {
 
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
-            Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key {key:?}")),
+            Json::Obj(m) => m.get(key).ok_or_else(|| err!("missing key {key:?}")),
             _ => bail!("not an object (looking up {key:?})"),
         }
     }
@@ -222,7 +223,7 @@ impl<'a> Parser<'a> {
     }
 
     fn peek(&self) -> Result<u8> {
-        self.b.get(self.i).copied().ok_or_else(|| anyhow!("unexpected end of input"))
+        self.b.get(self.i).copied().ok_or_else(|| err!("unexpected end of input"))
     }
 
     fn eat(&mut self, c: u8) -> Result<()> {
@@ -343,7 +344,7 @@ impl<'a> Parser<'a> {
                             } else {
                                 cp
                             };
-                            s.push(char::from_u32(ch).ok_or_else(|| anyhow!("bad codepoint"))?);
+                            s.push(char::from_u32(ch).ok_or_else(|| err!("bad codepoint"))?);
                         }
                         _ => bail!("bad escape \\{}", e as char),
                     }
@@ -352,7 +353,7 @@ impl<'a> Parser<'a> {
                     // Re-decode UTF-8: step back and take the full char.
                     self.i -= 1;
                     let rest = std::str::from_utf8(&self.b[self.i..])?;
-                    let ch = rest.chars().next().ok_or_else(|| anyhow!("eof in string"))?;
+                    let ch = rest.chars().next().ok_or_else(|| err!("eof in string"))?;
                     s.push(ch);
                     self.i += ch.len_utf8();
                 }
@@ -368,7 +369,7 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let s = std::str::from_utf8(&self.b[start..self.i])?;
-        Ok(Json::Num(s.parse::<f64>().map_err(|e| anyhow!("bad number {s:?}: {e}"))?))
+        Ok(Json::Num(s.parse::<f64>().map_err(|e| err!("bad number {s:?}: {e}"))?))
     }
 }
 

@@ -1,10 +1,11 @@
 //! In-tree substrates for the offline environment: deterministic PRNG,
-//! JSON, a micro-bench harness, a property-test harness, and CLI parsing.
-//! (The crate registry here only carries the xla crate's closure — see
+//! JSON, errors, a micro-bench harness, a property-test harness, and CLI
+//! parsing. (The default build carries no external crates at all — see
 //! DESIGN.md §Substrates.)
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,108 @@
+//! Campaign-runner integration tests: the `--jobs N` determinism
+//! contract (byte-identical outputs for any worker count) and the host
+//! training smoke paths, all hermetic (synthesized tiny preset, no
+//! artifacts on disk).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use edgc::repro::{campaign, Opts};
+
+const EXPERIMENTS: &[&str] = &["fig9", "scaling", "fig11", "table7"];
+
+fn tmp_dir(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("edgc-campaign-{tag}-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn opts(out_dir: String) -> Opts {
+    Opts {
+        artifacts: "artifacts/tiny".into(), // absent on disk -> synthesized
+        out_dir,
+        steps: 6,
+        seed: 7,
+    }
+}
+
+fn read_all(dir: &str) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.is_file() {
+            let name = path.file_name().unwrap().to_string_lossy().into_owned();
+            out.insert(name, std::fs::read(&path).unwrap());
+        }
+    }
+    out
+}
+
+#[test]
+fn outputs_byte_identical_across_worker_counts() {
+    let (d1, d4) = (tmp_dir("j1"), tmp_dir("j4"));
+    let jobs: Vec<campaign::Job> =
+        EXPERIMENTS.iter().copied().map(|e| campaign::Job { experiment: e }).collect();
+    campaign::run_jobs(&jobs, &opts(d1.clone()), 1).unwrap();
+    campaign::run_jobs(&jobs, &opts(d4.clone()), 4).unwrap();
+    let f1 = read_all(&d1);
+    let f4 = read_all(&d4);
+    assert!(!f1.is_empty(), "campaign wrote no files");
+    assert_eq!(
+        f1.keys().collect::<Vec<_>>(),
+        f4.keys().collect::<Vec<_>>(),
+        "different file sets"
+    );
+    for (name, bytes) in &f1 {
+        assert_eq!(bytes, &f4[name], "{name} differs between --jobs 1 and --jobs 4");
+    }
+    // every experiment produced at least one table file
+    assert!(f1.keys().any(|k| k.starts_with("fig9")));
+    assert!(f1.keys().any(|k| k.starts_with("table3")));
+    std::fs::remove_dir_all(&d1).ok();
+    std::fs::remove_dir_all(&d4).ok();
+}
+
+#[test]
+fn repeated_single_job_run_is_self_identical() {
+    // same seed, same experiment, fresh process state -> same bytes
+    let (da, db) = (tmp_dir("ra"), tmp_dir("rb"));
+    let jobs = campaign::plan("fig11").unwrap();
+    campaign::run_jobs(&jobs, &opts(da.clone()), 1).unwrap();
+    campaign::run_jobs(&jobs, &opts(db.clone()), 1).unwrap();
+    assert_eq!(read_all(&da), read_all(&db));
+    std::fs::remove_dir_all(&da).ok();
+    std::fs::remove_dir_all(&db).ok();
+}
+
+#[test]
+fn cli_train_host_backend_smoke() {
+    // `edgc train --backend host --steps 5` completes on a fresh checkout
+    let out = tmp_dir("cli");
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_edgc"))
+        .args([
+            "train", "--backend", "host", "--steps", "5", "--eval-every", "5", "--out", &out,
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&status.stdout);
+    let stderr = String::from_utf8_lossy(&status.stderr);
+    assert!(status.status.success(), "train failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("final train loss"), "unexpected output:\n{stdout}");
+    assert!(Path::new(&out).join("curve-edgc.csv").exists());
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn cli_reproduce_jobs_flag_smoke() {
+    // the reproduce path with an explicit worker count, cheapest entry
+    let out = tmp_dir("cli-repro");
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_edgc"))
+        .args(["reproduce", "fig9", "--jobs", "2", "--out", &out])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&status.stdout);
+    assert!(status.status.success(), "reproduce failed:\n{stdout}");
+    assert!(Path::new(&out).join("fig9_comm_time_vs_rank.csv").exists());
+    std::fs::remove_dir_all(&out).ok();
+}

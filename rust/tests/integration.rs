@@ -1,7 +1,7 @@
-//! Integration tests over the real AOT artifacts (run `make artifacts`
-//! first; these tests skip gracefully when artifacts/tiny is absent so
-//! `cargo test` works in a fresh checkout, and the Makefile test target
-//! guarantees artifacts exist in CI).
+//! Integration tests over the runtime executables. Hermetic: when
+//! artifacts/tiny is absent (fresh checkout, CI) the runtime synthesizes
+//! the tiny preset and executes it on the host backend; with real AOT
+//! artifacts on disk the same tests exercise those instead.
 
 use edgc::config::{Method, TrainConfig};
 use edgc::coordinator::{Backend, Trainer};
@@ -9,19 +9,6 @@ use edgc::runtime::{lit_f32, lit_i32, to_f32, to_scalar, Runtime};
 use edgc::util::rng::Rng;
 
 const ART: &str = "artifacts/tiny";
-
-fn have_artifacts() -> bool {
-    std::path::Path::new(ART).join("manifest.json").exists()
-}
-
-macro_rules! require_artifacts {
-    () => {
-        if !have_artifacts() {
-            eprintln!("skipping: {ART} missing (run `make artifacts`)");
-            return;
-        }
-    };
-}
 
 fn tiny_cfg(method: Method, steps: usize) -> TrainConfig {
     TrainConfig {
@@ -52,8 +39,7 @@ fn tiny_cfg(method: Method, steps: usize) -> TrainConfig {
 }
 
 #[test]
-fn train_step_artifact_runs_and_loss_is_sane() {
-    require_artifacts!();
+fn train_step_executable_runs_and_loss_is_sane() {
     let rt = Runtime::load(ART).unwrap();
     let m = rt.manifest.clone();
     let params = rt.init_params().unwrap();
@@ -75,8 +61,7 @@ fn train_step_artifact_runs_and_loss_is_sane() {
 }
 
 #[test]
-fn artifact_and_host_compression_paths_agree() {
-    require_artifacts!();
+fn executable_and_host_compression_paths_agree() {
     let rt = Runtime::load(ART).unwrap();
     let man = rt.manifest.clone();
     // Build two engines with identical state, run one round each way.
@@ -98,9 +83,12 @@ fn artifact_and_host_compression_paths_agree() {
     assert!((rep_h.mean_rel_error - rep_a.mean_rel_error).abs() < 1e-2);
 }
 
+// On default builds this guards the dispatch seam (padding/wiring of
+// the entropy executable), since the host executor shares the library
+// estimator; the artifact-vs-host cross-check it was born as only
+// happens under `--features pjrt` with real artifacts.
 #[test]
-fn entropy_artifact_matches_host_estimator() {
-    require_artifacts!();
+fn entropy_executable_matches_host_estimator() {
     let rt = Runtime::load(ART).unwrap();
     let n = rt.manifest.entropy_sample;
     let mut rng = Rng::new(5);
@@ -115,7 +103,6 @@ fn entropy_artifact_matches_host_estimator() {
 
 #[test]
 fn megatron_short_run_decreases_loss() {
-    require_artifacts!();
     let mut t = Trainer::new(tiny_cfg(Method::Megatron, 30), Backend::Host).unwrap();
     let s = t.run().unwrap();
     let first = s.curve.column("loss")[0];
@@ -132,7 +119,6 @@ fn megatron_short_run_decreases_loss() {
 
 #[test]
 fn edgc_run_compresses_after_warmup_and_trains() {
-    require_artifacts!();
     let mut t = Trainer::new(tiny_cfg(Method::Edgc, 40), Backend::Host).unwrap();
     let s = t.run().unwrap();
     // compression must have kicked in: fewer floats than uncompressed
@@ -153,9 +139,8 @@ fn edgc_run_compresses_after_warmup_and_trains() {
 
 #[test]
 fn edgc_artifact_backend_smoke() {
-    require_artifacts!();
-    // short, but exercises the full PJRT path: train_step + powersgd
-    // artifacts + entropy artifact + adam artifact
+    // short, but exercises the full executable path: train_step +
+    // powersgd phases + entropy + adam, all through Runtime::run
     let mut cfg = tiny_cfg(Method::Edgc, 12);
     cfg.edgc.window = 3;
     cfg.eval_every = 6;
@@ -167,7 +152,6 @@ fn edgc_artifact_backend_smoke() {
 
 #[test]
 fn fixed_rank_compresses_from_step_zero() {
-    require_artifacts!();
     let mut t = Trainer::new(tiny_cfg(Method::FixedRank(8), 10), Backend::Host).unwrap();
     let s = t.run().unwrap();
     assert!(s.total_comm_floats < s.total_uncompressed_floats);
@@ -177,7 +161,6 @@ fn fixed_rank_compresses_from_step_zero() {
 
 #[test]
 fn optimus_cc_waits_out_warmup_then_compresses() {
-    require_artifacts!();
     let mut t = Trainer::new(tiny_cfg(Method::OptimusCc(8), 20), Backend::Host).unwrap();
     let s = t.run().unwrap();
     let ranks = s.curve.column("rank_s1");
@@ -187,7 +170,6 @@ fn optimus_cc_waits_out_warmup_then_compresses() {
 
 #[test]
 fn runs_are_deterministic() {
-    require_artifacts!();
     let run = || {
         let mut t = Trainer::new(tiny_cfg(Method::Edgc, 8), Backend::Host).unwrap();
         t.run().unwrap().final_train_loss

@@ -1,0 +1,121 @@
+//! Compile-only stub of the `xla` PJRT bindings.
+//!
+//! The offline build environment carries no crate registry, so the
+//! optional `pjrt` feature of the `edgc` crate resolves its `xla`
+//! dependency to this path crate. It mirrors exactly the API surface
+//! `edgc::runtime::pjrt` consumes, compiles (and clippy-checks)
+//! everywhere, and fails *at runtime* with a clear error the moment a
+//! client is constructed — point the path dependency at the real
+//! bindings (LaurentMazare/xla-rs lineage, `xla_extension` 0.5.x) to
+//! actually execute artifacts. See rust/DESIGN.md §PJRT.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real crate's shape (message-carrying).
+pub struct Error(String);
+
+impl Error {
+    fn stub() -> Error {
+        Error(
+            "xla stub: PJRT is not available in this build; replace \
+             rust/vendor/xla-stub with the real xla bindings (DESIGN.md §PJRT)"
+                .to_string(),
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Elements transferable into/out of literals.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// A host-side tensor literal. The stub only carries it around; every
+/// data-extraction path errors.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::stub())
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        Err(Error::stub())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::stub())
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto> {
+        Err(Error::stub())
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub())
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub())
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub())
+    }
+}
