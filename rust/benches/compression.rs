@@ -1,13 +1,20 @@
 //! Bench: PowerSGD compression hot path (host backend) across the tiny
 //! model's real shape buckets and ranks — the L3-side cost that Eq. 2
-//! trades against network time. Feeds EXPERIMENTS.md §Perf.
+//! trades against network time — plus the paper-scale 2048×2048 bucket
+//! at rank 64 measured at `--threads` 1 vs 4 (the parallel-substrate
+//! acceptance number: ≥2× at 4 workers). Feeds EXPERIMENTS.md §Perf and,
+//! with `--json BENCH_compression.json`, the CI perf trajectory.
 
 use edgc::compress::TensorCompressor;
-use edgc::util::bench::BenchSet;
+use edgc::util::bench::{BenchOpts, BenchSet};
+use edgc::util::par;
 use edgc::util::rng::Rng;
 
 fn main() {
-    let mut set = BenchSet::new("compression");
+    let opts = BenchOpts::from_env();
+    let mut set = BenchSet::with_opts("compression", &opts);
+
+    par::set_threads(1);
     for &(m, n) in &[(512usize, 128usize), (128, 512), (128, 384)] {
         let mut rng = Rng::new(1);
         let g: Vec<f32> = rng.normal_vec(m * n, 0.02);
@@ -18,6 +25,29 @@ fn main() {
             });
         }
     }
+
+    // paper-scale bucket, serial vs 4 deterministic workers (outputs are
+    // byte-identical; only the wall clock may differ)
+    let (m, n, r) = (2048usize, 2048usize, 64usize);
+    let g: Vec<f32> = Rng::new(7).normal_vec(m * n, 0.02);
+    let mut mins = Vec::new();
+    for &t in &[1usize, 4] {
+        par::set_threads(t);
+        // fresh rng per thread setting: both runs start from the same Q
+        let mut rng = Rng::new(8);
+        let mut c = TensorCompressor::new(m, n, r, 1, true, &mut rng);
+        let res = set.run(&format!("round_host_{m}x{n}_r{r}_t{t}"), || {
+            std::hint::black_box(c.round_host(&[&g], r));
+        });
+        mins.push(res.min_ns);
+    }
+    par::set_threads(1);
+    println!(
+        "{:<44} {:.2}x (threads 1 -> 4)",
+        format!("compression/round_host_{m}x{n}_r{r}_speedup"),
+        mins[0] / mins[1].max(1.0)
+    );
+
     // uncompressed baseline for the same volume
     let mut rng = Rng::new(2);
     let g1: Vec<f32> = rng.normal_vec(512 * 128, 0.02);
@@ -25,4 +55,6 @@ fn main() {
     set.run("allreduce_mean_512x128_dp2", || {
         std::hint::black_box(edgc::compress::allreduce_mean(&[&g1, &g2]));
     });
+
+    set.finish(&opts).expect("bench json report");
 }

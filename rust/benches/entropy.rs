@@ -1,12 +1,14 @@
 //! Bench: GDS entropy estimation — Table V's cost-vs-β measurement on a
-//! full tiny-model gradient-sized buffer (470k floats).
+//! full tiny-model gradient-sized buffer (470k floats). With
+//! `--json BENCH_entropy.json`, feeds the CI perf trajectory.
 
 use edgc::entropy;
-use edgc::util::bench::BenchSet;
+use edgc::util::bench::{BenchOpts, BenchSet};
 use edgc::util::rng::Rng;
 
 fn main() {
-    let mut set = BenchSet::new("entropy");
+    let opts = BenchOpts::from_env();
+    let mut set = BenchSet::with_opts("entropy", &opts);
     let mut rng = Rng::new(3);
     let grad: Vec<f32> = rng.normal_vec(470_528, 0.02);
     let mut buf = Vec::new();
@@ -20,4 +22,5 @@ fn main() {
         entropy::subsample(&grad, 0.25, 0, &mut buf);
         std::hint::black_box(buf.len());
     });
+    set.finish(&opts).expect("bench json report");
 }

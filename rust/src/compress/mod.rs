@@ -23,6 +23,7 @@
 //! uncompressed — the quantity the netsim layer prices.
 
 use crate::tensor::Mat;
+use crate::util::par;
 use crate::util::rng::Rng;
 
 /// Bytes-on-the-wire accounting for one tensor round.
@@ -145,14 +146,13 @@ impl TensorCompressor {
         }
         self.ensure_active_columns(r_eff);
 
-        // 1. error feedback: Mᵢ = Gᵢ + Eᵢ
+        // 1. error feedback: Mᵢ = Gᵢ + Eᵢ (chunk-parallel sweep per
+        // replica; element-wise, so bytes match the serial loop)
         let ms: Vec<Mat> = (0..k)
             .map(|i| {
                 let mut d = grads[i].to_vec();
                 if self.error_feedback {
-                    for (x, e) in d.iter_mut().zip(&self.errors[i]) {
-                        *x += e;
-                    }
+                    par::add_assign(&mut d, &self.errors[i]);
                 }
                 Mat::from_vec(m, n, d)
             })
@@ -174,31 +174,43 @@ impl TensorCompressor {
         }
         q_avg.scale(1.0 / k as f32);
 
-        // 4. decompress + error update + warm start. One fused pass
+        // 4. decompress + error update + warm start. The fused pass
         // computes the mean-gradient norms for rel_error and the
-        // per-replica EF residuals (§Perf: avoids two extra m·n sweeps
-        // and the diff allocation).
+        // per-replica EF residuals over fixed chunks (§Perf: avoids two
+        // extra serial m·n sweeps and the diff allocation); the (num,
+        // den) reduction combines per-chunk partials in chunk order, so
+        // rel_error is byte-identical for any thread count.
         let approx = p_hat.matmul(&q_avg.t());
         let inv_k = 1.0f64 / k as f64;
-        let mut num = 0.0f64;
-        let mut den = 0.0f64;
-        for j in 0..m * n {
-            let mut mm = 0.0f64;
-            for mi in &ms {
-                mm += mi.data[j] as f64;
+        let fchunk = par::items_per_chunk(2 * k, par::CHUNK_WORK);
+        let partials = par::map_chunks(m * n, fchunk, |_, jr| {
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for j in jr {
+                let mut mm = 0.0f64;
+                for mi in &ms {
+                    mm += mi.data[j] as f64;
+                }
+                mm *= inv_k;
+                let d = mm - approx.data[j] as f64;
+                num += d * d;
+                den += mm * mm;
             }
-            mm *= inv_k;
-            let d = mm - approx.data[j] as f64;
-            num += d * d;
-            den += mm * mm;
-        }
+            (num, den)
+        });
+        let (num, den) =
+            partials.iter().fold((0.0f64, 0.0f64), |(a, b), &(x, y)| (a + x, b + y));
         let rel_error = num.sqrt() / den.sqrt().max(1e-30);
 
         if self.error_feedback {
             for (i, mi) in ms.iter().enumerate() {
-                for j in 0..m * n {
-                    self.errors[i][j] = mi.data[j] - approx.data[j];
-                }
+                let (md, ad) = (&mi.data, &approx.data);
+                par::for_each_chunk_mut(&mut self.errors[i], fchunk, |ci, block| {
+                    let off = ci * fchunk;
+                    for (j, e) in block.iter_mut().enumerate() {
+                        *e = md[off + j] - ad[off + j];
+                    }
+                });
             }
         }
         // warm start: write the active columns back; columns ≥ r_eff keep

@@ -230,6 +230,25 @@ impl Default for EdgcParams {
     }
 }
 
+impl EdgcParams {
+    /// Reject out-of-range controller parameters up front. The α/β
+    /// range rules (sampling *rates*: (0, 1]) live in one place — the
+    /// GDS config these fields feed (`entropy::GdsConfig`), where an
+    /// α ≤ 0 would otherwise become a garbage measurement period.
+    pub fn validate(&self) -> Result<()> {
+        crate::entropy::GdsConfig { alpha: self.alpha, beta: self.beta, max_sample: 1 }
+            .validate()?;
+        crate::ensure!(self.window >= 1, "edgc.window must be >= 1");
+        crate::ensure!(self.step_limit >= 1, "edgc.step_limit must be >= 1");
+        crate::ensure!(
+            (0.0..=1.0).contains(&self.min_warmup_frac),
+            "edgc.min_warmup_frac must be in [0, 1], got {}",
+            self.min_warmup_frac
+        );
+        Ok(())
+    }
+}
+
 /// A full training-run configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -318,6 +337,7 @@ impl TrainConfig {
         c.cluster = cluster_by_name(&t.str_or("cluster.preset", "cluster1")?)?;
         c.sim_params = t.usize_or("cluster.sim_params", c.sim_params)?;
         c.sim_tokens = t.usize_or("cluster.sim_tokens", c.sim_tokens)?;
+        c.edgc.validate().context("[edgc] section")?;
         Ok(c)
     }
 }
@@ -393,6 +413,18 @@ preset = "cluster1"
         let c = TrainConfig::from_toml("").unwrap();
         assert_eq!(c.steps, TrainConfig::default().steps);
         assert_eq!(c.method, Method::Edgc);
+    }
+
+    #[test]
+    fn rejects_out_of_range_edgc_params() {
+        // Regression: alpha/beta are rates in (0, 1]; a config with
+        // alpha = 0 used to flow through and corrupt the GDS period.
+        for bad in ["alpha = 0.0", "alpha = -1.0", "beta = 1.5", "window = 0"] {
+            let text = format!("[edgc]\n{bad}\n");
+            assert!(TrainConfig::from_toml(&text).is_err(), "{bad} must be rejected");
+        }
+        assert!(TrainConfig::from_toml("[edgc]\nalpha = 1.0\nbeta = 0.05\n").is_ok());
+        assert!(EdgcParams::default().validate().is_ok());
     }
 
     #[test]

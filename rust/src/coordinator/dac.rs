@@ -63,8 +63,11 @@ pub struct Dac {
     r_prev: f64,
     /// Completed-window entropy trace (diagnostics + Table VII).
     pub entropy_trace: Vec<f64>,
-    /// Rank decisions per window (stage-1), for Fig. 13-style plots.
-    pub rank_trace: Vec<f64>,
+    /// Stage-1 rank decisions as aligned `(window, rank)` entries, where
+    /// `window` indexes [`Dac::entropy_trace`] — warm-up windows record
+    /// no rank, so a bare rank list would silently pair `rank_trace[i]`
+    /// with the wrong window in Fig.-13-style plots.
+    pub rank_trace: Vec<(usize, f64)>,
 }
 
 impl Dac {
@@ -145,7 +148,7 @@ impl Dac {
                 // Re-anchor Constraint 1 at activation time.
                 self.activation = Some(ActivationRef { h_ini: window_entropy });
                 self.r_prev = self.bounds.r_max as f64;
-                self.rank_trace.push(self.r_prev);
+                self.rank_trace.push((self.entropy_trace.len() - 1, self.r_prev));
             }
             return;
         }
@@ -171,7 +174,7 @@ impl Dac {
         };
         r_new = r_new.clamp(self.bounds.r_min as f64, self.bounds.r_max as f64);
         self.r_prev = r_new;
-        self.rank_trace.push(r_new);
+        self.rank_trace.push((self.entropy_trace.len() - 1, r_new));
     }
 
     /// Stage-1 rank for the current window (None during warm-up).
@@ -313,5 +316,34 @@ mod tests {
         }
         assert_eq!(d.entropy_trace.len(), 6);
         assert!(!d.rank_trace.is_empty());
+    }
+
+    #[test]
+    fn rank_trace_pairs_with_entropy_windows() {
+        // Regression: the activation-window entry used to desynchronize
+        // rank_trace from entropy_trace. Every rank entry must carry the
+        // index of the entropy window it was decided in, the first entry
+        // is the activation window's r_max, and the indices are the
+        // consecutive post-warm-up windows.
+        let mut d = mk(100, 10);
+        let entropies = [4.0, 3.95, 3.9, 3.0, 2.5, 2.0];
+        for (w, &h) in entropies.iter().enumerate() {
+            d.on_window(10 + w * 10, h);
+        }
+        assert_eq!(d.entropy_trace.len(), entropies.len());
+        // activation at the third window (two sustained declines + floor)
+        let (w0, r0) = d.rank_trace[0];
+        assert_eq!(w0, 2, "activation window index");
+        assert_eq!(r0, 64.0, "activation records r_max");
+        // one aligned entry per window from activation on
+        assert_eq!(d.rank_trace.len(), entropies.len() - 2);
+        for (i, &(w, r)) in d.rank_trace.iter().enumerate() {
+            assert_eq!(w, 2 + i, "indices are consecutive windows");
+            assert!(w < d.entropy_trace.len());
+            assert!((12.0..=64.0).contains(&r));
+        }
+        // the paired entropy really is the one the decision consumed:
+        // the big drop at window 3 rate-limits the rank to r_max - s
+        assert_eq!(d.rank_trace[1], (3, 56.0));
     }
 }

@@ -42,7 +42,9 @@ pub struct RunSummary {
     pub total_comm_floats: usize,
     pub total_uncompressed_floats: usize,
     pub entropy_trace: Vec<f64>,
-    pub rank_trace: Vec<f64>,
+    /// Aligned (window, stage-1 rank) decisions; `window` indexes
+    /// `entropy_trace` (see `Dac::rank_trace`).
+    pub rank_trace: Vec<(usize, f64)>,
     /// (tensor, stage, rel_error) samples recorded every eval interval.
     pub error_samples: Vec<(usize, String, usize, f64)>,
 }
@@ -65,6 +67,7 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(cfg: TrainConfig, backend: Backend) -> Result<Trainer> {
+        cfg.edgc.validate()?;
         let rt = Runtime::load(&cfg.artifacts)?;
         let man = rt.manifest.clone();
         let params = rt.init_params()?;
@@ -106,12 +109,14 @@ impl Trainer {
             None
         };
 
+        let gds = Gds::new(GdsConfig {
+            alpha: cfg.edgc.alpha,
+            beta: cfg.edgc.beta,
+            max_sample: man.entropy_sample,
+        })?;
+
         Ok(Trainer {
-            gds: Gds::new(GdsConfig {
-                alpha: cfg.edgc.alpha,
-                beta: cfg.edgc.beta,
-                max_sample: man.entropy_sample,
-            }),
+            gds,
             window: WindowStats::default(),
             opt_m: vec![0.0; n],
             opt_v: vec![0.0; n],

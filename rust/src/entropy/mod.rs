@@ -16,7 +16,9 @@
 //! the PJRT artifact instead (same numbers, exercised in integration
 //! tests).
 
+use crate::ensure;
 use crate::tensor::mean_std;
+use crate::util::error::Result;
 
 /// Number of histogram bins (matches python ENTROPY_BINS).
 pub const BINS: usize = 256;
@@ -36,7 +38,14 @@ pub struct Estimate {
 
 /// Histogram differential entropy of a sample (μ±6σ range, `BINS` bins).
 /// Same estimator as the L1 Pallas kernel — see python kernels/entropy.py.
+///
+/// An empty sample yields the defined zero-entropy estimate (all fields
+/// 0) rather than propagating the NaN mean/σ of `mean_std` — reachable
+/// via [`Gds::measure`] on an empty gradient slice.
 pub fn estimate(sample: &[f32]) -> Estimate {
+    if sample.is_empty() {
+        return Estimate { h_hist: 0.0, h_gauss: 0.0, sigma: 0.0, mean: 0.0, n: 0 };
+    }
     let (mean, sigma) = mean_std(sample);
     let sigma = sigma.max(1e-12);
     let lo = mean - 6.0 * sigma;
@@ -103,6 +112,25 @@ impl Default for GdsConfig {
     }
 }
 
+impl GdsConfig {
+    /// Both sampling rates are rates: α, β ∈ (0, 1]. An α ≤ 0 would cast
+    /// `f64::INFINITY` to a garbage measurement period in [`Gds::new`].
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.alpha > 0.0 && self.alpha <= 1.0,
+            "GDS alpha (ISR) must be in (0, 1], got {}",
+            self.alpha
+        );
+        ensure!(
+            self.beta > 0.0 && self.beta <= 1.0,
+            "GDS beta (GSR) must be in (0, 1], got {}",
+            self.beta
+        );
+        ensure!(self.max_sample >= 1, "GDS max_sample must be >= 1");
+        Ok(())
+    }
+}
+
 /// The gradient data sampler: decides *when* to measure (ISR) and
 /// performs the β-subsampled estimate when due.
 #[derive(Clone, Debug)]
@@ -114,9 +142,10 @@ pub struct Gds {
 }
 
 impl Gds {
-    pub fn new(cfg: GdsConfig) -> Self {
+    pub fn new(cfg: GdsConfig) -> Result<Self> {
+        cfg.validate()?;
         let period = (1.0 / cfg.alpha).round().max(1.0) as usize;
-        Gds { cfg, period, buf: Vec::new(), measure_count: 0 }
+        Ok(Gds { cfg, period, buf: Vec::new(), measure_count: 0 })
     }
 
     /// Is iteration `iter` a measurement iteration under ISR α?
@@ -259,17 +288,51 @@ mod tests {
 
     #[test]
     fn gds_isr_schedule() {
-        let gds = Gds::new(GdsConfig { alpha: 0.1, beta: 1.0, max_sample: 1 << 20 });
+        let gds = Gds::new(GdsConfig { alpha: 0.1, beta: 1.0, max_sample: 1 << 20 }).unwrap();
         let due: Vec<usize> = (0..35).filter(|&i| gds.due(i)).collect();
         assert_eq!(due, vec![0, 10, 20, 30]);
     }
 
     #[test]
     fn gds_measure_caps_sample() {
-        let mut gds = Gds::new(GdsConfig { alpha: 1.0, beta: 1.0, max_sample: 1000 });
+        let mut gds = Gds::new(GdsConfig { alpha: 1.0, beta: 1.0, max_sample: 1000 }).unwrap();
         let e = gds.measure(&gauss(50_000, 1.0, 6));
         assert!(e.n <= 1001, "n={}", e.n);
         assert!((e.sigma - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn gds_rejects_out_of_range_rates() {
+        // Regression: alpha <= 0 used to cast f64::INFINITY to a garbage
+        // measurement period instead of erroring.
+        for bad in [0.0, -0.5, 1.5, f64::INFINITY, f64::NAN] {
+            assert!(
+                Gds::new(GdsConfig { alpha: bad, ..Default::default() }).is_err(),
+                "alpha={bad} must be rejected"
+            );
+            assert!(
+                Gds::new(GdsConfig { beta: bad, ..Default::default() }).is_err(),
+                "beta={bad} must be rejected"
+            );
+        }
+        assert!(Gds::new(GdsConfig { max_sample: 0, ..Default::default() }).is_err());
+        assert!(Gds::new(GdsConfig::default()).is_ok());
+    }
+
+    #[test]
+    fn empty_sample_estimate_is_defined_zero() {
+        // Regression: mean_std on an empty sample returns NaN mean/sigma;
+        // estimate() must not propagate it.
+        let e = estimate(&[]);
+        assert_eq!(e.n, 0);
+        assert_eq!(e.h_hist, 0.0);
+        assert_eq!(e.h_gauss, 0.0);
+        assert_eq!(e.sigma, 0.0);
+        assert_eq!(e.mean, 0.0);
+        // reachable through the sampler on an empty gradient slice
+        let mut gds = Gds::new(GdsConfig::default()).unwrap();
+        let e = gds.measure(&[]);
+        assert!(e.h_hist == 0.0 && e.sigma == 0.0 && e.n == 0);
     }
 
     #[test]

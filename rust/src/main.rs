@@ -41,6 +41,12 @@ fn spec() -> Spec {
             ("config", "FILE", "TOML config file (flags override)"),
             ("out", "DIR", "output directory for tables (default runs)"),
             ("jobs", "N", "reproduce: parallel experiment workers (default: all cores)"),
+            (
+                "threads",
+                "N",
+                "compute threads per op, byte-identical output for any N \
+                 (0 = all cores; default: train 0, reproduce 1)",
+            ),
             ("seed", "N", "random seed (default 7)"),
             ("params", "N", "projection: model parameter count"),
             ("eval-every", "N", "validation interval in steps"),
@@ -107,14 +113,18 @@ fn backend_of(args: &Args) -> Result<Backend> {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
     let backend = backend_of(args)?;
+    // one worker per core by default; outputs are byte-identical for
+    // any thread count (see util::par), so this is purely a speed knob
+    edgc::util::par::set_threads(args.usize_or("threads", 0)?);
     println!(
-        "[edgc] training {} steps, method={}, dp={}, pp={}, cluster={}, backend={:?}",
+        "[edgc] training {} steps, method={}, dp={}, pp={}, cluster={}, backend={:?}, threads={}",
         cfg.steps,
         cfg.method.name(),
         cfg.dp,
         cfg.pp,
         cfg.cluster.name,
-        backend
+        backend,
+        edgc::util::par::threads()
     );
     let out_dir = cfg.out_dir.clone();
     let mut tr = Trainer::new(cfg, backend)?;
@@ -144,6 +154,9 @@ fn cmd_reproduce(args: &Args) -> Result<()> {
         out_dir: args.str_or("out", "runs"),
         steps: args.usize_or("steps", 240)?,
         seed: args.usize_or("seed", 7)? as u64,
+        // default 1: the campaign's --jobs workers already own the
+        // cores; any (jobs, threads) combination is byte-identical
+        threads: args.usize_or("threads", 1)?,
     };
     // 0 (or unset) = one worker per core; outputs are byte-identical for
     // any worker count (see repro::campaign).

@@ -150,13 +150,21 @@ pub fn fit_eta(points: &[(usize, f64)]) -> LinearCommModel {
     let num: f64 = points.iter().map(|&(r, t)| r as f64 * t).sum();
     let den: f64 = points.iter().map(|&(r, _)| (r as f64) * (r as f64)).sum();
     let eta = num / den.max(1e-300);
-    let mape = points
-        .iter()
-        .filter(|&&(_, t)| t > 0.0)
-        .map(|&(r, t)| ((eta * r as f64 - t) / t).abs())
-        .sum::<f64>()
-        / points.len() as f64
-        * 100.0;
+    // MAPE over the t > 0 points only: zero-time points are excluded
+    // from the sum, so they must be excluded from the divisor too or
+    // the reported calibration error is silently understated.
+    let valid = points.iter().filter(|&&(_, t)| t > 0.0).count();
+    let mape = if valid == 0 {
+        0.0
+    } else {
+        points
+            .iter()
+            .filter(|&&(_, t)| t > 0.0)
+            .map(|&(r, t)| ((eta * r as f64 - t) / t).abs())
+            .sum::<f64>()
+            / valid as f64
+            * 100.0
+    };
     LinearCommModel { eta, mape }
 }
 
@@ -228,6 +236,33 @@ mod tests {
         assert!((m.eta - 0.25e-3).abs() < 1e-12);
         assert!(m.mape < 1e-9);
         assert!((m.rank_for_time(m.predict(32.0)) - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eta_fit_mape_divides_by_filtered_count() {
+        // Regression: a zero-time point is excluded from the MAPE sum
+        // and must be excluded from the divisor too. With one of three
+        // points at t = 0, MAPE must equal the two-point MAPE, not 2/3
+        // of it.
+        let noisy = vec![(8usize, 1.1e-3), (16usize, 1.9e-3)];
+        let with_zero = vec![(8usize, 1.1e-3), (16usize, 1.9e-3), (24usize, 0.0)];
+        let clean = fit_eta(&noisy);
+        let mixed = fit_eta(&with_zero);
+        // the zero point still shifts eta; recompute the reference MAPE
+        // at the mixed fit's eta over the two valid points
+        let want = with_zero
+            .iter()
+            .filter(|&&(_, t)| t > 0.0)
+            .map(|&(r, t)| ((mixed.eta * r as f64 - t) / t).abs())
+            .sum::<f64>()
+            / 2.0
+            * 100.0;
+        assert!((mixed.mape - want).abs() < 1e-12, "{} vs {want}", mixed.mape);
+        assert!(clean.mape > 0.0);
+        // all-zero times: defined (zero) MAPE, no NaN
+        let degenerate = fit_eta(&[(8usize, 0.0), (16usize, 0.0)]);
+        assert_eq!(degenerate.mape, 0.0);
+        assert!(degenerate.eta.abs() < 1e-12);
     }
 
     #[test]

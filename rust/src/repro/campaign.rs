@@ -86,6 +86,9 @@ fn run_jobs_partial(
     opts: &Opts,
     workers: usize,
 ) -> (Vec<JobResult>, Option<EdgcError>) {
+    // single funnel for both run_jobs and run_campaign, so Opts.threads
+    // takes effect on every entry point (global knob — see util::par)
+    crate::util::par::set_threads(opts.threads);
     let workers = effective_workers(workers, jobs);
     let next = Mutex::new(0usize);
     let failed = AtomicBool::new(false);
@@ -149,6 +152,13 @@ pub fn run_jobs(jobs: &[Job], opts: &Opts, workers: usize) -> Result<Vec<JobResu
 /// every job's tables in deterministic (submission) order. On failure,
 /// the jobs that did complete are still printed (as the serial loop did)
 /// before the error propagates.
+///
+/// Two orthogonal parallelism axes meet here: `workers` experiments run
+/// concurrently (`--jobs`), and inside each job every hot op fans out
+/// over `opts.threads` compute workers (`--threads`, global — see
+/// `util::par`). Outputs are byte-identical for every (jobs, threads)
+/// combination; total concurrency is the product, so the defaults keep
+/// one of the two axes at 1.
 pub fn run_campaign(which: &str, opts: &Opts, workers: usize) -> Result<Vec<JobResult>> {
     let jobs = plan(which)?;
     let sw = Stopwatch::start();
@@ -206,6 +216,7 @@ mod tests {
                 .into_owned(),
             steps: 4,
             seed: 1,
+            threads: 1,
         };
         let jobs = plan("fig3").unwrap();
         let err = run_jobs(&jobs, &opts, 2).unwrap_err().to_string();

@@ -38,11 +38,20 @@ pub struct Opts {
     /// Scale factor on step counts (1 = default laptop budget).
     pub steps: usize,
     pub seed: u64,
+    /// Compute threads per op inside each job (0 = all cores). Output
+    /// bytes are identical for any value — see `util::par`.
+    pub threads: usize,
 }
 
 impl Default for Opts {
     fn default() -> Self {
-        Opts { artifacts: "artifacts/tiny".into(), out_dir: "runs".into(), steps: 400, seed: 7 }
+        Opts {
+            artifacts: "artifacts/tiny".into(),
+            out_dir: "runs".into(),
+            steps: 400,
+            seed: 7,
+            threads: 1,
+        }
     }
 }
 

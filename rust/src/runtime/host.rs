@@ -15,8 +15,9 @@
 
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
-use crate::tensor::Mat;
+use crate::tensor::{mm, Mat};
 use crate::util::error::Result;
+use crate::util::par::{self, ParSlice};
 use crate::util::rng::Rng;
 use crate::{bail, ensure};
 
@@ -51,84 +52,85 @@ pub fn init_params(man: &Manifest) -> Vec<f32> {
 
 // ---------------------------------------------------------- linear algebra
 
-/// out[m,n] = a[m,k] @ b[k,n] (f32, ikj order — streams b rows).
-fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
-        }
-    }
-    out
-}
+// The matmul kernel `mm` is shared with the tensor layer (one copy of
+// the ikj loop + row-block chunking — see tensor::mm); the transposed
+// variants below are executor-local.
 
-/// out[m,n] = a[m,k] @ b[n,k]ᵀ (row-dot form).
+/// out[m,n] = a[m,k] @ b[n,k]ᵀ (row-dot form, row-block parallel).
 fn mm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for kk in 0..k {
-                acc += arow[kk] * brow[kk];
+    let rows_per = par::items_per_chunk(2 * k * n, par::CHUNK_WORK);
+    par::for_each_chunk_mut(&mut out, rows_per * n.max(1), |ci, block| {
+        let row0 = ci * rows_per;
+        for (bi, orow) in block.chunks_mut(n).enumerate() {
+            let arow = &a[(row0 + bi) * k..(row0 + bi + 1) * k];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += arow[kk] * brow[kk];
+                }
+                *o = acc;
             }
-            orow[j] = acc;
         }
-    }
+    });
     out
 }
 
 /// out[k,n] += a[rows,k]ᵀ @ b[rows,n] (weight-gradient accumulation).
+/// Parallel over output rows kk; every out element still accumulates
+/// r = 0..rows in order, so bytes match the serial r-major loop.
 fn acc_tn(a: &[f32], b: &[f32], rows: usize, k: usize, n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), rows * k);
     debug_assert_eq!(b.len(), rows * n);
     debug_assert_eq!(out.len(), k * n);
-    for r in 0..rows {
-        let arow = &a[r * k..(r + 1) * k];
-        let brow = &b[r * n..(r + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
+    let rows_per = par::items_per_chunk(2 * rows * n, par::CHUNK_WORK);
+    par::for_each_chunk_mut(out, rows_per * n.max(1), |ci, block| {
+        let k0 = ci * rows_per;
+        for (bi, orow) in block.chunks_mut(n).enumerate() {
+            let kk = k0 + bi;
+            for r in 0..rows {
+                let av = a[r * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[r * n..(r + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
             }
         }
-    }
+    });
 }
 
 fn add_bias(x: &mut [f32], bias: &[f32], rows: usize, n: usize) {
-    for r in 0..rows {
-        let row = &mut x[r * n..(r + 1) * n];
-        for j in 0..n {
-            row[j] += bias[j];
+    debug_assert_eq!(x.len(), rows * n);
+    let rows_per = par::items_per_chunk(n, par::CHUNK_WORK / 4);
+    par::for_each_chunk_mut(x, rows_per * n.max(1), |_, block| {
+        for row in block.chunks_mut(n) {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v += bias[j];
+            }
         }
-    }
+    });
 }
 
-/// out[n] += column sums of dy[rows,n] (bias gradient).
+/// out[n] += column sums of dy[rows,n] (bias gradient). Parallel over
+/// column blocks; each out element accumulates r = 0..rows in order.
 fn acc_bias(dy: &[f32], rows: usize, n: usize, out: &mut [f32]) {
-    for r in 0..rows {
-        let row = &dy[r * n..(r + 1) * n];
-        for j in 0..n {
-            out[j] += row[j];
+    debug_assert_eq!(out.len(), n);
+    let cols_per = par::items_per_chunk(2 * rows, par::CHUNK_WORK / 4);
+    par::for_each_chunk_mut(out, cols_per, |ci, block| {
+        let j0 = ci * cols_per;
+        for r in 0..rows {
+            let row = &dy[r * n + j0..r * n + j0 + block.len()];
+            for (o, &v) in block.iter_mut().zip(row) {
+                *o += v;
+            }
         }
-    }
+    });
 }
 
 // ----------------------------------------------------------------- layers
@@ -146,28 +148,43 @@ fn layernorm_fwd(x: &[f32], g: &[f32], b: &[f32], rows: usize, d: usize) -> (Vec
     let mut out = vec![0.0f32; rows * d];
     let mut xhat = vec![0.0f32; rows * d];
     let mut inv = vec![0.0f32; rows];
-    for r in 0..rows {
-        let row = &x[r * d..(r + 1) * d];
-        let mut mu = 0.0f64;
-        for &v in row {
-            mu += v as f64;
-        }
-        mu /= d as f64;
-        let mut var = 0.0f64;
-        for &v in row {
-            let dv = v as f64 - mu;
-            var += dv * dv;
-        }
-        var /= d as f64;
-        let iv = 1.0 / (var + LN_EPS).sqrt();
-        inv[r] = iv as f32;
-        let xh = &mut xhat[r * d..(r + 1) * d];
-        let o = &mut out[r * d..(r + 1) * d];
-        for j in 0..d {
-            let h = ((row[j] as f64 - mu) * iv) as f32;
-            xh[j] = h;
-            o[j] = h * g[j] + b[j];
-        }
+    {
+        // Rows are independent; the three outputs scatter to disjoint
+        // per-row ranges (ParSlice), so row blocks parallelize with
+        // bytes identical to the serial loop.
+        let po = ParSlice::new(&mut out);
+        let px = ParSlice::new(&mut xhat);
+        let pi = ParSlice::new(&mut inv);
+        let rows_per = par::items_per_chunk(4 * d, par::CHUNK_WORK / 4);
+        par::for_each_range(rows, rows_per, |_, rr| {
+            // SAFETY: fixed row chunks are disjoint
+            let ob = unsafe { po.range_mut(rr.start * d..rr.end * d) };
+            let xb = unsafe { px.range_mut(rr.start * d..rr.end * d) };
+            let ib = unsafe { pi.range_mut(rr.clone()) };
+            for (li, r) in rr.enumerate() {
+                let row = &x[r * d..(r + 1) * d];
+                let mut mu = 0.0f64;
+                for &v in row {
+                    mu += v as f64;
+                }
+                mu /= d as f64;
+                let mut var = 0.0f64;
+                for &v in row {
+                    let dv = v as f64 - mu;
+                    var += dv * dv;
+                }
+                var /= d as f64;
+                let iv = 1.0 / (var + LN_EPS).sqrt();
+                ib[li] = iv as f32;
+                let xh = &mut xb[li * d..(li + 1) * d];
+                let o = &mut ob[li * d..(li + 1) * d];
+                for j in 0..d {
+                    let h = ((row[j] as f64 - mu) * iv) as f32;
+                    xh[j] = h;
+                    o[j] = h * g[j] + b[j];
+                }
+            }
+        });
     }
     (out, LnCache { xhat, inv })
 }
@@ -183,25 +200,45 @@ fn layernorm_bwd(
     db: &mut [f32],
 ) -> Vec<f32> {
     let mut dx = vec![0.0f32; rows * d];
-    for r in 0..rows {
-        let dyr = &dy[r * d..(r + 1) * d];
-        let xh = &cache.xhat[r * d..(r + 1) * d];
-        let mut m1 = 0.0f64; // mean(dx̂)
-        let mut m2 = 0.0f64; // mean(dx̂ ⊙ x̂)
+    // Rows are independent for dx; dg/db are row reductions, so each
+    // fixed row chunk accumulates its own partial and the partials are
+    // combined in chunk order (deterministic for any thread count).
+    let rows_per = par::items_per_chunk(6 * d, par::CHUNK_WORK / 4);
+    let partials = {
+        let pdx = ParSlice::new(&mut dx);
+        par::map_chunks(rows, rows_per, |_, rr| {
+            let mut pdg = vec![0.0f32; d];
+            let mut pdb = vec![0.0f32; d];
+            // SAFETY: fixed row chunks are disjoint
+            let ob = unsafe { pdx.range_mut(rr.start * d..rr.end * d) };
+            for (li, r) in rr.enumerate() {
+                let dyr = &dy[r * d..(r + 1) * d];
+                let xh = &cache.xhat[r * d..(r + 1) * d];
+                let mut m1 = 0.0f64; // mean(dx̂)
+                let mut m2 = 0.0f64; // mean(dx̂ ⊙ x̂)
+                for j in 0..d {
+                    pdg[j] += dyr[j] * xh[j];
+                    pdb[j] += dyr[j];
+                    let dxh = (dyr[j] * g[j]) as f64;
+                    m1 += dxh;
+                    m2 += dxh * xh[j] as f64;
+                }
+                m1 /= d as f64;
+                m2 /= d as f64;
+                let iv = cache.inv[r] as f64;
+                let o = &mut ob[li * d..(li + 1) * d];
+                for j in 0..d {
+                    let dxh = (dyr[j] * g[j]) as f64;
+                    o[j] = (iv * (dxh - m1 - xh[j] as f64 * m2)) as f32;
+                }
+            }
+            (pdg, pdb)
+        })
+    };
+    for (pdg, pdb) in &partials {
         for j in 0..d {
-            dg[j] += dyr[j] * xh[j];
-            db[j] += dyr[j];
-            let dxh = (dyr[j] * g[j]) as f64;
-            m1 += dxh;
-            m2 += dxh * xh[j] as f64;
-        }
-        m1 /= d as f64;
-        m2 /= d as f64;
-        let iv = cache.inv[r] as f64;
-        let o = &mut dx[r * d..(r + 1) * d];
-        for j in 0..d {
-            let dxh = (dyr[j] * g[j]) as f64;
-            o[j] = (iv * (dxh - m1 - xh[j] as f64 * m2)) as f32;
+            dg[j] += pdg[j];
+            db[j] += pdb[j];
         }
     }
     dx
@@ -211,25 +248,40 @@ const GELU_C: f32 = 0.797_884_56; // sqrt(2/π)
 const GELU_A: f32 = 0.044715;
 
 /// tanh-approximation GELU (jax.nn.gelu default); returns (out, tanh).
+/// Element-wise: fixed chunks parallelize with identical bytes.
 fn gelu_fwd(x: &[f32]) -> (Vec<f32>, Vec<f32>) {
     let mut out = vec![0.0f32; x.len()];
     let mut tv = vec![0.0f32; x.len()];
-    for i in 0..x.len() {
-        let v = x[i];
-        let t = (GELU_C * (v + GELU_A * v * v * v)).tanh();
-        tv[i] = t;
-        out[i] = 0.5 * v * (1.0 + t);
+    {
+        let po = ParSlice::new(&mut out);
+        let pt = ParSlice::new(&mut tv);
+        let chunk = par::items_per_chunk(16, par::CHUNK_WORK);
+        par::for_each_range(x.len(), chunk, |_, r| {
+            // SAFETY: fixed chunks are disjoint
+            let ob = unsafe { po.range_mut(r.clone()) };
+            let tb = unsafe { pt.range_mut(r.clone()) };
+            for (li, i) in r.enumerate() {
+                let v = x[i];
+                let t = (GELU_C * (v + GELU_A * v * v * v)).tanh();
+                tb[li] = t;
+                ob[li] = 0.5 * v * (1.0 + t);
+            }
+        });
     }
     (out, tv)
 }
 
 fn gelu_bwd(dy: &[f32], x: &[f32], tv: &[f32]) -> Vec<f32> {
     let mut dx = vec![0.0f32; x.len()];
-    for i in 0..x.len() {
-        let (v, t) = (x[i], tv[i]);
-        let dt = (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * v * v);
-        dx[i] = dy[i] * (0.5 * (1.0 + t) + 0.5 * v * dt);
-    }
+    let chunk = par::items_per_chunk(16, par::CHUNK_WORK);
+    par::for_each_chunk_mut(&mut dx, chunk, |ci, block| {
+        let off = ci * chunk;
+        for (li, o) in block.iter_mut().enumerate() {
+            let (v, t) = (x[off + li], tv[off + li]);
+            let dt = (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * v * v);
+            *o = dy[off + li] * (0.5 * (1.0 + t) + 0.5 * v * dt);
+        }
+    });
     dx
 }
 
@@ -450,9 +502,7 @@ impl HostExec {
                 d,
             );
             let (att_out, att) = self.attention_fwd(flat, &pre, ln1_out, bsz)?;
-            for j in 0..rows * d {
-                x[j] += att_out[j];
-            }
+            par::add_assign(&mut x, &att_out);
             let (ln2_out, ln2) = layernorm_fwd(
                 &x,
                 self.p(flat, &format!("{pre}ln2_g"))?,
@@ -466,11 +516,13 @@ impl HostExec {
             let (h_act, h_tanh) = gelu_fwd(&h_pre);
             let mlp = mm(&h_act, self.p(flat, &format!("{pre}fc2_w"))?, rows, f, d);
             let fc2_b = self.p(flat, &format!("{pre}fc2_b"))?;
-            for r in 0..rows {
-                for j in 0..d {
-                    x[r * d + j] += mlp[r * d + j] + fc2_b[j];
+            let rows_per = par::items_per_chunk(2 * d, par::CHUNK_WORK);
+            par::for_each_chunk_mut(&mut x, rows_per * d, |ci, block| {
+                let off = ci * rows_per * d;
+                for (li, v) in block.iter_mut().enumerate() {
+                    *v += mlp[off + li] + fc2_b[li % d];
                 }
-            }
+            });
             layers.push(LayerCache { ln1, att, ln2, ln2_out, h_pre, h_tanh, h_act });
         }
 
@@ -479,35 +531,47 @@ impl HostExec {
             layernorm_fwd(&x, self.p(flat, "lnf_g")?, self.p(flat, "lnf_b")?, rows, d);
         let logits = mm_nt(&lnf_out, tok_emb, rows, d, v);
 
-        // ---- cross entropy (per example mean over positions)
+        // ---- cross entropy (per example mean over positions).
+        // Examples are independent; losses[b] and the dlogits row block
+        // of example b are written by exactly one chunk worker.
         let mut losses = vec![0.0f32; bsz];
         let mut dlogits = if want_grads { vec![0.0f32; rows * v] } else { Vec::new() };
-        for b in 0..bsz {
-            let mut acc = 0.0f64;
-            for si in 0..s {
-                let r = b * s + si;
-                let target = batch[b * row_len + si + 1] as usize;
-                let lrow = &logits[r * v..(r + 1) * v];
-                let mut mx = f32::NEG_INFINITY;
-                for &l in lrow {
-                    mx = mx.max(l);
-                }
-                let mut z = 0.0f64;
-                for &l in lrow {
-                    z += ((l - mx) as f64).exp();
-                }
-                let logp = (lrow[target] - mx) as f64 - z.ln();
-                acc -= logp;
-                if want_grads {
-                    let drow = &mut dlogits[r * v..(r + 1) * v];
-                    let inv_rows = 1.0 / rows as f64;
-                    for j in 0..v {
-                        let p = ((lrow[j] - mx) as f64).exp() / z;
-                        drow[j] = ((p - if j == target { 1.0 } else { 0.0 }) * inv_rows) as f32;
+        {
+            let pl = ParSlice::new(&mut losses);
+            let pd = ParSlice::new(&mut dlogits);
+            let ex_per = par::items_per_chunk(4 * s * v, par::CHUNK_WORK / 4);
+            par::for_each_range(bsz, ex_per, |_, br| {
+                for b in br {
+                    let mut acc = 0.0f64;
+                    for si in 0..s {
+                        let r = b * s + si;
+                        let target = batch[b * row_len + si + 1] as usize;
+                        let lrow = &logits[r * v..(r + 1) * v];
+                        let mut mx = f32::NEG_INFINITY;
+                        for &l in lrow {
+                            mx = mx.max(l);
+                        }
+                        let mut z = 0.0f64;
+                        for &l in lrow {
+                            z += ((l - mx) as f64).exp();
+                        }
+                        let logp = (lrow[target] - mx) as f64 - z.ln();
+                        acc -= logp;
+                        if want_grads {
+                            // SAFETY: row r belongs to example b alone
+                            let drow = unsafe { pd.range_mut(r * v..(r + 1) * v) };
+                            let inv_rows = 1.0 / rows as f64;
+                            for j in 0..v {
+                                let p = ((lrow[j] - mx) as f64).exp() / z;
+                                drow[j] =
+                                    ((p - if j == target { 1.0 } else { 0.0 }) * inv_rows) as f32;
+                            }
+                        }
                     }
+                    // SAFETY: slot b belongs to this chunk
+                    unsafe { pl.range_mut(b..b + 1) }[0] = (acc / s as f64) as f32;
                 }
-            }
-            losses[b] = (acc / s as f64) as f32;
+            });
         }
         if !want_grads {
             return Ok((losses, None));
@@ -538,64 +602,76 @@ impl HostExec {
         let mut q = vec![0.0f32; bsz * h * head_sz];
         let mut k = vec![0.0f32; bsz * h * head_sz];
         let mut v = vec![0.0f32; bsz * h * head_sz];
-        for b in 0..bsz {
-            for hh in 0..h {
-                let base = (b * h + hh) * head_sz;
-                for si in 0..s {
-                    let row = &qkv[(b * s + si) * 3 * d..(b * s + si + 1) * 3 * d];
-                    let dst = si * hd;
-                    q[base + dst..base + dst + hd].copy_from_slice(&row[hh * hd..(hh + 1) * hd]);
-                    k[base + dst..base + dst + hd]
-                        .copy_from_slice(&row[d + hh * hd..d + (hh + 1) * hd]);
-                    v[base + dst..base + dst + hd]
-                        .copy_from_slice(&row[2 * d + hh * hd..2 * d + (hh + 1) * hd]);
-                }
-            }
-        }
-
         let mut w = vec![0.0f32; bsz * h * s * s];
         let mut y = vec![0.0f32; rows * d];
-        for b in 0..bsz {
-            for hh in 0..h {
-                let base = (b * h + hh) * head_sz;
-                let wbase = (b * h + hh) * s * s;
-                let qh = &q[base..base + head_sz];
-                let kh = &k[base..base + head_sz];
-                let vh = &v[base..base + head_sz];
-                // causal softmax row by row (u ≤ s only; the rest stays 0,
-                // exactly the -1e9-mask limit of the lowered graph)
-                for si in 0..s {
-                    let qrow = &qh[si * hd..(si + 1) * hd];
-                    let wrow = &mut w[wbase + si * s..wbase + (si + 1) * s];
-                    let mut mx = f32::NEG_INFINITY;
-                    for u in 0..=si {
-                        let krow = &kh[u * hd..(u + 1) * hd];
-                        let mut dot = 0.0f32;
-                        for c in 0..hd {
-                            dot += qrow[c] * krow[c];
+        {
+            // One fused pass per (batch, head): scatter q/k/v, causal
+            // softmax, y_head. Heads are independent and every write
+            // range is owned by exactly one head (q/k/v/w at the head
+            // base; y at the per-row head segment), so head blocks
+            // parallelize with bytes identical to the serial loops.
+            let pq = ParSlice::new(&mut q);
+            let pk = ParSlice::new(&mut k);
+            let pv = ParSlice::new(&mut v);
+            let pw = ParSlice::new(&mut w);
+            let py = ParSlice::new(&mut y);
+            let heads_per = par::items_per_chunk(s * s * (hd + 4), par::CHUNK_WORK / 4);
+            par::for_each_range(bsz * h, heads_per, |_, hr| {
+                for bh in hr {
+                    let (b, hh) = (bh / h, bh % h);
+                    let base = bh * head_sz;
+                    let wbase = bh * s * s;
+                    // SAFETY: each (b, hh) owns exactly these ranges
+                    let qh = unsafe { pq.range_mut(base..base + head_sz) };
+                    let kh = unsafe { pk.range_mut(base..base + head_sz) };
+                    let vh = unsafe { pv.range_mut(base..base + head_sz) };
+                    let wh = unsafe { pw.range_mut(wbase..wbase + s * s) };
+                    for si in 0..s {
+                        let row = &qkv[(b * s + si) * 3 * d..(b * s + si + 1) * 3 * d];
+                        let dst = si * hd;
+                        qh[dst..dst + hd].copy_from_slice(&row[hh * hd..(hh + 1) * hd]);
+                        kh[dst..dst + hd].copy_from_slice(&row[d + hh * hd..d + (hh + 1) * hd]);
+                        vh[dst..dst + hd]
+                            .copy_from_slice(&row[2 * d + hh * hd..2 * d + (hh + 1) * hd]);
+                    }
+                    // causal softmax row by row (u ≤ s only; the rest
+                    // stays 0, exactly the -1e9-mask limit of the
+                    // lowered graph)
+                    for si in 0..s {
+                        let qrow = &qh[si * hd..(si + 1) * hd];
+                        let wrow = &mut wh[si * s..(si + 1) * s];
+                        let mut mx = f32::NEG_INFINITY;
+                        for u in 0..=si {
+                            let krow = &kh[u * hd..(u + 1) * hd];
+                            let mut dot = 0.0f32;
+                            for c in 0..hd {
+                                dot += qrow[c] * krow[c];
+                            }
+                            let a = dot * scale;
+                            wrow[u] = a;
+                            mx = mx.max(a);
                         }
-                        let a = dot * scale;
-                        wrow[u] = a;
-                        mx = mx.max(a);
+                        let mut z = 0.0f64;
+                        for u in 0..=si {
+                            let e = ((wrow[u] - mx) as f64).exp();
+                            wrow[u] = e as f32;
+                            z += e;
+                        }
+                        let inv = (1.0 / z) as f32;
+                        for u in 0..=si {
+                            wrow[u] *= inv;
+                        }
                     }
-                    let mut z = 0.0f64;
-                    for u in 0..=si {
-                        let e = ((wrow[u] - mx) as f64).exp();
-                        wrow[u] = e as f32;
-                        z += e;
-                    }
-                    let inv = (1.0 / z) as f32;
-                    for u in 0..=si {
-                        wrow[u] *= inv;
+                    // y_head = w @ v, scattered back to [R, D] layout
+                    let yh = mm(wh, vh, s, s, hd);
+                    for si in 0..s {
+                        let at = (b * s + si) * d + hh * hd;
+                        // SAFETY: this head's segment of row b·s+si
+                        let dst = unsafe { py.range_mut(at..at + hd) };
+                        dst.copy_from_slice(&yh[si * hd..(si + 1) * hd]);
                     }
                 }
-                // y_head = w @ v, scattered back to [R, D] layout
-                let yh = mm(&w[wbase..wbase + s * s], vh, s, s, hd);
-                for si in 0..s {
-                    let dst = &mut y[(b * s + si) * d + hh * hd..(b * s + si) * d + (hh + 1) * hd];
-                    dst.copy_from_slice(&yh[si * hd..(si + 1) * hd]);
-                }
-            }
+            });
         }
 
         let mut out = mm(&y, self.p(flat, &format!("{pre}proj_w"))?, rows, d, d);
@@ -629,53 +705,63 @@ impl HostExec {
 
         let head_sz = s * hd;
         let mut dqkv = vec![0.0f32; rows * 3 * d];
-        for b in 0..bsz {
-            for hh in 0..h {
-                let base = (b * h + hh) * head_sz;
-                let wbase = (b * h + hh) * s * s;
-                let qh = &cache.q[base..base + head_sz];
-                let kh = &cache.k[base..base + head_sz];
-                let vh = &cache.v[base..base + head_sz];
-                let wh = &cache.w[wbase..wbase + s * s];
-                // gather this head's dy into [S, hd]
-                let mut dyh = vec![0.0f32; head_sz];
-                for si in 0..s {
-                    dyh[si * hd..(si + 1) * hd].copy_from_slice(
-                        &dyh_all[(b * s + si) * d + hh * hd..(b * s + si) * d + (hh + 1) * hd],
-                    );
-                }
-                // dw = dyh @ vᵀ ; dv = wᵀ @ dyh
-                let dw = mm_nt(&dyh, vh, s, hd, s);
-                let mut dv = vec![0.0f32; head_sz];
-                acc_tn(wh, &dyh, s, s, hd, &mut dv);
-                // softmax backward within each causal row
-                let mut da = vec![0.0f32; s * s];
-                for si in 0..s {
-                    let wrow = &wh[si * s..(si + 1) * s];
-                    let drow = &dw[si * s..(si + 1) * s];
-                    let mut dot = 0.0f64;
-                    for u in 0..=si {
-                        dot += (drow[u] * wrow[u]) as f64;
+        {
+            // Heads are independent in the backward too; each (b, hh)
+            // scatters into its own dqkv segments (disjoint across
+            // heads), so head blocks parallelize byte-identically.
+            let pdqkv = ParSlice::new(&mut dqkv);
+            let heads_per = par::items_per_chunk(s * s * (4 * hd + 4), par::CHUNK_WORK / 4);
+            par::for_each_range(bsz * h, heads_per, |_, hr| {
+                for bh in hr {
+                    let (b, hh) = (bh / h, bh % h);
+                    let base = bh * head_sz;
+                    let wbase = bh * s * s;
+                    let qh = &cache.q[base..base + head_sz];
+                    let kh = &cache.k[base..base + head_sz];
+                    let vh = &cache.v[base..base + head_sz];
+                    let wh = &cache.w[wbase..wbase + s * s];
+                    // gather this head's dy into [S, hd]
+                    let mut dyh = vec![0.0f32; head_sz];
+                    let row0 = b * s;
+                    for si in 0..s {
+                        let at = (row0 + si) * d + hh * hd;
+                        dyh[si * hd..(si + 1) * hd].copy_from_slice(&dyh_all[at..at + hd]);
                     }
-                    let arow = &mut da[si * s..(si + 1) * s];
-                    for u in 0..=si {
-                        arow[u] = wrow[u] * (drow[u] - dot as f32) * scale;
+                    // dw = dyh @ vᵀ ; dv = wᵀ @ dyh
+                    let dw = mm_nt(&dyh, vh, s, hd, s);
+                    let mut dv = vec![0.0f32; head_sz];
+                    acc_tn(wh, &dyh, s, s, hd, &mut dv);
+                    // softmax backward within each causal row
+                    let mut da = vec![0.0f32; s * s];
+                    for si in 0..s {
+                        let wrow = &wh[si * s..(si + 1) * s];
+                        let drow = &dw[si * s..(si + 1) * s];
+                        let mut dot = 0.0f64;
+                        for u in 0..=si {
+                            dot += (drow[u] * wrow[u]) as f64;
+                        }
+                        let arow = &mut da[si * s..(si + 1) * s];
+                        for u in 0..=si {
+                            arow[u] = wrow[u] * (drow[u] - dot as f32) * scale;
+                        }
+                    }
+                    // dq = da @ k ; dk = daᵀ @ q
+                    let dq = mm(&da, kh, s, s, hd);
+                    let mut dk = vec![0.0f32; head_sz];
+                    acc_tn(&da, qh, s, s, hd, &mut dk);
+                    // scatter into dqkv [R, 3D]
+                    for si in 0..s {
+                        let at = (b * s + si) * 3 * d + hh * hd;
+                        // SAFETY: this head's three segments of the row
+                        let rq = unsafe { pdqkv.range_mut(at..at + hd) };
+                        rq.copy_from_slice(&dq[si * hd..(si + 1) * hd]);
+                        let rk = unsafe { pdqkv.range_mut(at + d..at + d + hd) };
+                        rk.copy_from_slice(&dk[si * hd..(si + 1) * hd]);
+                        let rv = unsafe { pdqkv.range_mut(at + 2 * d..at + 2 * d + hd) };
+                        rv.copy_from_slice(&dv[si * hd..(si + 1) * hd]);
                     }
                 }
-                // dq = da @ k ; dk = daᵀ @ q
-                let dq = mm(&da, kh, s, s, hd);
-                let mut dk = vec![0.0f32; head_sz];
-                acc_tn(&da, qh, s, s, hd, &mut dk);
-                // scatter into dqkv [R, 3D]
-                for si in 0..s {
-                    let row = &mut dqkv[(b * s + si) * 3 * d..(b * s + si + 1) * 3 * d];
-                    row[hh * hd..(hh + 1) * hd].copy_from_slice(&dq[si * hd..(si + 1) * hd]);
-                    row[d + hh * hd..d + (hh + 1) * hd]
-                        .copy_from_slice(&dk[si * hd..(si + 1) * hd]);
-                    row[2 * d + hh * hd..2 * d + (hh + 1) * hd]
-                        .copy_from_slice(&dv[si * hd..(si + 1) * hd]);
-                }
-            }
+            });
         }
 
         {
@@ -758,9 +844,7 @@ impl HostExec {
                 )
             };
             // dx1 = residual + MLP path
-            for j in 0..rows * d {
-                dx[j] += dx1_mlp[j];
-            }
+            par::add_assign(&mut dx, &dx1_mlp);
             // attention branch: x1 = x + att(ln1(x))
             let dln1 = self.attention_bwd(flat, &pre, &dx, &c.att, bsz, &mut g)?;
             let dx0 = {
@@ -779,9 +863,7 @@ impl HostExec {
                     &mut rest[..d],
                 )
             };
-            for j in 0..rows * d {
-                dx[j] += dx0[j];
-            }
+            par::add_assign(&mut dx, &dx0);
         }
 
         // embeddings
@@ -831,14 +913,28 @@ fn adam(inputs: &[Value]) -> Result<Vec<Value>> {
     let mut po = vec![0.0f32; n];
     let mut mo = vec![0.0f32; n];
     let mut vo = vec![0.0f32; n];
-    for i in 0..n {
-        let m1 = b1 * m[i] + (1.0 - b1) * g[i];
-        let v1 = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
-        let mhat = m1 / bc1;
-        let vhat = v1 / bc2;
-        po[i] = p[i] - lr * mhat / (vhat.sqrt() + eps);
-        mo[i] = m1;
-        vo[i] = v1;
+    {
+        // Element-wise fused update: fixed chunks, identical bytes for
+        // any thread count.
+        let pp = ParSlice::new(&mut po);
+        let pm = ParSlice::new(&mut mo);
+        let pv = ParSlice::new(&mut vo);
+        let chunk = par::items_per_chunk(12, par::CHUNK_WORK);
+        par::for_each_range(n, chunk, |_, r| {
+            // SAFETY: fixed chunks are disjoint
+            let pb = unsafe { pp.range_mut(r.clone()) };
+            let mb = unsafe { pm.range_mut(r.clone()) };
+            let vb = unsafe { pv.range_mut(r.clone()) };
+            for (li, i) in r.enumerate() {
+                let m1 = b1 * m[i] + (1.0 - b1) * g[i];
+                let v1 = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+                let mhat = m1 / bc1;
+                let vhat = v1 / bc2;
+                pb[li] = p[i] - lr * mhat / (vhat.sqrt() + eps);
+                mb[li] = m1;
+                vb[li] = v1;
+            }
+        });
     }
     Ok(vec![
         Value::F32 { dims: vec![n], data: po },

@@ -6,6 +6,7 @@
 //! oracle via golden files), Pearson correlation for the Fig.-4 analysis,
 //! and the statistics the GDS/CQM controllers consume.
 
+use crate::util::par;
 use crate::util::rng::Rng;
 
 /// Dense row-major f32 matrix.
@@ -41,37 +42,33 @@ impl Mat {
     }
 
     pub fn t(&self) -> Mat {
-        let mut out = Mat::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+        let (m, n) = (self.rows, self.cols);
+        let mut out = Mat::zeros(n, m);
+        // Output rows (input columns) are independent: block-parallel
+        // with bytes identical to the serial loop for any thread count.
+        let rows_per = par::items_per_chunk(m, par::CHUNK_WORK / 8);
+        par::for_each_chunk_mut(&mut out.data, rows_per * m, |ci, block| {
+            let c0 = ci * rows_per;
+            for (bi, orow) in block.chunks_mut(m).enumerate() {
+                let c = c0 + bi;
+                for (r, o) in orow.iter_mut().enumerate() {
+                    *o = self.data[r * n + c];
+                }
             }
-        }
+        });
         out
     }
 
-    /// C = A·B, f32 with f64 accumulation per dot (matches the kernel's
-    /// f32-accumulate behaviour within test tolerances, and is the more
-    /// accurate host oracle).
+    /// C = A·B (f32 accumulation, matching the lowered kernel's
+    /// behaviour within test tolerances). Delegates to the shared
+    /// [`mm`] kernel.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul inner dim");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        // ikj loop order: streams B rows, vectorizes the inner j loop.
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for (kk, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
+        Mat {
+            rows: self.rows,
+            cols: other.cols,
+            data: mm(&self.data, &other.data, self.rows, self.cols, other.cols),
         }
-        out
     }
 
     pub fn add_assign(&mut self, other: &Mat) {
@@ -100,29 +97,68 @@ impl Mat {
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
     }
 
-    /// Eps-guarded classical Gram–Schmidt over columns; zero columns stay
-    /// zero (same contract as the L2 graph — see python kernels/ref.py).
+    /// Eps-guarded Gram–Schmidt over columns; zero columns stay zero
+    /// (same contract as the L2 graph — see python kernels/ref.py).
+    ///
+    /// Classical form with one re-orthogonalization pass ("CGS2",
+    /// orthogonality on par with the modified variant): per settled
+    /// prefix, all projection coefficients are computed against the
+    /// *same* column state, so the dot products parallelize over
+    /// previous columns and the subtraction over row blocks — each
+    /// output element keeps one fixed serial accumulation order, making
+    /// the result byte-identical for any thread count (see util::par).
     pub fn gram_schmidt(&self, eps: f32) -> Mat {
         let (m, r) = (self.rows, self.cols);
         let mut q = Mat::zeros(m, r);
         let mut col = vec![0.0f32; m];
         for i in 0..r {
-            for rr in 0..m {
-                col[rr] = self.at(rr, i);
+            for (rr, c) in col.iter_mut().enumerate() {
+                *c = self.at(rr, i);
             }
-            for j in 0..i {
-                let mut dot = 0.0f64;
-                for rr in 0..m {
-                    dot += q.at(rr, j) as f64 * col[rr] as f64;
+            for _pass in 0..2 {
+                if i == 0 {
+                    break;
                 }
-                for rr in 0..m {
-                    col[rr] -= dot as f32 * q.at(rr, j);
-                }
+                // d_j = q_j · col for all j < i; each dot is serial over
+                // rows inside one chunk worker.
+                let js_per = par::items_per_chunk(2 * m, par::CHUNK_WORK / 4);
+                let dots: Vec<f64> = par::map_chunks(i, js_per, |_, jr| {
+                    jr.map(|j| {
+                        let mut dot = 0.0f64;
+                        for rr in 0..m {
+                            dot += q.at(rr, j) as f64 * col[rr] as f64;
+                        }
+                        dot
+                    })
+                    .collect::<Vec<f64>>()
+                })
+                .into_iter()
+                .flatten()
+                .collect();
+                // col -= Q[:, :i] · d, parallel over row blocks; every
+                // element accumulates j = 0..i in order.
+                let qd = &q.data;
+                let rows_per = par::items_per_chunk(2 * i, par::CHUNK_WORK / 4);
+                par::for_each_chunk_mut(&mut col, rows_per, |ci, block| {
+                    let r0 = ci * rows_per;
+                    for (bi, c) in block.iter_mut().enumerate() {
+                        let qrow = &qd[(r0 + bi) * r..(r0 + bi) * r + i];
+                        let mut acc = 0.0f64;
+                        for (j, &qv) in qrow.iter().enumerate() {
+                            acc += dots[j] * qv as f64;
+                        }
+                        *c -= acc as f32;
+                    }
+                });
             }
-            let norm = col.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32;
+            let chunk = par::items_per_chunk(2, par::CHUNK_WORK / 4);
+            let norm = par::sum_chunks(m, chunk, |rr| {
+                col[rr].iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+            })
+            .sqrt() as f32;
             let inv = 1.0 / (norm + eps);
-            for rr in 0..m {
-                *q.at_mut(rr, i) = col[rr] * inv;
+            for (rr, &c) in col.iter().enumerate() {
+                *q.at_mut(rr, i) = c * inv;
             }
         }
         q
@@ -186,6 +222,35 @@ impl Mat {
         let sv = self.singular_values();
         sv.iter().skip(r).map(|s| s * s).sum::<f64>().sqrt()
     }
+}
+
+/// out[m,n] = a[m,k] @ b[k,n] over raw row-major slices (f32, ikj loop
+/// order: streams b rows, vectorizes the inner j loop, skips zero a
+/// entries). Output rows are independent, so row blocks parallelize
+/// with bytes identical to the serial loop for any thread count. The
+/// single matmul kernel — [`Mat::matmul`] and the runtime host executor
+/// both call it, so chunking/tuning changes cannot diverge the paths.
+pub fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    let rows_per = par::items_per_chunk(2 * k * n, par::CHUNK_WORK);
+    par::for_each_chunk_mut(&mut out, rows_per * n.max(1), |ci, block| {
+        let row0 = ci * rows_per;
+        for (bi, orow) in block.chunks_mut(n).enumerate() {
+            let arow = &a[(row0 + bi) * k..(row0 + bi + 1) * k];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    });
+    out
 }
 
 /// Pearson correlation coefficient of two equal-length slices.

@@ -4,8 +4,16 @@
 //! [`bench`] / [`BenchSet`]. Methodology: warm-up runs, then timed
 //! batches sized to a target duration, reporting min/mean/p50 per
 //! iteration — min is the headline number (least scheduler noise).
+//!
+//! Reporting modes (flags after `cargo bench -- …`, see [`BenchOpts`]):
+//! `--smoke` shrinks warm-up and budget so CI can afford every group;
+//! `--json PATH` writes the group's results as a `BENCH_*.json` file —
+//! the perf-trajectory record CI uploads per commit.
 
 use std::time::Instant;
+
+use crate::util::error::Result;
+use crate::util::json::{obj, Json};
 
 #[derive(Clone, Copy, Debug)]
 pub struct BenchResult {
@@ -29,7 +37,9 @@ impl BenchResult {
     }
 }
 
-/// Time `f` adaptively for ~`budget_ms` total; returns stats.
+/// Time `f` adaptively for ~`budget_ms` total; returns stats. When a
+/// single shot exceeds the budget (big inputs in smoke mode), the batch
+/// count shrinks down to 1 instead of forcing 16 over-budget batches.
 pub fn bench<F: FnMut()>(warmup: usize, budget_ms: u64, mut f: F) -> BenchResult {
     for _ in 0..warmup {
         f();
@@ -39,7 +49,7 @@ pub fn bench<F: FnMut()>(warmup: usize, budget_ms: u64, mut f: F) -> BenchResult
     f();
     let once = t0.elapsed().as_nanos().max(1) as f64;
     let budget = budget_ms as f64 * 1e6;
-    let batches = 16usize;
+    let batches = ((budget / once) as usize).clamp(1, 16);
     let per_batch = ((budget / once / batches as f64).ceil() as usize).max(1);
     let mut samples = Vec::with_capacity(batches);
     let mut total = 0usize;
@@ -60,20 +70,64 @@ pub fn bench<F: FnMut()>(warmup: usize, budget_ms: u64, mut f: F) -> BenchResult
     }
 }
 
+/// Options shared by every bench binary, parsed from the argv that
+/// `cargo bench -- <flags>` forwards. Unknown flags (e.g. the `--bench`
+/// cargo itself appends) are ignored.
+#[derive(Clone, Debug, Default)]
+pub struct BenchOpts {
+    /// CI mode: no warm-up, tiny budget — record the trajectory, not a
+    /// low-noise number.
+    pub smoke: bool,
+    /// Write the group's results to this path as JSON.
+    pub json: Option<String>,
+}
+
+impl BenchOpts {
+    pub fn from_env() -> BenchOpts {
+        Self::from_args(std::env::args().skip(1))
+    }
+
+    pub fn from_args(args: impl Iterator<Item = String>) -> BenchOpts {
+        let mut o = BenchOpts::default();
+        let mut it = args;
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--smoke" => o.smoke = true,
+                "--json" => o.json = it.next(),
+                _ => {}
+            }
+        }
+        o
+    }
+}
+
 /// Named group of benches with aligned output.
 pub struct BenchSet {
     pub group: String,
+    warmup: usize,
+    budget_ms: u64,
     results: Vec<(String, BenchResult)>,
 }
 
 impl BenchSet {
     pub fn new(group: &str) -> Self {
         println!("== bench group: {group} ==");
-        BenchSet { group: group.to_string(), results: Vec::new() }
+        BenchSet { group: group.to_string(), warmup: 2, budget_ms: 300, results: Vec::new() }
+    }
+
+    /// Like [`BenchSet::new`], honoring `--smoke` (no warm-up, 25 ms
+    /// budget per entry).
+    pub fn with_opts(group: &str, opts: &BenchOpts) -> Self {
+        let mut set = Self::new(group);
+        if opts.smoke {
+            set.warmup = 0;
+            set.budget_ms = 25;
+        }
+        set
     }
 
     pub fn run<F: FnMut()>(&mut self, name: &str, f: F) -> BenchResult {
-        let r = bench(2, 300, f);
+        let r = bench(self.warmup, self.budget_ms, f);
         println!(
             "{:<44} min {:>12}  p50 {:>12}  mean {:>12}  ({} iters)",
             format!("{}/{}", self.group, name),
@@ -84,6 +138,43 @@ impl BenchSet {
         );
         self.results.push((name.to_string(), r));
         r
+    }
+
+    /// The group's results as a JSON value (the `BENCH_*.json` schema).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .results
+            .iter()
+            .map(|(name, r)| {
+                obj(vec![
+                    ("name", Json::from(name.as_str())),
+                    ("iters", Json::from(r.iters)),
+                    ("min_ns", Json::from(r.min_ns)),
+                    ("p50_ns", Json::from(r.p50_ns)),
+                    ("mean_ns", Json::from(r.mean_ns)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("group", Json::from(self.group.as_str())),
+            ("smoke", Json::from(self.warmup == 0)),
+            ("results", Json::Arr(rows)),
+        ])
+    }
+
+    /// Write the JSON report (and finish the group's output lines).
+    pub fn write_json(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        println!("[bench] wrote {path}");
+        Ok(())
+    }
+
+    /// Write the JSON report if `--json PATH` was given.
+    pub fn finish(&self, opts: &BenchOpts) -> Result<()> {
+        if let Some(path) = &opts.json {
+            self.write_json(path)?;
+        }
+        Ok(())
     }
 }
 
@@ -109,5 +200,31 @@ mod tests {
         assert!(BenchResult::human(5_000.0).ends_with("µs"));
         assert!(BenchResult::human(5e6).ends_with("ms"));
         assert!(BenchResult::human(5e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn opts_parse_smoke_and_json() {
+        let o = BenchOpts::from_args(
+            ["--bench", "--smoke", "--json", "out.json"].iter().map(|s| s.to_string()),
+        );
+        assert!(o.smoke);
+        assert_eq!(o.json.as_deref(), Some("out.json"));
+        let d = BenchOpts::from_args(std::iter::empty());
+        assert!(!d.smoke && d.json.is_none());
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let mut set = BenchSet::with_opts("unit", &BenchOpts { smoke: true, json: None });
+        set.run("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        let j = set.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("group").unwrap().as_str().unwrap(), "unit");
+        let rows = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").unwrap().as_str().unwrap(), "noop");
+        assert!(rows[0].get("min_ns").unwrap().as_f64().unwrap() > 0.0);
     }
 }

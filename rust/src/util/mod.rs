@@ -1,11 +1,13 @@
 //! In-tree substrates for the offline environment: deterministic PRNG,
-//! JSON, errors, a micro-bench harness, a property-test harness, and CLI
-//! parsing. (The default build carries no external crates at all — see
-//! DESIGN.md §Substrates.)
+//! JSON, errors, a micro-bench harness, a property-test harness, CLI
+//! parsing, and the deterministic thread pool behind `--threads`. (The
+//! default build carries no external crates at all — see DESIGN.md
+//! §Substrates and §Threading model.)
 
 pub mod bench;
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;

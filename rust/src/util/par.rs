@@ -1,0 +1,389 @@
+//! Deterministic parallel execution substrate (offline registry: no
+//! rayon).
+//!
+//! A std-only scoped "pool": every parallel operation spawns scoped
+//! worker threads over a **fixed chunking** of the problem. The two
+//! invariants every helper in this module upholds — and every caller
+//! must preserve — are:
+//!
+//! 1. **Chunk boundaries are a pure function of the problem size**,
+//!    never of the thread count. `threads()` only decides how many
+//!    workers *execute* the chunk list, not what the chunks are.
+//! 2. **Reductions combine per-chunk partials in chunk order.** A
+//!    chunk's partial is accumulated serially by one worker; the
+//!    combine loop is serial over the ordered chunk list.
+//!
+//! Together these make every result byte-identical for any
+//! `--threads N` — the same discipline as the campaign runner's
+//! `--jobs` contract (see `repro::campaign`). Chunks are assigned to
+//! workers round-robin (chunk i → worker i mod t): static, safe (no
+//! shared claim state) and contention-free. Helpers run inline on the
+//! calling thread when there is a single chunk or a single worker, so
+//! small problems never pay a spawn — and a helper invoked from inside
+//! a worker thread always runs inline (nested kernels like the per-head
+//! `mm` calls would otherwise grow the live thread count toward
+//! threads² and pay a spawn per head).
+//!
+//! [`ParSlice`] is the escape hatch for kernels that scatter into
+//! several output buffers at interleaved (but disjoint) ranges — e.g.
+//! the attention head loops in `runtime::host`. It is a raw-pointer
+//! view whose `unsafe` contract is exactly "concurrent callers touch
+//! disjoint ranges".
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Global worker count. 0 = unset (resolves to 1: serial).
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+std::thread_local! {
+    /// Set inside every spawned worker: a par helper invoked from a
+    /// worker runs inline instead of nesting another scope — e.g. the
+    /// attention head loops call `mm` per head, and without this the
+    /// live thread count would grow toward threads², paying a spawn
+    /// per head. Output bytes are unaffected (chunking stays pure).
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Set the worker count for all parallel helpers; 0 means "one worker
+/// per core". Called once from the CLI (`--threads`); benches and tests
+/// flip it explicitly. Results never depend on this value.
+pub fn set_threads(n: usize) {
+    let resolved = match n {
+        0 => std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+        n => n,
+    };
+    THREADS.store(resolved, Ordering::Relaxed);
+}
+
+/// Current worker count (≥ 1). Unset means serial; inside a spawned
+/// worker it is 1, so nested parallel helpers run inline.
+pub fn threads() -> usize {
+    if IN_WORKER.with(Cell::get) {
+        return 1;
+    }
+    THREADS.load(Ordering::Relaxed).max(1)
+}
+
+/// Number of fixed chunks for a problem of `len` items at `chunk` items
+/// per chunk.
+fn n_chunks(len: usize, chunk: usize) -> usize {
+    len.div_ceil(chunk.max(1))
+}
+
+/// The i-th fixed chunk of `0..len`.
+fn chunk_range(i: usize, len: usize, chunk: usize) -> Range<usize> {
+    let lo = i * chunk;
+    lo..((i + 1) * chunk).min(len)
+}
+
+/// Items per chunk so one chunk carries ≈ `target` work units when each
+/// item costs `work_per_item`. Pure in the problem shape (invariant 1).
+pub fn items_per_chunk(work_per_item: usize, target: usize) -> usize {
+    (target / work_per_item.max(1)).max(1)
+}
+
+/// Default per-chunk work target: big enough that spawn/join overhead
+/// is noise, small enough that a handful of chunks load-balance.
+pub const CHUNK_WORK: usize = 1 << 20;
+
+/// Run `f(chunk_index, range)` over the fixed chunks of `0..len` in
+/// parallel. `f` must only write state that is disjoint per chunk (use
+/// [`ParSlice`] for raw buffers).
+pub fn for_each_range<F>(len: usize, chunk: usize, f: F)
+where
+    F: Fn(usize, Range<usize>) + Sync,
+{
+    let chunk = chunk.max(1);
+    let nc = n_chunks(len, chunk);
+    let t = threads().min(nc);
+    if t <= 1 {
+        for i in 0..nc {
+            f(i, chunk_range(i, len, chunk));
+        }
+        return;
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        for w in 0..t {
+            scope.spawn(move || {
+                IN_WORKER.with(|flag| flag.set(true));
+                let mut i = w;
+                while i < nc {
+                    f(i, chunk_range(i, len, chunk));
+                    i += t;
+                }
+            });
+        }
+    });
+}
+
+/// Map the fixed chunks of `0..len` through `f`, collecting results in
+/// chunk order (the deterministic-reduction building block).
+pub fn map_chunks<R, F>(len: usize, chunk: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, Range<usize>) -> R + Sync,
+{
+    let chunk = chunk.max(1);
+    let nc = n_chunks(len, chunk);
+    let t = threads().min(nc);
+    if t <= 1 {
+        return (0..nc).map(|i| f(i, chunk_range(i, len, chunk))).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..nc).map(|_| None).collect();
+    {
+        let f = &f;
+        let mut per_worker: Vec<Vec<(usize, &mut Option<R>)>> =
+            (0..t).map(|_| Vec::new()).collect();
+        for (i, slot) in out.iter_mut().enumerate() {
+            per_worker[i % t].push((i, slot));
+        }
+        std::thread::scope(|scope| {
+            for work in per_worker {
+                scope.spawn(move || {
+                    IN_WORKER.with(|flag| flag.set(true));
+                    for (i, slot) in work {
+                        *slot = Some(f(i, chunk_range(i, len, chunk)));
+                    }
+                });
+            }
+        });
+    }
+    out.into_iter().map(|o| o.expect("every chunk visited")).collect()
+}
+
+/// Deterministic chunked f64 sum: per-chunk partials (serial within a
+/// chunk), combined in chunk order. Identical bytes for any thread
+/// count — and for the same `(len, chunk)` even when run inline.
+pub fn sum_chunks<F>(len: usize, chunk: usize, f: F) -> f64
+where
+    F: Fn(Range<usize>) -> f64 + Sync,
+{
+    map_chunks(len, chunk, |_, r| f(r)).into_iter().sum()
+}
+
+/// Run `f(chunk_index, chunk_slice)` over fixed `chunk`-sized pieces of
+/// `data` in parallel (last piece may be short). Safe: the borrow
+/// checker guarantees disjointness via `chunks_mut`.
+pub fn for_each_chunk_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let chunk = chunk.max(1);
+    let nc = n_chunks(data.len(), chunk);
+    let t = threads().min(nc);
+    if t <= 1 {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let f = &f;
+    let mut per_worker: Vec<Vec<(usize, &mut [T])>> = (0..t).map(|_| Vec::new()).collect();
+    for (i, c) in data.chunks_mut(chunk).enumerate() {
+        per_worker[i % t].push((i, c));
+    }
+    std::thread::scope(|scope| {
+        for work in per_worker {
+            scope.spawn(move || {
+                IN_WORKER.with(|flag| flag.set(true));
+                for (i, c) in work {
+                    f(i, c);
+                }
+            });
+        }
+    });
+}
+
+/// dst[i] += src[i], chunk-parallel with fixed chunks — bytes identical
+/// to the serial loop for any thread count (the residual-add / error-
+/// feedback workhorse).
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    let chunk = items_per_chunk(2, CHUNK_WORK);
+    for_each_chunk_mut(dst, chunk, |ci, block| {
+        let off = ci * chunk;
+        for (j, x) in block.iter_mut().enumerate() {
+            *x += src[off + j];
+        }
+    });
+}
+
+/// Raw shared view of a mutable slice for disjoint-range writes from
+/// [`for_each_range`] workers.
+///
+/// Safety contract: concurrently-running closures must only touch
+/// disjoint index ranges (the fixed chunking makes this easy to
+/// uphold). The lifetime ties the view to the source borrow so the
+/// buffer cannot move or be reused while workers hold it.
+pub struct ParSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for ParSlice<'_, T> {}
+unsafe impl<T: Send> Sync for ParSlice<'_, T> {}
+
+impl<'a, T> ParSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        ParSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: std::marker::PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable view of `range`.
+    ///
+    /// # Safety
+    /// No two concurrently-live views from this `ParSlice` may overlap.
+    /// (Bounds are checked even in release — callers hand-derive ranges
+    /// from chunk indices, and a miscomputed range must panic, not
+    /// silently corrupt adjacent memory.)
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range_mut(&self, range: Range<usize>) -> &mut [T] {
+        assert!(range.start <= range.end && range.end <= self.len, "range out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.end - range.start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunking_is_pure_in_problem_size() {
+        for &t in &[1usize, 3, 7] {
+            set_threads(t);
+            let got = map_chunks(10, 4, |i, r| (i, r.start, r.end));
+            assert_eq!(got, vec![(0, 0, 4), (1, 4, 8), (2, 8, 10)]);
+        }
+        set_threads(1);
+    }
+
+    #[test]
+    fn for_each_chunk_mut_covers_all_elements() {
+        for &t in &[1usize, 4] {
+            set_threads(t);
+            let mut v = vec![0u32; 1000];
+            for_each_chunk_mut(&mut v, 64, |i, c| {
+                for (j, x) in c.iter_mut().enumerate() {
+                    *x = (i * 64 + j) as u32;
+                }
+            });
+            assert!(v.iter().enumerate().all(|(i, &x)| x == i as u32));
+        }
+        set_threads(1);
+    }
+
+    #[test]
+    fn sum_chunks_identical_across_thread_counts() {
+        let xs: Vec<f64> = (0..100_000).map(|i| ((i * 2654435761usize) as f64).sin()).collect();
+        let sum_at = |t: usize| {
+            set_threads(t);
+            sum_chunks(xs.len(), 4096, |r| xs[r].iter().sum::<f64>())
+        };
+        let s1 = sum_at(1);
+        let s4 = sum_at(4);
+        let s13 = sum_at(13);
+        set_threads(1);
+        assert_eq!(s1.to_bits(), s4.to_bits());
+        assert_eq!(s1.to_bits(), s13.to_bits());
+    }
+
+    #[test]
+    fn nested_scopes_work() {
+        set_threads(4);
+        let main_thread = std::thread::current().id();
+        let inline_in_worker = std::sync::atomic::AtomicBool::new(true);
+        let mut outer = vec![0usize; 16];
+        for_each_chunk_mut(&mut outer, 4, |i, c| {
+            // a parallel helper invoked from inside a worker must still
+            // run — inline, not as a nested scope (threads() is 1 in a
+            // worker thread, keeping live threads bounded by the knob)
+            if std::thread::current().id() != main_thread && threads() != 1 {
+                inline_in_worker.store(false, Ordering::Relaxed);
+            }
+            let inner = sum_chunks(100, 16, |r| r.len() as f64);
+            for x in c.iter_mut() {
+                *x = i + inner as usize;
+            }
+        });
+        set_threads(1);
+        assert!(outer.iter().all(|&x| x >= 100));
+        assert!(inline_in_worker.load(Ordering::Relaxed), "in-worker helpers must be inline");
+    }
+
+    #[test]
+    fn panics_propagate_from_workers() {
+        set_threads(4);
+        let caught = std::panic::catch_unwind(|| {
+            for_each_range(100, 10, |i, _| {
+                if i == 7 {
+                    panic!("worker 7 exploded");
+                }
+            });
+        });
+        set_threads(1);
+        assert!(caught.is_err(), "worker panic must propagate to the caller");
+    }
+
+    #[test]
+    fn par_slice_disjoint_ranges() {
+        set_threads(4);
+        let mut buf = vec![0.0f32; 512];
+        {
+            let view = ParSlice::new(&mut buf);
+            assert_eq!(view.len(), 512);
+            assert!(!view.is_empty());
+            for_each_range(512, 32, |_, r| {
+                let lo = r.start;
+                // SAFETY: fixed chunks are disjoint
+                let s = unsafe { view.range_mut(r) };
+                for (j, x) in s.iter_mut().enumerate() {
+                    *x = (lo + j) as f32;
+                }
+            });
+        }
+        set_threads(1);
+        assert!(buf.iter().enumerate().all(|(i, &x)| x == i as f32));
+    }
+
+    #[test]
+    fn add_assign_matches_serial() {
+        let src: Vec<f32> = (0..10_000).map(|i| i as f32 * 0.25).collect();
+        let mut serial = vec![1.0f32; src.len()];
+        for (d, &s) in serial.iter_mut().zip(&src) {
+            *d += s;
+        }
+        for &t in &[1usize, 4] {
+            set_threads(t);
+            let mut dst = vec![1.0f32; src.len()];
+            add_assign(&mut dst, &src);
+            assert_eq!(dst, serial);
+        }
+        set_threads(1);
+    }
+
+    #[test]
+    fn items_per_chunk_bounds() {
+        assert_eq!(items_per_chunk(0, 100), 100);
+        assert_eq!(items_per_chunk(1000, 100), 1);
+        assert_eq!(items_per_chunk(10, 100), 10);
+    }
+
+    #[test]
+    fn zero_threads_resolves_to_cores() {
+        set_threads(0);
+        assert!(threads() >= 1);
+        set_threads(1);
+    }
+}

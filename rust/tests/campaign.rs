@@ -23,6 +23,7 @@ fn opts(out_dir: String) -> Opts {
         out_dir,
         steps: 6,
         seed: 7,
+        threads: 1,
     }
 }
 

@@ -1,0 +1,156 @@
+//! The `--threads` determinism contract: training and reproduce outputs
+//! are byte-identical for any compute-thread count (fixed chunking,
+//! fixed reduction order — see `util::par`), mirroring the campaign
+//! runner's `--jobs` contract. Kept in its own integration-test binary
+//! so the global thread knob isn't flipped under unrelated tests in
+//! another process.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
+
+use edgc::config::{Method, TrainConfig};
+use edgc::coordinator::{Backend, Trainer};
+use edgc::repro::{campaign, Opts};
+use edgc::util::par;
+
+/// The tests in this file flip the process-global thread knob; the test
+/// harness runs them concurrently, so without serialization a "threads
+/// = 1" baseline could silently execute at 4 threads (turning the
+/// byte-identity assertions into trivially-true comparisons). Every
+/// test that calls `par::set_threads` takes this lock first.
+static PAR_KNOB: Mutex<()> = Mutex::new(());
+
+fn hold_par_knob() -> MutexGuard<'static, ()> {
+    PAR_KNOB.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn tiny_cfg(method: Method, steps: usize) -> TrainConfig {
+    TrainConfig {
+        artifacts: "artifacts/tiny".into(), // absent on disk -> synthesized
+        steps,
+        dp: 2,
+        pp: 2,
+        tp: 1,
+        microbatches: 4,
+        lr: 2e-3,
+        seed: 7,
+        method,
+        edgc: edgc::config::EdgcParams {
+            window: 5,
+            alpha: 0.5,
+            beta: 0.25,
+            step_limit: 8,
+            min_warmup_frac: 0.1,
+            stage_aligned: true,
+        },
+        cluster: edgc::netsim::CLUSTER1_V100,
+        corpus_tokens: 60_000,
+        sim_params: 2_500_000_000,
+        sim_tokens: 32 * 1024,
+        eval_every: 10,
+        out_dir: "/tmp/edgc-determinism-runs".into(),
+    }
+}
+
+/// One full training run at a given thread count; returns the exact
+/// parameter bytes and the rendered curve table.
+fn train_at(threads: usize, method: Method) -> (Vec<u8>, String) {
+    par::set_threads(threads);
+    let mut t = Trainer::new(tiny_cfg(method, 12), Backend::Host).unwrap();
+    let s = t.run().unwrap();
+    let bytes: Vec<u8> = t.params().iter().flat_map(|x| x.to_le_bytes()).collect();
+    (bytes, s.curve.render())
+}
+
+#[test]
+fn training_is_byte_identical_across_thread_counts() {
+    let _knob = hold_par_knob();
+    for method in [Method::Edgc, Method::FixedRank(8)] {
+        let (p1, c1) = train_at(1, method);
+        let (p4, c4) = train_at(4, method);
+        let (p3, c3) = train_at(3, method);
+        par::set_threads(1);
+        assert_eq!(p1, p4, "{method:?}: params differ between --threads 1 and 4");
+        assert_eq!(c1, c4, "{method:?}: curve differs between --threads 1 and 4");
+        assert_eq!(p1, p3, "{method:?}: params differ between --threads 1 and 3");
+        assert_eq!(c1, c3, "{method:?}: curve differs between --threads 1 and 3");
+    }
+}
+
+fn tmp_dir(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("edgc-determinism-{tag}-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn read_all(dir: &str) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.is_file() {
+            let name = path.file_name().unwrap().to_string_lossy().into_owned();
+            out.insert(name, std::fs::read(&path).unwrap());
+        }
+    }
+    out
+}
+
+#[test]
+fn reproduce_outputs_byte_identical_across_jobs_and_threads() {
+    let _knob = hold_par_knob();
+    // every (jobs, threads) combination must write the same bytes;
+    // fig11 actually trains, so the parallel host path is on the line
+    let jobs_list = campaign::plan("fig11").unwrap();
+    let mut runs = Vec::new();
+    for &(jobs, threads) in &[(1usize, 1usize), (1, 4), (2, 1), (2, 4)] {
+        let dir = tmp_dir(&format!("j{jobs}t{threads}"));
+        let opts = Opts {
+            artifacts: "artifacts/tiny".into(),
+            out_dir: dir.clone(),
+            steps: 6,
+            seed: 7,
+            threads,
+        };
+        campaign::run_jobs(&jobs_list, &opts, jobs).unwrap();
+        runs.push(((jobs, threads), dir));
+    }
+    par::set_threads(1);
+    let reference = read_all(&runs[0].1);
+    assert!(!reference.is_empty(), "campaign wrote no files");
+    for ((jobs, threads), dir) in &runs[1..] {
+        let got = read_all(dir);
+        assert_eq!(
+            reference.keys().collect::<Vec<_>>(),
+            got.keys().collect::<Vec<_>>(),
+            "file set differs at jobs={jobs} threads={threads}"
+        );
+        for (name, bytes) in &reference {
+            assert_eq!(
+                bytes, &got[name],
+                "{name} differs between (jobs=1, threads=1) and (jobs={jobs}, threads={threads})"
+            );
+        }
+    }
+    for (_, dir) in &runs {
+        std::fs::remove_dir_all(dir).ok();
+    }
+}
+
+#[test]
+fn cli_threads_flag_smoke() {
+    // `edgc train --threads 2` completes and reports the thread count
+    let out = tmp_dir("cli-threads");
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_edgc"))
+        .args([
+            "train", "--backend", "host", "--steps", "4", "--eval-every", "4", "--threads", "2",
+            "--out", &out,
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&status.stdout);
+    let stderr = String::from_utf8_lossy(&status.stderr);
+    assert!(status.status.success(), "train failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("threads=2"), "unexpected output:\n{stdout}");
+    std::fs::remove_dir_all(&out).ok();
+}
