@@ -1,0 +1,55 @@
+//! Bench: dist collectives — the all-reduce cost the EDGC compression
+//! trades against. Measures the in-process mesh at DP 2/4 across
+//! vector sizes (full-gradient-shaped vs PowerSGD-factor-shaped
+//! volumes), plus one TCP-loopback entry so the framed-stream path has
+//! a perf trajectory too. Each iteration includes mesh + worker-thread
+//! setup: that is the real per-step cost shape of `run_group`-style
+//! fan-out, and it keeps the numbers honest about transport overheads,
+//! not just memcpy. Feeds `BENCH_collectives.json` via `--json` (the CI
+//! `bench-smoke` job uploads the per-commit smoke version).
+
+use edgc::dist::{collective, run_group, TransportKind};
+use edgc::util::bench::{BenchOpts, BenchSet};
+use edgc::util::par;
+use edgc::util::rng::Rng;
+
+fn allreduce_once(kind: TransportKind, grads: &[Vec<f32>]) -> usize {
+    let world = grads.len();
+    let out = run_group(kind, world, |rank, tr| {
+        let mut buf = grads[rank].clone();
+        collective::all_reduce_mean(tr, &mut buf)?;
+        Ok(buf.len())
+    })
+    .expect("collective bench group");
+    out.iter().map(|(n, _)| *n).sum()
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let mut set = BenchSet::with_opts("collectives", &opts);
+    par::set_threads(1);
+
+    // full tiny-model gradient (470528 floats) and a rank-8 factor
+    // volume for the same model (~8·(512+128)-ish per bucket, summed)
+    for &(world, len, tag) in &[
+        (2usize, 470_528usize, "full"),
+        (4, 470_528, "full"),
+        (4, 40_960, "factors"),
+    ] {
+        let grads: Vec<Vec<f32>> =
+            (0..world).map(|r| Rng::new(r as u64).normal_vec(len, 0.02)).collect();
+        set.run(&format!("mem_allreduce_w{world}_{tag}_{len}"), || {
+            std::hint::black_box(allreduce_once(TransportKind::Mem, &grads));
+        });
+    }
+
+    // tcp loopback: smaller vector, same schedule (framing + sockets)
+    let world = 4;
+    let grads: Vec<Vec<f32>> =
+        (0..world).map(|r| Rng::new(10 + r as u64).normal_vec(1 << 14, 0.02)).collect();
+    set.run("tcp_allreduce_w4_16384", || {
+        std::hint::black_box(allreduce_once(TransportKind::Tcp, &grads));
+    });
+
+    set.finish(&opts).expect("bench json report");
+}

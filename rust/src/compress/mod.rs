@@ -22,7 +22,10 @@
 //! Communication volume per replica: r_eff·(m+n) floats vs m·n
 //! uncompressed — the quantity the netsim layer prices.
 
+use crate::dist::collective;
+use crate::dist::transport::{Class, Transport};
 use crate::tensor::Mat;
+use crate::util::error::Result;
 use crate::util::par;
 use crate::util::rng::Rng;
 
@@ -230,6 +233,110 @@ impl TensorCompressor {
         }
     }
 
+    /// One compressed all-reduce round across a real rank group: this
+    /// rank contributes `grad` (row-major m×n) and its own EF slot
+    /// (`tr.rank()`); only the PowerSGD **P and Q′ factors** cross the
+    /// transport — `r_eff·(m+n)` floats of data-class payload, the
+    /// volume the wire counters measure — never the full gradient.
+    ///
+    /// Byte-identical to [`TensorCompressor::round_host`] over the same
+    /// `world` gradients for any transport and rank count: the
+    /// collectives fold contributions in rank order from zero (the
+    /// exact `allreduce_mean` grouping), and every local kernel is the
+    /// one the host path runs (pinned in `tests/determinism.rs`).
+    ///
+    /// `rel_error` — the Fig.-10 diagnostic over the *mean* gradient —
+    /// needs every rank's M, so rank 0 gathers them on the metrics-only
+    /// [`Class::Diag`] channel (excluded from the wire-volume
+    /// calibration; a production build would skip it). Non-root ranks
+    /// report `rel_error = 0`.
+    pub fn round_dist(
+        &mut self,
+        tr: &mut dyn Transport,
+        grad: &[f32],
+        r_eff: usize,
+    ) -> Result<Round> {
+        let (world, rank) = (tr.world(), tr.rank());
+        let r_eff = r_eff.clamp(1, self.r_max);
+        let (m, n) = (self.m, self.n);
+        assert_eq!(grad.len(), m * n);
+        self.ensure_active_columns(r_eff);
+
+        // 1. error feedback on the owned slot (peers own the others)
+        let mut d = grad.to_vec();
+        if self.error_feedback {
+            par::add_assign(&mut d, &self.errors[rank]);
+        }
+        let mi = Mat::from_vec(m, n, d);
+
+        // 2. Pᵢ = Mᵢ·Q_active ; all-reduce mean (r_eff·m floats on the wire)
+        let qm = self.active_q(r_eff);
+        let mut p_avg = mi.matmul(&qm);
+        collective::all_reduce_mean(tr, &mut p_avg.data)?;
+
+        // 3. P̂ = orth(P̄) — identical on every rank — then Q′ᵢ = Mᵢᵀ·P̂ ;
+        // all-reduce mean (r_eff·n floats on the wire)
+        let p_hat = p_avg.gram_schmidt(1e-8);
+        let mut q_avg = mi.t().matmul(&p_hat);
+        collective::all_reduce_mean(tr, &mut q_avg.data)?;
+
+        // 4. decompress; rank 0 computes the mean-gradient diagnostic
+        // from a metrics-only gather, replicating round_host's
+        // chunk-ordered (num, den) reduction exactly.
+        let approx = p_hat.matmul(&q_avg.t());
+        let fchunk = par::items_per_chunk(2 * world, par::CHUNK_WORK);
+        tr.set_class(Class::Diag);
+        let gathered = collective::gather_to_root(tr, &mi.data)?;
+        tr.set_class(Class::Data);
+        let rel_error = match &gathered {
+            Some(ms) => {
+                let inv_k = 1.0f64 / world as f64;
+                let partials = par::map_chunks(m * n, fchunk, |_, jr| {
+                    let mut num = 0.0f64;
+                    let mut den = 0.0f64;
+                    for j in jr {
+                        let mut mm = 0.0f64;
+                        for mr in ms {
+                            mm += mr[j] as f64;
+                        }
+                        mm *= inv_k;
+                        let dd = mm - approx.data[j] as f64;
+                        num += dd * dd;
+                        den += mm * mm;
+                    }
+                    (num, den)
+                });
+                let (num, den) =
+                    partials.iter().fold((0.0f64, 0.0f64), |(a, b), &(x, y)| (a + x, b + y));
+                num.sqrt() / den.sqrt().max(1e-30)
+            }
+            None => 0.0,
+        };
+
+        if self.error_feedback {
+            let (md, ad) = (&mi.data, &approx.data);
+            par::for_each_chunk_mut(&mut self.errors[rank], fchunk, |ci, block| {
+                let off = ci * fchunk;
+                for (j, e) in block.iter_mut().enumerate() {
+                    *e = md[off + j] - ad[off + j];
+                }
+            });
+        }
+        // warm start the active columns (all ranks hold identical Q̄′)
+        for row in 0..n {
+            for c in 0..r_eff {
+                *self.q.at_mut(row, c) = q_avg.at(row, c);
+            }
+        }
+
+        Ok(Round {
+            approx: approx.data,
+            rel_error,
+            volume: Volume { compressed: r_eff * (m + n), original: m * n },
+            rank_used: r_eff,
+        })
+    }
+
     /// Reset error memories (e.g. when switching compression on/off).
     pub fn reset_errors(&mut self) {
         for e in &mut self.errors {
@@ -408,6 +515,52 @@ mod tests {
         }
         assert!(e16 < e4 * 0.8, "rank rise ineffective: e4={e4} e16={e16}");
         assert!(e16 < e_16_fresh * 1.2, "should recover rank-16 quality");
+    }
+
+    #[test]
+    fn round_dist_matches_round_host_bitwise() {
+        // The distributed round over a mem mesh must reproduce the
+        // centralized round byte-for-byte: same approx, same warm Q,
+        // same per-slot EF memory, same rel_error on rank 0 — across
+        // several steps so the EF/warm-start state stays in lockstep.
+        let (m, n, world) = (20usize, 16usize, 3usize);
+        let grads: Vec<Vec<Vec<f32>>> = (0..4)
+            .map(|s| (0..world).map(|r| randmat(m, n, 100 + (s * world + r) as u64)).collect())
+            .collect();
+        let mut rng = Rng::new(33);
+        let mut central = TensorCompressor::new(m, n, 8, world, true, &mut rng);
+        let mut rounds_host = Vec::new();
+        for step_grads in &grads {
+            let refs: Vec<&[f32]> = step_grads.iter().map(|g| g.as_slice()).collect();
+            rounds_host.push(central.round_host(&refs, 5));
+        }
+
+        let mut rng = Rng::new(33);
+        let comp0 = TensorCompressor::new(m, n, 8, world, true, &mut rng);
+        let per_rank = crate::dist::run_group(crate::dist::TransportKind::Mem, world, |rank, tr| {
+            let mut c = comp0.clone();
+            let mut rounds = Vec::new();
+            for step_grads in &grads {
+                rounds.push(c.round_dist(tr, &step_grads[rank], 5)?);
+            }
+            Ok((rounds, c))
+        })
+        .unwrap();
+
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for (rank, ((rounds, c), _)) in per_rank.iter().enumerate() {
+            for (rd, rh) in rounds.iter().zip(&rounds_host) {
+                assert_eq!(bits(&rd.approx), bits(&rh.approx), "approx differs at rank {rank}");
+                assert_eq!(rd.volume, rh.volume);
+                if rank == 0 {
+                    assert_eq!(rd.rel_error.to_bits(), rh.rel_error.to_bits());
+                } else {
+                    assert_eq!(rd.rel_error, 0.0);
+                }
+            }
+            assert_eq!(bits(&c.q.data), bits(&central.q.data), "warm Q differs at rank {rank}");
+            assert_eq!(bits(&c.errors[rank]), bits(&central.errors[rank]), "EF slot {rank}");
+        }
     }
 
     #[test]

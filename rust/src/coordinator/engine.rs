@@ -14,6 +14,7 @@
 use crate::util::error::{Context, Result};
 
 use crate::compress::{allreduce_mean, TensorCompressor, Volume};
+use crate::dist::{collective, Transport};
 use crate::runtime::{lit_f32, to_f32, Bucket, Manifest, ParamSpec, Runtime};
 use crate::tensor::Mat;
 use crate::util::rng::Rng;
@@ -77,6 +78,9 @@ impl AllreduceReport {
 pub struct Engine {
     pub backend: Backend,
     pub pp: usize,
+    /// Transformer depth of the model (for plain-param stage mapping —
+    /// `stage_of` needs the real layer count, not a sentinel).
+    pub n_layer: usize,
     pub tensors: Vec<CompTensor>,
     /// Specs of non-compressible params (1-D + matrices without buckets).
     pub plain: Vec<ParamSpec>,
@@ -112,7 +116,14 @@ impl Engine {
                 _ => plain.push(spec.clone()),
             }
         }
-        Engine { backend, pp, tensors, plain, n_params: manifest.n_params }
+        Engine {
+            backend,
+            pp,
+            n_layer: manifest.n_layer,
+            tensors,
+            plain,
+            n_params: manifest.n_params,
+        }
     }
 
     /// Floats per stage if synced uncompressed (constant per model).
@@ -122,7 +133,7 @@ impl Engine {
             v[t.stage] += t.spec.size();
         }
         for p in &self.plain {
-            v[stage_of(&p.name, usize::MAX, self.pp).min(self.pp - 1)] += p.size();
+            v[stage_of(&p.name, self.n_layer, self.pp)] += p.size();
         }
         v
     }
@@ -143,6 +154,14 @@ impl Engine {
         for g in grads {
             assert_eq!(g.len(), self.n_params);
         }
+        if let Some(rs) = ranks {
+            crate::ensure!(
+                rs.len() == self.pp,
+                "per-stage rank vector has {} entries for pp={}",
+                rs.len(),
+                self.pp
+            );
+        }
         let mut avg = vec![0.0f32; self.n_params];
         let mut stage_compressed = vec![0usize; self.pp];
         let mut stage_original = vec![0usize; self.pp];
@@ -159,7 +178,7 @@ impl Engine {
 
         for p in &self.plain {
             mean_range(&mut avg, p.offset, p.size());
-            let st = stage_of(&p.name, usize::MAX, self.pp).min(self.pp - 1);
+            let st = stage_of(&p.name, self.n_layer, self.pp);
             stage_compressed[st] += p.size();
             stage_original[st] += p.size();
         }
@@ -168,9 +187,7 @@ impl Engine {
             let off = t.spec.offset;
             let len = t.spec.size();
             stage_original[t.stage] += len;
-            let r_eff = ranks.map(|rs| {
-                rs[t.stage.min(rs.len() - 1)].clamp(1, t.bucket.r_max)
-            });
+            let r_eff = ranks.map(|rs| rs[t.stage].clamp(1, t.bucket.r_max));
             match r_eff {
                 None => {
                     let slices: Vec<&[f32]> = grads.iter().map(|g| &g[off..off + len]).collect();
@@ -194,6 +211,104 @@ impl Engine {
                     err_weighted += round.rel_error * len as f64;
                     err_weight += len as f64;
                     tensor_errors.push((t.spec.name.clone(), t.stage, round.rel_error));
+                }
+            }
+        }
+
+        Ok(AllreduceReport {
+            avg,
+            stage_compressed,
+            stage_original,
+            mean_rel_error: if err_weight > 0.0 { err_weighted / err_weight } else { 0.0 },
+            tensor_errors,
+        })
+    }
+
+    /// The distributed counterpart of [`Engine::allreduce`]: this rank
+    /// contributes only its own flat gradient, and synchronization runs
+    /// through real collectives over `tr` — PowerSGD **P/Q factors**
+    /// for compressed tensors, plain means for everything else — so the
+    /// transport's data-class counters measure exactly the volume the
+    /// `stage_compressed` accounting claims (× the ring traffic factor;
+    /// see `netsim::ring_wire_bytes`).
+    ///
+    /// Byte-identical to the centralized path over the same `world`
+    /// gradients: `avg` and the volume accounting on every rank, and
+    /// the error diagnostics (`mean_rel_error`, `tensor_errors`) on
+    /// rank 0 — non-root ranks report zero/empty diagnostics, since
+    /// computing them needs the mean gradient (metrics-only gather to
+    /// root; see `TensorCompressor::round_dist`). Host backend only:
+    /// each rank executes its own PowerSGD phases in-process.
+    pub fn allreduce_dist(
+        &mut self,
+        tr: &mut dyn Transport,
+        grad: &[f32],
+        ranks: Option<&[usize]>,
+    ) -> Result<AllreduceReport> {
+        crate::ensure!(
+            self.backend == Backend::Host,
+            "distributed all-reduce runs the host backend only"
+        );
+        crate::ensure!(
+            grad.len() == self.n_params,
+            "gradient has {} floats, expected {}",
+            grad.len(),
+            self.n_params
+        );
+        if let Some(rs) = ranks {
+            crate::ensure!(
+                rs.len() == self.pp,
+                "per-stage rank vector has {} entries for pp={}",
+                rs.len(),
+                self.pp
+            );
+        }
+        let rank = tr.rank();
+        let mut avg = vec![0.0f32; self.n_params];
+        let mut stage_compressed = vec![0usize; self.pp];
+        let mut stage_original = vec![0usize; self.pp];
+        let mut tensor_errors = Vec::new();
+        let mut err_weighted = 0.0f64;
+        let mut err_weight = 0.0f64;
+
+        // Exact mean over the group for one flat segment.
+        let mean_range = |tr: &mut dyn Transport,
+                              avg: &mut Vec<f32>,
+                              off: usize,
+                              len: usize|
+         -> Result<()> {
+            let mut seg = grad[off..off + len].to_vec();
+            collective::all_reduce_mean(tr, &mut seg)?;
+            avg[off..off + len].copy_from_slice(&seg);
+            Ok(())
+        };
+
+        for p in &self.plain {
+            mean_range(&mut *tr, &mut avg, p.offset, p.size())?;
+            let st = stage_of(&p.name, self.n_layer, self.pp);
+            stage_compressed[st] += p.size();
+            stage_original[st] += p.size();
+        }
+
+        for t in &mut self.tensors {
+            let off = t.spec.offset;
+            let len = t.spec.size();
+            stage_original[t.stage] += len;
+            let r_eff = ranks.map(|rs| rs[t.stage].clamp(1, t.bucket.r_max));
+            match r_eff {
+                None => {
+                    mean_range(&mut *tr, &mut avg, off, len)?;
+                    stage_compressed[t.stage] += len;
+                }
+                Some(r) => {
+                    let round = t.comp.round_dist(tr, &grad[off..off + len], r)?;
+                    avg[off..off + len].copy_from_slice(&round.approx);
+                    stage_compressed[t.stage] += round.volume.compressed;
+                    if rank == 0 {
+                        err_weighted += round.rel_error * len as f64;
+                        err_weight += len as f64;
+                        tensor_errors.push((t.spec.name.clone(), t.stage, round.rel_error));
+                    }
                 }
             }
         }
@@ -403,6 +518,93 @@ mod tests {
         for i in 40..44 {
             assert!((rep.avg[i] - g[i]).abs() < 1e-6);
         }
+    }
+
+    fn layered_manifest() -> Manifest {
+        // 1-D params on both layers: h1.ln1_g must land on stage 1 of 2.
+        Manifest::parse(
+            r#"{
+          "preset": "t", "seed": 0, "batch": 2,
+          "model": {"vocab": 8, "d_model": 4, "n_head": 1, "n_layer": 2,
+                    "seq_len": 4, "n_params": 24},
+          "entropy_sample": 4096, "entropy_bins": 16,
+          "params": [
+            {"name": "h0.qkv_w", "shape": [4, 2], "offset": 0},
+            {"name": "h0.ln1_g", "shape": [4], "offset": 8},
+            {"name": "h1.qkv_w", "shape": [4, 2], "offset": 12},
+            {"name": "h1.ln1_g", "shape": [4], "offset": 20}
+          ],
+          "buckets": [{"m": 4, "n": 2, "r_max": 2}],
+          "artifacts": {}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn plain_params_follow_their_layer_stage() {
+        // Regression: stage_of(name, usize::MAX, pp) collapsed every
+        // h<i>.* 1-D param onto stage 0; the engine must use the real
+        // n_layer so h1.ln1_g lands on stage 1 with pp = 2.
+        let mut e = Engine::new(&layered_manifest(), 2, 1, false, Backend::Host, 0);
+        assert_eq!(e.n_layer, 2);
+        assert_eq!(e.stage_full_volume(), vec![12, 12]);
+        let g: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let rep = e.allreduce(None, &[g], None).unwrap();
+        assert_eq!(rep.stage_original, vec![12, 12]);
+        assert_eq!(rep.stage_compressed, vec![12, 12]);
+    }
+
+    #[test]
+    fn malformed_rank_vector_fails_loudly() {
+        // Regression: a rank vector shorter than pp used to be silently
+        // clamped onto the last stage; it must be a hard error.
+        let mut e = Engine::new(&mini_manifest(), 2, 1, false, Backend::Host, 0);
+        let g: Vec<f32> = (0..56).map(|i| i as f32).collect();
+        for bad in [vec![1usize], vec![1, 1, 1]] {
+            let err = e.allreduce(None, &[g.clone()], Some(&bad)).unwrap_err();
+            assert!(err.to_string().contains("pp=2"), "{err}");
+        }
+        // the exact-length vector still works
+        assert!(e.allreduce(None, &[g], Some(&[1, 1])).is_ok());
+    }
+
+    #[test]
+    fn allreduce_dist_matches_centralized_bitwise() {
+        let world = 3usize;
+        let mut rng = Rng::new(40);
+        let grads: Vec<Vec<f32>> = (0..world).map(|_| rng.normal_vec(56, 1.0)).collect();
+        let mut central = Engine::new(&mini_manifest(), 2, world, true, Backend::Host, 5);
+        let refs: Vec<Vec<f32>> = grads.clone();
+        let rep_c = central.allreduce(None, &refs, Some(&[1, 2])).unwrap();
+
+        let out = crate::dist::run_group(crate::dist::TransportKind::Mem, world, |rank, tr| {
+            let mut e = Engine::new(&mini_manifest(), 2, world, true, Backend::Host, 5);
+            e.allreduce_dist(tr, &grads[rank], Some(&[1, 2]))
+        })
+        .unwrap();
+        for (rank, (rep, _)) in out.iter().enumerate() {
+            let same =
+                rep.avg.iter().zip(&rep_c.avg).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "avg differs at rank {rank}");
+            assert_eq!(rep.stage_compressed, rep_c.stage_compressed);
+            assert_eq!(rep.stage_original, rep_c.stage_original);
+            if rank == 0 {
+                assert_eq!(rep.mean_rel_error.to_bits(), rep_c.mean_rel_error.to_bits());
+                assert_eq!(rep.tensor_errors.len(), rep_c.tensor_errors.len());
+            } else {
+                assert!(rep.tensor_errors.is_empty());
+            }
+        }
+        // measured data-class wire volume (summed over the group — the
+        // identity holds exactly at any chunk split) = accounting × ring
+        let total_bytes: u64 = out.iter().map(|(_, c)| c.data_sent_bytes()).sum();
+        let logical = total_bytes as f64 / crate::netsim::ring_wire_bytes(world, 1);
+        assert!(
+            (logical - rep_c.total_compressed() as f64).abs() < 1e-9,
+            "measured {logical} vs accounted {}",
+            rep_c.total_compressed()
+        );
     }
 
     #[test]

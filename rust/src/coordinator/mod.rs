@@ -13,4 +13,4 @@ pub mod trainer;
 pub use clock::VirtualClock;
 pub use dac::{Dac, RankBounds};
 pub use engine::{Backend, Engine};
-pub use trainer::{RunSummary, Trainer};
+pub use trainer::{run_distributed, DistRun, RunSummary, Trainer};

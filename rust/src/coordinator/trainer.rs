@@ -19,6 +19,7 @@ use crate::coordinator::clock::VirtualClock;
 use crate::coordinator::dac::{Dac, RankBounds};
 use crate::coordinator::engine::{Backend, Engine};
 use crate::data::{build_probes, Batcher, SynthCorpus};
+use crate::dist::{collective, run_group, Counters, Transport, TransportKind};
 use crate::entropy::{Gds, GdsConfig, WindowStats};
 use crate::eval;
 use crate::metrics::{ppl, Table};
@@ -400,6 +401,172 @@ impl Trainer {
         })
     }
 
+    /// One rank of a real multi-rank data-parallel run: mirrors
+    /// [`Trainer::run`] step-for-step, except each rank computes only
+    /// its own shard's gradient and synchronization goes through the
+    /// `dist` collectives over `tr` ([`Engine::allreduce_dist`]). Rank
+    /// 0 owns the control plane — entropy/window/DAC, the virtual
+    /// clock, evaluation, the curve — and broadcasts the per-window
+    /// rank decisions; it returns the full [`RunSummary`]
+    /// (byte-identical to the centralized run at the same seed, pinned
+    /// in `tests/determinism.rs`), other ranks return `None`.
+    pub fn run_rank(&mut self, tr: &mut dyn Transport) -> Result<Option<RunSummary>> {
+        let rank = tr.rank();
+        crate::ensure!(
+            tr.world() == self.cfg.dp,
+            "transport world {} != dp {}",
+            tr.world(),
+            self.cfg.dp
+        );
+        crate::ensure!(
+            self.backend == Backend::Host,
+            "distributed training runs the host backend (--backend host)"
+        );
+        let wall = crate::metrics::Stopwatch::start();
+        let mut curve = Table::new(
+            &format!("curve-{}", self.cfg.method.name()),
+            &[
+                "step",
+                "loss",
+                "val_loss",
+                "rel_err",
+                "rank_s1",
+                "comm_floats",
+                "iter_time",
+                "virtual_time",
+            ],
+        );
+        let mut total_comm = 0usize;
+        let mut total_orig = 0usize;
+        let mut error_samples = Vec::new();
+        let window_len = self.cfg.edgc.window.max(1);
+
+        let mut last_val = f64::NAN;
+        let mut last_loss = f64::NAN;
+        for step in 0..self.cfg.steps {
+            // 1. this rank's train step on its own shard
+            let batch = self.batchers[rank].next_train();
+            let (loss_i, g) = self.run_train_step(&batch)?;
+            // mean loss over the group, f64-summed in rank order like
+            // the centralized loop
+            let losses = collective::all_gather_f32(tr, loss_i)?;
+            let loss = losses.iter().map(|&x| x as f64).sum::<f64>() / losses.len() as f64;
+            last_loss = loss;
+
+            // 2. rank decision on rank 0 (it owns the DAC), broadcast
+            let ranks = {
+                let mine = if rank == 0 {
+                    Some(encode_ranks(&baselines::ranks_for(
+                        self.cfg.method,
+                        step,
+                        self.cfg.steps,
+                        self.cfg.pp,
+                        self.dac.as_ref(),
+                    )))
+                } else {
+                    None
+                };
+                decode_ranks(&collective::broadcast_bytes(tr, 0, mine.as_deref())?)?
+            };
+
+            // 3. compressed all-reduce through the transport
+            let report = self.engine.allreduce_dist(tr, &g, ranks.as_deref())?;
+            total_comm += report.total_compressed();
+            total_orig += report.total_original();
+
+            // 4. optimizer (every rank, identical averaged gradient)
+            let avg = report.avg.clone();
+            self.adam_update(&avg, step + 1)?;
+
+            // 5/6. control plane + bookkeeping on rank 0 only
+            if rank == 0 {
+                if self.gds.due(step) {
+                    let est = self.measure_entropy(&g)?;
+                    self.window.push(&est);
+                }
+                if (step + 1) % window_len == 0 {
+                    if let Some(mean) = self.window.roll() {
+                        if let Some(dac) = self.dac.as_mut() {
+                            dac.on_window(step + 1, mean);
+                        }
+                    }
+                }
+                let (iter_time, _comm_time) = self.clock.step(
+                    &report.stage_compressed,
+                    &report.stage_original,
+                    ranks.as_deref(),
+                );
+                if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
+                    last_val = self.validation_loss(2)?;
+                    for (name, stage, err) in &report.tensor_errors {
+                        error_samples.push((step, name.clone(), *stage, *err));
+                    }
+                }
+                curve.push(vec![
+                    step as f64,
+                    loss,
+                    last_val,
+                    report.mean_rel_error,
+                    ranks.as_ref().map_or(0.0, |r| r[0] as f64),
+                    report.total_compressed() as f64,
+                    iter_time,
+                    self.clock.total,
+                ]);
+            }
+        }
+
+        // replica-consistency check: DP requires every rank to hold
+        // identical parameters after the last step
+        let sums = collective::all_gather_u64(tr, fnv64(&self.params))?;
+        crate::ensure!(
+            sums.iter().all(|&s| s == sums[0]),
+            "replica divergence after training: param checksums {sums:?}"
+        );
+
+        if rank != 0 {
+            return Ok(None);
+        }
+
+        // final evaluation (rank 0 only — identical params everywhere)
+        let final_val = self.validation_loss(4)?;
+        let probes = build_probes(&self.corpus, 48, 4, self.rt.manifest.seq_len, 4, 99);
+        let man_batch = self.rt.manifest.batch;
+        let rt = &self.rt;
+        let params = &self.params;
+        let man = &self.rt.manifest;
+        let mut loss_fn = |flat_tokens: &[i32]| -> Result<Vec<f32>> {
+            let out = rt.run(
+                "eval_step",
+                &[
+                    lit_f32(params, &[man.n_params as i64])?,
+                    lit_i32(flat_tokens, &[man_batch as i64, (man.seq_len + 1) as i64])?,
+                ],
+            )?;
+            to_f32(&out[0])
+        };
+        let probe = eval::run_probes(&mut loss_fn, &probes, man_batch)?;
+
+        Ok(Some(RunSummary {
+            method: self.cfg.method.name(),
+            final_train_loss: last_loss,
+            final_val_loss: final_val,
+            final_ppl: ppl(final_val),
+            probe_accuracy: probe.accuracy,
+            virtual_time: self.clock.total,
+            virtual_comm_time: self.clock.comm_total,
+            virtual_compute_time: self.clock.compute_total,
+            wall_time: wall.secs(),
+            total_comm_floats: total_comm,
+            total_uncompressed_floats: total_orig,
+            entropy_trace: self.dac.as_ref().map(|d| d.entropy_trace.clone()).unwrap_or_else(
+                || self.window.history.clone(),
+            ),
+            rank_trace: self.dac.as_ref().map(|d| d.rank_trace.clone()).unwrap_or_default(),
+            error_samples,
+            curve,
+        }))
+    }
+
     /// Current flat parameters (for checkpoint-style tests).
     pub fn params(&self) -> &[f32] {
         &self.params
@@ -409,4 +576,93 @@ impl Trainer {
     pub fn window_history(&self) -> &[f64] {
         &self.window.history
     }
+}
+
+// --------------------------------------------------------- distributed
+
+/// Wire encoding of a per-step rank decision (rank-0 broadcast).
+fn encode_ranks(r: &Option<Vec<usize>>) -> Vec<u8> {
+    match r {
+        None => vec![0],
+        Some(v) => {
+            let mut out = vec![1u8];
+            out.extend((v.len() as u32).to_le_bytes());
+            for &x in v {
+                out.extend((x as u32).to_le_bytes());
+            }
+            out
+        }
+    }
+}
+
+fn decode_ranks(b: &[u8]) -> Result<Option<Vec<usize>>> {
+    match b.first() {
+        Some(&0) if b.len() == 1 => Ok(None),
+        Some(&1) if b.len() >= 5 => {
+            let n = u32::from_le_bytes([b[1], b[2], b[3], b[4]]) as usize;
+            crate::ensure!(b.len() == 5 + 4 * n, "rank broadcast length mismatch");
+            Ok(Some(
+                b[5..]
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize)
+                    .collect(),
+            ))
+        }
+        _ => crate::bail!("malformed rank broadcast ({} bytes)", b.len()),
+    }
+}
+
+/// FNV-1a over the exact parameter bytes (replica-consistency check).
+fn fnv64(xs: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for x in xs {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Everything a distributed run returns beyond the rank-0 summary.
+pub struct DistRun {
+    pub summary: RunSummary,
+    /// Rank 0's final flat parameters (identical on every rank — the
+    /// group checksum-verifies this before returning).
+    pub params: Vec<f32>,
+    /// Per-rank transport counter snapshots, rank-indexed: the measured
+    /// wire volume the netsim ring model is calibrated against.
+    pub counters: Vec<Counters>,
+}
+
+/// Run one training job as `cfg.dp` real rank workers over a `kind`
+/// transport mesh (`edgc train --dp N --transport mem|tcp`). Each rank
+/// owns its replica, data shard, EF state and RNG streams; outputs are
+/// byte-identical to the centralized [`Trainer::run`] at the same seed
+/// for any transport.
+pub fn run_distributed(cfg: TrainConfig, backend: Backend, kind: TransportKind) -> Result<DistRun> {
+    crate::ensure!(
+        backend == Backend::Host,
+        "distributed training runs the host backend (--backend host)"
+    );
+    crate::ensure!(cfg.dp >= 1, "dp must be >= 1");
+    let world = cfg.dp;
+    let per_rank = run_group(kind, world, |rank, tr| {
+        let mut t = Trainer::new(cfg.clone(), backend)?;
+        let summary = t.run_rank(tr)?;
+        let params = if rank == 0 { t.params().to_vec() } else { Vec::new() };
+        Ok((summary, params))
+    })?;
+    let mut counters = Vec::with_capacity(world);
+    let mut summary = None;
+    let mut params = Vec::new();
+    for (rank, ((s, p), c)) in per_rank.into_iter().enumerate() {
+        crate::ensure!(s.is_some() == (rank == 0), "summary came from rank {rank}");
+        if rank == 0 {
+            summary = s;
+            params = p;
+        }
+        counters.push(c);
+    }
+    Ok(DistRun { summary: summary.expect("rank 0 summary"), params, counters })
 }

@@ -1,0 +1,356 @@
+//! Deterministic collectives over f32 slices — the dist counterpart of
+//! `compress::allreduce_mean`, with ring-equivalent wire volume.
+//!
+//! The all-reduce is chunked reduce-scatter + all-gather: every vector
+//! is split into `world` **fixed chunks** (boundaries are a pure
+//! function of `(len, world)`, never of scheduling), rank `c` owns
+//! chunk `c`, and the two phases run on a ring-offset exchange schedule
+//! (step `s`: send to `rank+s`, receive from `rank−s`, mod `world`).
+//! Per-rank traffic is the classic ring all-reduce volume,
+//! `2(world−1)/world · len` floats; summed over the group it is exactly
+//! `netsim::ring_wire_bytes` for any chunk split.
+//!
+//! **Determinism contract** (the repo-wide byte-identity rule): raw
+//! contributions travel straight to the chunk owner — not as running
+//! partial sums along a ring path — and the owner folds them
+//! **in rank order, starting from zero**, then scales by `1/world`:
+//! exactly the fold `compress::allreduce_mean` performs. A classic ring
+//! accumulates along a rotated path per chunk, which is the same volume
+//! but a different (rank-count-dependent) float grouping; this variant
+//! trades neighbor-only links for byte-identical results at any rank
+//! count, which is what lets `tests/determinism.rs` pin distributed
+//! training to the centralized engine bit-for-bit.
+//!
+//! Both transports deliver per-link FIFO, and every receive names its
+//! peer, so the fold inputs — hence the output bytes — are independent
+//! of cross-link timing.
+
+use std::ops::Range;
+
+use crate::dist::transport::Transport;
+use crate::util::error::Result;
+use crate::{bail, ensure};
+
+/// The fixed boundaries of chunk `c` of `0..len` split `world` ways:
+/// balanced split, the first `len % world` chunks one element longer.
+/// Chunks may be empty when `len < world`.
+pub fn chunk_range(len: usize, world: usize, c: usize) -> Range<usize> {
+    debug_assert!(c < world);
+    let base = len / world;
+    let rem = len % world;
+    let lo = c * base + c.min(rem);
+    lo..lo + base + usize::from(c < rem)
+}
+
+fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    ensure!(b.len() % 4 == 0, "payload of {} bytes is not a f32 vector", b.len());
+    Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Reduce-scatter with mean: contributes `buf`, returns this rank's
+/// owned reduced chunk (`chunk_range(len, world, rank)` of the mean).
+/// Empty chunks move no messages — both sides derive the skip from the
+/// fixed boundaries, so the schedule stays in lockstep.
+pub fn reduce_scatter_mean(tr: &mut dyn Transport, buf: &[f32]) -> Result<Vec<f32>> {
+    let (world, rank) = (tr.world(), tr.rank());
+    let len = buf.len();
+    // Send every chunk to its owner first (transports buffer, so the
+    // whole send phase completes without waiting on any peer)...
+    for s in 1..world {
+        let to = (rank + s) % world;
+        let r = chunk_range(len, world, to);
+        if !r.is_empty() {
+            tr.send(to, &f32s_to_bytes(&buf[r]))?;
+        }
+    }
+    // ...then collect the k−1 foreign contributions for the owned chunk.
+    let my = chunk_range(len, world, rank);
+    let mut parts: Vec<Option<Vec<f32>>> = (0..world).map(|_| None).collect();
+    if !my.is_empty() {
+        for s in 1..world {
+            let from = (rank + world - s) % world;
+            let p = bytes_to_f32s(&tr.recv(from)?)?;
+            ensure!(
+                p.len() == my.len(),
+                "rank {rank}: chunk from rank {from} has {} floats, expected {}",
+                p.len(),
+                my.len()
+            );
+            parts[from] = Some(p);
+        }
+    }
+    // Fold in rank order from zero, then scale — the exact grouping of
+    // compress::allreduce_mean, so the bytes match for any rank count.
+    let mut acc = vec![0.0f32; my.len()];
+    for r in 0..world {
+        let src: &[f32] = if r == rank {
+            &buf[my.clone()]
+        } else {
+            parts[r].as_deref().unwrap_or(&[])
+        };
+        for (a, &x) in acc.iter_mut().zip(src) {
+            *a += x;
+        }
+    }
+    let inv = 1.0 / world as f32;
+    for a in &mut acc {
+        *a *= inv;
+    }
+    Ok(acc)
+}
+
+/// All-gather of per-rank owned chunks back into the full vector:
+/// `mine` must be this rank's `chunk_range(len, world, rank)` slice.
+pub fn all_gather(tr: &mut dyn Transport, mine: &[f32], len: usize) -> Result<Vec<f32>> {
+    let (world, rank) = (tr.world(), tr.rank());
+    let my = chunk_range(len, world, rank);
+    ensure!(mine.len() == my.len(), "own chunk has {} floats, expected {}", mine.len(), my.len());
+    let payload = f32s_to_bytes(mine);
+    for s in 1..world {
+        let to = (rank + s) % world;
+        if !my.is_empty() {
+            tr.send(to, &payload)?;
+        }
+    }
+    let mut out = vec![0.0f32; len];
+    out[my].copy_from_slice(mine);
+    for s in 1..world {
+        let from = (rank + world - s) % world;
+        let r = chunk_range(len, world, from);
+        if !r.is_empty() {
+            let p = bytes_to_f32s(&tr.recv(from)?)?;
+            ensure!(
+                p.len() == r.len(),
+                "rank {rank}: gathered chunk from rank {from} has {} floats, expected {}",
+                p.len(),
+                r.len()
+            );
+            out[r].copy_from_slice(&p);
+        }
+    }
+    Ok(out)
+}
+
+/// In-place all-reduce mean over `buf`: reduce-scatter + all-gather.
+/// Every rank ends with bytes identical to `compress::allreduce_mean`
+/// over the group's `world` contributions.
+pub fn all_reduce_mean(tr: &mut dyn Transport, buf: &mut [f32]) -> Result<()> {
+    let mine = reduce_scatter_mean(tr, buf)?;
+    let full = all_gather(tr, &mine, buf.len())?;
+    buf.copy_from_slice(&full);
+    Ok(())
+}
+
+/// Broadcast opaque bytes from `root`: the root passes `Some(payload)`,
+/// every other rank passes `None`; all ranks return the payload.
+pub fn broadcast_bytes(
+    tr: &mut dyn Transport,
+    root: usize,
+    payload: Option<&[u8]>,
+) -> Result<Vec<u8>> {
+    let (world, rank) = (tr.world(), tr.rank());
+    ensure!(root < world, "broadcast root {root} out of range (world {world})");
+    if rank == root {
+        let p = match payload {
+            Some(p) => p,
+            None => bail!("broadcast root must supply the payload"),
+        };
+        for peer in (0..world).filter(|&q| q != root) {
+            tr.send(peer, p)?;
+        }
+        Ok(p.to_vec())
+    } else {
+        ensure!(payload.is_none(), "non-root rank {rank} supplied a broadcast payload");
+        tr.recv(root)
+    }
+}
+
+/// Broadcast an f32 buffer in place from `root`.
+pub fn broadcast_f32(tr: &mut dyn Transport, root: usize, buf: &mut [f32]) -> Result<()> {
+    let payload = if tr.rank() == root { Some(f32s_to_bytes(buf)) } else { None };
+    let got = broadcast_bytes(tr, root, payload.as_deref())?;
+    let xs = bytes_to_f32s(&got)?;
+    ensure!(xs.len() == buf.len(), "broadcast of {} floats into {} slots", xs.len(), buf.len());
+    buf.copy_from_slice(&xs);
+    Ok(())
+}
+
+/// All-gather one f32 per rank (rank-indexed result on every rank).
+pub fn all_gather_f32(tr: &mut dyn Transport, x: f32) -> Result<Vec<f32>> {
+    Ok(all_gather_words(tr, &x.to_le_bytes())?
+        .iter()
+        .map(|w| f32::from_le_bytes([w[0], w[1], w[2], w[3]]))
+        .collect())
+}
+
+/// All-gather one u64 per rank (rank-indexed result on every rank).
+pub fn all_gather_u64(tr: &mut dyn Transport, x: u64) -> Result<Vec<u64>> {
+    Ok(all_gather_words(tr, &x.to_le_bytes())?
+        .iter()
+        .map(|w| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(w);
+            u64::from_le_bytes(b)
+        })
+        .collect())
+}
+
+/// Star-exchange of one fixed-width word per rank.
+fn all_gather_words(tr: &mut dyn Transport, word: &[u8]) -> Result<Vec<Vec<u8>>> {
+    let (world, rank) = (tr.world(), tr.rank());
+    for peer in (0..world).filter(|&p| p != rank) {
+        tr.send(peer, word)?;
+    }
+    let mut out: Vec<Vec<u8>> = vec![Vec::new(); world];
+    out[rank] = word.to_vec();
+    for peer in (0..world).filter(|&p| p != rank) {
+        let w = tr.recv(peer)?;
+        ensure!(w.len() == word.len(), "gathered word of {} bytes, want {}", w.len(), word.len());
+        out[peer] = w;
+    }
+    Ok(out)
+}
+
+/// Gather every rank's f32 buffer to rank 0: the root returns
+/// `Some(rank-indexed buffers)` (its own included), everyone else
+/// `None`. Callers gating diagnostics switch the transport to
+/// `Class::Diag` around this (see `compress::TensorCompressor::round_dist`).
+pub fn gather_to_root(tr: &mut dyn Transport, buf: &[f32]) -> Result<Option<Vec<Vec<f32>>>> {
+    let (world, rank) = (tr.world(), tr.rank());
+    if rank != 0 {
+        tr.send(0, &f32s_to_bytes(buf))?;
+        return Ok(None);
+    }
+    let mut out: Vec<Vec<f32>> = Vec::with_capacity(world);
+    out.push(buf.to_vec());
+    for peer in 1..world {
+        let p = bytes_to_f32s(&tr.recv(peer)?)?;
+        ensure!(
+            p.len() == buf.len(),
+            "gathered buffer from rank {peer} has {} floats, expected {}",
+            p.len(),
+            buf.len()
+        );
+        out.push(p);
+    }
+    Ok(Some(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::allreduce_mean;
+    use crate::dist::transport::mem_mesh;
+
+    #[test]
+    fn chunk_ranges_cover_and_balance() {
+        for &(len, world) in &[(10usize, 3usize), (7, 7), (3, 5), (0, 4), (16, 1)] {
+            let mut covered = 0usize;
+            for c in 0..world {
+                let r = chunk_range(len, world, c);
+                assert_eq!(r.start, covered, "len={len} world={world} c={c}");
+                covered = r.end;
+                assert!(r.len() <= len.div_ceil(world.max(1)));
+            }
+            assert_eq!(covered, len);
+        }
+    }
+
+    /// Run `f` on every rank of a fresh mem mesh; results rank-indexed.
+    fn on_mesh<R: Send>(
+        world: usize,
+        f: impl Fn(&mut dyn Transport) -> Result<R> + Sync,
+    ) -> Vec<R> {
+        let mesh = mem_mesh(world);
+        let f = &f;
+        std::thread::scope(|s| {
+            let hs: Vec<_> = mesh
+                .into_iter()
+                .map(|mut t| s.spawn(move || f(&mut t).unwrap()))
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn all_reduce_mean_matches_centralized_bitwise() {
+        use crate::util::rng::Rng;
+        for &(world, len) in &[(1usize, 5usize), (2, 8), (3, 10), (4, 3), (5, 17)] {
+            let grads: Vec<Vec<f32>> =
+                (0..world).map(|r| Rng::new(100 + r as u64).normal_vec(len, 1.0)).collect();
+            let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+            let (want, _) = allreduce_mean(&refs);
+            let got = on_mesh(world, |tr| {
+                let mut b = grads[tr.rank()].clone();
+                all_reduce_mean(tr, &mut b)?;
+                Ok(b)
+            });
+            for (rank, g) in got.iter().enumerate() {
+                let same = g.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "world={world} len={len} rank={rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_wire_volume_is_exactly_ring() {
+        // Total data-class payload across the group = 2(k−1)·4·len bytes
+        // for any chunk split (the netsim calibration identity).
+        for &(world, len) in &[(2usize, 9usize), (4, 10), (5, 3)] {
+            let sent: u64 = on_mesh(world, |tr| {
+                let mut b = vec![1.0f32; len];
+                all_reduce_mean(tr, &mut b)?;
+                Ok(tr.counters().data_sent_bytes())
+            })
+            .iter()
+            .sum();
+            let want = crate::netsim::ring_wire_bytes(world, len);
+            assert_eq!(sent as f64, want, "world={world} len={len}");
+        }
+    }
+
+    #[test]
+    fn broadcast_reaches_everyone() {
+        let got = on_mesh(3, |tr| {
+            let payload = if tr.rank() == 1 { Some(&b"hello"[..]) } else { None };
+            broadcast_bytes(tr, 1, payload)
+        });
+        assert!(got.iter().all(|g| g == b"hello"));
+        let nums = on_mesh(4, |tr| {
+            let mut buf = if tr.rank() == 0 { vec![1.5f32, -2.0] } else { vec![0.0; 2] };
+            broadcast_f32(tr, 0, &mut buf)?;
+            Ok(buf)
+        });
+        assert!(nums.iter().all(|b| b == &[1.5, -2.0]));
+    }
+
+    #[test]
+    fn scalar_and_word_gathers_are_rank_indexed() {
+        let fs = on_mesh(4, |tr| all_gather_f32(tr, tr.rank() as f32 * 2.0));
+        assert!(fs.iter().all(|v| v == &[0.0, 2.0, 4.0, 6.0]));
+        let us = on_mesh(3, |tr| all_gather_u64(tr, 10 + tr.rank() as u64));
+        assert!(us.iter().all(|v| v == &[10, 11, 12]));
+    }
+
+    #[test]
+    fn gather_to_root_orders_by_rank() {
+        let got = on_mesh(3, |tr| {
+            let buf = vec![tr.rank() as f32; 4];
+            gather_to_root(tr, &buf)
+        });
+        let root = got[0].as_ref().unwrap();
+        assert_eq!(root.len(), 3);
+        for (r, b) in root.iter().enumerate() {
+            assert_eq!(b, &vec![r as f32; 4]);
+        }
+        assert!(got[1].is_none() && got[2].is_none());
+    }
+}

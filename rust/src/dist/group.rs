@@ -1,0 +1,150 @@
+//! Process group: one worker thread per rank over a transport mesh.
+//!
+//! `run_group(kind, world, f)` builds the mesh, spawns a scoped worker
+//! thread per rank, runs `f(rank, transport)` on each, and returns the
+//! per-rank results **with each rank's final counter snapshot**, in
+//! rank order. Failure containment: a rank that errors (or panics)
+//! drops its transport on the way out, which closes its links and
+//! unblocks any peer waiting in `recv` — the group fails loudly instead
+//! of deadlocking.
+//!
+//! Workers that need private randomness fork it with [`rank_rng`]: the
+//! per-rank streams derive from `(seed, rank)` alone — never from
+//! scheduling — preserving the repo's byte-determinism contract.
+
+use crate::dist::transport::{mem_mesh, tcp_mesh, Counters, Transport};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+use crate::{bail, err};
+
+/// Which transport a distributed run uses (`--transport mem|tcp`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process channel mesh.
+    Mem,
+    /// TCP-loopback mesh (ephemeral 127.0.0.1 ports).
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        Ok(match s {
+            "mem" => TransportKind::Mem,
+            "tcp" => TransportKind::Tcp,
+            other => bail!("unknown transport {other:?} (mem|tcp)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Mem => "mem",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// Build a rank-indexed mesh of boxed transports.
+pub fn make_mesh(kind: TransportKind, world: usize) -> Result<Vec<Box<dyn Transport>>> {
+    Ok(match kind {
+        TransportKind::Mem => {
+            mem_mesh(world).into_iter().map(|t| Box::new(t) as Box<dyn Transport>).collect()
+        }
+        TransportKind::Tcp => {
+            tcp_mesh(world)?.into_iter().map(|t| Box::new(t) as Box<dyn Transport>).collect()
+        }
+    })
+}
+
+/// The independent stream rank `r` draws from (stable under rank-count
+/// changes for the other ranks' streams).
+pub fn rank_rng(seed: u64, rank: usize) -> Rng {
+    Rng::new(seed).fork(0xD157_0000 ^ rank as u64)
+}
+
+/// Spawn `world` rank workers over a fresh `kind` mesh, run `f` on
+/// each, and return `(result, counter snapshot)` per rank, rank-indexed.
+/// The first rank error (lowest rank) is surfaced; a worker panic is
+/// reported as an error naming the rank.
+pub fn run_group<R, F>(kind: TransportKind, world: usize, f: F) -> Result<Vec<(R, Counters)>>
+where
+    R: Send,
+    F: Fn(usize, &mut dyn Transport) -> Result<R> + Sync,
+{
+    let mesh = make_mesh(kind, world)?;
+    let f = &f;
+    let joined: Vec<std::thread::Result<(Result<R>, Counters)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = mesh
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut tr)| {
+                s.spawn(move || {
+                    let out = f(rank, &mut *tr);
+                    (out, tr.counters().clone())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join()).collect()
+    });
+    let mut out = Vec::with_capacity(world);
+    for (rank, j) in joined.into_iter().enumerate() {
+        match j {
+            Ok((Ok(r), c)) => out.push((r, c)),
+            Ok((Err(e), _)) => return Err(e.context(format!("rank {rank}"))),
+            Err(_) => return Err(err!("rank {rank} worker panicked")),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::collective;
+
+    #[test]
+    fn group_runs_every_rank_and_snapshots_counters() {
+        for kind in [TransportKind::Mem, TransportKind::Tcp] {
+            let out = run_group(kind, 3, |rank, tr| {
+                let mut buf = vec![rank as f32; 6];
+                collective::all_reduce_mean(tr, &mut buf)?;
+                Ok(buf[0])
+            })
+            .unwrap();
+            assert_eq!(out.len(), 3);
+            for (x, c) in &out {
+                assert_eq!(*x, 1.0); // mean of 0,1,2
+                assert!(c.data_sent_bytes() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_error_propagates_with_rank_context() {
+        let e = run_group(TransportKind::Mem, 2, |rank, tr| {
+            if rank == 1 {
+                crate::bail!("boom");
+            }
+            // rank 0 blocks on a message rank 1 never sends; the error
+            // must still surface (rank 1's transport drop closes links)
+            tr.recv(1).map(|_| 0usize)
+        })
+        .unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("rank"), "{msg}");
+    }
+
+    #[test]
+    fn transport_kind_parse() {
+        assert_eq!(TransportKind::parse("mem").unwrap(), TransportKind::Mem);
+        assert_eq!(TransportKind::parse("tcp").unwrap().name(), "tcp");
+        assert!(TransportKind::parse("rdma").is_err());
+    }
+
+    #[test]
+    fn rank_rng_streams_differ() {
+        let a = rank_rng(7, 0).next_u64();
+        let b = rank_rng(7, 1).next_u64();
+        assert_ne!(a, b);
+        assert_eq!(a, rank_rng(7, 0).next_u64());
+    }
+}

@@ -1,0 +1,28 @@
+//! Real multi-rank data parallelism: pluggable transports, deterministic
+//! ring-volume collectives, and the process group that runs one worker
+//! thread per DP rank.
+//!
+//! This is the execution substrate behind `edgc train --dp N --transport
+//! mem|tcp`: instead of averaging replica gradients inside one address
+//! space (`coordinator::engine::Engine::allreduce`), each rank owns its
+//! model replica, data shard and error-feedback state, and the PowerSGD
+//! P/Q factors are all-reduced through a [`transport::Transport`] —
+//! moving real bytes whose per-link counters calibrate the `netsim`
+//! ring model (DESIGN.md §Distributed execution).
+//!
+//! * [`transport`] — `Transport` trait + in-process channel mesh and
+//!   TCP-loopback mesh, per-link byte/message counters (data vs diag
+//!   traffic classes)
+//! * [`collective`] — chunked reduce-scatter / all-gather / broadcast
+//!   over f32 slices; fixed chunk boundaries and rank-ordered folds
+//!   make every result byte-identical to `compress::allreduce_mean`
+//!   for any rank count
+//! * [`group`] — `run_group`: scoped rank worker threads over a mesh,
+//!   per-rank counter snapshots, rank-forked RNG streams
+
+pub mod collective;
+pub mod group;
+pub mod transport;
+
+pub use group::{run_group, TransportKind};
+pub use transport::{Class, Counters, Transport};

@@ -1,0 +1,460 @@
+//! Pluggable rank-to-rank byte transports for the data-parallel group.
+//!
+//! A [`Transport`] gives one rank a point-to-point message channel to
+//! every peer, with per-link byte/message counters — the *measured*
+//! communication volume that `netsim`'s analytic ring model is
+//! calibrated against (DESIGN.md §Distributed execution). Two
+//! implementations, both std-only:
+//!
+//! * [`mem_mesh`] — an in-process channel mesh (`std::sync::mpsc`), one
+//!   FIFO per ordered rank pair; the default for tests/benches and the
+//!   fastest path for single-host multi-rank runs;
+//! * [`tcp_mesh`] — a TCP-loopback mesh over `std::net`: ephemeral
+//!   127.0.0.1 ports (no fixed-port collisions in CI), a full mesh of
+//!   length-prefix-framed streams, one reader thread per link draining
+//!   frames into a per-peer inbox so sends never deadlock against a
+//!   peer that is still computing.
+//!
+//! Both transports deliver per-link FIFO ordering; the collectives
+//! (`dist::collective`) only ever match a receive to a specific peer,
+//! so results are independent of cross-link timing — determinism comes
+//! from the schedule, not the transport.
+//!
+//! Counters are split into two traffic classes: [`Class::Data`] is the
+//! gradient-sync payload (what the wire-volume calibration and the
+//! `AllreduceReport` accounting cross-check cover), [`Class::Diag`] is
+//! metrics-only traffic — the full-gradient gathers behind the Fig.-10
+//! relative-error diagnostic, which a production build would skip and
+//! which therefore must not pollute the calibrated byte counts.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::util::error::{Context, Result};
+use crate::{bail, ensure};
+
+/// Upper bound on a single frame's payload (sanity guard against a
+/// corrupted length prefix on the TCP path).
+const MAX_FRAME: usize = 1 << 30;
+
+/// Which accounting bucket traffic lands in (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Class {
+    /// Gradient-sync payload: counted by the wire-volume calibration.
+    Data,
+    /// Metrics-only traffic (diagnostic gathers): excluded from it.
+    Diag,
+}
+
+/// Byte/message counters for one directed link pair (this rank ↔ peer).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinkStats {
+    pub sent_bytes: u64,
+    pub sent_msgs: u64,
+    pub recv_bytes: u64,
+    pub recv_msgs: u64,
+}
+
+/// Per-peer, per-class counters owned by one rank's transport.
+#[derive(Clone, Debug)]
+pub struct Counters {
+    class: Class,
+    /// Indexed by peer rank (the own-rank slot stays zero).
+    pub data: Vec<LinkStats>,
+    pub diag: Vec<LinkStats>,
+}
+
+impl Counters {
+    fn new(world: usize) -> Counters {
+        Counters {
+            class: Class::Data,
+            data: vec![LinkStats::default(); world],
+            diag: vec![LinkStats::default(); world],
+        }
+    }
+
+    pub fn class(&self) -> Class {
+        self.class
+    }
+
+    pub fn set_class(&mut self, class: Class) {
+        self.class = class;
+    }
+
+    fn bucket(&mut self) -> &mut Vec<LinkStats> {
+        match self.class {
+            Class::Data => &mut self.data,
+            Class::Diag => &mut self.diag,
+        }
+    }
+
+    fn on_send(&mut self, to: usize, bytes: usize) {
+        let l = &mut self.bucket()[to];
+        l.sent_bytes += bytes as u64;
+        l.sent_msgs += 1;
+    }
+
+    fn on_recv(&mut self, from: usize, bytes: usize) {
+        let l = &mut self.bucket()[from];
+        l.recv_bytes += bytes as u64;
+        l.recv_msgs += 1;
+    }
+
+    /// Total payload bytes this rank sent on the data class.
+    pub fn data_sent_bytes(&self) -> u64 {
+        self.data.iter().map(|l| l.sent_bytes).sum()
+    }
+
+    /// Total data-class messages this rank sent.
+    pub fn data_sent_msgs(&self) -> u64 {
+        self.data.iter().map(|l| l.sent_msgs).sum()
+    }
+
+    /// Total payload bytes this rank sent on the diag class.
+    pub fn diag_sent_bytes(&self) -> u64 {
+        self.diag.iter().map(|l| l.sent_bytes).sum()
+    }
+}
+
+/// One rank's endpoint into the group: point-to-point sends/receives
+/// with per-link counters. Each rank worker owns its transport
+/// exclusively (`&mut self` everywhere), so counters are plain fields.
+pub trait Transport: Send {
+    fn rank(&self) -> usize;
+    fn world(&self) -> usize;
+    /// Send one message to `to` (payload bytes only are counted; any
+    /// framing overhead is transport-internal).
+    fn send(&mut self, to: usize, payload: &[u8]) -> Result<()>;
+    /// Receive the next message *from a specific peer* (per-link FIFO).
+    fn recv(&mut self, from: usize) -> Result<Vec<u8>>;
+    fn counters(&self) -> &Counters;
+    fn counters_mut(&mut self) -> &mut Counters;
+    /// Switch the accounting bucket for subsequent traffic.
+    fn set_class(&mut self, class: Class) {
+        self.counters_mut().set_class(class);
+    }
+}
+
+// ------------------------------------------------------------ in-process
+
+/// In-process mesh endpoint: one unbounded FIFO per ordered rank pair.
+pub struct MemTransport {
+    rank: usize,
+    world: usize,
+    peers: Vec<Option<Sender<Vec<u8>>>>,
+    inbox: Vec<Option<Receiver<Vec<u8>>>>,
+    counters: Counters,
+}
+
+/// Build the full in-process mesh: `world` endpoints, rank-indexed.
+pub fn mem_mesh(world: usize) -> Vec<MemTransport> {
+    assert!(world >= 1);
+    let mut peers: Vec<Vec<Option<Sender<Vec<u8>>>>> =
+        (0..world).map(|_| (0..world).map(|_| None).collect()).collect();
+    let mut inbox: Vec<Vec<Option<Receiver<Vec<u8>>>>> =
+        (0..world).map(|_| (0..world).map(|_| None).collect()).collect();
+    for i in 0..world {
+        for j in 0..world {
+            if i != j {
+                let (tx, rx) = channel();
+                peers[i][j] = Some(tx);
+                inbox[j][i] = Some(rx);
+            }
+        }
+    }
+    peers
+        .into_iter()
+        .zip(inbox)
+        .enumerate()
+        .map(|(rank, (peers, inbox))| MemTransport {
+            rank,
+            world,
+            peers,
+            inbox,
+            counters: Counters::new(world),
+        })
+        .collect()
+}
+
+impl Transport for MemTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&mut self, to: usize, payload: &[u8]) -> Result<()> {
+        let tx = self
+            .peers
+            .get(to)
+            .and_then(|p| p.as_ref())
+            .with_context(|| format!("rank {}: no link to rank {to}", self.rank))?;
+        tx.send(payload.to_vec())
+            .ok()
+            .with_context(|| format!("rank {}: link to rank {to} closed", self.rank))?;
+        self.counters.on_send(to, payload.len());
+        Ok(())
+    }
+
+    fn recv(&mut self, from: usize) -> Result<Vec<u8>> {
+        let rx = self
+            .inbox
+            .get(from)
+            .and_then(|p| p.as_ref())
+            .with_context(|| format!("rank {}: no link from rank {from}", self.rank))?;
+        let msg = rx
+            .recv()
+            .ok()
+            .with_context(|| format!("rank {}: link from rank {from} closed", self.rank))?;
+        self.counters.on_recv(from, msg.len());
+        Ok(msg)
+    }
+
+    fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    fn counters_mut(&mut self) -> &mut Counters {
+        &mut self.counters
+    }
+}
+
+// ----------------------------------------------------------- tcp mesh
+
+/// TCP-loopback mesh endpoint (see module docs for the framing and the
+/// per-link reader threads).
+pub struct TcpTransport {
+    rank: usize,
+    world: usize,
+    /// Write side of each link (reader threads own clones).
+    streams: Vec<Option<TcpStream>>,
+    inbox: Vec<Option<Receiver<Vec<u8>>>>,
+    counters: Counters,
+}
+
+fn reader_loop(mut stream: TcpStream, tx: Sender<Vec<u8>>) {
+    loop {
+        let mut lenb = [0u8; 4];
+        if stream.read_exact(&mut lenb).is_err() {
+            return; // peer closed: inbox channel drops, recv() errors
+        }
+        let len = u32::from_le_bytes(lenb) as usize;
+        if len > MAX_FRAME {
+            return;
+        }
+        let mut buf = vec![0u8; len];
+        if stream.read_exact(&mut buf).is_err() || tx.send(buf).is_err() {
+            return;
+        }
+    }
+}
+
+/// Build the full TCP-loopback mesh: `world` listeners on ephemeral
+/// 127.0.0.1 ports, one framed stream per rank pair (rank j dials rank
+/// i for i < j, identifying itself with a 4-byte rank handshake).
+pub fn tcp_mesh(world: usize) -> Result<Vec<TcpTransport>> {
+    assert!(world >= 1);
+    let listeners: Vec<TcpListener> = (0..world)
+        .map(|_| TcpListener::bind("127.0.0.1:0"))
+        .collect::<std::io::Result<_>>()
+        .context("binding loopback listeners")?;
+    let addrs: Vec<SocketAddr> = listeners
+        .iter()
+        .map(|l| l.local_addr())
+        .collect::<std::io::Result<_>>()
+        .context("resolving listener addrs")?;
+
+    // streams[i][j]: rank i's stream to peer j. Dials land in the
+    // listener backlog, so dial-then-accept from one thread is safe.
+    let mut streams: Vec<Vec<Option<TcpStream>>> =
+        (0..world).map(|_| (0..world).map(|_| None).collect()).collect();
+    for i in 0..world {
+        for j in (i + 1)..world {
+            let mut s = TcpStream::connect(addrs[i])
+                .with_context(|| format!("rank {j} dialing rank {i}"))?;
+            s.set_nodelay(true)?;
+            s.write_all(&(j as u32).to_le_bytes())?;
+            streams[j][i] = Some(s);
+        }
+        for _ in (i + 1)..world {
+            let (mut s, _) = listeners[i].accept().with_context(|| format!("rank {i} accept"))?;
+            s.set_nodelay(true)?;
+            let mut idb = [0u8; 4];
+            s.read_exact(&mut idb)?;
+            let peer = u32::from_le_bytes(idb) as usize;
+            ensure!(peer > i && peer < world, "bad handshake rank {peer} at rank {i}");
+            ensure!(streams[i][peer].is_none(), "duplicate link {i} <- {peer}");
+            streams[i][peer] = Some(s);
+        }
+    }
+
+    let mut out = Vec::with_capacity(world);
+    for (rank, row) in streams.into_iter().enumerate() {
+        let mut inbox = Vec::with_capacity(world);
+        let mut writers = Vec::with_capacity(world);
+        for stream in row {
+            match stream {
+                Some(s) => {
+                    let (tx, rx) = channel();
+                    let rs = s.try_clone().context("cloning stream for reader")?;
+                    std::thread::spawn(move || reader_loop(rs, tx));
+                    inbox.push(Some(rx));
+                    writers.push(Some(s));
+                }
+                None => {
+                    inbox.push(None);
+                    writers.push(None);
+                }
+            }
+        }
+        out.push(TcpTransport {
+            rank,
+            world,
+            streams: writers,
+            inbox,
+            counters: Counters::new(world),
+        });
+    }
+    Ok(out)
+}
+
+impl Transport for TcpTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&mut self, to: usize, payload: &[u8]) -> Result<()> {
+        if payload.len() > MAX_FRAME {
+            bail!("frame of {} bytes exceeds MAX_FRAME", payload.len());
+        }
+        let s = self
+            .streams
+            .get_mut(to)
+            .and_then(|p| p.as_mut())
+            .with_context(|| format!("rank {}: no link to rank {to}", self.rank))?;
+        s.write_all(&(payload.len() as u32).to_le_bytes())
+            .and_then(|_| s.write_all(payload))
+            .with_context(|| format!("rank {}: send to rank {to}", self.rank))?;
+        self.counters.on_send(to, payload.len());
+        Ok(())
+    }
+
+    fn recv(&mut self, from: usize) -> Result<Vec<u8>> {
+        let rx = self
+            .inbox
+            .get(from)
+            .and_then(|p| p.as_ref())
+            .with_context(|| format!("rank {}: no link from rank {from}", self.rank))?;
+        let msg = rx
+            .recv()
+            .ok()
+            .with_context(|| format!("rank {}: link from rank {from} closed", self.rank))?;
+        self.counters.on_recv(from, msg.len());
+        Ok(msg)
+    }
+
+    fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    fn counters_mut(&mut self) -> &mut Counters {
+        &mut self.counters
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // Unblock peers' reader threads (EOF) so a failing rank cannot
+        // leave the rest of the group stuck in recv().
+        for s in self.streams.iter().flatten() {
+            s.shutdown(Shutdown::Both).ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ping_pong(mut mesh: Vec<impl Transport>) {
+        let b = mesh.pop().unwrap();
+        let a = mesh.pop().unwrap();
+        let (mut a, mut b) = (a, b);
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                a.send(1, b"ping").unwrap();
+                assert_eq!(a.recv(1).unwrap(), b"pong");
+                assert_eq!(a.counters().data[1].sent_bytes, 4);
+                assert_eq!(a.counters().data[1].recv_msgs, 1);
+            });
+            s.spawn(move || {
+                assert_eq!(b.recv(0).unwrap(), b"ping");
+                b.send(0, b"pong").unwrap();
+            });
+        });
+    }
+
+    #[test]
+    fn mem_ping_pong_counts() {
+        ping_pong(mem_mesh(2));
+    }
+
+    #[test]
+    fn tcp_ping_pong_counts() {
+        ping_pong(tcp_mesh(2).unwrap());
+    }
+
+    #[test]
+    fn per_link_fifo_order() {
+        let mut mesh = mem_mesh(2);
+        let mut b = mesh.pop().unwrap();
+        let mut a = mesh.pop().unwrap();
+        a.send(1, b"first").unwrap();
+        a.send(1, b"second").unwrap();
+        assert_eq!(b.recv(0).unwrap(), b"first");
+        assert_eq!(b.recv(0).unwrap(), b"second");
+    }
+
+    #[test]
+    fn diag_class_counts_separately() {
+        let mut mesh = mem_mesh(2);
+        let mut b = mesh.pop().unwrap();
+        let mut a = mesh.pop().unwrap();
+        a.send(1, &[0u8; 10]).unwrap();
+        a.set_class(Class::Diag);
+        a.send(1, &[0u8; 100]).unwrap();
+        a.set_class(Class::Data);
+        assert_eq!(a.counters().data_sent_bytes(), 10);
+        assert_eq!(a.counters().diag_sent_bytes(), 100);
+        b.recv(0).unwrap();
+        b.set_class(Class::Diag);
+        b.recv(0).unwrap();
+        assert_eq!(b.counters().data[0].recv_bytes, 10);
+        assert_eq!(b.counters().diag[0].recv_bytes, 100);
+    }
+
+    #[test]
+    fn send_to_self_or_out_of_range_errors() {
+        let mut mesh = mem_mesh(2);
+        let mut a = mesh.remove(0);
+        assert!(a.send(0, b"x").is_err());
+        assert!(a.send(5, b"x").is_err());
+        assert!(a.recv(0).is_err());
+    }
+
+    #[test]
+    fn closed_tcp_link_errors_instead_of_hanging() {
+        let mut mesh = tcp_mesh(2).unwrap();
+        let mut b = mesh.pop().unwrap();
+        let a = mesh.pop().unwrap();
+        drop(a); // shutdown propagates EOF to b's reader
+        assert!(b.recv(0).is_err());
+    }
+}

@@ -19,6 +19,9 @@
 //! * [`cqm`] — CQM: Marchenko–Pastur error model `g(r; m, n)` and the
 //!   Theorem-3 rank update
 //! * [`compress`] — PowerSGD engine: factor state, error feedback, masks
+//! * [`dist`] — multi-rank data parallelism: pluggable transports
+//!   (in-process mesh, TCP loopback), deterministic ring-volume
+//!   collectives, rank worker groups
 //! * [`netsim`] — cluster network model (ring all-reduce, paper clusters)
 //! * [`pipesim`] — discrete-event 1F1B pipeline simulator
 //! * [`coordinator`] — the training orchestrator + EDGC controller (DAC)
@@ -38,6 +41,7 @@ pub mod config;
 pub mod coordinator;
 pub mod cqm;
 pub mod data;
+pub mod dist;
 pub mod entropy;
 pub mod eval;
 pub mod metrics;

@@ -14,7 +14,8 @@
 use edgc::util::error::Result;
 
 use edgc::config::{cluster_by_name, Method, TrainConfig};
-use edgc::coordinator::{Backend, Trainer};
+use edgc::coordinator::{run_distributed, Backend, Trainer};
+use edgc::dist::TransportKind;
 use edgc::repro;
 use edgc::runtime::Runtime;
 use edgc::util::cli::{Args, Spec};
@@ -38,6 +39,12 @@ fn spec() -> Spec {
             ("beta", "X", "GDS gradient sampling rate (default 0.25)"),
             ("cluster", "NAME", "cluster1|cluster2|cluster3 (default cluster1)"),
             ("backend", "NAME", "artifact|host compression path (default artifact)"),
+            (
+                "transport",
+                "NAME",
+                "run --dp N as real rank workers over mem|tcp collectives \
+                 (default: centralized in-process all-reduce)",
+            ),
             ("config", "FILE", "TOML config file (flags override)"),
             ("out", "DIR", "output directory for tables (default runs)"),
             ("jobs", "N", "reproduce: parallel experiment workers (default: all cores)"),
@@ -112,23 +119,50 @@ fn backend_of(args: &Args) -> Result<Backend> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
-    let backend = backend_of(args)?;
+    // distributed runs execute the host path on every rank; an explicit
+    // --backend artifact alongside --transport is a contradiction
+    let transport = args.opt("transport").map(TransportKind::parse).transpose()?;
+    let backend = match (transport, args.opt("backend")) {
+        (Some(_), None | Some("host")) => Backend::Host,
+        (Some(_), Some(other)) => {
+            edgc::bail!("--transport requires the host backend (got --backend {other})")
+        }
+        (None, _) => backend_of(args)?,
+    };
     // one worker per core by default; outputs are byte-identical for
     // any thread count (see util::par), so this is purely a speed knob
     edgc::util::par::set_threads(args.usize_or("threads", 0)?);
     println!(
-        "[edgc] training {} steps, method={}, dp={}, pp={}, cluster={}, backend={:?}, threads={}",
+        "[edgc] training {} steps, method={}, dp={}, pp={}, cluster={}, backend={:?}, \
+         threads={}, transport={}",
         cfg.steps,
         cfg.method.name(),
         cfg.dp,
         cfg.pp,
         cfg.cluster.name,
         backend,
-        edgc::util::par::threads()
+        edgc::util::par::threads(),
+        transport.map_or("centralized", |k| k.name()),
     );
     let out_dir = cfg.out_dir.clone();
-    let mut tr = Trainer::new(cfg, backend)?;
-    let s = tr.run()?;
+    let dp = cfg.dp;
+    let s = match transport {
+        None => {
+            let mut tr = Trainer::new(cfg, backend)?;
+            tr.run()?
+        }
+        Some(kind) => {
+            let run = run_distributed(cfg, backend, kind)?;
+            let measured: u64 = run.counters.iter().map(|c| c.data_sent_bytes()).sum();
+            let modeled = edgc::netsim::ring_wire_bytes(dp, run.summary.total_comm_floats);
+            println!(
+                "wire traffic        : {measured} bytes measured over {} ({:.0} modeled ring)",
+                kind.name(),
+                modeled
+            );
+            run.summary
+        }
+    };
     s.curve.write(&out_dir)?;
     println!("\nmethod              : {}", s.method);
     println!("final train loss    : {:.4}", s.final_train_loss);

@@ -89,6 +89,28 @@ pub fn ring_allreduce_time(link: Link, k: usize, bytes: usize) -> f64 {
     steps as f64 * (link.latency_us * 1e-6 + chunk * 8.0 / (link.gbps * 1e9))
 }
 
+/// Ring all-reduce per-participant traffic factor: each rank moves
+/// 2(k−1)/k of the vector across the two phases.
+pub fn ring_traffic_factor(k: usize) -> f64 {
+    if k <= 1 {
+        return 0.0;
+    }
+    2.0 * (k - 1) as f64 / k as f64
+}
+
+/// Modeled wire bytes summed over all `k` participants for all-reducing
+/// `floats` f32 values: `2(k−1) · 4 · floats`. This is the identity the
+/// `dist` transports' measured data-class counters are calibrated
+/// against — it holds exactly for the chunked reduce-scatter +
+/// all-gather schedule at any chunk split (`tests/determinism.rs` pins
+/// the measured/modeled agreement for full training runs).
+pub fn ring_wire_bytes(k: usize, floats: usize) -> f64 {
+    if k <= 1 {
+        return 0.0;
+    }
+    (2 * (k - 1)) as f64 * 4.0 * floats as f64
+}
+
 /// PowerSGD compression compute time for an m×n matrix at rank r:
 /// two GEMMs (2·m·n·r flops each) + Gram–Schmidt (≈2·m·r²).
 pub fn compress_time(c: &Cluster, m: usize, n: usize, r: usize) -> f64 {
@@ -201,6 +223,20 @@ mod tests {
         let t2 = ring_allreduce_time(l, 2, 1 << 20);
         let t8 = ring_allreduce_time(l, 8, 1 << 20);
         assert!((t2 / t8 - (1.0 / 1.75)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_factor_and_wire_bytes_identities() {
+        assert_eq!(ring_traffic_factor(1), 0.0);
+        assert!((ring_traffic_factor(2) - 1.0).abs() < 1e-12);
+        assert!((ring_traffic_factor(4) - 1.5).abs() < 1e-12);
+        // wire bytes = per-rank factor × ranks × 4 bytes × floats
+        for k in 2..6 {
+            let floats = 1000;
+            let want = ring_traffic_factor(k) * k as f64 * 4.0 * floats as f64;
+            assert!((ring_wire_bytes(k, floats) - want).abs() < 1e-9);
+        }
+        assert_eq!(ring_wire_bytes(1, 1000), 0.0);
     }
 
     #[test]

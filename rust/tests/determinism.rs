@@ -9,7 +9,8 @@ use std::collections::BTreeMap;
 use std::sync::{Mutex, MutexGuard};
 
 use edgc::config::{Method, TrainConfig};
-use edgc::coordinator::{Backend, Trainer};
+use edgc::coordinator::{run_distributed, Backend, Trainer};
+use edgc::dist::TransportKind;
 use edgc::repro::{campaign, Opts};
 use edgc::util::par;
 
@@ -77,6 +78,64 @@ fn training_is_byte_identical_across_thread_counts() {
     }
 }
 
+/// The acceptance pin for the dist subsystem: `--dp 4` over the mem and
+/// tcp transports must produce metrics (curve table) and parameters
+/// byte-identical to each other and to the centralized
+/// `Engine::allreduce` path at the same seed — and the measured
+/// data-class transport counters must agree with the
+/// `AllreduceReport`/netsim accounting to within 1% (the slack covers
+/// the control plane: rank broadcasts, loss gathers, checksums).
+#[test]
+fn distributed_mem_and_tcp_match_centralized_bytes() {
+    let _knob = hold_par_knob();
+    par::set_threads(1);
+    // FixedRank compresses from step 0, so the counter calibration is
+    // checked on genuinely compressed steps; Edgc exercises the full
+    // control plane (entropy windows, DAC broadcast).
+    for (method, steps) in [(Method::FixedRank(8), 10), (Method::Edgc, 12)] {
+        let mut cfg = tiny_cfg(method, steps);
+        cfg.dp = 4;
+        let (central_params, central_curve) = {
+            let mut t = Trainer::new(cfg.clone(), Backend::Host).unwrap();
+            let s = t.run().unwrap();
+            (t.params().to_vec(), s.curve.render())
+        };
+        for kind in [TransportKind::Mem, TransportKind::Tcp] {
+            let run = run_distributed(cfg.clone(), Backend::Host, kind).unwrap();
+            if method == Method::FixedRank(8) {
+                // the calibration below must cover compressed steps
+                assert!(run.summary.total_comm_floats < run.summary.total_uncompressed_floats);
+            }
+            assert_eq!(
+                run.summary.curve.render(),
+                central_curve,
+                "{method:?}: curve differs over {} transport",
+                kind.name()
+            );
+            let same = run.params.len() == central_params.len()
+                && run
+                    .params
+                    .iter()
+                    .zip(&central_params)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{method:?}: params differ over {} transport", kind.name());
+
+            // wire-volume calibration: measured data-class bytes over
+            // the whole group vs the modeled ring volume for the
+            // accounted float count
+            let measured: u64 = run.counters.iter().map(|c| c.data_sent_bytes()).sum();
+            let modeled = edgc::netsim::ring_wire_bytes(4, run.summary.total_comm_floats);
+            let rel = (measured as f64 - modeled).abs() / modeled;
+            assert!(
+                rel < 0.01,
+                "{method:?}/{}: measured {measured} B vs modeled {modeled} B (rel {rel})",
+                kind.name()
+            );
+        }
+    }
+    par::set_threads(1);
+}
+
 fn tmp_dir(tag: &str) -> String {
     std::env::temp_dir()
         .join(format!("edgc-determinism-{tag}-{}", std::process::id()))
@@ -135,6 +194,34 @@ fn reproduce_outputs_byte_identical_across_jobs_and_threads() {
     for (_, dir) in &runs {
         std::fs::remove_dir_all(dir).ok();
     }
+}
+
+#[test]
+fn cli_tcp_transport_smoke() {
+    // `edgc train --dp 2 --transport tcp` completes over real loopback
+    // sockets (ephemeral ports — safe under parallel CI) and reports
+    // the transport plus measured wire traffic
+    let out = tmp_dir("cli-tcp");
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_edgc"))
+        .args([
+            "train", "--dp", "2", "--transport", "tcp", "--steps", "4", "--eval-every", "4",
+            "--threads", "1", "--out", &out,
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&status.stdout);
+    let stderr = String::from_utf8_lossy(&status.stderr);
+    assert!(status.status.success(), "dist train failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("transport=tcp"), "unexpected output:\n{stdout}");
+    assert!(stdout.contains("wire traffic"), "missing counter report:\n{stdout}");
+    std::fs::remove_dir_all(&out).ok();
+
+    // an explicit artifact backend with a transport is a hard error
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_edgc"))
+        .args(["train", "--dp", "2", "--transport", "mem", "--backend", "artifact"])
+        .output()
+        .unwrap();
+    assert!(!status.status.success(), "artifact + transport must be rejected");
 }
 
 #[test]

@@ -145,6 +145,52 @@ fn prop_allreduce_mean_linearity() {
     });
 }
 
+// ------------------------------------------------------------------ dist
+
+#[test]
+fn prop_ring_collectives_equal_allreduce_mean_bitwise() {
+    // The dist determinism contract: chunked reduce-scatter + all-gather
+    // over the in-process mesh is *bit-for-bit* equal to the centralized
+    // allreduce_mean on every rank, for rank counts 1–5 and lengths that
+    // don't divide into chunks evenly — including length < ranks and
+    // length 0.
+    check("ring collectives == allreduce_mean", 30, |rng| {
+        let world = 1 + rng.below(5);
+        // bias toward awkward lengths: 0, < world, world ± 1, larger odd
+        let len = match rng.below(4) {
+            0 => rng.below(world.max(1)), // 0..world (incl. 0)
+            1 => world + rng.below(2),    // right at the boundary
+            _ => 1 + rng.below(97),       // general case
+        };
+        let grads: Vec<Vec<f32>> = (0..world).map(|_| rng.normal_vec(len, 1.0)).collect();
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let (want, _) = allreduce_mean(&refs);
+        let got = edgc::dist::run_group(edgc::dist::TransportKind::Mem, world, |rank, tr| {
+            let mut buf = grads[rank].clone();
+            edgc::dist::collective::all_reduce_mean(tr, &mut buf)?;
+            Ok(buf)
+        })
+        .map_err(|e| e.to_string())?;
+        for (rank, (out, counters)) in got.iter().enumerate() {
+            let same = out.len() == want.len()
+                && out.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+            if !same {
+                return Err(format!("world={world} len={len}: rank {rank} bytes differ"));
+            }
+            // reduce-scatter + all-gather must never move diag traffic
+            if counters.diag_sent_bytes() != 0 {
+                return Err(format!("rank {rank} sent diag traffic"));
+            }
+        }
+        // measured wire volume is exactly the ring model at any split
+        let sent: u64 = got.iter().map(|(_, c)| c.data_sent_bytes()).sum();
+        expect(
+            sent as f64 == edgc::netsim::ring_wire_bytes(world, len),
+            format!("world={world} len={len}: wire {sent} != ring model"),
+        )
+    });
+}
+
 // --------------------------------------------------------------- pipesim
 
 #[test]
