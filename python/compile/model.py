@@ -57,6 +57,9 @@ class ModelConfig:
 #: buckets parameterize the simulator benches — never executed here).
 PRESETS = {
     "tiny": ModelConfig("tiny", vocab=512, d_model=128, n_head=4, n_layer=2, seq_len=64),
+    # depth over width: 4 layers so pipeline-parallel tests can split real
+    # stages (tiny's 2 layers cap --pp at 2) while staying CI-cheap
+    "deep": ModelConfig("deep", vocab=256, d_model=64, n_head=2, n_layer=4, seq_len=32),
     "small": ModelConfig("small", vocab=2048, d_model=256, n_head=8, n_layer=8, seq_len=128),
     "base": ModelConfig("base", vocab=4096, d_model=512, n_head=8, n_layer=12, seq_len=256),
     "e2e100m": ModelConfig("e2e100m", vocab=8192, d_model=768, n_head=12, n_layer=12, seq_len=256),

@@ -101,6 +101,27 @@ impl VirtualClock {
         }
     }
 
+    /// The pipesim spec this clock prices one iteration with, at the
+    /// given per-stage DP communication times.
+    pub fn pipe_spec(&self, dp_comm: Vec<f64>) -> PipeSpec {
+        PipeSpec {
+            t_fwd: vec![self.t_fwd; self.pp],
+            t_bwd: vec![self.t_bwd; self.pp],
+            microbatches: self.microbatches,
+            t_p2p: self.cluster.inter_node.latency_us * 1e-6,
+            dp_comm,
+            t_opt: self.t_opt,
+        }
+    }
+
+    /// Modeled per-stage last-backward-finish times of one iteration
+    /// (before DP sync): the analytic reference the real pipeline
+    /// executor's *measured* finish times are calibrated against
+    /// (`pipesim::fit_microback`; DESIGN.md §Pipeline execution).
+    pub fn modeled_last_bwd(&self) -> Vec<f64> {
+        simulate(&self.pipe_spec(vec![0.0; self.pp])).last_bwd
+    }
+
     /// Advance the clock by one training iteration; returns
     /// (iteration_time, bottleneck_comm_time).
     pub fn step(
@@ -118,14 +139,7 @@ impl VirtualClock {
                 )
             })
             .collect();
-        let spec = PipeSpec {
-            t_fwd: vec![self.t_fwd; self.pp],
-            t_bwd: vec![self.t_bwd; self.pp],
-            microbatches: self.microbatches,
-            t_p2p: self.cluster.inter_node.latency_us * 1e-6,
-            dp_comm: dp_comm.clone(),
-            t_opt: self.t_opt,
-        };
+        let spec = self.pipe_spec(dp_comm);
         let res = simulate(&spec);
         // bottleneck comm: how much iteration time is attributable to DP
         // sync = iteration minus the zero-comm iteration.
@@ -187,6 +201,22 @@ mod tests {
         c.step(&orig, &orig, None);
         assert!(c.total > before);
         assert!((c.compute_total + c.comm_total - c.total).abs() < 1e-9 * c.total);
+    }
+
+    #[test]
+    fn modeled_last_bwd_orders_stage0_last() {
+        // The calibration reference reproduces the Fig.-8 phenomenon the
+        // measured timings are compared against.
+        let c = clock();
+        let lb = c.modeled_last_bwd();
+        assert_eq!(lb.len(), 4);
+        for i in 1..4 {
+            assert!(lb[0] >= lb[i], "{lb:?}");
+        }
+        // slack per stage ≈ t_bwd (+ one p2p hop, orders of magnitude
+        // smaller at these scales)
+        let fit = crate::pipesim::fit_microback(&lb);
+        assert!((fit - c.t_bwd).abs() < 1e-3 * c.t_bwd, "{fit} vs {}", c.t_bwd);
     }
 
     #[test]

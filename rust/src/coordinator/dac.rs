@@ -189,7 +189,23 @@ impl Dac {
     /// Algorithm 2 / Eq. 4: per-stage ranks aligned to stage 1's
     /// communication completion. Stage i (1-indexed position offset i−1)
     /// has (i−1)·T̄_microBack more budget: r_i = (T_com(r_1) + (i−1)·T̄b)/η.
+    ///
+    /// Uses the *modeled* slack `(i−1)·T̄_microBack`. The byte-determinism
+    /// contract (pp/dp/transport/thread-invariant curves) requires rank
+    /// decisions to be a pure function of the training stream, so the
+    /// real pipeline's wall-clock measurements feed the calibration
+    /// report (`pipesim::fit_microback`) rather than this decision —
+    /// [`Dac::stage_ranks_for_slack`] is the same Eq.-4 arithmetic with
+    /// explicit budgets for measured-slack diagnostics.
     pub fn stage_ranks(&self) -> Option<Vec<usize>> {
+        let slack: Vec<f64> = (0..self.stages).map(|i| i as f64 * self.microback).collect();
+        self.stage_ranks_for_slack(&slack)
+    }
+
+    /// Eq. 4 with explicit per-stage slack budgets (seconds of extra
+    /// communication time available to each stage relative to stage 1).
+    /// Missing or negative entries are treated as zero slack.
+    pub fn stage_ranks_for_slack(&self, slack: &[f64]) -> Option<Vec<usize>> {
         let r1 = self.stage1_rank()? as f64;
         if !self.params.stage_aligned {
             // Fig.-14 ablation: globally synchronized rank for all stages.
@@ -198,7 +214,7 @@ impl Dac {
         let t1 = self.comm.predict(r1);
         let mut out = Vec::with_capacity(self.stages);
         for i in 0..self.stages {
-            let budget = t1 + i as f64 * self.microback;
+            let budget = t1 + slack.get(i).copied().unwrap_or(0.0).max(0.0);
             let ri = self.comm.rank_for_time(budget);
             let ri = ri.clamp(self.bounds.r_min as f64, self.bounds.r_max as f64);
             out.push(ri.round() as usize);
@@ -300,6 +316,28 @@ mod tests {
         let r1 = ranks[0] as f64;
         let expect2 = ((d.comm.predict(r1) + d.microback) / d.comm.eta).min(64.0);
         assert!((ranks[1] as f64 - expect2).abs() <= 1.0, "{ranks:?} vs {expect2}");
+    }
+
+    #[test]
+    fn measured_slack_uses_same_eq4_arithmetic() {
+        let mut d = mk(100, 10);
+        d.on_window(10, 4.0);
+        d.on_window(20, 3.9);
+        d.on_window(25, 3.8);
+        // modeled slack reproduces stage_ranks exactly
+        let modeled: Vec<f64> = (0..4).map(|i| i as f64 * d.microback).collect();
+        assert_eq!(d.stage_ranks_for_slack(&modeled), d.stage_ranks());
+        // larger measured slack relaxes later stages at least as much
+        let measured: Vec<f64> = (0..4).map(|i| i as f64 * d.microback * 2.0).collect();
+        let m = d.stage_ranks_for_slack(&measured).unwrap();
+        let base = d.stage_ranks().unwrap();
+        for (a, b) in m.iter().zip(&base) {
+            assert!(a >= b, "{m:?} vs {base:?}");
+        }
+        // short/negative slack vectors degrade to zero slack, not panic
+        let z = d.stage_ranks_for_slack(&[]).unwrap();
+        assert_eq!(z.len(), 4);
+        assert!(z.iter().all(|&r| r == z[0]), "{z:?}");
     }
 
     #[test]

@@ -7,9 +7,12 @@
 //! * [`Backend::Host`] — the pure-rust reference path (identical
 //!   semantics, used for large sweeps and cross-checked in tests).
 //!
-//! Tensor→stage assignment mirrors Megatron layer partitioning:
-//! embeddings on stage 0, transformer block i on stage ⌊i·pp/L⌋, final
-//! layernorm on the last stage. 1-D tensors are never compressed.
+//! Tensor→stage assignment mirrors Megatron layer partitioning through
+//! one explicit, shared [`StagePlan`]: embeddings on stage 0, contiguous
+//! balanced layer ranges per stage, final layernorm on the last stage.
+//! 1-D tensors are never compressed.
+
+use std::ops::Range;
 
 use crate::util::error::{Context, Result};
 
@@ -34,19 +37,111 @@ pub struct CompTensor {
     pub comp: TensorCompressor,
 }
 
-/// Megatron-style stage assignment for a parameter name.
-pub fn stage_of(name: &str, n_layer: usize, pp: usize) -> usize {
-    if let Some(rest) = name.strip_prefix('h') {
-        if let Some((idx, _)) = rest.split_once('.') {
-            if let Ok(i) = idx.parse::<usize>() {
-                return (i * pp) / n_layer.max(1);
-            }
+/// The explicit pipeline-stage partition map, shared by the engine, the
+/// trainer, the virtual clock's volume accounting and the real stage
+/// executors (`coordinator::pipeline`).
+///
+/// One convention everywhere: layers split into contiguous balanced
+/// ranges (the first `n_layer % pp` stages one layer longer — the same
+/// boundaries as `dist::collective::chunk_range`). The previous
+/// implicit `⌊i·pp/L⌋` formula produced *unbalanced, non-canonical*
+/// splits for `n_layer % pp != 0` (e.g. L=12, pp=5 → sizes 3,2,3,2,2)
+/// and silently skewed per-stage volume accounting against any executor
+/// partitioning by contiguous ranges; the plan pins sizes 3,3,2,2,2 and
+/// every consumer derives from it (regression-tested below).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StagePlan {
+    pub n_layer: usize,
+    pub pp: usize,
+}
+
+impl StagePlan {
+    pub fn new(n_layer: usize, pp: usize) -> StagePlan {
+        StagePlan { n_layer: n_layer.max(1), pp: pp.max(1) }
+    }
+
+    /// Layer range of `stage` (empty when `pp > n_layer` leaves it bare).
+    pub fn layers(&self, stage: usize) -> Range<usize> {
+        assert!(stage < self.pp, "stage {stage} out of pp {}", self.pp);
+        let base = self.n_layer / self.pp;
+        let rem = self.n_layer % self.pp;
+        let lo = stage * base + stage.min(rem);
+        lo..lo + base + usize::from(stage < rem)
+    }
+
+    /// Stage of transformer layer `i` (out-of-range layer indices clamp
+    /// to the last layer, mirroring the historical tolerance for
+    /// malformed manifests).
+    pub fn stage_of_layer(&self, i: usize) -> usize {
+        let i = i.min(self.n_layer - 1);
+        let base = self.n_layer / self.pp;
+        let rem = self.n_layer % self.pp;
+        let long = (base + 1) * rem; // layers covered by the longer stages
+        if i < long {
+            i / (base + 1)
+        } else {
+            rem + (i - long) / base
         }
     }
-    if name.starts_with("lnf") {
-        return pp.saturating_sub(1);
+
+    /// Stage of a named parameter: embeddings → 0, `lnf*` → last stage,
+    /// `h<i>.*` → its layer's stage.
+    pub fn stage_of_name(&self, name: &str) -> usize {
+        if let Some(rest) = name.strip_prefix('h') {
+            if let Some((idx, _)) = rest.split_once('.') {
+                if let Ok(i) = idx.parse::<usize>() {
+                    return self.stage_of_layer(i);
+                }
+            }
+        }
+        if name.starts_with("lnf") {
+            return self.pp - 1;
+        }
+        0 // embeddings
     }
-    0 // embeddings
+
+    /// Contiguous flat-parameter range of every stage under `man`'s
+    /// layout (stage-indexed). Errors if any stage is empty or the flat
+    /// layout interleaves stages — the per-stage executors slice
+    /// parameters, gradients and optimizer state by these ranges.
+    pub fn param_ranges(&self, man: &Manifest) -> Result<Vec<Range<usize>>> {
+        let mut lo = vec![usize::MAX; self.pp];
+        let mut hi = vec![0usize; self.pp];
+        for p in &man.params {
+            let s = self.stage_of_name(&p.name);
+            lo[s] = lo[s].min(p.offset);
+            hi[s] = hi[s].max(p.offset + p.size());
+        }
+        let mut out = Vec::with_capacity(self.pp);
+        let mut cursor = 0usize;
+        for s in 0..self.pp {
+            crate::ensure!(
+                lo[s] != usize::MAX && lo[s] < hi[s],
+                "stage {s} of {} owns no parameters (pp exceeds usable depth?)",
+                self.pp
+            );
+            crate::ensure!(
+                lo[s] == cursor,
+                "stage {s} params start at {} but the previous stage ended at {cursor} — \
+                 the flat layout interleaves stages",
+                lo[s]
+            );
+            cursor = hi[s];
+            out.push(lo[s]..hi[s]);
+        }
+        crate::ensure!(
+            cursor == man.n_params,
+            "stage ranges end at {cursor}, manifest says {}",
+            man.n_params
+        );
+        Ok(out)
+    }
+}
+
+/// Megatron-style stage assignment for a parameter name (delegates to
+/// the shared [`StagePlan`] convention).
+pub fn stage_of(name: &str, n_layer: usize, pp: usize) -> usize {
+    StagePlan::new(n_layer, pp).stage_of_name(name)
 }
 
 /// Per-step all-reduce report (feeds netsim pricing + Fig. 10 curves).
@@ -81,6 +176,9 @@ pub struct Engine {
     /// Transformer depth of the model (for plain-param stage mapping —
     /// `stage_of` needs the real layer count, not a sentinel).
     pub n_layer: usize,
+    /// The shared stage partition map (same object the trainer and the
+    /// pipeline executors derive layer/param ranges from).
+    pub plan: StagePlan,
     pub tensors: Vec<CompTensor>,
     /// Specs of non-compressible params (1-D + matrices without buckets).
     pub plain: Vec<ParamSpec>,
@@ -96,13 +194,14 @@ impl Engine {
         backend: Backend,
         seed: u64,
     ) -> Engine {
+        let plan = StagePlan::new(manifest.n_layer, pp);
         let mut rng = Rng::new(seed).fork(TAG_ENGINE);
         let mut tensors = Vec::new();
         let mut plain = Vec::new();
         for spec in &manifest.params {
             match manifest.bucket_for(&spec.shape) {
                 Some(bucket) if spec.is_matrix() => {
-                    let stage = stage_of(&spec.name, manifest.n_layer, pp);
+                    let stage = plan.stage_of_name(&spec.name);
                     let comp = TensorCompressor::new(
                         bucket.m,
                         bucket.n,
@@ -118,8 +217,11 @@ impl Engine {
         }
         Engine {
             backend,
-            pp,
-            n_layer: manifest.n_layer,
+            // mirror the plan (which clamps both to >= 1) so the raw
+            // fields can never disagree with the partition map
+            pp: plan.pp,
+            n_layer: plan.n_layer,
+            plan,
             tensors,
             plain,
             n_params: manifest.n_params,
@@ -133,7 +235,7 @@ impl Engine {
             v[t.stage] += t.spec.size();
         }
         for p in &self.plain {
-            v[stage_of(&p.name, self.n_layer, self.pp)] += p.size();
+            v[self.plan.stage_of_name(&p.name)] += p.size();
         }
         v
     }
@@ -178,7 +280,7 @@ impl Engine {
 
         for p in &self.plain {
             mean_range(&mut avg, p.offset, p.size());
-            let st = stage_of(&p.name, self.n_layer, self.pp);
+            let st = self.plan.stage_of_name(&p.name);
             stage_compressed[st] += p.size();
             stage_original[st] += p.size();
         }
@@ -245,6 +347,34 @@ impl Engine {
         grad: &[f32],
         ranks: Option<&[usize]>,
     ) -> Result<AllreduceReport> {
+        self.allreduce_dist_inner(tr, grad, ranks, None)
+    }
+
+    /// Per-stage variant for pipeline-parallel training: only `stage`'s
+    /// tensors and plain params participate, over `tr` — the stage's DP
+    /// subgroup (a [`crate::dist::SubTransport`] whose local ranks are
+    /// the DP replica indices, so EF slots and fold order line up with
+    /// the centralized engine). `grad` is still full-length, but only
+    /// offsets inside the stage's params are read; `avg` and the report
+    /// slots of other stages stay zero.
+    pub fn allreduce_dist_stage(
+        &mut self,
+        tr: &mut dyn Transport,
+        grad: &[f32],
+        ranks: Option<&[usize]>,
+        stage: usize,
+    ) -> Result<AllreduceReport> {
+        crate::ensure!(stage < self.pp, "stage {stage} out of pp {}", self.pp);
+        self.allreduce_dist_inner(tr, grad, ranks, Some(stage))
+    }
+
+    fn allreduce_dist_inner(
+        &mut self,
+        tr: &mut dyn Transport,
+        grad: &[f32],
+        ranks: Option<&[usize]>,
+        only_stage: Option<usize>,
+    ) -> Result<AllreduceReport> {
         crate::ensure!(
             self.backend == Backend::Host,
             "distributed all-reduce runs the host backend only"
@@ -284,13 +414,23 @@ impl Engine {
         };
 
         for p in &self.plain {
+            let st = self.plan.stage_of_name(&p.name);
+            if let Some(s) = only_stage {
+                if st != s {
+                    continue;
+                }
+            }
             mean_range(&mut *tr, &mut avg, p.offset, p.size())?;
-            let st = stage_of(&p.name, self.n_layer, self.pp);
             stage_compressed[st] += p.size();
             stage_original[st] += p.size();
         }
 
         for t in &mut self.tensors {
+            if let Some(s) = only_stage {
+                if t.stage != s {
+                    continue;
+                }
+            }
             let off = t.spec.offset;
             let len = t.spec.size();
             stage_original[t.stage] += len;
@@ -457,6 +597,103 @@ mod tests {
         assert_eq!(stage_of("lnf_g", 8, 4), 3);
         // uneven split still lands in range
         assert!(stage_of("h11.fc_w", 12, 4) < 4);
+    }
+
+    #[test]
+    fn stage_plan_uneven_splits_are_balanced_and_consistent() {
+        // Regression: the old ⌊i·pp/L⌋ formula gave L=12, pp=5 the
+        // lopsided sizes 3,2,3,2,2; the canonical plan pins 3,3,2,2,2
+        // and layers()/stage_of_layer agree on every layer.
+        let plan = StagePlan::new(12, 5);
+        let sizes: Vec<usize> = (0..5).map(|s| plan.layers(s).len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2, 2]);
+        for (pp, layers) in [(5usize, 12usize), (4, 7), (3, 8), (2, 5), (1, 9), (6, 4)] {
+            let plan = StagePlan::new(layers, pp);
+            let mut covered = 0usize;
+            for s in 0..pp {
+                let r = plan.layers(s);
+                assert_eq!(r.start, covered, "layers={layers} pp={pp} stage={s}");
+                covered = r.end;
+                for i in r {
+                    assert_eq!(plan.stage_of_layer(i), s, "layers={layers} pp={pp} layer={i}");
+                }
+            }
+            assert_eq!(covered, layers);
+            // balanced: sizes differ by at most one, non-increasing
+            let sizes: Vec<usize> = (0..pp).map(|s| plan.layers(s).len()).collect();
+            let (mx, mn) = (*sizes.iter().max().unwrap(), *sizes.iter().min().unwrap());
+            assert!(mx - mn <= 1, "{sizes:?}");
+            assert!(sizes.windows(2).all(|w| w[0] >= w[1]), "{sizes:?}");
+        }
+    }
+
+    #[test]
+    fn stage_plan_param_ranges_tile_the_flat_layout() {
+        let man = Manifest::synthesize("tiny", 2, 0).unwrap();
+        let plan = StagePlan::new(man.n_layer, 2);
+        let ranges = plan.param_ranges(&man).unwrap();
+        assert_eq!(ranges.len(), 2);
+        assert_eq!(ranges[0].start, 0);
+        assert_eq!(ranges[0].end, ranges[1].start);
+        assert_eq!(ranges[1].end, man.n_params);
+        // every param maps inside its stage's range
+        for p in &man.params {
+            let s = plan.stage_of_name(&p.name);
+            let inside = p.offset >= ranges[s].start && p.offset + p.size() <= ranges[s].end;
+            assert!(inside, "{}", p.name);
+        }
+        // engine volume accounting derives from the same ranges: the
+        // per-stage full volume equals the range length (every float in
+        // a stage's contiguous range belongs to that stage)
+        let e = Engine::new(&man, 2, 1, false, Backend::Host, 0);
+        let vol = e.stage_full_volume();
+        for s in 0..2 {
+            assert_eq!(vol[s], ranges[s].len(), "stage {s}");
+        }
+        // pp deeper than the model: empty stage must fail loudly, not
+        // silently skew accounting
+        let plan4 = StagePlan::new(man.n_layer, 4);
+        assert!(plan4.param_ranges(&man).is_err());
+    }
+
+    #[test]
+    fn per_stage_allreduce_dist_covers_exactly_one_stage() {
+        let world = 2usize;
+        let mut rng = Rng::new(50);
+        let grads: Vec<Vec<f32>> = (0..world).map(|_| rng.normal_vec(56, 1.0)).collect();
+        let mut central = Engine::new(&mini_manifest(), 2, world, true, Backend::Host, 5);
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let rep_c = central.allreduce(None, &refs, Some(&[1, 2])).unwrap();
+
+        for stage in 0..2usize {
+            let out =
+                crate::dist::run_group(crate::dist::TransportKind::Mem, world, |rank, tr| {
+                    let mut e = Engine::new(&mini_manifest(), 2, world, true, Backend::Host, 5);
+                    e.allreduce_dist_stage(tr, &grads[rank], Some(&[1, 2]), stage)
+                })
+                .unwrap();
+            for (rep, _) in &out {
+                // this stage's slots match the centralized report...
+                assert_eq!(rep.stage_compressed[stage], rep_c.stage_compressed[stage]);
+                assert_eq!(rep.stage_original[stage], rep_c.stage_original[stage]);
+                // ...the other stage's stay zero
+                assert_eq!(rep.stage_compressed[1 - stage], 0);
+                assert_eq!(rep.stage_original[1 - stage], 0);
+                // avg agrees bitwise where the stage owns params, zero
+                // elsewhere
+                for t in &central.tensors {
+                    let off = t.spec.offset;
+                    let len = t.spec.size();
+                    for j in off..off + len {
+                        if t.stage == stage {
+                            assert_eq!(rep.avg[j].to_bits(), rep_c.avg[j].to_bits());
+                        } else {
+                            assert_eq!(rep.avg[j], 0.0);
+                        }
+                    }
+                }
+            }
+        }
     }
 
     fn mini_manifest() -> Manifest {

@@ -1,16 +1,23 @@
 //! Layer-3 coordinator: the paper's system contribution.
 //!
 //! * [`dac`] — the EDGC controller (warm-up, Algorithm 1, Algorithm 2)
-//! * [`engine`] — compressed DP all-reduce over PJRT artifacts / host
+//! * [`engine`] — compressed DP all-reduce over PJRT artifacts / host,
+//!   plus the shared [`engine::StagePlan`] stage partition map
 //! * [`clock`] — virtual wall-clock (pipesim × netsim composition)
+//! * [`pipeline`] — real 1F1B pipeline-parallel execution over the
+//!   `dist` transports (stage workers, activation framing, measured
+//!   per-stage timings)
 //! * [`trainer`] — the training orchestrator tying it all together
 
 pub mod clock;
 pub mod dac;
 pub mod engine;
+pub mod pipeline;
 pub mod trainer;
 
 pub use clock::VirtualClock;
 pub use dac::{Dac, RankBounds};
-pub use engine::{Backend, Engine};
-pub use trainer::{run_distributed, DistRun, RunSummary, Trainer};
+pub use engine::{Backend, Engine, StagePlan};
+pub use trainer::{
+    run_distributed, run_distributed_pp, DistRun, PipeCalibration, RunSummary, Trainer,
+};

@@ -1,0 +1,633 @@
+//! Real pipeline-parallel execution: the 1F1B microbatch schedule run
+//! by actual stage workers over the `dist` transports (paper §IV-D made
+//! concrete — previously this mechanism existed only inside the
+//! `pipesim` discrete-event simulator).
+//!
+//! Three pieces:
+//!
+//! * **activation framing** — a 13-byte header (kind, microbatch, rows,
+//!   cols) plus the f32 payload; framing is part of the data-class
+//!   payload, so the wire-volume calibration accounts it exactly
+//!   (`netsim::p2p_wire_bytes`);
+//! * [`run_1f1b`] — the schedule driver: executes
+//!   `pipesim::stage_ops(stage, pp, micro)` — the *same* op list the
+//!   simulator prices — with blocking per-link receives enforcing the
+//!   cross-stage dependencies, and records the wall-clock time of the
+//!   stage's last backward (the measured counterpart of
+//!   `PipeResult::last_bwd`, calibrated via `pipesim::fit_microback`);
+//! * [`ModelStage`] — the [`StageStep`] implementation over the host
+//!   executor's stage-scoped pieces (`HostExec::{embed,layer,head}_*`).
+//!
+//! **Byte-determinism contract.** For the same replica batch, running
+//! the layers stage-by-stage and the rows microbatch-by-microbatch
+//! reproduces the centralized `train_step` gradient bit-for-bit:
+//! activations cross stage boundaries as exact f32 buffers, every
+//! backward kernel accumulates per-row contributions in ascending row
+//! order (so consecutive microbatch slices replay the full-batch add
+//! sequence), the loss gradient is scaled by the *full-batch* `1/R` in
+//! every microbatch, and the tied-embedding exchange plus deferred
+//! embedding scatter replay the centralized accumulation order for
+//! `tok_emb` (head contribution first, then example-ascending scatter).
+//! Pinned bitwise in this module's tests and end-to-end in
+//! `tests/determinism.rs`.
+
+use std::ops::Range;
+use std::time::Instant;
+
+use crate::dist::collective::chunk_range;
+use crate::dist::Transport;
+use crate::pipesim;
+use crate::runtime::host::{HeadFwd, HostExec, LayerFwd};
+use crate::util::error::{Context, Result};
+
+/// Bytes of framing per p2p message (kind u8 + microbatch u32 + rows
+/// u32 + cols u32). Part of the data-class payload; the wire-volume
+/// accounting (`netsim::p2p_wire_bytes`) includes it.
+pub const FRAME_HEADER_BYTES: usize = 13;
+
+/// What a p2p frame carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Forward activation, previous stage → next stage.
+    Fwd,
+    /// Activation gradient, next stage → previous stage.
+    Bwd,
+    /// Tied-embedding (`tok_emb`) gradient, last stage → first stage.
+    Tied,
+}
+
+impl FrameKind {
+    fn code(self) -> u8 {
+        match self {
+            FrameKind::Fwd => 0,
+            FrameKind::Bwd => 1,
+            FrameKind::Tied => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<FrameKind> {
+        Ok(match c {
+            0 => FrameKind::Fwd,
+            1 => FrameKind::Bwd,
+            2 => FrameKind::Tied,
+            other => crate::bail!("unknown frame kind {other}"),
+        })
+    }
+}
+
+/// A decoded p2p frame.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub mb: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+/// Encode a frame; `data` must be exactly `rows·cols` floats (both may
+/// be zero — the zero-length microbatch edge still moves a header so
+/// the schedule stays in lockstep).
+pub fn encode_frame(
+    kind: FrameKind,
+    mb: usize,
+    rows: usize,
+    cols: usize,
+    data: &[f32],
+) -> Result<Vec<u8>> {
+    crate::ensure!(
+        data.len() == rows * cols,
+        "frame payload of {} floats for {rows}x{cols}",
+        data.len()
+    );
+    let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + 4 * data.len());
+    out.push(kind.code());
+    out.extend((mb as u32).to_le_bytes());
+    out.extend((rows as u32).to_le_bytes());
+    out.extend((cols as u32).to_le_bytes());
+    for x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    Ok(out)
+}
+
+/// Decode a frame, validating the header against the body length.
+pub fn decode_frame(b: &[u8]) -> Result<Frame> {
+    crate::ensure!(b.len() >= FRAME_HEADER_BYTES, "frame of {} bytes has no header", b.len());
+    let kind = FrameKind::from_code(b[0])?;
+    let mb = u32::from_le_bytes([b[1], b[2], b[3], b[4]]) as usize;
+    let rows = u32::from_le_bytes([b[5], b[6], b[7], b[8]]) as usize;
+    let cols = u32::from_le_bytes([b[9], b[10], b[11], b[12]]) as usize;
+    let body = &b[FRAME_HEADER_BYTES..];
+    crate::ensure!(
+        body.len() == 4 * rows * cols,
+        "frame body of {} bytes for {rows}x{cols}",
+        body.len()
+    );
+    let data = body
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Frame { kind, mb, rows, cols, data })
+}
+
+fn send_frame(
+    tr: &mut dyn Transport,
+    to: usize,
+    kind: FrameKind,
+    mb: usize,
+    rows: usize,
+    cols: usize,
+    data: &[f32],
+) -> Result<()> {
+    tr.send(to, &encode_frame(kind, mb, rows, cols, data)?)
+}
+
+fn recv_frame(tr: &mut dyn Transport, from: usize, want: FrameKind, mb: usize) -> Result<Frame> {
+    let f = decode_frame(&tr.recv(from)?)?;
+    crate::ensure!(
+        f.kind == want && f.mb == mb,
+        "expected {want:?} frame for microbatch {mb}, got {:?} for {}",
+        f.kind,
+        f.mb
+    );
+    Ok(f)
+}
+
+/// One stage's compute, driven by [`run_1f1b`]. Implemented by
+/// [`ModelStage`] for real training and by synthetic steppers in tests
+/// (uniform-time stages for the simulator-agreement property test).
+pub trait StageStep {
+    /// Rows of microbatch `mb`'s activation matrix (0 at the
+    /// zero-length microbatch edge).
+    fn rows(&self, mb: usize) -> usize;
+    /// Activation width (columns).
+    fn width(&self) -> usize;
+    /// Forward of microbatch `mb`: `input` is the previous stage's
+    /// activation (`None` on the first stage); returns the activation
+    /// for the next stage (`None` on the last stage).
+    fn forward(&mut self, mb: usize, input: Option<Vec<f32>>) -> Result<Option<Vec<f32>>>;
+    /// Backward of microbatch `mb`: `grad` is the next stage's
+    /// activation gradient (`None` on the last stage); returns the
+    /// gradient for the previous stage (`None` on the first stage).
+    fn backward(&mut self, mb: usize, grad: Option<Vec<f32>>) -> Result<Option<Vec<f32>>>;
+}
+
+/// Measured timings of one 1F1B iteration on one stage worker.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipeTiming {
+    /// Seconds from schedule start to this stage's last backward
+    /// completing — the measured counterpart of pipesim's `last_bwd`.
+    pub last_bwd: f64,
+}
+
+/// Execute one 1F1B iteration for `stage` of a `pp`-deep pipeline whose
+/// stage workers occupy global ranks `first_rank..first_rank + pp` on
+/// `tr`'s mesh. Activation/gradient frames move on the data traffic
+/// class; blocking per-link receives enforce exactly the dependencies
+/// `pipesim::simulate` models.
+pub fn run_1f1b(
+    tr: &mut dyn Transport,
+    first_rank: usize,
+    stage: usize,
+    pp: usize,
+    micro: usize,
+    step: &mut dyn StageStep,
+) -> Result<PipeTiming> {
+    crate::ensure!(pp >= 1 && stage < pp, "stage {stage} out of pp {pp}");
+    crate::ensure!(micro >= 1, "need at least one microbatch");
+    let me = first_rank + stage;
+    crate::ensure!(
+        tr.rank() == me,
+        "transport rank {} is not stage {stage} of the replica at rank {first_rank}",
+        tr.rank()
+    );
+    let width = step.width();
+    let start = Instant::now();
+    let mut last_bwd = 0.0f64;
+    for op in pipesim::stage_ops(stage, pp, micro) {
+        match op {
+            pipesim::Op::F(i) => {
+                let input = if stage == 0 {
+                    None
+                } else {
+                    let f = recv_frame(&mut *tr, me - 1, FrameKind::Fwd, i)?;
+                    crate::ensure!(
+                        f.rows == step.rows(i) && f.cols == width,
+                        "fwd frame {i} is {}x{}, expected {}x{width}",
+                        f.rows,
+                        f.cols,
+                        step.rows(i)
+                    );
+                    Some(f.data)
+                };
+                let out = step.forward(i, input)?;
+                if stage + 1 < pp {
+                    let out = out.with_context(|| {
+                        format!("stage {stage} produced no activation for microbatch {i}")
+                    })?;
+                    send_frame(&mut *tr, me + 1, FrameKind::Fwd, i, step.rows(i), width, &out)?;
+                }
+            }
+            pipesim::Op::B(i) => {
+                let grad = if stage + 1 == pp {
+                    None
+                } else {
+                    let f = recv_frame(&mut *tr, me + 1, FrameKind::Bwd, i)?;
+                    crate::ensure!(
+                        f.rows == step.rows(i) && f.cols == width,
+                        "bwd frame {i} is {}x{}, expected {}x{width}",
+                        f.rows,
+                        f.cols,
+                        step.rows(i)
+                    );
+                    Some(f.data)
+                };
+                let dx = step.backward(i, grad)?;
+                if stage > 0 {
+                    let dx = dx.with_context(|| {
+                        format!("stage {stage} produced no gradient for microbatch {i}")
+                    })?;
+                    send_frame(&mut *tr, me - 1, FrameKind::Bwd, i, step.rows(i), width, &dx)?;
+                }
+                last_bwd = start.elapsed().as_secs_f64();
+            }
+        }
+    }
+    Ok(PipeTiming { last_bwd })
+}
+
+// ------------------------------------------------------ the model stage
+
+struct MbCache {
+    layers: Vec<LayerFwd>,
+    head: Option<HeadFwd>,
+}
+
+/// [`StageStep`] over the host executor: one (stage, replica) worker's
+/// slice of the transformer. Owns the per-microbatch forward caches,
+/// the stage's gradient accumulation into a full-length buffer, the
+/// per-replica loss sum (last stage), and the deferred embedding
+/// scatter (first stage — replayed after the tied-embedding exchange to
+/// preserve the centralized `tok_emb` accumulation order).
+pub struct ModelStage<'a> {
+    exec: &'a HostExec,
+    flat: &'a [f32],
+    batch: &'a [i32],
+    g: &'a mut Vec<f32>,
+    layers: Range<usize>,
+    first: bool,
+    last: bool,
+    bsz: usize,
+    micro: usize,
+    seq: usize,
+    d: usize,
+    /// 1 / (full-batch rows): the loss-gradient scale every microbatch
+    /// uses so per-microbatch gradients sum to the full-batch gradient.
+    inv_rows: f64,
+    caches: Vec<Option<MbCache>>,
+    deferred_dx: Vec<Option<Vec<f32>>>,
+    loss_sum: f64,
+    loss_n: usize,
+    tok_range: Range<usize>,
+}
+
+impl<'a> ModelStage<'a> {
+    /// `layers` is this stage's contiguous layer range
+    /// (`StagePlan::layers`); `first`/`last` flag pipeline position;
+    /// `g` is the full-length gradient buffer (zeroed by the caller),
+    /// authoritative only inside the stage's param range plus — on the
+    /// first stage, after [`ModelStage::exchange_tied`] — the embedding
+    /// slots.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        exec: &'a HostExec,
+        flat: &'a [f32],
+        batch: &'a [i32],
+        g: &'a mut Vec<f32>,
+        layers: Range<usize>,
+        first: bool,
+        last: bool,
+        micro: usize,
+    ) -> Result<ModelStage<'a>> {
+        let seq = exec.dim_seq_len();
+        let d = exec.dim_d_model();
+        crate::ensure!(micro >= 1, "need at least one microbatch");
+        crate::ensure!(!layers.is_empty(), "stage owns no layers");
+        crate::ensure!(
+            layers.end <= exec.dim_n_layer(),
+            "layer range {layers:?} out of a {}-layer model",
+            exec.dim_n_layer()
+        );
+        crate::ensure!(
+            !batch.is_empty() && batch.len() % (seq + 1) == 0,
+            "batch of {} tokens is not a multiple of seq_len+1 = {}",
+            batch.len(),
+            seq + 1
+        );
+        let bsz = batch.len() / (seq + 1);
+        crate::ensure!(
+            flat.len() == exec.dim_n_params(),
+            "params of {} floats, model has {}",
+            flat.len(),
+            exec.dim_n_params()
+        );
+        crate::ensure!(
+            g.len() == exec.dim_n_params(),
+            "grad buffer of {} floats, model has {}",
+            g.len(),
+            exec.dim_n_params()
+        );
+        let tok_range = exec.param_span("tok_emb")?;
+        Ok(ModelStage {
+            exec,
+            flat,
+            batch,
+            g,
+            layers,
+            first,
+            last,
+            bsz,
+            micro,
+            seq,
+            d,
+            inv_rows: 1.0 / (bsz * seq) as f64,
+            caches: (0..micro).map(|_| None).collect(),
+            deferred_dx: (0..micro).map(|_| None).collect(),
+            loss_sum: 0.0,
+            loss_n: 0,
+            tok_range,
+        })
+    }
+
+    /// Example range of microbatch `mb` (fixed balanced split — the
+    /// same boundaries as the collectives' chunking; may be empty).
+    fn examples(&self, mb: usize) -> Range<usize> {
+        chunk_range(self.bsz, self.micro, mb)
+    }
+
+    fn batch_slice(&self, mb: usize) -> &'a [i32] {
+        let er = self.examples(mb);
+        let row = self.seq + 1;
+        let all: &'a [i32] = self.batch;
+        &all[er.start * row..er.end * row]
+    }
+
+    /// Tied-embedding gradient exchange + deferred embedding scatter;
+    /// call once after [`run_1f1b`] completes. The last stage sends its
+    /// accumulated `tok_emb` head contribution to the first stage
+    /// (Megatron's embedding-group sync, one data-class frame); the
+    /// first stage seeds its `tok_emb` slot with it and then replays
+    /// the per-microbatch embedding scatter in microbatch order —
+    /// reproducing the centralized order (head adds, then
+    /// example-ascending scatter adds) bit-for-bit.
+    pub fn exchange_tied(
+        &mut self,
+        tr: &mut dyn Transport,
+        first_rank: usize,
+        last_rank: usize,
+    ) -> Result<()> {
+        let (v, d) = (self.exec.dim_vocab(), self.d);
+        if self.last && !self.first {
+            let tok = &self.g[self.tok_range.clone()];
+            send_frame(tr, first_rank, FrameKind::Tied, 0, v, d, tok)?;
+        }
+        if self.first {
+            if !self.last {
+                let f = recv_frame(tr, last_rank, FrameKind::Tied, 0)?;
+                crate::ensure!(
+                    f.rows == v && f.cols == d,
+                    "tied frame is {}x{}, expected {v}x{d}",
+                    f.rows,
+                    f.cols
+                );
+                self.g[self.tok_range.clone()].copy_from_slice(&f.data);
+            }
+            for mb in 0..self.micro {
+                if let Some(dx) = self.deferred_dx[mb].take() {
+                    let mb_bsz = self.examples(mb).len();
+                    let bs = self.batch_slice(mb);
+                    self.exec.embed_bwd(bs, mb_bsz, &dx, self.g)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// This replica's mean training loss (last stage only): one running
+    /// f64 sum over per-example losses in example order — the exact
+    /// grouping the centralized `train_step` mean uses.
+    pub fn replica_loss(&self) -> Option<f32> {
+        if self.last {
+            Some((self.loss_sum / self.loss_n.max(1) as f64) as f32)
+        } else {
+            None
+        }
+    }
+}
+
+impl StageStep for ModelStage<'_> {
+    fn rows(&self, mb: usize) -> usize {
+        self.examples(mb).len() * self.seq
+    }
+
+    fn width(&self) -> usize {
+        self.d
+    }
+
+    fn forward(&mut self, mb: usize, input: Option<Vec<f32>>) -> Result<Option<Vec<f32>>> {
+        crate::ensure!(mb < self.micro, "microbatch {mb} out of {}", self.micro);
+        let mb_bsz = self.examples(mb).len();
+        let rows = mb_bsz * self.seq;
+        if rows == 0 {
+            if let Some(x) = &input {
+                crate::ensure!(
+                    x.is_empty(),
+                    "zero-length microbatch {mb} received {} floats of activation",
+                    x.len()
+                );
+            }
+            self.caches[mb] = Some(MbCache { layers: Vec::new(), head: None });
+            return Ok(if self.last { None } else { Some(Vec::new()) });
+        }
+        let mut x = match (self.first, input) {
+            (true, None) => {
+                let bs = self.batch_slice(mb);
+                self.exec.embed_fwd(self.flat, bs, mb_bsz)?
+            }
+            (false, Some(x)) => {
+                crate::ensure!(
+                    x.len() == rows * self.d,
+                    "activation of {} floats for {rows} rows",
+                    x.len()
+                );
+                x
+            }
+            (true, Some(_)) => crate::bail!("first stage takes no activation input"),
+            (false, None) => crate::bail!("non-first stage needs an activation input"),
+        };
+        let mut lcs = Vec::with_capacity(self.layers.len());
+        for l in self.layers.clone() {
+            lcs.push(self.exec.layer_fwd(self.flat, l, &mut x, mb_bsz)?);
+        }
+        if self.last {
+            let bs = self.batch_slice(mb);
+            let head = self.exec.head_fwd(self.flat, &x, bs, mb_bsz, true, self.inv_rows)?;
+            for &l in &head.losses {
+                self.loss_sum += l as f64;
+            }
+            self.loss_n += head.losses.len();
+            self.caches[mb] = Some(MbCache { layers: lcs, head: Some(head) });
+            Ok(None)
+        } else {
+            self.caches[mb] = Some(MbCache { layers: lcs, head: None });
+            Ok(Some(x))
+        }
+    }
+
+    fn backward(&mut self, mb: usize, grad: Option<Vec<f32>>) -> Result<Option<Vec<f32>>> {
+        crate::ensure!(mb < self.micro, "microbatch {mb} out of {}", self.micro);
+        let cache = self.caches[mb]
+            .take()
+            .with_context(|| format!("backward of microbatch {mb} before its forward"))?;
+        let mb_bsz = self.examples(mb).len();
+        let rows = mb_bsz * self.seq;
+        if rows == 0 {
+            return Ok(if self.first { None } else { Some(Vec::new()) });
+        }
+        let mut dx = if self.last {
+            crate::ensure!(grad.is_none(), "last stage takes no gradient input");
+            let head = cache.head.as_ref().context("missing head cache")?;
+            self.exec.head_bwd(self.flat, head, self.g)?
+        } else {
+            let dxv = grad.context("non-last stage needs a gradient input")?;
+            crate::ensure!(
+                dxv.len() == rows * self.d,
+                "gradient of {} floats for {rows} rows",
+                dxv.len()
+            );
+            dxv
+        };
+        for l in self.layers.clone().rev() {
+            let li = l - self.layers.start;
+            self.exec.layer_bwd(self.flat, l, &mut dx, &cache.layers[li], mb_bsz, self.g)?;
+        }
+        if self.first {
+            self.deferred_dx[mb] = Some(dx);
+            Ok(None)
+        } else {
+            Ok(Some(dx))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::StagePlan;
+    use crate::dist::{run_group, TransportKind};
+    use crate::runtime::host::{init_params, HostExec};
+    use crate::runtime::Manifest;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn frame_roundtrip_and_validation() {
+        let cases = [
+            (FrameKind::Fwd, 0usize, 2usize, 3usize),
+            (FrameKind::Bwd, 7, 1, 4),
+            (FrameKind::Tied, 0, 0, 5), // zero-length edge
+        ];
+        for (kind, mb, rows, cols) in cases {
+            let data: Vec<f32> = (0..rows * cols).map(|i| i as f32 * 0.5 - 1.0).collect();
+            let enc = encode_frame(kind, mb, rows, cols, &data).unwrap();
+            assert_eq!(enc.len(), FRAME_HEADER_BYTES + 4 * rows * cols);
+            let f = decode_frame(&enc).unwrap();
+            assert_eq!(f.kind, kind);
+            assert_eq!((f.mb, f.rows, f.cols), (mb, rows, cols));
+            assert_eq!(f.data, data);
+        }
+        // payload/shape mismatch on encode
+        assert!(encode_frame(FrameKind::Fwd, 0, 2, 2, &[0.0]).is_err());
+        // truncated header / body, unknown kind
+        assert!(decode_frame(&[0, 0, 0, 0]).is_err());
+        let mut enc = encode_frame(FrameKind::Fwd, 1, 1, 2, &[1.0, 2.0]).unwrap();
+        enc.pop();
+        assert!(decode_frame(&enc).is_err());
+        let mut enc = encode_frame(FrameKind::Fwd, 1, 0, 0, &[]).unwrap();
+        enc[0] = 7;
+        assert!(decode_frame(&enc).is_err());
+    }
+
+    /// The tentpole pin: staged 1F1B execution over a real mesh
+    /// reproduces the centralized `train_step` bit-for-bit — loss and
+    /// the full flat gradient — for even, uneven and zero-length
+    /// microbatch splits.
+    #[test]
+    fn staged_1f1b_matches_train_step_bitwise() {
+        let man = Manifest::synthesize("tiny", 2, 0).unwrap();
+        let exec = HostExec::new(&man).unwrap();
+        let mut flat = init_params(&man);
+        let mut rng = Rng::new(3);
+        for p in flat.iter_mut() {
+            *p += rng.normal() as f32 * 0.01;
+        }
+        let bsz = 2usize;
+        let batch: Vec<i32> =
+            (0..bsz * (man.seq_len + 1)).map(|i| (i % man.vocab) as i32).collect();
+        let (losses, grads) = exec.train_step(&flat, &batch).unwrap();
+        let mean = losses.iter().map(|&x| x as f64).sum::<f64>() / losses.len() as f64;
+
+        let pp = 2usize;
+        let plan = StagePlan::new(man.n_layer, pp);
+        let ranges = plan.param_ranges(&man).unwrap();
+        // micro=1: trivial split; 2: even; 3 and 5: zero-length edges
+        for micro in [1usize, 2, 3, 5] {
+            let out = run_group(TransportKind::Mem, pp, |stage, tr| {
+                let exec = HostExec::new(&man)?;
+                let mut g = vec![0.0f32; man.n_params];
+                let mut ms = ModelStage::new(
+                    &exec,
+                    &flat,
+                    &batch,
+                    &mut g,
+                    plan.layers(stage),
+                    stage == 0,
+                    stage == pp - 1,
+                    micro,
+                )?;
+                run_1f1b(tr, 0, stage, pp, micro, &mut ms)?;
+                ms.exchange_tied(tr, 0, pp - 1)?;
+                let loss = ms.replica_loss();
+                Ok((g, loss))
+            })
+            .unwrap();
+            let mut full = vec![0.0f32; man.n_params];
+            for (stage, ((g, loss), _)) in out.iter().enumerate() {
+                full[ranges[stage].clone()].copy_from_slice(&g[ranges[stage].clone()]);
+                if stage == pp - 1 {
+                    let l = loss.unwrap();
+                    assert_eq!(l.to_bits(), (mean as f32).to_bits(), "loss at micro={micro}");
+                } else {
+                    assert!(loss.is_none());
+                }
+            }
+            let same = full.iter().zip(&grads).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "gradient differs at micro={micro}");
+        }
+
+        // pp=1: single stage, still microbatched + deferred scatter
+        let plan1 = StagePlan::new(man.n_layer, 1);
+        let out = run_group(TransportKind::Mem, 1, |_, tr| {
+            let exec = HostExec::new(&man)?;
+            let mut g = vec![0.0f32; man.n_params];
+            let mut ms =
+                ModelStage::new(&exec, &flat, &batch, &mut g, plan1.layers(0), true, true, 2)?;
+            run_1f1b(tr, 0, 0, 1, 2, &mut ms)?;
+            ms.exchange_tied(tr, 0, 0)?;
+            Ok(g)
+        })
+        .unwrap();
+        let same = out[0].0.iter().zip(&grads).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "pp=1 microbatched gradient differs");
+    }
+}

@@ -11,19 +11,21 @@
 //!   6. virtual-clock advance (pipesim × netsim) for the paper's
 //!      time axis.
 
-use crate::util::error::Result;
+use crate::util::error::{Context, Result};
 
 use crate::baselines;
 use crate::config::{Method, TrainConfig};
 use crate::coordinator::clock::VirtualClock;
 use crate::coordinator::dac::{Dac, RankBounds};
 use crate::coordinator::engine::{Backend, Engine};
+use crate::coordinator::pipeline::{self, ModelStage};
 use crate::data::{build_probes, Batcher, SynthCorpus};
-use crate::dist::{collective, run_group, Counters, Transport, TransportKind};
+use crate::dist::{collective, run_group, Class, Counters, SubTransport, Transport, TransportKind};
 use crate::entropy::{Gds, GdsConfig, WindowStats};
 use crate::eval;
 use crate::metrics::{ppl, Table};
 use crate::netsim::{self, fit_eta};
+use crate::pipesim;
 use crate::runtime::{lit_f32, lit_i32, to_f32, to_scalar, Runtime};
 
 /// Everything a finished run reports (feeds Tables III/IV/VI, Figs 10-13).
@@ -42,6 +44,10 @@ pub struct RunSummary {
     pub wall_time: f64,
     pub total_comm_floats: usize,
     pub total_uncompressed_floats: usize,
+    /// Per-stage DP-synced floats over the whole run (sums to
+    /// `total_comm_floats`) — the per-stage wire-volume accounting the
+    /// pipeline determinism pin checks against measured counters.
+    pub stage_comm_floats: Vec<usize>,
     pub entropy_trace: Vec<f64>,
     /// Aligned (window, stage-1 rank) decisions; `window` indexes
     /// `entropy_trace` (see `Dac::rank_trace`).
@@ -189,7 +195,22 @@ impl Trainer {
     }
 
     fn adam_update(&mut self, grads: &[f32], t: usize) -> Result<()> {
-        let n = self.params.len() as i64;
+        let n = self.params.len();
+        self.adam_update_range(grads, t, 0..n)
+    }
+
+    /// [`Trainer::adam_update`] restricted to a flat slice: each
+    /// pipeline-stage worker owns one contiguous parameter range and
+    /// updates only it. Adam is element-wise, so slice updates are
+    /// byte-identical to the corresponding range of a full-vector
+    /// update.
+    fn adam_update_range(
+        &mut self,
+        grads: &[f32],
+        t: usize,
+        range: std::ops::Range<usize>,
+    ) -> Result<()> {
+        let n = range.len() as i64;
         let (b1, b2) = (0.9f64, 0.999f64);
         let scalars = [
             self.cfg.lr as f32,
@@ -202,16 +223,16 @@ impl Trainer {
         let out = self.rt.run(
             "adam",
             &[
-                lit_f32(&self.params, &[n])?,
-                lit_f32(&self.opt_m, &[n])?,
-                lit_f32(&self.opt_v, &[n])?,
-                lit_f32(grads, &[n])?,
+                lit_f32(&self.params[range.clone()], &[n])?,
+                lit_f32(&self.opt_m[range.clone()], &[n])?,
+                lit_f32(&self.opt_v[range.clone()], &[n])?,
+                lit_f32(&grads[range.clone()], &[n])?,
                 lit_f32(&scalars, &[6])?,
             ],
         )?;
-        self.params = to_f32(&out[0])?;
-        self.opt_m = to_f32(&out[1])?;
-        self.opt_v = to_f32(&out[2])?;
+        self.params[range.clone()].copy_from_slice(&to_f32(&out[0])?);
+        self.opt_m[range.clone()].copy_from_slice(&to_f32(&out[1])?);
+        self.opt_v[range].copy_from_slice(&to_f32(&out[2])?);
         Ok(())
     }
 
@@ -285,6 +306,7 @@ impl Trainer {
         );
         let mut total_comm = 0usize;
         let mut total_orig = 0usize;
+        let mut stage_comm_floats = vec![0usize; self.cfg.pp];
         let mut error_samples = Vec::new();
         let window_len = self.cfg.edgc.window.max(1);
 
@@ -317,6 +339,9 @@ impl Trainer {
             let report = self.engine.allreduce(rt_opt, &grads, ranks.as_deref())?;
             total_comm += report.total_compressed();
             total_orig += report.total_original();
+            for (acc, &c) in stage_comm_floats.iter_mut().zip(&report.stage_compressed) {
+                *acc += c;
+            }
 
             // 4. optimizer
             let avg = report.avg.clone();
@@ -392,6 +417,7 @@ impl Trainer {
             wall_time: wall.secs(),
             total_comm_floats: total_comm,
             total_uncompressed_floats: total_orig,
+            stage_comm_floats,
             entropy_trace: self.dac.as_ref().map(|d| d.entropy_trace.clone()).unwrap_or_else(
                 || self.window.history.clone(),
             ),
@@ -438,6 +464,7 @@ impl Trainer {
         );
         let mut total_comm = 0usize;
         let mut total_orig = 0usize;
+        let mut stage_comm_floats = vec![0usize; self.cfg.pp];
         let mut error_samples = Vec::new();
         let window_len = self.cfg.edgc.window.max(1);
 
@@ -473,6 +500,9 @@ impl Trainer {
             let report = self.engine.allreduce_dist(tr, &g, ranks.as_deref())?;
             total_comm += report.total_compressed();
             total_orig += report.total_original();
+            for (acc, &c) in stage_comm_floats.iter_mut().zip(&report.stage_compressed) {
+                *acc += c;
+            }
 
             // 4. optimizer (every rank, identical averaged gradient)
             let avg = report.avg.clone();
@@ -558,6 +588,7 @@ impl Trainer {
             wall_time: wall.secs(),
             total_comm_floats: total_comm,
             total_uncompressed_floats: total_orig,
+            stage_comm_floats,
             entropy_trace: self.dac.as_ref().map(|d| d.entropy_trace.clone()).unwrap_or_else(
                 || self.window.history.clone(),
             ),
@@ -565,6 +596,400 @@ impl Trainer {
             error_samples,
             curve,
         }))
+    }
+
+    /// One worker of a real **pipeline-parallel** run: `dp × pp` workers
+    /// over one transport mesh, worker `(replica, stage)` at global rank
+    /// `replica·pp + stage`. Each worker executes only its stage's
+    /// layers (non-interleaved 1F1B with framed p2p activation exchange
+    /// — [`crate::coordinator::pipeline`]), all-reduces its stage's
+    /// compressed gradients within its stage's DP subgroup, and
+    /// Adam-updates its stage's contiguous parameter range. The stage-0
+    /// coordinator (global rank 0) keeps ownership of entropy windows,
+    /// the DAC, the virtual clock, evaluation and the curve, assembling
+    /// cross-stage state from metrics-class gathers; it returns the
+    /// summary plus the measured-vs-modeled timing calibration, every
+    /// other worker returns `None`.
+    ///
+    /// Determinism contract: curve and final parameters are
+    /// byte-identical to the centralized [`Trainer::run`] at the same
+    /// config for any `(pp, dp, transport, threads)` (pinned in
+    /// `tests/determinism.rs`).
+    pub fn run_rank_pp(
+        &mut self,
+        tr: &mut dyn Transport,
+    ) -> Result<Option<(RunSummary, PipeCalibration)>> {
+        let pp = self.cfg.pp;
+        let dp = self.cfg.dp;
+        let micro = self.cfg.microbatches;
+        crate::ensure!(pp >= 2, "pipeline execution needs pp >= 2 (got {pp})");
+        crate::ensure!(
+            self.backend == Backend::Host,
+            "pipeline training runs the host backend (--backend host)"
+        );
+        crate::ensure!(
+            tr.world() == dp * pp,
+            "transport world {} != dp*pp = {}",
+            tr.world(),
+            dp * pp
+        );
+        crate::ensure!(micro >= 1, "need at least one microbatch");
+        let g_rank = tr.rank();
+        let stage = g_rank % pp;
+        let replica = g_rank / pp;
+        let plan = self.engine.plan;
+        let ranges = plan.param_ranges(&self.rt.manifest)?;
+        let my_range = ranges[stage].clone();
+        let layer_range = plan.layers(stage);
+        let tok_range = {
+            let spec = self.rt.manifest.param("tok_emb")?;
+            spec.offset..spec.offset + spec.size()
+        };
+        let first_rank = replica * pp;
+        let n_params = self.params.len();
+        let sub_members: Vec<usize> = (0..dp).map(|r| r * pp + stage).collect();
+
+        let wall = crate::metrics::Stopwatch::start();
+        let mut curve = Table::new(
+            &format!("curve-{}", self.cfg.method.name()),
+            &[
+                "step",
+                "loss",
+                "val_loss",
+                "rel_err",
+                "rank_s1",
+                "comm_floats",
+                "iter_time",
+                "virtual_time",
+            ],
+        );
+        let mut total_comm = 0usize;
+        let mut total_orig = 0usize;
+        let mut stage_comm_floats = vec![0usize; pp];
+        let mut error_samples = Vec::new();
+        let window_len = self.cfg.edgc.window.max(1);
+        let mut bwd_sum = vec![0.0f64; pp];
+
+        let mut last_val = f64::NAN;
+        let mut last_loss = f64::NAN;
+        for step in 0..self.cfg.steps {
+            let batch = self.batchers[replica].next_train();
+
+            // rank decision on the coordinator (it owns the DAC), broadcast
+            let ranks = {
+                let mine = if g_rank == 0 {
+                    Some(encode_ranks(&baselines::ranks_for(
+                        self.cfg.method,
+                        step,
+                        self.cfg.steps,
+                        pp,
+                        self.dac.as_ref(),
+                    )))
+                } else {
+                    None
+                };
+                decode_ranks(&collective::broadcast_bytes(tr, 0, mine.as_deref())?)?
+            };
+
+            // 1F1B over this replica's pipeline + tied-embedding exchange
+            let mut gbuf = vec![0.0f32; n_params];
+            let (timing, replica_loss) = {
+                let exec = self
+                    .rt
+                    .host_exec()
+                    .context("pipeline training requires the host executor")?;
+                let mut ms = ModelStage::new(
+                    exec,
+                    &self.params,
+                    &batch,
+                    &mut gbuf,
+                    layer_range.clone(),
+                    stage == 0,
+                    stage + 1 == pp,
+                    micro,
+                )?;
+                let timing = pipeline::run_1f1b(tr, first_rank, stage, pp, micro, &mut ms)?;
+                ms.exchange_tied(tr, first_rank, first_rank + pp - 1)?;
+                (timing, ms.replica_loss())
+            };
+
+            // per-replica loss to the coordinator (metrics-only traffic)
+            if let Some(l) = replica_loss {
+                send_diag(tr, 0, &l.to_le_bytes())?;
+            }
+
+            // this stage's compressed DP all-reduce + optimizer slice
+            let report = {
+                let mut sub = SubTransport::new(&mut *tr, sub_members.clone())?;
+                self.engine.allreduce_dist_stage(&mut sub, &gbuf, ranks.as_deref(), stage)?
+            };
+            self.adam_update_range(&report.avg, step + 1, my_range.clone())?;
+
+            // Tied-parameter sync: the last stage's head reads `tok_emb`,
+            // which stage 0 owns and just Adam-updated — ship the fresh
+            // bytes down the replica so the next step's head uses them
+            // (real data-class weight traffic, `4·V·D` per replica per
+            // step; Megatron's equivalent mirrors the optimizer on both
+            // embedding-group members instead of shipping, but exact
+            // byte-identity with the centralized update wants the bytes).
+            if stage == 0 {
+                collective::send_f32s(tr, first_rank + pp - 1, &self.params[tok_range.clone()])?;
+            } else if stage + 1 == pp {
+                let w = collective::recv_f32s(tr, first_rank)?;
+                crate::ensure!(
+                    w.len() == tok_range.len(),
+                    "tied weight sync of {} floats, expected {}",
+                    w.len(),
+                    tok_range.len()
+                );
+                self.params[tok_range.clone()].copy_from_slice(&w);
+            }
+
+            // stage diagnostics to the coordinator (subgroup roots)
+            if replica == 0 && stage != 0 {
+                let rels: Vec<f64> = report.tensor_errors.iter().map(|(_, _, e)| *e).collect();
+                let blob = encode_stage_diag(
+                    report.stage_compressed[stage] as u64,
+                    report.stage_original[stage] as u64,
+                    &rels,
+                    timing.last_bwd,
+                );
+                send_diag(tr, 0, &blob)?;
+            }
+            let due = self.gds.due(step);
+            if due && replica == 0 && stage != 0 {
+                send_f32s_diag(tr, 0, &gbuf[my_range.clone()])?;
+            }
+            let eval_step = self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0;
+            if eval_step && replica == 0 && stage != 0 {
+                send_f32s_diag(tr, 0, &self.params[my_range.clone()])?;
+            }
+
+            if g_rank != 0 {
+                continue;
+            }
+
+            // ------------------------------------------- coordinator
+            // mean loss over replicas, f64-folded in replica order like
+            // the centralized loop
+            let mut loss_acc = 0.0f64;
+            for r in 0..dp {
+                let b = recv_diag(tr, r * pp + pp - 1)?;
+                crate::ensure!(b.len() == 4, "loss payload of {} bytes", b.len());
+                loss_acc += f32::from_le_bytes([b[0], b[1], b[2], b[3]]) as f64;
+            }
+            let loss = loss_acc / dp as f64;
+            last_loss = loss;
+
+            // per-stage volume + error diagnostics + measured timings
+            let mut stage_compressed = vec![0usize; pp];
+            let mut stage_original = vec![0usize; pp];
+            let mut rels_by_stage: Vec<Vec<f64>> = vec![Vec::new(); pp];
+            stage_compressed[0] = report.stage_compressed[0];
+            stage_original[0] = report.stage_original[0];
+            rels_by_stage[0] = report.tensor_errors.iter().map(|(_, _, e)| *e).collect();
+            bwd_sum[0] += timing.last_bwd;
+            for s in 1..pp {
+                let (comp, orig, rels, lb) = decode_stage_diag(&recv_diag(tr, s)?)?;
+                stage_compressed[s] = comp;
+                stage_original[s] = orig;
+                rels_by_stage[s] = rels;
+                bwd_sum[s] += lb;
+            }
+            total_comm += stage_compressed.iter().sum::<usize>();
+            total_orig += stage_original.iter().sum::<usize>();
+            for (acc, &c) in stage_comm_floats.iter_mut().zip(&stage_compressed) {
+                *acc += c;
+            }
+
+            // volume-weighted mean rel_error, folded in engine tensor
+            // order — the exact f64 sequence of the centralized report
+            let mut tensor_errors: Vec<(String, usize, f64)> = Vec::new();
+            let mut err_weighted = 0.0f64;
+            let mut err_weight = 0.0f64;
+            if ranks.is_some() {
+                let mut idx = vec![0usize; pp];
+                for t in &self.engine.tensors {
+                    let s = t.stage;
+                    let rel = *rels_by_stage[s]
+                        .get(idx[s])
+                        .with_context(|| format!("missing rel_error for stage {s}"))?;
+                    idx[s] += 1;
+                    let len = t.spec.size() as f64;
+                    err_weighted += rel * len;
+                    err_weight += len;
+                    tensor_errors.push((t.spec.name.clone(), s, rel));
+                }
+                for (s, reported) in rels_by_stage.iter().enumerate() {
+                    crate::ensure!(
+                        idx[s] == reported.len(),
+                        "stage {s} reported {} rel_errors, engine consumed {}",
+                        reported.len(),
+                        idx[s]
+                    );
+                }
+            }
+            let mean_rel_error =
+                if err_weight > 0.0 { err_weighted / err_weight } else { 0.0 };
+
+            // entropy measurement on replica 0's assembled full gradient
+            if due {
+                let mut full = vec![0.0f32; n_params];
+                full[ranges[0].clone()].copy_from_slice(&gbuf[ranges[0].clone()]);
+                for (s, range) in ranges.iter().enumerate().skip(1) {
+                    let slice = recv_f32s_diag(tr, s)?;
+                    crate::ensure!(
+                        slice.len() == range.len(),
+                        "entropy slice from stage {s} has {} floats, expected {}",
+                        slice.len(),
+                        range.len()
+                    );
+                    full[range.clone()].copy_from_slice(&slice);
+                }
+                let est = self.measure_entropy(&full)?;
+                self.window.push(&est);
+            }
+            if (step + 1) % window_len == 0 {
+                if let Some(mean) = self.window.roll() {
+                    if let Some(dac) = self.dac.as_mut() {
+                        dac.on_window(step + 1, mean);
+                    }
+                }
+            }
+
+            // virtual clock
+            let (iter_time, _comm_time) =
+                self.clock.step(&stage_compressed, &stage_original, ranks.as_deref());
+
+            // evaluation on assembled parameters
+            if eval_step {
+                for (s, range) in ranges.iter().enumerate().skip(1) {
+                    let slice = recv_f32s_diag(tr, s)?;
+                    crate::ensure!(
+                        slice.len() == range.len(),
+                        "eval params from stage {s} have {} floats, expected {}",
+                        slice.len(),
+                        range.len()
+                    );
+                    self.params[range.clone()].copy_from_slice(&slice);
+                }
+                last_val = self.validation_loss(2)?;
+                for (name, s, err) in &tensor_errors {
+                    error_samples.push((step, name.clone(), *s, *err));
+                }
+            }
+            curve.push(vec![
+                step as f64,
+                loss,
+                last_val,
+                mean_rel_error,
+                ranks.as_ref().map_or(0.0, |r| r[0] as f64),
+                stage_compressed.iter().sum::<usize>() as f64,
+                iter_time,
+                self.clock.total,
+            ]);
+        }
+
+        // per-stage replica consistency: every DP replica of this stage
+        // must hold identical parameters in the stage's range
+        {
+            let mut sub = SubTransport::new(&mut *tr, sub_members.clone())?;
+            let sums = collective::all_gather_u64(&mut sub, fnv64(&self.params[my_range.clone()]))?;
+            crate::ensure!(
+                sums.iter().all(|&s| s == sums[0]),
+                "stage {stage} replica divergence after training: {sums:?}"
+            );
+        }
+
+        // final parameter assembly on the coordinator
+        if replica == 0 && stage != 0 {
+            send_f32s_diag(tr, 0, &self.params[my_range.clone()])?;
+        }
+        if g_rank != 0 {
+            return Ok(None);
+        }
+        for (s, range) in ranges.iter().enumerate().skip(1) {
+            let slice = recv_f32s_diag(tr, s)?;
+            crate::ensure!(
+                slice.len() == range.len(),
+                "final params from stage {s} have {} floats, expected {}",
+                slice.len(),
+                range.len()
+            );
+            self.params[range.clone()].copy_from_slice(&slice);
+        }
+
+        // final evaluation — identical to the centralized path
+        let final_val = self.validation_loss(4)?;
+        let probes = build_probes(&self.corpus, 48, 4, self.rt.manifest.seq_len, 4, 99);
+        let man_batch = self.rt.manifest.batch;
+        let rt = &self.rt;
+        let params = &self.params;
+        let man = &self.rt.manifest;
+        let mut loss_fn = |flat_tokens: &[i32]| -> Result<Vec<f32>> {
+            let out = rt.run(
+                "eval_step",
+                &[
+                    lit_f32(params, &[man.n_params as i64])?,
+                    lit_i32(flat_tokens, &[man_batch as i64, (man.seq_len + 1) as i64])?,
+                ],
+            )?;
+            to_f32(&out[0])
+        };
+        let probe = eval::run_probes(&mut loss_fn, &probes, man_batch)?;
+
+        // measured-vs-modeled timing calibration (diagnostics only: the
+        // rank decisions stayed on the analytic model, preserving the
+        // byte-determinism contract)
+        let steps = self.cfg.steps.max(1) as f64;
+        let mean_last_bwd: Vec<f64> = bwd_sum.iter().map(|s| s / steps).collect();
+        let per_step_p2p = netsim::p2p_wire_bytes(
+            pp,
+            dp,
+            micro,
+            man.batch * man.seq_len,
+            man.d_model,
+            pipeline::FRAME_HEADER_BYTES,
+        ) + netsim::tied_wire_bytes(
+            pp,
+            dp,
+            man.vocab,
+            man.d_model,
+            pipeline::FRAME_HEADER_BYTES,
+        );
+        let calib = PipeCalibration {
+            measured_microback: pipesim::fit_microback(&mean_last_bwd),
+            modeled_microback: self.clock.t_bwd,
+            modeled_last_bwd: self.clock.modeled_last_bwd(),
+            mean_last_bwd,
+            modeled_p2p_bytes: per_step_p2p * self.cfg.steps as f64,
+        };
+
+        Ok(Some((
+            RunSummary {
+                method: self.cfg.method.name(),
+                final_train_loss: last_loss,
+                final_val_loss: final_val,
+                final_ppl: ppl(final_val),
+                probe_accuracy: probe.accuracy,
+                virtual_time: self.clock.total,
+                virtual_comm_time: self.clock.comm_total,
+                virtual_compute_time: self.clock.compute_total,
+                wall_time: wall.secs(),
+                total_comm_floats: total_comm,
+                total_uncompressed_floats: total_orig,
+                stage_comm_floats,
+                entropy_trace: self
+                    .dac
+                    .as_ref()
+                    .map(|d| d.entropy_trace.clone())
+                    .unwrap_or_else(|| self.window.history.clone()),
+                rank_trace: self.dac.as_ref().map(|d| d.rank_trace.clone()).unwrap_or_default(),
+                error_samples,
+                curve,
+            },
+            calib,
+        )))
     }
 
     /// Current flat parameters (for checkpoint-style tests).
@@ -612,6 +1037,71 @@ fn decode_ranks(b: &[u8]) -> Result<Option<Vec<usize>>> {
     }
 }
 
+/// Send/receive one metrics-only message: the payload is accounted on
+/// the diag traffic class on both endpoints, keeping the data-class
+/// wire-volume calibration clean.
+fn send_diag(tr: &mut dyn Transport, to: usize, payload: &[u8]) -> Result<()> {
+    tr.set_class(Class::Diag);
+    let r = tr.send(to, payload);
+    tr.set_class(Class::Data);
+    r
+}
+
+fn recv_diag(tr: &mut dyn Transport, from: usize) -> Result<Vec<u8>> {
+    tr.set_class(Class::Diag);
+    let r = tr.recv(from);
+    tr.set_class(Class::Data);
+    r
+}
+
+/// Diag-class f32 slice send/receive (entropy samples, parameter
+/// gathers): one place owns the class toggle so a forgotten restore
+/// cannot silently pollute the data-class wire calibration.
+fn send_f32s_diag(tr: &mut dyn Transport, to: usize, xs: &[f32]) -> Result<()> {
+    tr.set_class(Class::Diag);
+    let r = collective::send_f32s(tr, to, xs);
+    tr.set_class(Class::Data);
+    r
+}
+
+fn recv_f32s_diag(tr: &mut dyn Transport, from: usize) -> Result<Vec<f32>> {
+    tr.set_class(Class::Diag);
+    let r = collective::recv_f32s(tr, from);
+    tr.set_class(Class::Data);
+    r
+}
+
+/// Wire encoding of one stage's per-step diagnostics (subgroup root →
+/// coordinator): compressed/original float counts, the per-tensor
+/// rel_errors in engine order, and the measured last-backward time.
+fn encode_stage_diag(comp: u64, orig: u64, rels: &[f64], last_bwd: f64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(28 + 8 * rels.len());
+    out.extend(comp.to_le_bytes());
+    out.extend(orig.to_le_bytes());
+    out.extend((rels.len() as u32).to_le_bytes());
+    for r in rels {
+        out.extend(r.to_le_bytes());
+    }
+    out.extend(last_bwd.to_le_bytes());
+    out
+}
+
+fn decode_stage_diag(b: &[u8]) -> Result<(usize, usize, Vec<f64>, f64)> {
+    crate::ensure!(b.len() >= 28, "stage diag of {} bytes", b.len());
+    let comp = u64::from_le_bytes(b[0..8].try_into().unwrap()) as usize;
+    let orig = u64::from_le_bytes(b[8..16].try_into().unwrap()) as usize;
+    let n = u32::from_le_bytes(b[16..20].try_into().unwrap()) as usize;
+    crate::ensure!(b.len() == 28 + 8 * n, "stage diag length mismatch ({} bytes, n={n})", b.len());
+    let mut rels = Vec::with_capacity(n);
+    for i in 0..n {
+        let off = 20 + 8 * i;
+        rels.push(f64::from_le_bytes(b[off..off + 8].try_into().unwrap()));
+    }
+    let off = 20 + 8 * n;
+    let last_bwd = f64::from_le_bytes(b[off..off + 8].try_into().unwrap());
+    Ok((comp, orig, rels, last_bwd))
+}
+
 /// FNV-1a over the exact parameter bytes (replica-consistency check).
 fn fnv64(xs: &[f32]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
@@ -624,6 +1114,29 @@ fn fnv64(xs: &[f32]) -> u64 {
     h
 }
 
+/// Measured-vs-modeled pipeline timing calibration from a real
+/// pipeline-parallel run. Rank decisions stay priced on the analytic
+/// model — the byte-determinism contract requires decisions to be a
+/// pure function of the training stream — and this report quantifies
+/// how well that model tracks the real execution (the 1F1B
+/// schedule-agreement property itself is pinned in `tests/pipeline.rs`).
+#[derive(Clone, Debug)]
+pub struct PipeCalibration {
+    /// Mean measured per-stage last-backward-finish times (seconds from
+    /// each iteration's schedule start; replica 0's workers).
+    pub mean_last_bwd: Vec<f64>,
+    /// `pipesim::fit_microback` over the measured profile — the
+    /// measured counterpart of `modeled_microback`.
+    pub measured_microback: f64,
+    /// The analytic T̄_microBack the DAC's Eq.-4 stage alignment uses.
+    pub modeled_microback: f64,
+    /// Modeled per-stage last-backward profile (virtual seconds).
+    pub modeled_last_bwd: Vec<f64>,
+    /// Modeled activation + tied-embedding exchange payload for the
+    /// whole run (`netsim::{p2p,tied}_wire_bytes` × steps).
+    pub modeled_p2p_bytes: f64,
+}
+
 /// Everything a distributed run returns beyond the rank-0 summary.
 pub struct DistRun {
     pub summary: RunSummary,
@@ -633,6 +1146,8 @@ pub struct DistRun {
     /// Per-rank transport counter snapshots, rank-indexed: the measured
     /// wire volume the netsim ring model is calibrated against.
     pub counters: Vec<Counters>,
+    /// Pipeline timing calibration (pipeline-parallel runs only).
+    pub pipe: Option<PipeCalibration>,
 }
 
 /// Run one training job as `cfg.dp` real rank workers over a `kind`
@@ -664,5 +1179,45 @@ pub fn run_distributed(cfg: TrainConfig, backend: Backend, kind: TransportKind) 
         }
         counters.push(c);
     }
-    Ok(DistRun { summary: summary.expect("rank 0 summary"), params, counters })
+    Ok(DistRun { summary: summary.expect("rank 0 summary"), params, counters, pipe: None })
+}
+
+/// Run one training job as `cfg.dp × cfg.pp` real stage workers over a
+/// `kind` transport mesh (`edgc train --pp N --dp M --transport
+/// mem|tcp`). Worker `(replica, stage)` occupies global rank
+/// `replica·pp + stage` and executes only its stage
+/// ([`Trainer::run_rank_pp`]); outputs are byte-identical to the
+/// centralized [`Trainer::run`] at the same config for any transport.
+pub fn run_distributed_pp(
+    cfg: TrainConfig,
+    backend: Backend,
+    kind: TransportKind,
+) -> Result<DistRun> {
+    crate::ensure!(
+        backend == Backend::Host,
+        "pipeline training runs the host backend (--backend host)"
+    );
+    crate::ensure!(cfg.pp >= 2, "run_distributed_pp needs pp >= 2 (run_distributed covers pp=1)");
+    crate::ensure!(cfg.dp >= 1, "dp must be >= 1");
+    let world = cfg.dp * cfg.pp;
+    let per_rank = run_group(kind, world, |rank, tr| {
+        let mut t = Trainer::new(cfg.clone(), backend)?;
+        let out = t.run_rank_pp(tr)?;
+        let params = if rank == 0 { t.params().to_vec() } else { Vec::new() };
+        Ok((out, params))
+    })?;
+    let mut counters = Vec::with_capacity(world);
+    let mut summary = None;
+    let mut pipe = None;
+    let mut params = Vec::new();
+    for (rank, ((out, p), c)) in per_rank.into_iter().enumerate() {
+        crate::ensure!(out.is_some() == (rank == 0), "summary came from rank {rank}");
+        if let Some((s, cal)) = out {
+            summary = Some(s);
+            pipe = Some(cal);
+            params = p;
+        }
+        counters.push(c);
+    }
+    Ok(DistRun { summary: summary.expect("rank 0 summary"), params, counters, pipe })
 }

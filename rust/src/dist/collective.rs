@@ -55,6 +55,19 @@ fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
     Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
 }
 
+/// Point-to-point send of an f32 slice (pairs with [`recv_f32s`]).
+/// The pipeline coordinator uses this for slice gathers (entropy
+/// samples, parameter ranges) that ride on the mesh outside the
+/// collectives.
+pub fn send_f32s(tr: &mut dyn Transport, to: usize, xs: &[f32]) -> Result<()> {
+    tr.send(to, &f32s_to_bytes(xs))
+}
+
+/// Point-to-point receive of an f32 vector from a specific peer.
+pub fn recv_f32s(tr: &mut dyn Transport, from: usize) -> Result<Vec<f32>> {
+    bytes_to_f32s(&tr.recv(from)?)
+}
+
 /// Reduce-scatter with mean: contributes `buf`, returns this rank's
 /// owned reduced chunk (`chunk_range(len, world, rank)` of the mean).
 /// Empty chunks move no messages — both sides derive the skip from the

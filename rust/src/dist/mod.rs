@@ -25,4 +25,4 @@ pub mod group;
 pub mod transport;
 
 pub use group::{run_group, TransportKind};
-pub use transport::{Class, Counters, Transport};
+pub use transport::{Class, Counters, SubTransport, Transport};

@@ -136,6 +136,87 @@ pub trait Transport: Send {
     }
 }
 
+// ------------------------------------------------------------- subgroups
+
+/// A re-indexed view of a subset of a mesh's ranks, itself a full
+/// [`Transport`]: member `i` of the subgroup sees `rank() == i` and
+/// `world() == members.len()`, with sends/receives routed to the global
+/// ranks behind the scenes. This is how pipeline-parallel training
+/// reuses the ring collectives unchanged for each stage's DP subgroup
+/// (members = the `dp` workers holding the same stage): the collectives'
+/// fold-from-zero-in-local-rank-order determinism contract carries over
+/// verbatim, with local rank = DP replica index.
+///
+/// Counters stay with the underlying transport (per *global* link), so
+/// wire-volume calibration sees subgroup traffic exactly where it
+/// flowed.
+pub struct SubTransport<'a> {
+    inner: &'a mut dyn Transport,
+    /// Global ranks of the subgroup, ascending; local rank = position.
+    members: Vec<usize>,
+    /// This rank's local index in `members`.
+    me: usize,
+}
+
+impl<'a> SubTransport<'a> {
+    /// Build the view. `members` must be strictly ascending, within the
+    /// mesh, and contain the inner transport's own rank.
+    pub fn new(inner: &'a mut dyn Transport, members: Vec<usize>) -> Result<SubTransport<'a>> {
+        ensure!(!members.is_empty(), "subgroup must have at least one member");
+        ensure!(
+            members.windows(2).all(|w| w[0] < w[1]),
+            "subgroup members must be strictly ascending: {members:?}"
+        );
+        ensure!(
+            *members.last().unwrap() < inner.world(),
+            "subgroup member {} out of world {}",
+            members.last().unwrap(),
+            inner.world()
+        );
+        let me = members
+            .iter()
+            .position(|&m| m == inner.rank())
+            .with_context(|| {
+                format!("rank {} is not a member of subgroup {members:?}", inner.rank())
+            })?;
+        Ok(SubTransport { inner, members, me })
+    }
+}
+
+impl Transport for SubTransport<'_> {
+    fn rank(&self) -> usize {
+        self.me
+    }
+
+    fn world(&self) -> usize {
+        self.members.len()
+    }
+
+    fn send(&mut self, to: usize, payload: &[u8]) -> Result<()> {
+        let g = *self
+            .members
+            .get(to)
+            .with_context(|| format!("subgroup rank {to} out of {}", self.members.len()))?;
+        self.inner.send(g, payload)
+    }
+
+    fn recv(&mut self, from: usize) -> Result<Vec<u8>> {
+        let g = *self
+            .members
+            .get(from)
+            .with_context(|| format!("subgroup rank {from} out of {}", self.members.len()))?;
+        self.inner.recv(g)
+    }
+
+    fn counters(&self) -> &Counters {
+        self.inner.counters()
+    }
+
+    fn counters_mut(&mut self) -> &mut Counters {
+        self.inner.counters_mut()
+    }
+}
+
 // ------------------------------------------------------------ in-process
 
 /// In-process mesh endpoint: one unbounded FIFO per ordered rank pair.
@@ -438,6 +519,50 @@ mod tests {
         b.recv(0).unwrap();
         assert_eq!(b.counters().data[0].recv_bytes, 10);
         assert_eq!(b.counters().diag[0].recv_bytes, 100);
+    }
+
+    #[test]
+    fn subgroup_reindexes_and_routes() {
+        // Global mesh of 4; subgroup {1, 3}: local 0 <-> global 1.
+        let mut mesh = mem_mesh(4);
+        let t3 = mesh.pop().unwrap();
+        let _t2 = mesh.pop().unwrap();
+        let t1 = mesh.pop().unwrap();
+        let (mut a, mut b) = (t1, t3);
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                let mut sub = SubTransport::new(&mut a, vec![1, 3]).unwrap();
+                assert_eq!(sub.rank(), 0);
+                assert_eq!(sub.world(), 2);
+                sub.send(1, b"hi").unwrap();
+                assert_eq!(sub.recv(1).unwrap(), b"yo");
+                // counters live on the global link to rank 3
+                assert_eq!(a.counters().data[3].sent_bytes, 2);
+                assert_eq!(a.counters().data[3].recv_bytes, 2);
+            });
+            s.spawn(move || {
+                let mut sub = SubTransport::new(&mut b, vec![1, 3]).unwrap();
+                assert_eq!(sub.rank(), 1);
+                assert_eq!(sub.recv(0).unwrap(), b"hi");
+                sub.send(0, b"yo").unwrap();
+            });
+        });
+    }
+
+    #[test]
+    fn subgroup_rejects_bad_membership() {
+        let mut mesh = mem_mesh(3);
+        let mut t0 = mesh.remove(0);
+        // own rank missing
+        assert!(SubTransport::new(&mut t0, vec![1, 2]).is_err());
+        // out of world
+        assert!(SubTransport::new(&mut t0, vec![0, 5]).is_err());
+        // not ascending
+        assert!(SubTransport::new(&mut t0, vec![2, 0]).is_err());
+        // empty
+        assert!(SubTransport::new(&mut t0, vec![]).is_err());
+        // valid singleton
+        assert!(SubTransport::new(&mut t0, vec![0]).is_ok());
     }
 
     #[test]

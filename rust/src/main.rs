@@ -14,11 +14,12 @@
 use edgc::util::error::Result;
 
 use edgc::config::{cluster_by_name, Method, TrainConfig};
-use edgc::coordinator::{run_distributed, Backend, Trainer};
+use edgc::coordinator::{run_distributed, run_distributed_pp, Backend, Trainer};
 use edgc::dist::TransportKind;
 use edgc::repro;
 use edgc::runtime::Runtime;
 use edgc::util::cli::{Args, Spec};
+use edgc::util::json::Json;
 
 fn spec() -> Spec {
     Spec {
@@ -42,9 +43,11 @@ fn spec() -> Spec {
             (
                 "transport",
                 "NAME",
-                "run --dp N as real rank workers over mem|tcp collectives \
-                 (default: centralized in-process all-reduce)",
+                "run --dp N (x --pp N stage workers when pp > 1) as real rank \
+                 workers over mem|tcp collectives (default: centralized \
+                 in-process all-reduce)",
             ),
+            ("threshold", "X", "bench-diff: allowed fractional regression (default 0.25)"),
             ("config", "FILE", "TOML config file (flags override)"),
             ("out", "DIR", "output directory for tables (default runs)"),
             ("jobs", "N", "reproduce: parallel experiment workers (default: all cores)"),
@@ -68,15 +71,19 @@ fn main() -> Result<()> {
     let args = Args::parse(&argv, &spec)?;
     if args.switch("help") || args.subcommand.is_empty() {
         print!("{}", spec.help());
-        println!("\nsubcommands: train | reproduce <exp|all> | projection | info");
+        println!(
+            "\nsubcommands: train | reproduce <exp|all> | projection | info \
+             | bench-diff <baseline.json> <current.json>"
+        );
         println!("experiments: {}", repro::ALL.join(", "));
         return Ok(());
     }
-    match args.require_subcommand(&["train", "reproduce", "projection", "info"])? {
+    match args.require_subcommand(&["train", "reproduce", "projection", "info", "bench-diff"])? {
         "train" => cmd_train(&args),
         "reproduce" => cmd_reproduce(&args),
         "projection" => cmd_projection(&args),
         "info" => cmd_info(&args),
+        "bench-diff" => cmd_bench_diff(&args),
         _ => unreachable!(),
     }
 }
@@ -146,10 +153,36 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let out_dir = cfg.out_dir.clone();
     let dp = cfg.dp;
+    // real pipeline execution is opt-in: an *explicit* --pp > 1 next to
+    // --transport spawns stage workers; without the flag, cfg.pp keeps
+    // its historical role as the simulated stage count (the default
+    // pp=4 prices a 4-stage pipeline even for models too shallow to
+    // actually split 4 ways)
+    let real_pp = transport.is_some() && args.opt("pp").is_some() && cfg.pp > 1;
     let s = match transport {
         None => {
             let mut tr = Trainer::new(cfg, backend)?;
             tr.run()?
+        }
+        Some(kind) if real_pp => {
+            // real pipeline-parallel execution: dp x pp stage workers
+            let run = run_distributed_pp(cfg, backend, kind)?;
+            let measured: u64 = run.counters.iter().map(|c| c.data_sent_bytes()).sum();
+            let ring = edgc::netsim::ring_wire_bytes(dp, run.summary.total_comm_floats);
+            let cal = run.pipe.as_ref().expect("pipeline calibration");
+            println!(
+                "wire traffic        : {measured} bytes measured over {} \
+                 ({:.0} modeled ring + p2p)",
+                kind.name(),
+                ring + cal.modeled_p2p_bytes
+            );
+            println!(
+                "pipe timing         : measured microback {:.3}ms (stage last-bwd fit) \
+                 vs modeled {:.3}ms",
+                cal.measured_microback * 1e3,
+                cal.modeled_microback * 1e3
+            );
+            run.summary
         }
         Some(kind) => {
             let run = run_distributed(cfg, backend, kind)?;
@@ -211,6 +244,43 @@ fn cmd_projection(args: &Args) -> Result<()> {
     println!("# {} ({} params on {})\n{}", t.name, n_params, cluster.name, t.render());
     t.write(args.str_or("out", "runs"))?;
     Ok(())
+}
+
+/// Gate the perf trajectory: diff a freshly produced `BENCH_*.json`
+/// against a committed seed and fail on any regression beyond
+/// `--threshold` (default 25%). Empty seeds pass trivially (the
+/// committed seeds bootstrap empty until a toolchain environment
+/// regenerates them).
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let (baseline, current) = match args.positionals.as_slice() {
+        [b, c] => (b.as_str(), c.as_str()),
+        other => edgc::bail!(
+            "bench-diff expects <baseline.json> <current.json>, got {} positionals",
+            other.len()
+        ),
+    };
+    let threshold = args.f64_or("threshold", 0.25)?;
+    let base = Json::parse(&std::fs::read_to_string(baseline)?)
+        .map_err(|e| e.context(format!("parsing {baseline}")))?;
+    let cur = Json::parse(&std::fs::read_to_string(current)?)
+        .map_err(|e| e.context(format!("parsing {current}")))?;
+    let group = base.get("group").and_then(|g| g.as_str().map(str::to_string)).unwrap_or_default();
+    let regressions = edgc::util::bench::diff_benchmarks(&base, &cur, threshold)?;
+    if base.get("results")?.as_arr()?.is_empty() {
+        println!("[bench-diff] {group}: baseline seed is empty — gate passes trivially");
+        return Ok(());
+    }
+    if regressions.is_empty() {
+        println!(
+            "[bench-diff] {group}: no entry regressed more than {:.0}% vs {baseline}",
+            threshold * 100.0
+        );
+        return Ok(());
+    }
+    for r in &regressions {
+        eprintln!("[bench-diff] REGRESSION {r}");
+    }
+    edgc::bail!("{} bench entr(ies) regressed beyond {:.0}%", regressions.len(), threshold * 100.0)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

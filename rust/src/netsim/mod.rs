@@ -111,6 +111,48 @@ pub fn ring_wire_bytes(k: usize, floats: usize) -> f64 {
     (2 * (k - 1)) as f64 * 4.0 * floats as f64
 }
 
+/// Modeled payload bytes of one training step's 1F1B activation
+/// exchange, summed over all workers: each of the `dp` replicas moves,
+/// per adjacent stage pair (`pp − 1` hops), `micro` forward frames and
+/// `micro` backward frames whose f32 payloads tile the replica's
+/// `rows × width` activation matrix, plus `frame_overhead` header bytes
+/// per frame. This is the p2p counterpart of [`ring_wire_bytes`]: the
+/// dist transports' measured data-class counters for a pipeline run are
+/// pinned against ring + p2p + tied-embedding accounting in
+/// `tests/determinism.rs`.
+pub fn p2p_wire_bytes(
+    pp: usize,
+    dp: usize,
+    micro: usize,
+    rows: usize,
+    width: usize,
+    frame_overhead: usize,
+) -> f64 {
+    if pp <= 1 {
+        return 0.0;
+    }
+    let per_hop = 2.0 * (micro * frame_overhead + 4 * rows * width) as f64;
+    (dp * (pp - 1)) as f64 * per_hop
+}
+
+/// Modeled payload bytes of one step's tied-embedding traffic: the
+/// gradient frame (last stage → stage 0, `frame_overhead + 4·V·D`) plus
+/// the post-optimizer weight sync (stage 0 → last stage, a raw `4·V·D`
+/// f32 payload so the tied head reads the freshly updated matrix), per
+/// replica.
+pub fn tied_wire_bytes(
+    pp: usize,
+    dp: usize,
+    vocab: usize,
+    d_model: usize,
+    frame_overhead: usize,
+) -> f64 {
+    if pp <= 1 {
+        return 0.0;
+    }
+    dp as f64 * (frame_overhead + 8 * vocab * d_model) as f64
+}
+
 /// PowerSGD compression compute time for an m×n matrix at rank r:
 /// two GEMMs (2·m·n·r flops each) + Gram–Schmidt (≈2·m·r²).
 pub fn compress_time(c: &Cluster, m: usize, n: usize, r: usize) -> f64 {
@@ -237,6 +279,20 @@ mod tests {
             assert!((ring_wire_bytes(k, floats) - want).abs() < 1e-9);
         }
         assert_eq!(ring_wire_bytes(1, 1000), 0.0);
+    }
+
+    #[test]
+    fn p2p_and_tied_wire_identities() {
+        // pp=1: no pipeline traffic at all
+        assert_eq!(p2p_wire_bytes(1, 4, 8, 512, 128, 13), 0.0);
+        assert_eq!(tied_wire_bytes(1, 4, 512, 128, 13), 0.0);
+        // pp=3, dp=2, 4 microbatches over a 10x8 activation matrix:
+        // 2 replicas x 2 hops x 2 directions x (4 frames x 13 B + 4 B x 80)
+        let want = (2 * 2) as f64 * 2.0 * (4.0 * 13.0 + 4.0 * 80.0);
+        assert_eq!(p2p_wire_bytes(3, 2, 4, 10, 8, 13), want);
+        // tied: one framed vocab x d gradient + one raw weight sync per
+        // replica
+        assert_eq!(tied_wire_bytes(2, 3, 16, 4, 13), 3.0 * (13.0 + 8.0 * 64.0));
     }
 
     #[test]

@@ -67,14 +67,22 @@ pub struct PipeResult {
     pub bubble_frac: f64,
 }
 
-#[derive(Clone, Copy, Debug, PartialEq)]
-enum Op {
+/// One scheduled operation of a stage: forward or backward of a
+/// microbatch index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
     F(usize),
     B(usize),
 }
 
 /// The standard non-interleaved 1F1B op order for one stage.
-fn stage_ops(stage: usize, stages: usize, micro: usize) -> Vec<Op> {
+///
+/// This list is shared with the *real* pipeline executor
+/// (`coordinator::pipeline::run_1f1b` drives each stage worker through
+/// exactly this sequence), so simulator and reality execute the same
+/// schedule by construction; `tests/pipeline.rs` pins that their
+/// per-stage backward-finish orderings agree.
+pub fn stage_ops(stage: usize, stages: usize, micro: usize) -> Vec<Op> {
     let warmup = (stages - 1 - stage).min(micro);
     let mut ops = Vec::with_capacity(2 * micro);
     let mut f = 0;
@@ -188,6 +196,29 @@ pub fn simulate(spec: &PipeSpec) -> PipeResult {
         iteration,
         busy,
         bubble_frac: if span > 0.0 { 1.0 - max_busy / span } else { 0.0 },
+    }
+}
+
+/// Calibration fit of T̄_microBack (Eq. 4) from *measured* per-stage
+/// last-backward-finish times of a real 1F1B iteration: under the Eq.-4
+/// model the slack of stage i is `last_bwd[0] − last_bwd[i] ≈ i·T̄`, so
+/// the least-squares fit through the origin is `Σ i·slack_i / Σ i²`.
+/// The real pipeline executor records these times each iteration and
+/// the coordinator reports this fit next to the analytic `t_bwd` the
+/// rank decisions are priced with (measured-vs-modeled feedback loop;
+/// DESIGN.md §Pipeline execution).
+pub fn fit_microback(last_bwd: &[f64]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (i, &t) in last_bwd.iter().enumerate().skip(1) {
+        let slack = last_bwd[0] - t;
+        num += i as f64 * slack;
+        den += (i * i) as f64;
+    }
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
     }
 }
 
@@ -318,6 +349,19 @@ mod tests {
         spec.dp_comm = vec![1.5, 0.0]; // bottleneck stage pays fully
         let r2 = simulate(&spec);
         assert!((r2.iteration - (base + 1.5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_microback_recovers_uniform_backward_time() {
+        // Simulated uniform pipeline: the fit over its last_bwd vector
+        // must recover t_bwd exactly (slacks are exactly i·t_bwd).
+        let spec = PipeSpec::uniform(4, 1.0, 1.5, 8);
+        let r = simulate(&spec);
+        let fit = fit_microback(&r.last_bwd);
+        assert!((fit - 1.5).abs() < 1e-9, "fit {fit}");
+        // degenerate inputs: single stage / empty → 0
+        assert_eq!(fit_microback(&[3.0]), 0.0);
+        assert_eq!(fit_microback(&[]), 0.0);
     }
 
     #[test]

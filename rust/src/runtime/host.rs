@@ -190,6 +190,17 @@ fn layernorm_fwd(x: &[f32], g: &[f32], b: &[f32], rows: usize, d: usize) -> (Vec
 }
 
 /// dx from dy; accumulates dg/db into the gradient slices.
+///
+/// Accumulation-order contract (the 1F1B microbatch invariance —
+/// DESIGN.md §Pipeline execution): every gradient element accumulates
+/// its per-row contributions in strict ascending row order, exactly
+/// like `acc_tn`/`acc_bias`. That makes the bytes invariant not only to
+/// the thread count but to *how the row stream is split across calls*:
+/// running this over microbatch row ranges in order produces the same
+/// dg/db bytes as one full-batch call, which is what lets the staged
+/// pipeline executor match the centralized backward bit-for-bit.
+/// (A per-row-chunk partial reduction — the previous scheme — groups
+/// the f32 adds differently when the total row count changes.)
 fn layernorm_bwd(
     dy: &[f32],
     cache: &LnCache,
@@ -200,15 +211,11 @@ fn layernorm_bwd(
     db: &mut [f32],
 ) -> Vec<f32> {
     let mut dx = vec![0.0f32; rows * d];
-    // Rows are independent for dx; dg/db are row reductions, so each
-    // fixed row chunk accumulates its own partial and the partials are
-    // combined in chunk order (deterministic for any thread count).
+    // dx rows are independent: row blocks scatter to disjoint ranges.
     let rows_per = par::items_per_chunk(6 * d, par::CHUNK_WORK / 4);
-    let partials = {
+    {
         let pdx = ParSlice::new(&mut dx);
-        par::map_chunks(rows, rows_per, |_, rr| {
-            let mut pdg = vec![0.0f32; d];
-            let mut pdb = vec![0.0f32; d];
+        par::for_each_range(rows, rows_per, |_, rr| {
             // SAFETY: fixed row chunks are disjoint
             let ob = unsafe { pdx.range_mut(rr.start * d..rr.end * d) };
             for (li, r) in rr.enumerate() {
@@ -217,8 +224,6 @@ fn layernorm_bwd(
                 let mut m1 = 0.0f64; // mean(dx̂)
                 let mut m2 = 0.0f64; // mean(dx̂ ⊙ x̂)
                 for j in 0..d {
-                    pdg[j] += dyr[j] * xh[j];
-                    pdb[j] += dyr[j];
                     let dxh = (dyr[j] * g[j]) as f64;
                     m1 += dxh;
                     m2 += dxh * xh[j] as f64;
@@ -232,14 +237,27 @@ fn layernorm_bwd(
                     o[j] = (iv * (dxh - m1 - xh[j] as f64 * m2)) as f32;
                 }
             }
-            (pdg, pdb)
-        })
-    };
-    for (pdg, pdb) in &partials {
-        for j in 0..d {
-            dg[j] += pdg[j];
-            db[j] += pdb[j];
-        }
+        });
+    }
+    // dg/db: parallel over column blocks, strictly row-ascending per
+    // element (see the contract above).
+    let cols_per = par::items_per_chunk(4 * rows, par::CHUNK_WORK / 4);
+    {
+        let pg = ParSlice::new(dg);
+        let pb = ParSlice::new(db);
+        par::for_each_range(d, cols_per, |_, cr| {
+            // SAFETY: fixed column chunks are disjoint
+            let gb = unsafe { pg.range_mut(cr.clone()) };
+            let bb = unsafe { pb.range_mut(cr.clone()) };
+            for r in 0..rows {
+                let dyr = &dy[r * d + cr.start..r * d + cr.end];
+                let xh = &cache.xhat[r * d + cr.start..r * d + cr.end];
+                for li in 0..cr.len() {
+                    gb[li] += dyr[li] * xh[li];
+                    bb[li] += dyr[li];
+                }
+            }
+        });
     }
     dx
 }
@@ -300,7 +318,10 @@ struct AttCache {
     y: Vec<f32>,
 }
 
-struct LayerCache {
+/// Per-layer forward cache (opaque): everything [`HostExec::layer_bwd`]
+/// needs. Produced by [`HostExec::layer_fwd`]; the pipeline executor
+/// holds one per in-flight (layer, microbatch).
+pub struct LayerFwd {
     ln1: LnCache,
     att: AttCache,
     ln2: LnCache,
@@ -313,11 +334,17 @@ struct LayerCache {
     h_act: Vec<f32>,
 }
 
-struct FwdState {
-    /// Final-layernorm output [R, D] (feeds the tied head).
+/// Head forward results (final layernorm → tied output head → loss) for
+/// one (micro)batch: the per-example losses plus the caches
+/// [`HostExec::head_bwd`] consumes. `dlogits` is empty when built with
+/// `want_grads = false`.
+pub struct HeadFwd {
+    /// Per-example mean next-token cross-entropy, in example order.
+    pub losses: Vec<f32>,
+    dlogits: Vec<f32>,
     lnf_out: Vec<f32>,
     lnf: LnCache,
-    layers: Vec<LayerCache>,
+    rows: usize,
 }
 
 /// The decoder-only transformer over the flat parameter vector, plus the
@@ -462,6 +489,10 @@ impl HostExec {
 
     /// Forward pass (and backward when `want_grads`): per-example mean
     /// next-token cross-entropy, optionally d(mean loss)/d(params).
+    ///
+    /// Composes the stage-scoped pieces below over all layers — the
+    /// pipeline executor calls the same pieces per stage per microbatch,
+    /// so the two paths are byte-identical by construction.
     fn forward_losses(
         &self,
         flat: &[f32],
@@ -470,14 +501,55 @@ impl HostExec {
     ) -> Result<(Vec<f32>, Option<Vec<f32>>)> {
         ensure!(flat.len() == self.n_params, "params length {} != {}", flat.len(), self.n_params);
         let bsz = self.batch_dims(batch)?;
-        let (s, d, v) = (self.seq_len, self.d_model, self.vocab);
-        let rows = bsz * s;
-        let row_len = s + 1;
+        let rows = bsz * self.seq_len;
 
-        // ---- embeddings
+        let mut x = self.embed_fwd(flat, batch, bsz)?;
+        let mut layers = Vec::with_capacity(self.n_layer);
+        for i in 0..self.n_layer {
+            layers.push(self.layer_fwd(flat, i, &mut x, bsz)?);
+        }
+        let head = self.head_fwd(flat, &x, batch, bsz, want_grads, 1.0 / rows as f64)?;
+        if !want_grads {
+            return Ok((head.losses, None));
+        }
+
+        // ---- backward
+        let mut g = vec![0.0f32; self.n_params];
+        let mut dx = self.head_bwd(flat, &head, &mut g)?;
+        for i in (0..self.n_layer).rev() {
+            self.layer_bwd(flat, i, &mut dx, &layers[i], bsz, &mut g)?;
+        }
+        self.embed_bwd(batch, bsz, &dx, &mut g)?;
+        Ok((head.losses, Some(g)))
+    }
+
+    // ------------------------------------------------- stage-scoped pieces
+    //
+    // The transformer decomposed at layer boundaries into independently
+    // callable pieces; `forward_losses` composes all of them in order,
+    // and the pipeline executor (`coordinator::pipeline::ModelStage`)
+    // calls exactly the subset its stage owns, per microbatch. Every
+    // backward piece accumulates per-row contributions into `g` in
+    // strict ascending row order (the `acc_tn`/`acc_bias`/
+    // `layernorm_bwd` contract), so processing the batch's row stream
+    // as consecutive microbatch slices reproduces the full-batch
+    // gradient bytes exactly (pinned in `coordinator::pipeline` tests).
+
+    /// Token + position embeddings for a batch slice [bsz, S+1] → [R, D].
+    pub fn embed_fwd(&self, flat: &[f32], batch: &[i32], bsz: usize) -> Result<Vec<f32>> {
+        let (s, d) = (self.seq_len, self.d_model);
+        let row_len = s + 1;
+        ensure!(
+            batch.len() == bsz * row_len,
+            "embed_fwd: batch has {} tokens for bsz {bsz}",
+            batch.len()
+        );
+        for &t in batch {
+            ensure!(t >= 0 && (t as usize) < self.vocab, "token {t} out of vocab {}", self.vocab);
+        }
         let tok_emb = self.p(flat, "tok_emb")?;
         let pos_emb = self.p(flat, "pos_emb")?;
-        let mut x = vec![0.0f32; rows * d];
+        let mut x = vec![0.0f32; bsz * s * d];
         for b in 0..bsz {
             for si in 0..s {
                 let t = batch[b * row_len + si] as usize;
@@ -489,51 +561,90 @@ impl HostExec {
                 }
             }
         }
+        Ok(x)
+    }
 
-        // ---- transformer blocks
-        let mut layers = Vec::with_capacity(self.n_layer);
-        for i in 0..self.n_layer {
-            let pre = format!("h{i}.");
-            let (ln1_out, ln1) = layernorm_fwd(
-                &x,
-                self.p(flat, &format!("{pre}ln1_g"))?,
-                self.p(flat, &format!("{pre}ln1_b"))?,
-                rows,
-                d,
-            );
-            let (att_out, att) = self.attention_fwd(flat, &pre, ln1_out, bsz)?;
-            par::add_assign(&mut x, &att_out);
-            let (ln2_out, ln2) = layernorm_fwd(
-                &x,
-                self.p(flat, &format!("{pre}ln2_g"))?,
-                self.p(flat, &format!("{pre}ln2_b"))?,
-                rows,
-                d,
-            );
-            let f = 4 * d;
-            let mut h_pre = mm(&ln2_out, self.p(flat, &format!("{pre}fc_w"))?, rows, d, f);
-            add_bias(&mut h_pre, self.p(flat, &format!("{pre}fc_b"))?, rows, f);
-            let (h_act, h_tanh) = gelu_fwd(&h_pre);
-            let mlp = mm(&h_act, self.p(flat, &format!("{pre}fc2_w"))?, rows, f, d);
-            let fc2_b = self.p(flat, &format!("{pre}fc2_b"))?;
-            let rows_per = par::items_per_chunk(2 * d, par::CHUNK_WORK);
-            par::for_each_chunk_mut(&mut x, rows_per * d, |ci, block| {
-                let off = ci * rows_per * d;
-                for (li, v) in block.iter_mut().enumerate() {
-                    *v += mlp[off + li] + fc2_b[li % d];
-                }
-            });
-            layers.push(LayerCache { ln1, att, ln2, ln2_out, h_pre, h_tanh, h_act });
+    /// Transformer block `layer` applied in place to `x` [R, D]; returns
+    /// the cache its backward consumes.
+    pub fn layer_fwd(
+        &self,
+        flat: &[f32],
+        layer: usize,
+        x: &mut Vec<f32>,
+        bsz: usize,
+    ) -> Result<LayerFwd> {
+        let (s, d) = (self.seq_len, self.d_model);
+        let rows = bsz * s;
+        ensure!(layer < self.n_layer, "layer {layer} out of {}", self.n_layer);
+        ensure!(x.len() == rows * d, "layer_fwd: x has {} floats for {rows} rows", x.len());
+        let pre = format!("h{layer}.");
+        let (ln1_out, ln1) = layernorm_fwd(
+            x,
+            self.p(flat, &format!("{pre}ln1_g"))?,
+            self.p(flat, &format!("{pre}ln1_b"))?,
+            rows,
+            d,
+        );
+        let (att_out, att) = self.attention_fwd(flat, &pre, ln1_out, bsz)?;
+        par::add_assign(x, &att_out);
+        let (ln2_out, ln2) = layernorm_fwd(
+            x,
+            self.p(flat, &format!("{pre}ln2_g"))?,
+            self.p(flat, &format!("{pre}ln2_b"))?,
+            rows,
+            d,
+        );
+        let f = 4 * d;
+        let mut h_pre = mm(&ln2_out, self.p(flat, &format!("{pre}fc_w"))?, rows, d, f);
+        add_bias(&mut h_pre, self.p(flat, &format!("{pre}fc_b"))?, rows, f);
+        let (h_act, h_tanh) = gelu_fwd(&h_pre);
+        let mlp = mm(&h_act, self.p(flat, &format!("{pre}fc2_w"))?, rows, f, d);
+        let fc2_b = self.p(flat, &format!("{pre}fc2_b"))?;
+        let rows_per = par::items_per_chunk(2 * d, par::CHUNK_WORK);
+        par::for_each_chunk_mut(x, rows_per * d, |ci, block| {
+            let off = ci * rows_per * d;
+            for (li, v) in block.iter_mut().enumerate() {
+                *v += mlp[off + li] + fc2_b[li % d];
+            }
+        });
+        Ok(LayerFwd { ln1, att, ln2, ln2_out, h_pre, h_tanh, h_act })
+    }
+
+    /// Final layernorm → tied head → per-example loss over `x` [R, D].
+    ///
+    /// `inv_rows` is the d(mean loss)/d(logit) scale: the centralized
+    /// path passes `1/R` of its own call; microbatched callers pass
+    /// `1/R` of the *full* per-replica batch so the per-microbatch
+    /// gradients sum to the full-batch gradient bit-for-bit.
+    pub fn head_fwd(
+        &self,
+        flat: &[f32],
+        x: &[f32],
+        batch: &[i32],
+        bsz: usize,
+        want_grads: bool,
+        inv_rows: f64,
+    ) -> Result<HeadFwd> {
+        let (s, d, v) = (self.seq_len, self.d_model, self.vocab);
+        let rows = bsz * s;
+        let row_len = s + 1;
+        ensure!(x.len() == rows * d, "head_fwd: x has {} floats for {rows} rows", x.len());
+        ensure!(
+            batch.len() == bsz * row_len,
+            "head_fwd: batch has {} tokens for bsz {bsz}",
+            batch.len()
+        );
+        for &t in batch {
+            ensure!(t >= 0 && (t as usize) < v, "token {t} out of vocab {v}");
         }
-
-        // ---- final layernorm + tied head
+        let tok_emb = self.p(flat, "tok_emb")?;
         let (lnf_out, lnf) =
-            layernorm_fwd(&x, self.p(flat, "lnf_g")?, self.p(flat, "lnf_b")?, rows, d);
+            layernorm_fwd(x, self.p(flat, "lnf_g")?, self.p(flat, "lnf_b")?, rows, d);
         let logits = mm_nt(&lnf_out, tok_emb, rows, d, v);
 
-        // ---- cross entropy (per example mean over positions).
-        // Examples are independent; losses[b] and the dlogits row block
-        // of example b are written by exactly one chunk worker.
+        // Cross entropy (per example mean over positions). Examples are
+        // independent; losses[b] and the dlogits row block of example b
+        // are written by exactly one chunk worker.
         let mut losses = vec![0.0f32; bsz];
         let mut dlogits = if want_grads { vec![0.0f32; rows * v] } else { Vec::new() };
         {
@@ -560,7 +671,6 @@ impl HostExec {
                         if want_grads {
                             // SAFETY: row r belongs to example b alone
                             let drow = unsafe { pd.range_mut(r * v..(r + 1) * v) };
-                            let inv_rows = 1.0 / rows as f64;
                             for j in 0..v {
                                 let p = ((lrow[j] - mx) as f64).exp() / z;
                                 drow[j] =
@@ -573,14 +683,181 @@ impl HostExec {
                 }
             });
         }
-        if !want_grads {
-            return Ok((losses, None));
-        }
+        Ok(HeadFwd { losses, dlogits, lnf_out, lnf, rows })
+    }
 
-        // ---- backward
-        let state = FwdState { lnf_out, lnf, layers };
-        let grads = self.backward(flat, batch, bsz, &state, &dlogits)?;
-        Ok((losses, Some(grads)))
+    /// Backward of [`HostExec::head_fwd`]: accumulates the tied-head
+    /// (`tok_emb`) and final-layernorm gradients into `g`; returns dx
+    /// w.r.t. the head input [R, D].
+    pub fn head_bwd(&self, flat: &[f32], head: &HeadFwd, g: &mut [f32]) -> Result<Vec<f32>> {
+        let (d, v) = (self.d_model, self.vocab);
+        let rows = head.rows;
+        ensure!(
+            head.dlogits.len() == rows * v,
+            "head_bwd requires want_grads caches ({} dlogits for {rows} rows)",
+            head.dlogits.len()
+        );
+        ensure!(g.len() == self.n_params, "head_bwd: grad buffer has {} floats", g.len());
+        let tok_emb = self.p(flat, "tok_emb")?;
+        {
+            let sp = self.spec("tok_emb")?;
+            acc_tn(&head.dlogits, &head.lnf_out, rows, v, d, &mut g[sp.offset..sp.offset + v * d]);
+        }
+        let dlnf = mm(&head.dlogits, tok_emb, rows, v, d);
+        let (gg, gb) = (self.spec("lnf_g")?.offset, self.spec("lnf_b")?.offset);
+        let (g_slice, rest) = g.split_at_mut(gb);
+        Ok(layernorm_bwd(
+            &dlnf,
+            &head.lnf,
+            self.p(flat, "lnf_g")?,
+            rows,
+            d,
+            &mut g_slice[gg..gg + d],
+            &mut rest[..d],
+        ))
+    }
+
+    /// Backward of block `layer`: `dx` (d loss / d layer-output, [R, D])
+    /// is replaced by d loss / d layer-input; weight gradients
+    /// accumulate into `g`.
+    pub fn layer_bwd(
+        &self,
+        flat: &[f32],
+        layer: usize,
+        dx: &mut Vec<f32>,
+        cache: &LayerFwd,
+        bsz: usize,
+        g: &mut [f32],
+    ) -> Result<()> {
+        let (s, d) = (self.seq_len, self.d_model);
+        let rows = bsz * s;
+        ensure!(layer < self.n_layer, "layer {layer} out of {}", self.n_layer);
+        ensure!(dx.len() == rows * d, "layer_bwd: dx has {} floats for {rows} rows", dx.len());
+        ensure!(g.len() == self.n_params, "layer_bwd: grad buffer has {} floats", g.len());
+        let pre = format!("h{layer}.");
+        let c = cache;
+        let f = 4 * d;
+        // MLP branch: x2 = x1 + gelu(ln2(x1)@fc_w + fc_b)@fc2_w + fc2_b
+        {
+            let sw = self.spec(&format!("{pre}fc2_w"))?;
+            acc_tn(&c.h_act, dx.as_slice(), rows, f, d, &mut g[sw.offset..sw.offset + f * d]);
+            let sb = self.spec(&format!("{pre}fc2_b"))?;
+            acc_bias(dx.as_slice(), rows, d, &mut g[sb.offset..sb.offset + d]);
+        }
+        let dh_act = mm_nt(dx.as_slice(), self.p(flat, &format!("{pre}fc2_w"))?, rows, d, f);
+        let dh_pre = gelu_bwd(&dh_act, &c.h_pre, &c.h_tanh);
+        {
+            let sw = self.spec(&format!("{pre}fc_w"))?;
+            acc_tn(&c.ln2_out, &dh_pre, rows, d, f, &mut g[sw.offset..sw.offset + d * f]);
+            let sb = self.spec(&format!("{pre}fc_b"))?;
+            acc_bias(&dh_pre, rows, f, &mut g[sb.offset..sb.offset + f]);
+        }
+        let dln2 = mm_nt(&dh_pre, self.p(flat, &format!("{pre}fc_w"))?, rows, f, d);
+        let dx1_mlp = {
+            let (gg, gb) = (
+                self.spec(&format!("{pre}ln2_g"))?.offset,
+                self.spec(&format!("{pre}ln2_b"))?.offset,
+            );
+            let (g_slice, rest) = g.split_at_mut(gb);
+            layernorm_bwd(
+                &dln2,
+                &c.ln2,
+                self.p(flat, &format!("{pre}ln2_g"))?,
+                rows,
+                d,
+                &mut g_slice[gg..gg + d],
+                &mut rest[..d],
+            )
+        };
+        // dx1 = residual + MLP path
+        par::add_assign(dx, &dx1_mlp);
+        // attention branch: x1 = x + att(ln1(x))
+        let dln1 = self.attention_bwd(flat, &pre, dx.as_slice(), &c.att, bsz, g)?;
+        let dx0 = {
+            let (gg, gb) = (
+                self.spec(&format!("{pre}ln1_g"))?.offset,
+                self.spec(&format!("{pre}ln1_b"))?.offset,
+            );
+            let (g_slice, rest) = g.split_at_mut(gb);
+            layernorm_bwd(
+                &dln1,
+                &c.ln1,
+                self.p(flat, &format!("{pre}ln1_g"))?,
+                rows,
+                d,
+                &mut g_slice[gg..gg + d],
+                &mut rest[..d],
+            )
+        };
+        par::add_assign(dx, &dx0);
+        Ok(())
+    }
+
+    /// Embedding backward: scatter `dx` [R, D] into the `tok_emb` and
+    /// `pos_emb` gradient slots. Strictly example-ascending adds; the
+    /// tied-head contribution to `tok_emb` must already be in `g`
+    /// (same order as the centralized backward).
+    pub fn embed_bwd(&self, batch: &[i32], bsz: usize, dx: &[f32], g: &mut [f32]) -> Result<()> {
+        let (s, d) = (self.seq_len, self.d_model);
+        let row_len = s + 1;
+        ensure!(
+            batch.len() == bsz * row_len,
+            "embed_bwd: batch has {} tokens for bsz {bsz}",
+            batch.len()
+        );
+        ensure!(dx.len() == bsz * s * d, "embed_bwd: dx has {} floats", dx.len());
+        ensure!(g.len() == self.n_params, "embed_bwd: grad buffer has {} floats", g.len());
+        let sp = self.spec("tok_emb")?.offset;
+        let pp = self.spec("pos_emb")?.offset;
+        for b in 0..bsz {
+            for si in 0..s {
+                let t = batch[b * row_len + si] as usize;
+                ensure!(t < self.vocab, "token {t} out of vocab {}", self.vocab);
+                let src = &dx[(b * s + si) * d..(b * s + si + 1) * d];
+                let emb = &mut g[sp + t * d..sp + (t + 1) * d];
+                for j in 0..d {
+                    emb[j] += src[j];
+                }
+            }
+        }
+        for b in 0..bsz {
+            for si in 0..s {
+                let src = &dx[(b * s + si) * d..(b * s + si + 1) * d];
+                let pos = &mut g[pp + si * d..pp + (si + 1) * d];
+                for j in 0..d {
+                    pos[j] += src[j];
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Model dimension accessors + flat-range lookup for the pipeline
+    /// executor (the manifest is not threaded through it).
+    pub fn dim_d_model(&self) -> usize {
+        self.d_model
+    }
+
+    pub fn dim_seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    pub fn dim_vocab(&self) -> usize {
+        self.vocab
+    }
+
+    pub fn dim_n_layer(&self) -> usize {
+        self.n_layer
+    }
+
+    pub fn dim_n_params(&self) -> usize {
+        self.n_params
+    }
+
+    /// Flat range of a named parameter.
+    pub fn param_span(&self, name: &str) -> Result<std::ops::Range<usize>> {
+        let s = self.spec(name)?;
+        Ok(s.offset..s.offset + s.size())
     }
 
     fn attention_fwd(
@@ -773,125 +1050,6 @@ impl HostExec {
         Ok(mm_nt(&dqkv, self.p(flat, &format!("{pre}qkv_w"))?, rows, 3 * d, d))
     }
 
-    fn backward(
-        &self,
-        flat: &[f32],
-        batch: &[i32],
-        bsz: usize,
-        state: &FwdState,
-        dlogits: &[f32],
-    ) -> Result<Vec<f32>> {
-        let (s, d, v) = (self.seq_len, self.d_model, self.vocab);
-        let rows = bsz * s;
-        let row_len = s + 1;
-        let mut g = vec![0.0f32; self.n_params];
-
-        // tied head: d tok_emb += dlogitsᵀ @ lnf ; dlnf = dlogits @ tok_emb
-        let tok_emb = self.p(flat, "tok_emb")?;
-        {
-            let sp = self.spec("tok_emb")?;
-            acc_tn(dlogits, &state.lnf_out, rows, v, d, &mut g[sp.offset..sp.offset + v * d]);
-        }
-        let dlnf = mm(dlogits, tok_emb, rows, v, d);
-        let mut dx = {
-            let (gg, gb) = (self.spec("lnf_g")?.offset, self.spec("lnf_b")?.offset);
-            let (g_slice, rest) = g.split_at_mut(gb);
-            layernorm_bwd(
-                &dlnf,
-                &state.lnf,
-                self.p(flat, "lnf_g")?,
-                rows,
-                d,
-                &mut g_slice[gg..gg + d],
-                &mut rest[..d],
-            )
-        };
-
-        for i in (0..self.n_layer).rev() {
-            let pre = format!("h{i}.");
-            let c = &state.layers[i];
-            let f = 4 * d;
-            // MLP branch: x2 = x1 + gelu(ln2(x1)@fc_w + fc_b)@fc2_w + fc2_b
-            {
-                let sw = self.spec(&format!("{pre}fc2_w"))?;
-                acc_tn(&c.h_act, &dx, rows, f, d, &mut g[sw.offset..sw.offset + f * d]);
-                let sb = self.spec(&format!("{pre}fc2_b"))?;
-                acc_bias(&dx, rows, d, &mut g[sb.offset..sb.offset + d]);
-            }
-            let dh_act = mm_nt(&dx, self.p(flat, &format!("{pre}fc2_w"))?, rows, d, f);
-            let dh_pre = gelu_bwd(&dh_act, &c.h_pre, &c.h_tanh);
-            {
-                let sw = self.spec(&format!("{pre}fc_w"))?;
-                acc_tn(&c.ln2_out, &dh_pre, rows, d, f, &mut g[sw.offset..sw.offset + d * f]);
-                let sb = self.spec(&format!("{pre}fc_b"))?;
-                acc_bias(&dh_pre, rows, f, &mut g[sb.offset..sb.offset + f]);
-            }
-            let dln2 = mm_nt(&dh_pre, self.p(flat, &format!("{pre}fc_w"))?, rows, f, d);
-            let dx1_mlp = {
-                let (gg, gb) = (
-                    self.spec(&format!("{pre}ln2_g"))?.offset,
-                    self.spec(&format!("{pre}ln2_b"))?.offset,
-                );
-                let (g_slice, rest) = g.split_at_mut(gb);
-                layernorm_bwd(
-                    &dln2,
-                    &c.ln2,
-                    self.p(flat, &format!("{pre}ln2_g"))?,
-                    rows,
-                    d,
-                    &mut g_slice[gg..gg + d],
-                    &mut rest[..d],
-                )
-            };
-            // dx1 = residual + MLP path
-            par::add_assign(&mut dx, &dx1_mlp);
-            // attention branch: x1 = x + att(ln1(x))
-            let dln1 = self.attention_bwd(flat, &pre, &dx, &c.att, bsz, &mut g)?;
-            let dx0 = {
-                let (gg, gb) = (
-                    self.spec(&format!("{pre}ln1_g"))?.offset,
-                    self.spec(&format!("{pre}ln1_b"))?.offset,
-                );
-                let (g_slice, rest) = g.split_at_mut(gb);
-                layernorm_bwd(
-                    &dln1,
-                    &c.ln1,
-                    self.p(flat, &format!("{pre}ln1_g"))?,
-                    rows,
-                    d,
-                    &mut g_slice[gg..gg + d],
-                    &mut rest[..d],
-                )
-            };
-            par::add_assign(&mut dx, &dx0);
-        }
-
-        // embeddings
-        {
-            let sp = self.spec("tok_emb")?.offset;
-            let pp = self.spec("pos_emb")?.offset;
-            for b in 0..bsz {
-                for si in 0..s {
-                    let t = batch[b * row_len + si] as usize;
-                    let src = &dx[(b * s + si) * d..(b * s + si + 1) * d];
-                    let emb = &mut g[sp + t * d..sp + (t + 1) * d];
-                    for j in 0..d {
-                        emb[j] += src[j];
-                    }
-                }
-            }
-            for b in 0..bsz {
-                for si in 0..s {
-                    let src = &dx[(b * s + si) * d..(b * s + si + 1) * d];
-                    let pos = &mut g[pp + si * d..pp + (si + 1) * d];
-                    for j in 0..d {
-                        pos[j] += src[j];
-                    }
-                }
-            }
-        }
-        Ok(g)
-    }
 }
 
 // ------------------------------------------------------ other executables

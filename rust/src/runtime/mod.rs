@@ -152,6 +152,10 @@ pub struct Manifest {
 /// and never instantiated here).
 pub const PRESETS: &[(&str, Dims)] = &[
     ("tiny", Dims { vocab: 512, d_model: 128, n_head: 4, n_layer: 2, seq_len: 64 }),
+    // `deep` trades width for depth: 4 layers so pipeline-parallel tests
+    // can split real stages (tiny's 2 layers cap --pp at 2) while staying
+    // cheap enough for the CI pp×dp determinism matrix.
+    ("deep", Dims { vocab: 256, d_model: 64, n_head: 2, n_layer: 4, seq_len: 32 }),
     ("small", Dims { vocab: 2048, d_model: 256, n_head: 8, n_layer: 8, seq_len: 128 }),
     ("base", Dims { vocab: 4096, d_model: 512, n_head: 8, n_layer: 12, seq_len: 256 }),
     ("e2e100m", Dims { vocab: 8192, d_model: 768, n_head: 12, n_layer: 12, seq_len: 256 }),
@@ -405,6 +409,18 @@ impl Runtime {
             Exec::Host(_) => "host".to_string(),
             #[cfg(feature = "pjrt")]
             Exec::Pjrt(p) => p.platform(),
+        }
+    }
+
+    /// The host executor behind this runtime, when it is the host path.
+    /// The pipeline-parallel trainer drives the stage-scoped
+    /// forward/backward directly (`host::HostExec::layer_fwd` etc.)
+    /// instead of going through whole-model named executables.
+    pub fn host_exec(&self) -> Option<&host::HostExec> {
+        match &self.exec {
+            Exec::Host(h) => Some(h),
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(_) => None,
         }
     }
 

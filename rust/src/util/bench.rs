@@ -178,6 +178,47 @@ impl BenchSet {
     }
 }
 
+/// Compare two `BENCH_*.json` documents (the perf-trajectory gate
+/// behind `edgc bench-diff`): every named entry of `baseline` must
+/// exist in `current` with a `min_ns` no more than `threshold`
+/// (fractional, e.g. 0.25 = +25%) above the baseline's. Returns
+/// human-readable regression descriptions — empty means the gate
+/// passes. An empty baseline result list passes trivially: committed
+/// seeds start empty until a toolchain environment regenerates them,
+/// and an empty gate must not block CI.
+pub fn diff_benchmarks(baseline: &Json, current: &Json, threshold: f64) -> Result<Vec<String>> {
+    crate::ensure!(threshold >= 0.0, "bench-diff threshold must be >= 0, got {threshold}");
+    let base_rows = baseline.get("results")?.as_arr()?;
+    if base_rows.is_empty() {
+        return Ok(Vec::new());
+    }
+    let cur_rows = current.get("results")?.as_arr()?;
+    let mut out = Vec::new();
+    for row in base_rows {
+        let name = row.get("name")?.as_str()?;
+        let base_min = row.get("min_ns")?.as_f64()?;
+        let found = cur_rows
+            .iter()
+            .find(|r| r.opt("name").and_then(|n| n.as_str().ok()) == Some(name));
+        match found {
+            None => out.push(format!("{name}: in baseline but missing from current run")),
+            Some(r) => {
+                let cur_min = r.get("min_ns")?.as_f64()?;
+                if base_min > 0.0 && cur_min > base_min * (1.0 + threshold) {
+                    out.push(format!(
+                        "{name}: min {} -> {} (+{:.1}%, allowed +{:.0}%)",
+                        BenchResult::human(base_min),
+                        BenchResult::human(cur_min),
+                        (cur_min / base_min - 1.0) * 100.0,
+                        threshold * 100.0
+                    ));
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +252,44 @@ mod tests {
         assert_eq!(o.json.as_deref(), Some("out.json"));
         let d = BenchOpts::from_args(std::iter::empty());
         assert!(!d.smoke && d.json.is_none());
+    }
+
+    fn bench_doc(entries: &[(&str, f64)]) -> Json {
+        let rows = entries
+            .iter()
+            .map(|(n, m)| {
+                format!(
+                    "{{\"name\": \"{n}\", \"iters\": 1, \"min_ns\": {m}, \
+                     \"p50_ns\": {m}, \"mean_ns\": {m}}}"
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
+        Json::parse(&format!("{{\"group\": \"g\", \"smoke\": true, \"results\": [{rows}]}}"))
+            .unwrap()
+    }
+
+    #[test]
+    fn diff_benchmarks_gates_regressions() {
+        let base = bench_doc(&[("a", 100.0), ("b", 200.0)]);
+        // within threshold: +20% on a, improvement on b
+        let ok = bench_doc(&[("a", 120.0), ("b", 150.0)]);
+        assert!(diff_benchmarks(&base, &ok, 0.25).unwrap().is_empty());
+        // a regresses 2x, b disappears
+        let bad = bench_doc(&[("a", 200.0)]);
+        let mut regs = diff_benchmarks(&base, &bad, 0.25).unwrap();
+        regs.sort();
+        assert_eq!(regs.len(), 1 + 1);
+        assert!(regs[0].starts_with("a:"), "{regs:?}");
+        assert!(regs[1].starts_with("b:"), "{regs:?}");
+        // extra entries in current are fine (new benches land first)
+        let extra = bench_doc(&[("a", 100.0), ("b", 200.0), ("c", 5.0)]);
+        assert!(diff_benchmarks(&base, &extra, 0.25).unwrap().is_empty());
+        // empty baseline (the committed-seed bootstrap state) passes
+        let empty = bench_doc(&[]);
+        assert!(diff_benchmarks(&empty, &bad, 0.25).unwrap().is_empty());
+        // negative threshold rejected
+        assert!(diff_benchmarks(&base, &ok, -0.1).is_err());
     }
 
     #[test]

@@ -9,7 +9,8 @@ use std::collections::BTreeMap;
 use std::sync::{Mutex, MutexGuard};
 
 use edgc::config::{Method, TrainConfig};
-use edgc::coordinator::{run_distributed, Backend, Trainer};
+use edgc::coordinator::pipeline::FRAME_HEADER_BYTES;
+use edgc::coordinator::{run_distributed, run_distributed_pp, Backend, Trainer};
 use edgc::dist::TransportKind;
 use edgc::repro::{campaign, Opts};
 use edgc::util::par;
@@ -136,6 +137,134 @@ fn distributed_mem_and_tcp_match_centralized_bytes() {
     par::set_threads(1);
 }
 
+/// Byte-identity + wire-volume pin for one pipeline-parallel run shape:
+/// `run_distributed_pp(cfg)` must reproduce the centralized
+/// `Trainer::run` curve and final parameters bit-for-bit, and every
+/// stage's measured data-class wire volume must sit within 1% of the
+/// ring + p2p + tied-embedding accounting (the slack covers the control
+/// plane: rank broadcasts and checksums).
+fn assert_pp_matches_centralized(cfg: &TrainConfig, kind: TransportKind) {
+    let (pp, dp) = (cfg.pp, cfg.dp);
+    let (central_params, central_curve, central_stage_comm) = {
+        let mut t = Trainer::new(cfg.clone(), Backend::Host).unwrap();
+        let s = t.run().unwrap();
+        (t.params().to_vec(), s.curve.render(), s.stage_comm_floats.clone())
+    };
+    let run = run_distributed_pp(cfg.clone(), Backend::Host, kind).unwrap();
+    let tag = format!("{:?} pp={pp} dp={dp} over {}", cfg.method, kind.name());
+    assert_eq!(run.summary.curve.render(), central_curve, "curve differs ({tag})");
+    let same = run.params.len() == central_params.len()
+        && run.params.iter().zip(&central_params).all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(same, "params differ ({tag})");
+    assert_eq!(run.summary.stage_comm_floats, central_stage_comm, "volume accounting ({tag})");
+
+    // per-stage wire-volume calibration
+    let man = edgc::runtime::Runtime::load(&cfg.artifacts).unwrap().manifest.clone();
+    let steps = cfg.steps as f64;
+    let rows = man.batch * man.seq_len;
+    // one direction of one hop, one replica, one step
+    let act = (cfg.microbatches * FRAME_HEADER_BYTES + 4 * rows * man.d_model) as f64;
+    let tied_payload = (4 * man.vocab * man.d_model) as f64;
+    for s in 0..pp {
+        let measured: u64 = (0..dp).map(|r| run.counters[r * pp + s].data_sent_bytes()).sum();
+        let mut modeled =
+            edgc::netsim::ring_wire_bytes(dp, run.summary.stage_comm_floats[s]);
+        if s + 1 < pp {
+            modeled += steps * dp as f64 * act; // forward activation sends
+        }
+        if s > 0 {
+            modeled += steps * dp as f64 * act; // backward gradient sends
+        }
+        if s == 0 {
+            // post-optimizer tied weight sync to the last stage
+            modeled += steps * dp as f64 * tied_payload;
+        }
+        if s + 1 == pp {
+            // framed tied gradient to stage 0
+            modeled += steps * dp as f64 * (FRAME_HEADER_BYTES as f64 + tied_payload);
+        }
+        let rel = (measured as f64 - modeled).abs() / modeled;
+        assert!(rel < 0.01, "stage {s}: measured {measured} B vs modeled {modeled} B ({tag})");
+    }
+    // whole-run identity via the coordinator's own p2p model
+    let cal = run.pipe.as_ref().expect("pipeline calibration");
+    let total_measured: u64 = run.counters.iter().map(|c| c.data_sent_bytes()).sum();
+    let total_modeled = edgc::netsim::ring_wire_bytes(dp, run.summary.total_comm_floats)
+        + cal.modeled_p2p_bytes;
+    let rel = (total_measured as f64 - total_modeled).abs() / total_modeled;
+    assert!(rel < 0.01, "total measured {total_measured} B vs modeled {total_modeled} B ({tag})");
+    // measured timings exist for every stage and fit a positive microback
+    assert_eq!(cal.mean_last_bwd.len(), pp);
+    assert!(cal.mean_last_bwd.iter().all(|&t| t > 0.0), "{:?}", cal.mean_last_bwd);
+}
+
+/// The acceptance pin: `--pp 2 --dp 2` over both transports,
+/// byte-identical to the centralized run, for a from-step-0 compressor
+/// (counter calibration on compressed steps) and the full EDGC control
+/// plane (entropy windows, DAC broadcast, stage-aligned ranks).
+#[test]
+fn pipeline_pp2_dp2_matches_centralized_bytes() {
+    let _knob = hold_par_knob();
+    par::set_threads(1);
+    for (method, steps) in [(Method::FixedRank(8), 8), (Method::Edgc, 12)] {
+        let cfg = tiny_cfg(method, steps);
+        // tiny_cfg already says pp=2 dp=2; keep micro=4 (batch 8 -> 2 each)
+        assert_eq!((cfg.pp, cfg.dp), (2, 2));
+        for kind in [TransportKind::Mem, TransportKind::Tcp] {
+            assert_pp_matches_centralized(&cfg, kind);
+        }
+    }
+    par::set_threads(1);
+}
+
+/// Microbatch-count invariance end-to-end: uneven and zero-length
+/// microbatch splits leave the training bytes untouched (the schedule
+/// moves more/empty frames, nothing else).
+#[test]
+fn pipeline_microbatch_split_invariance() {
+    let _knob = hold_par_knob();
+    par::set_threads(1);
+    for micro in [7usize, 12] {
+        let mut cfg = tiny_cfg(Method::FixedRank(8), 6);
+        cfg.dp = 1;
+        cfg.microbatches = micro; // batch 8: uneven at 7, empty tails at 12
+        assert_pp_matches_centralized(&cfg, TransportKind::Mem);
+    }
+    par::set_threads(1);
+}
+
+/// One cell of the CI pp×dp×transport matrix, selected via environment
+/// (EDGC_PP / EDGC_DP / EDGC_TRANSPORT) on the 4-layer `deep` preset so
+/// pp=4 splits real stages. Ignored by default; the `pp-dp-matrix` CI
+/// job runs it with `--ignored`.
+#[test]
+#[ignore]
+fn pp_dp_matrix_cell() {
+    let _knob = hold_par_knob();
+    par::set_threads(1);
+    // a set-but-unparseable variable must fail the cell, not silently
+    // shrink the matrix to the default shape
+    let get = |k: &str, d: usize| -> usize {
+        match std::env::var(k) {
+            Ok(v) => v.parse().unwrap_or_else(|_| panic!("{k}={v:?} is not a number")),
+            Err(_) => d,
+        }
+    };
+    let pp = get("EDGC_PP", 2);
+    let dp = get("EDGC_DP", 1);
+    let kind = TransportKind::parse(
+        &std::env::var("EDGC_TRANSPORT").unwrap_or_else(|_| "mem".into()),
+    )
+    .unwrap();
+    let mut cfg = tiny_cfg(Method::Edgc, 8);
+    cfg.artifacts = "artifacts/deep".into();
+    cfg.pp = pp;
+    cfg.dp = dp;
+    cfg.microbatches = 4;
+    assert_pp_matches_centralized(&cfg, kind);
+    par::set_threads(1);
+}
+
 fn tmp_dir(tag: &str) -> String {
     std::env::temp_dir()
         .join(format!("edgc-determinism-{tag}-{}", std::process::id()))
@@ -222,6 +351,27 @@ fn cli_tcp_transport_smoke() {
         .output()
         .unwrap();
     assert!(!status.status.success(), "artifact + transport must be rejected");
+}
+
+#[test]
+fn cli_pipeline_transport_smoke() {
+    // `edgc train --pp 2 --dp 1 --transport mem` spawns real stage
+    // workers (explicit --pp opts in) and reports the pipeline timing
+    // calibration next to the wire counters
+    let out = tmp_dir("cli-pp");
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_edgc"))
+        .args([
+            "train", "--pp", "2", "--dp", "1", "--transport", "mem", "--steps", "2",
+            "--eval-every", "2", "--threads", "1", "--out", &out,
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&status.stdout);
+    let stderr = String::from_utf8_lossy(&status.stderr);
+    assert!(status.status.success(), "pp train failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("pipe timing"), "missing calibration report:\n{stdout}");
+    assert!(stdout.contains("modeled ring + p2p"), "missing wire report:\n{stdout}");
+    std::fs::remove_dir_all(&out).ok();
 }
 
 #[test]
