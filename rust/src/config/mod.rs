@@ -274,6 +274,13 @@ pub struct TrainConfig {
     pub sim_tokens: usize,
     /// Evaluate validation loss every k steps (0 = never).
     pub eval_every: usize,
+    /// Overlapped bucketed gradient communication (`--overlap`):
+    /// distributed workers hand per-layer gradient buckets to a
+    /// dedicated comm thread as each bucket's backward finishes, so the
+    /// compressed DP sync overlaps the remaining backward compute.
+    /// Byte-identical outputs to the sequential path (the overlap is an
+    /// execution-schedule change only); requires `--transport`.
+    pub overlap: bool,
     /// Output directory for metrics tables.
     pub out_dir: String,
 }
@@ -296,6 +303,7 @@ impl Default for TrainConfig {
             sim_params: 2_500_000_000,
             sim_tokens: 32 * 1024,
             eval_every: 25,
+            overlap: false,
             out_dir: "runs".into(),
         }
     }
@@ -320,6 +328,7 @@ impl TrainConfig {
         c.seed = t.usize_or("run.seed", c.seed as usize)? as u64;
         c.lr = t.f64_or("run.lr", c.lr)?;
         c.eval_every = t.usize_or("run.eval_every", c.eval_every)?;
+        c.overlap = t.bool_or("run.overlap", c.overlap)?;
         c.corpus_tokens = t.usize_or("run.corpus_tokens", c.corpus_tokens)?;
         c.out_dir = t.str_or("run.out_dir", &c.out_dir)?;
         c.dp = t.usize_or("parallel.dp", c.dp)?;

@@ -13,6 +13,34 @@ use crate::pipesim::{simulate, PipeSpec};
 /// transformer training at these scales).
 pub const UTILIZATION: f64 = 0.4;
 
+/// One gradient bucket's modeled DP-sync cost, for the overlap
+/// estimate ([`VirtualClock::overlap_step_estimate`]).
+#[derive(Clone, Copy, Debug)]
+pub struct BucketCost {
+    /// Modeled seconds of ring + compression time for this bucket.
+    pub comm: f64,
+    /// True when the bucket only becomes ready after the stage's
+    /// backward fully finishes (the tied-embedding bucket) — it can
+    /// never be hidden behind backward compute.
+    pub post_backward: bool,
+}
+
+/// Modeled effect of overlapping one iteration's bucketed DP sync.
+#[derive(Clone, Copy, Debug)]
+pub struct OverlapEstimate {
+    /// Comm seconds executed while backward compute was still running
+    /// (summed over stages).
+    pub hidden: f64,
+    /// Total bucketed comm seconds (summed over stages).
+    pub total: f64,
+    /// Iteration time with the same bucketed comm run sequentially
+    /// after each stage's backward.
+    pub sequential_iter: f64,
+    /// Iteration time with the overlapped schedule (only the exposed
+    /// comm tail extends the stage).
+    pub overlapped_iter: f64,
+}
+
 #[derive(Clone, Debug)]
 pub struct VirtualClock {
     pub cluster: Cluster,
@@ -122,6 +150,52 @@ impl VirtualClock {
         simulate(&self.pipe_spec(vec![0.0; self.pp])).last_bwd
     }
 
+    /// Overlap-aware latency model (diagnostic only — the canonical
+    /// [`VirtualClock::step`] keeps pricing sequential comm, because
+    /// `--overlap` is byte-identical to the sequential path and the
+    /// curve must not change). `stage_buckets[s]` lists stage `s`'s
+    /// gradient buckets in completion order; in-backward buckets become
+    /// ready at evenly spaced points across the stage's final microbatch
+    /// backward (duration `t_bwd`, ending at the stage's modeled
+    /// last-backward finish), post-backward buckets (the tied embedding)
+    /// at the finish itself. One comm thread per stage drains them
+    /// serially; comm executed before the stage's backward finish is
+    /// *hidden*. The iteration comparison prices both schedules through
+    /// the same pipesim spec, so the saving isolates the overlap itself
+    /// (both sides pay identical per-bucket ring latency).
+    pub fn overlap_step_estimate(&self, stage_buckets: &[Vec<BucketCost>]) -> OverlapEstimate {
+        assert_eq!(stage_buckets.len(), self.pp, "bucket lists must be stage-indexed");
+        let last = self.modeled_last_bwd();
+        let mut hidden = 0.0f64;
+        let mut total = 0.0f64;
+        let mut exposed = vec![0.0f64; self.pp];
+        for (s, buckets) in stage_buckets.iter().enumerate() {
+            let n_ib = buckets.iter().filter(|b| !b.post_backward).count().max(1);
+            let t0 = last[s] - self.t_bwd; // final-microbatch backward start
+            let mut cursor = 0.0f64;
+            let mut j = 0usize;
+            for b in buckets {
+                let ready = if b.post_backward {
+                    last[s]
+                } else {
+                    j += 1;
+                    t0 + j as f64 * self.t_bwd / n_ib as f64
+                };
+                let start = cursor.max(ready);
+                let end = start + b.comm;
+                hidden += (last[s].min(end) - last[s].min(start)).max(0.0);
+                total += b.comm;
+                cursor = end;
+            }
+            exposed[s] = (cursor - last[s]).max(0.0);
+        }
+        let seq_dp: Vec<f64> =
+            stage_buckets.iter().map(|bs| bs.iter().map(|b| b.comm).sum()).collect();
+        let sequential_iter = simulate(&self.pipe_spec(seq_dp)).iteration;
+        let overlapped_iter = simulate(&self.pipe_spec(exposed)).iteration;
+        OverlapEstimate { hidden, total, sequential_iter, overlapped_iter }
+    }
+
     /// Advance the clock by one training iteration; returns
     /// (iteration_time, bottleneck_comm_time).
     pub fn step(
@@ -217,6 +291,50 @@ mod tests {
         // smaller at these scales)
         let fit = crate::pipesim::fit_microback(&lb);
         assert!((fit - c.t_bwd).abs() < 1e-3 * c.t_bwd, "{fit} vs {}", c.t_bwd);
+    }
+
+    #[test]
+    fn overlap_estimate_hides_early_buckets_and_never_the_tied_one() {
+        let c = clock();
+        let comm = c.t_bwd * 0.2; // small buckets: fully hideable
+        let mk = |post| BucketCost { comm, post_backward: post };
+        // 3 in-backward buckets per stage, plus the tied bucket on
+        // stage 0 — which by definition cannot be hidden
+        let mut stages: Vec<Vec<BucketCost>> =
+            (0..c.pp).map(|_| vec![mk(false), mk(false), mk(false)]).collect();
+        stages[0].push(mk(true));
+        let e = c.overlap_step_estimate(&stages);
+        let n_buckets = 3 * c.pp + 1;
+        assert!((e.total - comm * n_buckets as f64).abs() < 1e-12);
+        // every in-backward bucket fits before the stage finish except
+        // the last one of each stage (ready exactly at the finish)
+        assert!(e.hidden > 0.0 && e.hidden < e.total, "hidden {} of {}", e.hidden, e.total);
+        // the tied bucket's comm is fully exposed: hidden excludes it
+        assert!(e.hidden <= e.total - comm + 1e-12);
+        // overlap can only help
+        assert!(e.overlapped_iter <= e.sequential_iter + 1e-12);
+        // zero comm: estimate degenerates cleanly
+        let zero: Vec<Vec<BucketCost>> = (0..c.pp)
+            .map(|_| vec![BucketCost { comm: 0.0, post_backward: false }])
+            .collect();
+        let z = c.overlap_step_estimate(&zero);
+        assert_eq!(z.hidden, 0.0);
+        assert_eq!(z.total, 0.0);
+        assert!((z.sequential_iter - z.overlapped_iter).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_estimate_big_buckets_expose_a_tail() {
+        let c = clock();
+        let comm = c.t_bwd * 10.0; // comm dwarfs the hideable window
+        let stages: Vec<Vec<BucketCost>> = (0..c.pp)
+            .map(|_| vec![BucketCost { comm, post_backward: false }; 2])
+            .collect();
+        let e = c.overlap_step_estimate(&stages);
+        // at most ~t_bwd per stage can hide inside the final backward
+        assert!(e.hidden <= c.t_bwd * c.pp as f64 + 1e-9);
+        assert!(e.overlapped_iter > e.sequential_iter * 0.5);
+        assert!(e.overlapped_iter <= e.sequential_iter + 1e-12);
     }
 
     #[test]

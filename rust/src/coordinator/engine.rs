@@ -13,6 +13,8 @@
 //! 1-D tensors are never compressed.
 
 use std::ops::Range;
+use std::sync::mpsc::Receiver;
+use std::time::Instant;
 
 use crate::util::error::{Context, Result};
 
@@ -84,15 +86,23 @@ impl StagePlan {
         }
     }
 
+    /// Transformer-layer index of an `h<i>.*` parameter name, clamped
+    /// into range like [`StagePlan::stage_of_layer`] (the historical
+    /// tolerance for malformed manifests); None for embeddings/head.
+    /// The single owner of the name-parsing convention — stage mapping
+    /// and the overlap bucket map both delegate here.
+    pub fn layer_of_name(&self, name: &str) -> Option<usize> {
+        let rest = name.strip_prefix('h')?;
+        let (idx, _) = rest.split_once('.')?;
+        let i = idx.parse::<usize>().ok()?;
+        Some(i.min(self.n_layer - 1))
+    }
+
     /// Stage of a named parameter: embeddings → 0, `lnf*` → last stage,
     /// `h<i>.*` → its layer's stage.
     pub fn stage_of_name(&self, name: &str) -> usize {
-        if let Some(rest) = name.strip_prefix('h') {
-            if let Some((idx, _)) = rest.split_once('.') {
-                if let Ok(i) = idx.parse::<usize>() {
-                    return self.stage_of_layer(i);
-                }
-            }
+        if let Some(i) = self.layer_of_name(name) {
+            return self.stage_of_layer(i);
         }
         if name.starts_with("lnf") {
             return self.pp - 1;
@@ -143,6 +153,54 @@ impl StagePlan {
 pub fn stage_of(name: &str, n_layer: usize, pp: usize) -> usize {
     StagePlan::new(n_layer, pp).stage_of_name(name)
 }
+
+/// Identity of one gradient bucket of the overlapped communication
+/// path: the unit whose DP sync launches the moment its backward
+/// finishes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BucketKey {
+    /// `tok_emb` + `pos_emb` — final only after the tied-embedding
+    /// exchange and the deferred scatter, so it is always the last
+    /// bucket a first-stage worker emits.
+    Embed,
+    /// All of transformer layer `i`'s parameters.
+    Layer(usize),
+    /// The final layernorm (`lnf*`) — the first gradients backward
+    /// finalizes on the last stage.
+    Head,
+}
+
+impl BucketKey {
+    pub fn label(&self) -> String {
+        match self {
+            BucketKey::Embed => "embed".into(),
+            BucketKey::Layer(i) => format!("h{i}"),
+            BucketKey::Head => "head".into(),
+        }
+    }
+}
+
+/// One per-layer gradient bucket: a contiguous flat-parameter slice
+/// plus the engine tensor/plain indices it owns. Boundaries are a pure
+/// function of the stage plan and the manifest layout — never of
+/// timing — which is what keeps `--overlap` byte-identical to the
+/// sequential path.
+#[derive(Clone, Debug)]
+pub struct GradBucket {
+    pub key: BucketKey,
+    /// The stage every member parameter maps to.
+    pub stage: usize,
+    /// Contiguous flat range the bucket's parameters tile exactly.
+    pub range: Range<usize>,
+    /// Indices into [`Engine::tensors`], ascending.
+    pub tensors: Vec<usize>,
+    /// Indices into [`Engine::plain`], ascending.
+    pub plain: Vec<usize>,
+}
+
+/// One (bucket index, copied flat gradient slice) handoff from the
+/// backward pass to the comm thread.
+pub type BucketGrad = (usize, Vec<f32>);
 
 /// Per-step all-reduce report (feeds netsim pricing + Fig. 10 curves).
 #[derive(Clone, Debug)]
@@ -460,6 +518,209 @@ impl Engine {
             mean_rel_error: if err_weight > 0.0 { err_weighted / err_weight } else { 0.0 },
             tensor_errors,
         })
+    }
+
+    /// The overlapped-communication bucket map: per-layer gradient
+    /// buckets of `only_stage` (None = every stage), in **backward
+    /// completion order** — head (last stage) first, then transformer
+    /// layers in descending order, then embeddings (stage 0) last —
+    /// matching the order the backward pass finalizes gradients. Each
+    /// bucket's parameters must tile a contiguous flat range; a layout
+    /// that interleaves buckets is rejected. Boundaries are a pure
+    /// function of the plan and the manifest, never of timing.
+    pub fn bucket_plan(&self, only_stage: Option<usize>) -> Result<Vec<GradBucket>> {
+        if let Some(s) = only_stage {
+            crate::ensure!(s < self.pp, "stage {s} out of pp {}", self.pp);
+        }
+        let in_scope = |st: usize| only_stage.map_or(true, |s| s == st);
+        let key_of = |name: &str| -> BucketKey {
+            // one name-parsing convention: StagePlan::layer_of_name
+            if let Some(i) = self.plan.layer_of_name(name) {
+                return BucketKey::Layer(i);
+            }
+            if name.starts_with("lnf") {
+                return BucketKey::Head;
+            }
+            BucketKey::Embed
+        };
+        let mut keys = Vec::new();
+        if in_scope(self.pp - 1) {
+            keys.push((BucketKey::Head, self.pp - 1));
+        }
+        let layers: Vec<usize> = match only_stage {
+            Some(s) => self.plan.layers(s).rev().collect(),
+            None => (0..self.n_layer).rev().collect(),
+        };
+        for l in layers {
+            keys.push((BucketKey::Layer(l), self.plan.stage_of_layer(l)));
+        }
+        if in_scope(0) {
+            keys.push((BucketKey::Embed, 0));
+        }
+        let mut out = Vec::with_capacity(keys.len());
+        for (key, stage) in keys {
+            let mut lo = usize::MAX;
+            let mut hi = 0usize;
+            let mut covered = 0usize;
+            let mut tensors = Vec::new();
+            let mut plain = Vec::new();
+            for (ti, t) in self.tensors.iter().enumerate() {
+                if key_of(&t.spec.name) == key {
+                    lo = lo.min(t.spec.offset);
+                    hi = hi.max(t.spec.offset + t.spec.size());
+                    covered += t.spec.size();
+                    tensors.push(ti);
+                }
+            }
+            for (pi, p) in self.plain.iter().enumerate() {
+                if key_of(&p.name) == key {
+                    lo = lo.min(p.offset);
+                    hi = hi.max(p.offset + p.size());
+                    covered += p.size();
+                    plain.push(pi);
+                }
+            }
+            crate::ensure!(lo != usize::MAX, "bucket {} owns no parameters", key.label());
+            crate::ensure!(
+                covered == hi - lo,
+                "bucket {} params do not tile {lo}..{hi} (covered {covered}) — \
+                 the flat layout interleaves buckets",
+                key.label()
+            );
+            out.push(GradBucket { key, stage, range: lo..hi, tensors, plain });
+        }
+        Ok(out)
+    }
+
+    /// The overlapped counterpart of [`Engine::allreduce_dist_stage`]:
+    /// the **comm-thread body**. Gradient buckets arrive on `rx` in the
+    /// fixed `plan` order — the caller passes the same
+    /// [`Engine::bucket_plan`] the emission hooks were built from (one
+    /// shared plan per run, not recomputed per step), and out-of-order
+    /// arrival is a hard error. Each bucket then runs the exact
+    /// per-tensor collectives of the sequential path over `tr` — same
+    /// EF slots, same fold order, same wire bytes — so `avg`, the
+    /// compressor state and the volume accounting are byte-identical to
+    /// [`Engine::allreduce_dist_inner`] over the same gradients. The
+    /// rank-0 error diagnostics are re-folded in engine tensor order
+    /// after the drain, reproducing the sequential f64 sequence.
+    ///
+    /// Also returns per-bucket `(start, end)` busy spans in seconds
+    /// since `origin` — the measured comm-hidden diagnostic, which is
+    /// never fed back into any decision.
+    pub fn allreduce_overlap(
+        &mut self,
+        tr: &mut dyn Transport,
+        rx: &Receiver<BucketGrad>,
+        plan: &[GradBucket],
+        ranks: Option<&[usize]>,
+        origin: Instant,
+    ) -> Result<(AllreduceReport, Vec<(f64, f64)>)> {
+        crate::ensure!(
+            self.backend == Backend::Host,
+            "overlapped all-reduce runs the host backend only"
+        );
+        if let Some(rs) = ranks {
+            crate::ensure!(
+                rs.len() == self.pp,
+                "per-stage rank vector has {} entries for pp={}",
+                rs.len(),
+                self.pp
+            );
+        }
+        let rank = tr.rank();
+        let mut avg = vec![0.0f32; self.n_params];
+        let mut stage_compressed = vec![0usize; self.pp];
+        let mut stage_original = vec![0usize; self.pp];
+        let mut rel_by_tensor: Vec<Option<f64>> = vec![None; self.tensors.len()];
+        let mut spans = Vec::with_capacity(plan.len());
+        for (expect, bucket) in plan.iter().enumerate() {
+            let (idx, grad) = rx.recv().map_err(|_| {
+                crate::err!(
+                    "overlap: bucket stream closed before bucket {expect} ({})",
+                    bucket.key.label()
+                )
+            })?;
+            crate::ensure!(
+                idx == expect,
+                "overlap: bucket {idx} arrived out of order (expected {expect}, {})",
+                bucket.key.label()
+            );
+            crate::ensure!(
+                grad.len() == bucket.range.len(),
+                "overlap: bucket {} carries {} floats for range {:?}",
+                bucket.key.label(),
+                grad.len(),
+                bucket.range
+            );
+            let t0 = origin.elapsed().as_secs_f64();
+            let base = bucket.range.start;
+            for &pi in &bucket.plain {
+                let (off, len) = (self.plain[pi].offset, self.plain[pi].size());
+                let st = self.plan.stage_of_name(&self.plain[pi].name);
+                let mut seg = grad[off - base..off - base + len].to_vec();
+                collective::all_reduce_mean(tr, &mut seg)?;
+                avg[off..off + len].copy_from_slice(&seg);
+                stage_compressed[st] += len;
+                stage_original[st] += len;
+            }
+            for &ti in &bucket.tensors {
+                let t = &mut self.tensors[ti];
+                let (off, len) = (t.spec.offset, t.spec.size());
+                stage_original[t.stage] += len;
+                match ranks.map(|rs| rs[t.stage].clamp(1, t.bucket.r_max)) {
+                    None => {
+                        let mut seg = grad[off - base..off - base + len].to_vec();
+                        collective::all_reduce_mean(tr, &mut seg)?;
+                        avg[off..off + len].copy_from_slice(&seg);
+                        stage_compressed[t.stage] += len;
+                    }
+                    Some(r) => {
+                        let round = t.comp.round_dist(tr, &grad[off - base..off - base + len], r)?;
+                        avg[off..off + len].copy_from_slice(&round.approx);
+                        stage_compressed[t.stage] += round.volume.compressed;
+                        if rank == 0 {
+                            rel_by_tensor[ti] = Some(round.rel_error);
+                        }
+                    }
+                }
+            }
+            spans.push((t0, origin.elapsed().as_secs_f64()));
+        }
+        // rank-0 diagnostics, folded in engine tensor order — the exact
+        // f64 sequence of the sequential report (over the plan's
+        // tensors only: exactly the sequential path's stage scope)
+        let mut in_plan = vec![false; self.tensors.len()];
+        for b in plan {
+            for &ti in &b.tensors {
+                in_plan[ti] = true;
+            }
+        }
+        let mut tensor_errors = Vec::new();
+        let mut err_weighted = 0.0f64;
+        let mut err_weight = 0.0f64;
+        if rank == 0 && ranks.is_some() {
+            for (ti, t) in self.tensors.iter().enumerate() {
+                if !in_plan[ti] {
+                    continue;
+                }
+                let rel = rel_by_tensor[ti]
+                    .with_context(|| format!("missing rel_error for {}", t.spec.name))?;
+                err_weighted += rel * t.spec.size() as f64;
+                err_weight += t.spec.size() as f64;
+                tensor_errors.push((t.spec.name.clone(), t.stage, rel));
+            }
+        }
+        Ok((
+            AllreduceReport {
+                avg,
+                stage_compressed,
+                stage_original,
+                mean_rel_error: if err_weight > 0.0 { err_weighted / err_weight } else { 0.0 },
+                tensor_errors,
+            },
+            spans,
+        ))
     }
 }
 
@@ -842,6 +1103,123 @@ mod tests {
             "measured {logical} vs accounted {}",
             rep_c.total_compressed()
         );
+    }
+
+    #[test]
+    fn bucket_plan_completion_order_and_tiling() {
+        let e = Engine::new(&mini_manifest(), 2, 1, false, Backend::Host, 0);
+        // full scope: head first, layers descending, embed last
+        let plan = e.bucket_plan(None).unwrap();
+        let keys: Vec<BucketKey> = plan.iter().map(|b| b.key).collect();
+        assert_eq!(
+            keys,
+            vec![BucketKey::Head, BucketKey::Layer(1), BucketKey::Layer(0), BucketKey::Embed]
+        );
+        assert_eq!(plan.iter().map(|b| b.stage).collect::<Vec<_>>(), vec![1, 1, 0, 0]);
+        // buckets tile disjoint contiguous ranges covering all 56 floats
+        let total: usize = plan.iter().map(|b| b.range.len()).sum();
+        assert_eq!(total, 56);
+        for b in &plan {
+            let owned: usize = b.tensors.iter().map(|&ti| e.tensors[ti].spec.size()).sum::<usize>()
+                + b.plain.iter().map(|&pi| e.plain[pi].size()).sum::<usize>();
+            assert_eq!(owned, b.range.len(), "{:?}", b.key);
+        }
+        // per-stage scope keeps the relative order and the members
+        let s1 = e.bucket_plan(Some(1)).unwrap();
+        assert_eq!(
+            s1.iter().map(|b| b.key).collect::<Vec<_>>(),
+            vec![BucketKey::Head, BucketKey::Layer(1)]
+        );
+        let s0 = e.bucket_plan(Some(0)).unwrap();
+        assert_eq!(
+            s0.iter().map(|b| b.key).collect::<Vec<_>>(),
+            vec![BucketKey::Layer(0), BucketKey::Embed]
+        );
+        assert!(e.bucket_plan(Some(5)).is_err());
+    }
+
+    #[test]
+    fn allreduce_overlap_matches_sequential_bitwise() {
+        // Feeding the buckets in plan order through the channel must
+        // reproduce the sequential distributed all-reduce exactly:
+        // avg, volume accounting, EF state and rank-0 diagnostics.
+        let world = 2usize;
+        let mut rng = Rng::new(60);
+        let grads: Vec<Vec<f32>> = (0..world).map(|_| rng.normal_vec(56, 1.0)).collect();
+        for (ranks, steps) in [(Some(vec![1usize, 2]), 3usize), (None, 1)] {
+            let seq = crate::dist::run_group(crate::dist::TransportKind::Mem, world, |rank, tr| {
+                let mut e = Engine::new(&mini_manifest(), 2, world, true, Backend::Host, 5);
+                let mut last = None;
+                for _ in 0..steps {
+                    last = Some(e.allreduce_dist(tr, &grads[rank], ranks.as_deref())?);
+                }
+                Ok((last.unwrap(), e))
+            })
+            .unwrap();
+            let ov = crate::dist::run_group(crate::dist::TransportKind::Mem, world, |rank, tr| {
+                let mut e = Engine::new(&mini_manifest(), 2, world, true, Backend::Host, 5);
+                let plan = e.bucket_plan(None)?;
+                let mut last = None;
+                for _ in 0..steps {
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    for (i, b) in plan.iter().enumerate() {
+                        tx.send((i, grads[rank][b.range.clone()].to_vec())).unwrap();
+                    }
+                    drop(tx);
+                    let (rep, spans) = e.allreduce_overlap(
+                        tr,
+                        &rx,
+                        &plan,
+                        ranks.as_deref(),
+                        std::time::Instant::now(),
+                    )?;
+                    assert_eq!(spans.len(), plan.len());
+                    last = Some(rep);
+                }
+                Ok((last.unwrap(), e))
+            })
+            .unwrap();
+            for (rank, ((rep_o, e_o), _)) in ov.iter().enumerate() {
+                let (rep_s, e_s) = &seq[rank].0;
+                let same =
+                    rep_o.avg.iter().zip(&rep_s.avg).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "avg differs at rank {rank}");
+                assert_eq!(rep_o.stage_compressed, rep_s.stage_compressed);
+                assert_eq!(rep_o.stage_original, rep_s.stage_original);
+                assert_eq!(rep_o.mean_rel_error.to_bits(), rep_s.mean_rel_error.to_bits());
+                assert_eq!(rep_o.tensor_errors, rep_s.tensor_errors);
+                for (to, ts) in e_o.tensors.iter().zip(&e_s.tensors) {
+                    assert_eq!(
+                        to.comp.q.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        ts.comp.q.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        "warm Q differs ({})",
+                        to.spec.name
+                    );
+                    assert_eq!(
+                        to.comp.errors[rank].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        ts.comp.errors[rank].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        "EF slot differs ({})",
+                        to.spec.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_overlap_rejects_out_of_order_buckets() {
+        let out = crate::dist::run_group(crate::dist::TransportKind::Mem, 1, |_, tr| {
+            let mut e = Engine::new(&mini_manifest(), 2, 1, false, Backend::Host, 0);
+            let plan = e.bucket_plan(None)?;
+            let (tx, rx) = std::sync::mpsc::channel();
+            // send bucket 1 first: the drain must fail loudly
+            tx.send((1, vec![0.0f32; plan[1].range.len()])).unwrap();
+            drop(tx);
+            let r = e.allreduce_overlap(tr, &rx, &plan, None, std::time::Instant::now());
+            Ok(r.is_err())
+        })
+        .unwrap();
+        assert!(out[0].0, "out-of-order bucket must be rejected");
     }
 
     #[test]

@@ -17,7 +17,8 @@ pub mod trainer;
 
 pub use clock::VirtualClock;
 pub use dac::{Dac, RankBounds};
-pub use engine::{Backend, Engine, StagePlan};
+pub use engine::{Backend, BucketKey, Engine, GradBucket, StagePlan};
 pub use trainer::{
-    run_distributed, run_distributed_pp, DistRun, PipeCalibration, RunSummary, Trainer,
+    run_distributed, run_distributed_pp, DistRun, OverlapReport, PipeCalibration, RunSummary,
+    Trainer,
 };

@@ -32,8 +32,10 @@
 //! `tests/determinism.rs`.
 
 use std::ops::Range;
+use std::sync::mpsc::Sender;
 use std::time::Instant;
 
+use crate::coordinator::engine::{BucketGrad, BucketKey, GradBucket};
 use crate::dist::collective::chunk_range;
 use crate::dist::Transport;
 use crate::pipesim;
@@ -259,6 +261,48 @@ pub fn run_1f1b(
 
 // ------------------------------------------------------ the model stage
 
+/// Per-step overlap wiring for one stage worker: the moment a gradient
+/// bucket becomes final during the backward sweep, its flat slice is
+/// copied and handed to the comm thread (bucket index + floats) — in
+/// the fixed [`crate::coordinator::engine::Engine::bucket_plan`] order,
+/// which the comm thread enforces. Built from the same plan the comm
+/// thread drains, so the two sides cannot disagree on boundaries.
+pub struct OverlapHooks {
+    tx: Sender<BucketGrad>,
+    /// Emitted right after the final microbatch's head backward (last
+    /// stage only): (bucket index, flat range).
+    head: Option<(usize, Range<usize>)>,
+    /// Emitted after each layer's final-microbatch backward, in the
+    /// plan's descending layer order: (layer, bucket index, flat range).
+    layers: Vec<(usize, usize, Range<usize>)>,
+    /// Emitted by [`ModelStage::exchange_tied`] after the deferred
+    /// embedding scatter (first stage only).
+    embed: Option<(usize, Range<usize>)>,
+}
+
+impl OverlapHooks {
+    /// Build the emission table from the comm thread's bucket plan.
+    pub fn new(tx: Sender<BucketGrad>, plan: &[GradBucket]) -> OverlapHooks {
+        let mut head = None;
+        let mut layers = Vec::new();
+        let mut embed = None;
+        for (i, b) in plan.iter().enumerate() {
+            match b.key {
+                BucketKey::Head => head = Some((i, b.range.clone())),
+                BucketKey::Layer(l) => layers.push((l, i, b.range.clone())),
+                BucketKey::Embed => embed = Some((i, b.range.clone())),
+            }
+        }
+        OverlapHooks { tx, head, layers, embed }
+    }
+
+    fn emit(&self, idx: usize, range: &Range<usize>, g: &[f32]) -> Result<()> {
+        self.tx
+            .send((idx, g[range.clone()].to_vec()))
+            .map_err(|_| crate::err!("overlap comm thread hung up before bucket {idx}"))
+    }
+}
+
 struct MbCache {
     layers: Vec<LayerFwd>,
     head: Option<HeadFwd>,
@@ -290,6 +334,7 @@ pub struct ModelStage<'a> {
     loss_sum: f64,
     loss_n: usize,
     tok_range: Range<usize>,
+    overlap: Option<OverlapHooks>,
 }
 
 impl<'a> ModelStage<'a> {
@@ -357,7 +402,31 @@ impl<'a> ModelStage<'a> {
             loss_sum: 0.0,
             loss_n: 0,
             tok_range,
+            overlap: None,
         })
+    }
+
+    /// Arm overlapped emission: validates that the hook table covers
+    /// exactly this stage's buckets (head iff last, embed iff first,
+    /// and the stage's layers in descending order — the order the
+    /// backward loop walks them).
+    pub fn set_overlap(&mut self, hooks: OverlapHooks) -> Result<()> {
+        crate::ensure!(
+            hooks.head.is_some() == self.last,
+            "overlap hooks: head bucket presence must match the last-stage flag"
+        );
+        crate::ensure!(
+            hooks.embed.is_some() == self.first,
+            "overlap hooks: embed bucket presence must match the first-stage flag"
+        );
+        let want: Vec<usize> = self.layers.clone().rev().collect();
+        let got: Vec<usize> = hooks.layers.iter().map(|(l, _, _)| *l).collect();
+        crate::ensure!(
+            want == got,
+            "overlap hooks: layer buckets {got:?} do not match the stage's layers {want:?}"
+        );
+        self.overlap = Some(hooks);
+        Ok(())
     }
 
     /// Example range of microbatch `mb` (fixed balanced split — the
@@ -408,6 +477,13 @@ impl<'a> ModelStage<'a> {
                     let mb_bsz = self.examples(mb).len();
                     let bs = self.batch_slice(mb);
                     self.exec.embed_bwd(bs, mb_bsz, &dx, self.g)?;
+                }
+            }
+            // the embedding bucket is final only now (tied gradient
+            // seeded + deferred scatter replayed): last hand-off
+            if let Some(h) = &self.overlap {
+                if let Some((idx, range)) = &h.embed {
+                    h.emit(*idx, range, self.g.as_slice())?;
                 }
             }
         }
@@ -492,7 +568,23 @@ impl StageStep for ModelStage<'_> {
             .with_context(|| format!("backward of microbatch {mb} before its forward"))?;
         let mb_bsz = self.examples(mb).len();
         let rows = mb_bsz * self.seq;
+        // gradients are final once the *last* microbatch's backward has
+        // walked a unit (accumulation is row-ascending across the whole
+        // batch); that is when the overlap hooks hand each bucket off
+        let finalizes = mb + 1 == self.micro;
         if rows == 0 {
+            // empty trailing microbatch: every in-backward bucket is
+            // already final — emit them all, in plan order
+            if finalizes {
+                if let Some(h) = &self.overlap {
+                    if let Some((idx, range)) = &h.head {
+                        h.emit(*idx, range, self.g.as_slice())?;
+                    }
+                    for (_, idx, range) in &h.layers {
+                        h.emit(*idx, range, self.g.as_slice())?;
+                    }
+                }
+            }
             return Ok(if self.first { None } else { Some(Vec::new()) });
         }
         let mut dx = if self.last {
@@ -508,9 +600,26 @@ impl StageStep for ModelStage<'_> {
             );
             dxv
         };
+        if finalizes {
+            if let Some(h) = &self.overlap {
+                if let Some((idx, range)) = &h.head {
+                    h.emit(*idx, range, self.g.as_slice())?;
+                }
+            }
+        }
         for l in self.layers.clone().rev() {
             let li = l - self.layers.start;
             self.exec.layer_bwd(self.flat, l, &mut dx, &cache.layers[li], mb_bsz, self.g)?;
+            if finalizes {
+                if let Some(h) = &self.overlap {
+                    let (_, idx, range) = h
+                        .layers
+                        .iter()
+                        .find(|(ll, _, _)| *ll == l)
+                        .with_context(|| format!("no overlap hook for layer {l}"))?;
+                    h.emit(*idx, range, self.g.as_slice())?;
+                }
+            }
         }
         if self.first {
             self.deferred_dx[mb] = Some(dx);

@@ -11,16 +11,21 @@
 //!   6. virtual-clock advance (pipesim × netsim) for the paper's
 //!      time axis.
 
+use std::sync::mpsc;
+use std::time::Instant;
+
 use crate::util::error::{Context, Result};
 
 use crate::baselines;
 use crate::config::{Method, TrainConfig};
-use crate::coordinator::clock::VirtualClock;
+use crate::coordinator::clock::{BucketCost, VirtualClock};
 use crate::coordinator::dac::{Dac, RankBounds};
-use crate::coordinator::engine::{Backend, Engine};
-use crate::coordinator::pipeline::{self, ModelStage};
+use crate::coordinator::engine::{AllreduceReport, Backend, BucketKey, Engine, GradBucket};
+use crate::coordinator::pipeline::{self, ModelStage, OverlapHooks, PipeTiming};
 use crate::data::{build_probes, Batcher, SynthCorpus};
-use crate::dist::{collective, run_group, Class, Counters, SubTransport, Transport, TransportKind};
+use crate::dist::{
+    collective, run_group, run_group2, Class, Counters, SubTransport, Transport, TransportKind,
+};
 use crate::entropy::{Gds, GdsConfig, WindowStats};
 use crate::eval;
 use crate::metrics::{ppl, Table};
@@ -54,6 +59,82 @@ pub struct RunSummary {
     pub rank_trace: Vec<(usize, f64)>,
     /// (tensor, stage, rel_error) samples recorded every eval interval.
     pub error_samples: Vec<(usize, String, usize, f64)>,
+    /// Comm-hiding diagnostics of an `--overlap` run (None otherwise).
+    /// Diagnostics only: the curve and every decision stay identical to
+    /// the sequential path (the byte-determinism contract).
+    pub overlap: Option<OverlapReport>,
+}
+
+/// Measured + modeled communication-hiding report of one overlapped
+/// run. "Measured" folds the comm thread's per-bucket busy spans
+/// against the compute thread's backward-finish wall times (replica
+/// 0's workers); "modeled" prices the same bucket schedule through the
+/// overlap-aware `VirtualClock` estimate. Neither feeds back into any
+/// decision — `--overlap` must stay byte-identical to the sequential
+/// path.
+#[derive(Clone, Copy, Debug)]
+pub struct OverlapReport {
+    /// Fraction of measured comm-thread busy time that ran while the
+    /// backward pass was still computing.
+    pub measured_hidden_frac: f64,
+    /// Total measured comm-thread busy seconds over the run.
+    pub measured_busy_secs: f64,
+    /// Modeled hidden fraction of the bucketed DP-sync time.
+    pub modeled_hidden_frac: f64,
+    /// Modeled iteration-time saving of overlapping vs running the
+    /// same buckets sequentially after backward.
+    pub modeled_iter_saving_frac: f64,
+}
+
+/// `num / den`, 0 when the denominator vanishes.
+fn frac(num: f64, den: f64) -> f64 {
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// Fold per-bucket comm busy spans into `(hidden, busy)` seconds: the
+/// portion executed before `bwd_done` (the worker's wall-clock
+/// backward-finish, same time origin) counts as hidden.
+fn hidden_busy(spans: &[(f64, f64)], bwd_done: f64) -> (f64, f64) {
+    let mut hidden = 0.0f64;
+    let mut busy = 0.0f64;
+    for &(start, end) in spans {
+        busy += (end - start).max(0.0);
+        hidden += (end.min(bwd_done) - start.min(bwd_done)).max(0.0);
+    }
+    (hidden, busy)
+}
+
+/// Accumulators for the modeled overlap estimate across steps.
+#[derive(Clone, Copy, Debug, Default)]
+struct ModelAccum {
+    hidden: f64,
+    total: f64,
+    seq_iter: f64,
+    ovl_iter: f64,
+}
+
+impl ModelAccum {
+    fn add(&mut self, est: &crate::coordinator::clock::OverlapEstimate) {
+        self.hidden += est.hidden;
+        self.total += est.total;
+        self.seq_iter += est.sequential_iter;
+        self.ovl_iter += est.overlapped_iter;
+    }
+}
+
+/// What one overlapped compute+comm step hands back to the step loop.
+struct OverlapStep {
+    timing: PipeTiming,
+    replica_loss: Option<f32>,
+    report: AllreduceReport,
+    /// Per-bucket comm-thread busy spans (seconds since step start).
+    spans: Vec<(f64, f64)>,
+    /// Wall-clock end of this worker's backward + tied exchange.
+    bwd_done: f64,
 }
 
 pub struct Trainer {
@@ -290,6 +371,10 @@ impl Trainer {
 
     /// Run the configured number of steps; returns the full summary.
     pub fn run(&mut self) -> Result<RunSummary> {
+        crate::ensure!(
+            !self.cfg.overlap,
+            "--overlap needs real rank workers: pass --transport mem|tcp"
+        );
         let wall = crate::metrics::Stopwatch::start();
         let mut curve = Table::new(
             &format!("curve-{}", self.cfg.method.name()),
@@ -423,6 +508,7 @@ impl Trainer {
             ),
             rank_trace: self.dac.as_ref().map(|d| d.rank_trace.clone()).unwrap_or_default(),
             error_samples,
+            overlap: None,
             curve,
         })
     }
@@ -436,13 +522,28 @@ impl Trainer {
     /// rank decisions; it returns the full [`RunSummary`]
     /// (byte-identical to the centralized run at the same seed, pinned
     /// in `tests/determinism.rs`), other ranks return `None`.
-    pub fn run_rank(&mut self, tr: &mut dyn Transport) -> Result<Option<RunSummary>> {
+    ///
+    /// With `cfg.overlap`, `comm` must carry this rank's endpoint of
+    /// the second (collective) mesh: the gradient is then computed by
+    /// the staged executor in per-layer order and each bucket's
+    /// compressed all-reduce runs on a dedicated comm thread the moment
+    /// the bucket's backward finishes — with outputs still
+    /// byte-identical to the sequential path.
+    pub fn run_rank(
+        &mut self,
+        tr: &mut dyn Transport,
+        mut comm: Option<&mut dyn Transport>,
+    ) -> Result<Option<RunSummary>> {
         let rank = tr.rank();
         crate::ensure!(
             tr.world() == self.cfg.dp,
             "transport world {} != dp {}",
             tr.world(),
             self.cfg.dp
+        );
+        crate::ensure!(
+            comm.is_some() == self.cfg.overlap,
+            "overlap mode and the comm-plane transport must come together"
         );
         crate::ensure!(
             self.backend == Backend::Host,
@@ -467,20 +568,23 @@ impl Trainer {
         let mut stage_comm_floats = vec![0usize; self.cfg.pp];
         let mut error_samples = Vec::new();
         let window_len = self.cfg.edgc.window.max(1);
+        // overlap state: the fixed bucket map plus the diagnostics
+        // accumulators (rank 0 only reports them)
+        let full_plan = if self.cfg.overlap { Some(self.engine.bucket_plan(None)?) } else { None };
+        let mut ov_hidden = 0.0f64;
+        let mut ov_busy = 0.0f64;
+        let mut model = ModelAccum::default();
 
         let mut last_val = f64::NAN;
         let mut last_loss = f64::NAN;
         for step in 0..self.cfg.steps {
-            // 1. this rank's train step on its own shard
             let batch = self.batchers[rank].next_train();
-            let (loss_i, g) = self.run_train_step(&batch)?;
-            // mean loss over the group, f64-summed in rank order like
-            // the centralized loop
-            let losses = collective::all_gather_f32(tr, loss_i)?;
-            let loss = losses.iter().map(|&x| x as f64).sum::<f64>() / losses.len() as f64;
-            last_loss = loss;
 
-            // 2. rank decision on rank 0 (it owns the DAC), broadcast
+            // rank decision on rank 0 (it owns the DAC), broadcast —
+            // decided up front so an overlapped step can hand it to the
+            // comm thread before backward starts (the decision is a
+            // pure function of controller state, so deciding before or
+            // after the compute yields the same bytes)
             let ranks = {
                 let mine = if rank == 0 {
                     Some(encode_ranks(&baselines::ranks_for(
@@ -496,8 +600,44 @@ impl Trainer {
                 decode_ranks(&collective::broadcast_bytes(tr, 0, mine.as_deref())?)?
             };
 
-            // 3. compressed all-reduce through the transport
-            let report = self.engine.allreduce_dist(tr, &g, ranks.as_deref())?;
+            // this rank's train step + compressed all-reduce:
+            // sequential, or overlapped with a dedicated comm thread
+            // draining per-layer buckets as backward finalizes them
+            let (loss_i, g, report, measured) = match comm.as_deref_mut() {
+                None => {
+                    let (loss_i, g) = self.run_train_step(&batch)?;
+                    let report = self.engine.allreduce_dist(tr, &g, ranks.as_deref())?;
+                    (loss_i, g, report, None)
+                }
+                Some(comm_tr) => {
+                    let plan = full_plan.as_ref().expect("overlap plan");
+                    let mut gbuf = vec![0.0f32; self.params.len()];
+                    let n_layer = self.engine.n_layer;
+                    // the whole model is one "stage" here (first_rank =
+                    // this rank, stage 0 of pp 1), but the full plan's
+                    // buckets span every simulated stage
+                    let out = self.run_overlapped_step(
+                        tr,
+                        comm_tr,
+                        &batch,
+                        &mut gbuf,
+                        plan,
+                        ranks.as_deref(),
+                        0..n_layer,
+                        (rank, 0, 1),
+                        None,
+                    )?;
+                    let loss_i = out.replica_loss.context("single stage reports the loss")?;
+                    (loss_i, gbuf, out.report, Some((out.spans, out.bwd_done)))
+                }
+            };
+
+            // mean loss over the group, f64-summed in rank order like
+            // the centralized loop
+            let losses = collective::all_gather_f32(tr, loss_i)?;
+            let loss = losses.iter().map(|&x| x as f64).sum::<f64>() / losses.len() as f64;
+            last_loss = loss;
+
             total_comm += report.total_compressed();
             total_orig += report.total_original();
             for (acc, &c) in stage_comm_floats.iter_mut().zip(&report.stage_compressed) {
@@ -526,6 +666,15 @@ impl Trainer {
                     &report.stage_original,
                     ranks.as_deref(),
                 );
+                // overlap diagnostics (never fed back into decisions)
+                if let Some((spans, bwd_done)) = &measured {
+                    let (h, b) = hidden_busy(spans, *bwd_done);
+                    ov_hidden += h;
+                    ov_busy += b;
+                    let costs = self
+                        .overlap_bucket_costs(full_plan.as_ref().expect("plan"), ranks.as_deref());
+                    model.add(&self.clock.overlap_step_estimate(&costs));
+                }
                 if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
                     last_val = self.validation_loss(2)?;
                     for (name, stage, err) in &report.tensor_errors {
@@ -594,8 +743,117 @@ impl Trainer {
             ),
             rank_trace: self.dac.as_ref().map(|d| d.rank_trace.clone()).unwrap_or_default(),
             error_samples,
+            overlap: self.overlap_report(ov_hidden, ov_busy, &model),
             curve,
         }))
+    }
+
+    /// Assemble the [`OverlapReport`] from the run's accumulators
+    /// (None unless this run overlapped).
+    fn overlap_report(&self, hidden: f64, busy: f64, model: &ModelAccum) -> Option<OverlapReport> {
+        if !self.cfg.overlap {
+            return None;
+        }
+        Some(OverlapReport {
+            measured_hidden_frac: frac(hidden, busy),
+            measured_busy_secs: busy,
+            modeled_hidden_frac: frac(model.hidden, model.total),
+            modeled_iter_saving_frac: if model.seq_iter > 0.0 {
+                1.0 - model.ovl_iter / model.seq_iter
+            } else {
+                0.0
+            },
+        })
+    }
+
+    /// Modeled per-stage bucket comm costs for the overlap estimate:
+    /// prices each bucket's float volumes (at the step's rank decision)
+    /// through the same netsim model the canonical clock uses, grouped
+    /// by stage in completion order.
+    fn overlap_bucket_costs(
+        &self,
+        plan: &[GradBucket],
+        ranks: Option<&[usize]>,
+    ) -> Vec<Vec<BucketCost>> {
+        let mut out: Vec<Vec<BucketCost>> = vec![Vec::new(); self.clock.pp];
+        for b in plan {
+            let mut comp = 0usize;
+            let mut orig = 0usize;
+            for &ti in &b.tensors {
+                let t = &self.engine.tensors[ti];
+                orig += t.spec.size();
+                comp += match ranks {
+                    Some(rs) => rs[t.stage].clamp(1, t.bucket.r_max) * (t.bucket.m + t.bucket.n),
+                    None => t.spec.size(),
+                };
+            }
+            for &pi in &b.plain {
+                let sz = self.engine.plain[pi].size();
+                comp += sz;
+                orig += sz;
+            }
+            let comm = self.clock.stage_dp_time(comp, orig, ranks.map(|rs| rs[b.stage]));
+            out[b.stage].push(BucketCost { comm, post_backward: b.key == BucketKey::Embed });
+        }
+        out
+    }
+
+    /// One overlapped compute+comm step for one worker: spawn the comm
+    /// thread (draining `plan`'s buckets over `comm_tr` — through the
+    /// stage's DP-subgroup view when `sub_members` is given), run the
+    /// staged 1F1B compute on `tr` with the overlap hooks armed, then
+    /// join. The same `plan` drives both the emission hooks and the
+    /// drain, so the two sides cannot disagree. `topo` is
+    /// `(first_rank, stage, pp)` of this worker's pipeline position.
+    #[allow(clippy::too_many_arguments)]
+    fn run_overlapped_step(
+        &mut self,
+        tr: &mut dyn Transport,
+        comm_tr: &mut dyn Transport,
+        batch: &[i32],
+        gbuf: &mut Vec<f32>,
+        plan: &[GradBucket],
+        ranks: Option<&[usize]>,
+        layers: std::ops::Range<usize>,
+        topo: (usize, usize, usize),
+        sub_members: Option<&[usize]>,
+    ) -> Result<OverlapStep> {
+        let (first_rank, stage, pp) = topo;
+        let micro = self.cfg.microbatches;
+        let exec = self.rt.host_exec().context("overlap requires the host executor")?;
+        let engine = &mut self.engine;
+        let params: &[f32] = &self.params;
+        std::thread::scope(|s| -> Result<OverlapStep> {
+            let origin = Instant::now();
+            let (tx, rx) = mpsc::channel();
+            let handle = s.spawn(move || match sub_members {
+                Some(members) => {
+                    let mut sub = SubTransport::new(comm_tr, members.to_vec())?;
+                    engine.allreduce_overlap(&mut sub, &rx, plan, ranks, origin)
+                }
+                None => engine.allreduce_overlap(comm_tr, &rx, plan, ranks, origin),
+            });
+            let mut ms = ModelStage::new(
+                exec,
+                params,
+                batch,
+                gbuf,
+                layers,
+                stage == 0,
+                stage + 1 == pp,
+                micro,
+            )?;
+            ms.set_overlap(OverlapHooks::new(tx, plan))?;
+            let timing = pipeline::run_1f1b(tr, first_rank, stage, pp, micro, &mut ms)?;
+            ms.exchange_tied(tr, first_rank, first_rank + pp - 1)?;
+            let bwd_done = origin.elapsed().as_secs_f64();
+            let replica_loss = ms.replica_loss();
+            drop(ms);
+            let (report, spans) = handle
+                .join()
+                .map_err(|_| crate::err!("overlap comm thread panicked (stage {stage})"))??;
+            Ok(OverlapStep { timing, replica_loss, report, spans, bwd_done })
+        })
     }
 
     /// One worker of a real **pipeline-parallel** run: `dp × pp` workers
@@ -618,11 +876,16 @@ impl Trainer {
     pub fn run_rank_pp(
         &mut self,
         tr: &mut dyn Transport,
+        mut comm: Option<&mut dyn Transport>,
     ) -> Result<Option<(RunSummary, PipeCalibration)>> {
         let pp = self.cfg.pp;
         let dp = self.cfg.dp;
         let micro = self.cfg.microbatches;
         crate::ensure!(pp >= 2, "pipeline execution needs pp >= 2 (got {pp})");
+        crate::ensure!(
+            comm.is_some() == self.cfg.overlap,
+            "overlap mode and the comm-plane transport must come together"
+        );
         crate::ensure!(
             self.backend == Backend::Host,
             "pipeline training runs the host backend (--backend host)"
@@ -669,6 +932,19 @@ impl Trainer {
         let mut error_samples = Vec::new();
         let window_len = self.cfg.edgc.window.max(1);
         let mut bwd_sum = vec![0.0f64; pp];
+        // overlap state: this worker's stage bucket map (comm-thread
+        // drain order), the coordinator's full map (modeled estimate),
+        // and the measured-hidden accumulators
+        let stage_plan =
+            if self.cfg.overlap { Some(self.engine.bucket_plan(Some(stage))?) } else { None };
+        let full_plan = if self.cfg.overlap && g_rank == 0 {
+            Some(self.engine.bucket_plan(None)?)
+        } else {
+            None
+        };
+        let mut ov_hidden = 0.0f64;
+        let mut ov_busy = 0.0f64;
+        let mut model = ModelAccum::default();
 
         let mut last_val = f64::NAN;
         let mut last_loss = f64::NAN;
@@ -691,38 +967,60 @@ impl Trainer {
                 decode_ranks(&collective::broadcast_bytes(tr, 0, mine.as_deref())?)?
             };
 
-            // 1F1B over this replica's pipeline + tied-embedding exchange
+            // 1F1B over this replica's pipeline + tied-embedding
+            // exchange, then this stage's compressed DP all-reduce —
+            // sequential, or overlapped with a dedicated comm thread
+            // draining per-layer buckets as backward finalizes them
             let mut gbuf = vec![0.0f32; n_params];
-            let (timing, replica_loss) = {
-                let exec = self
-                    .rt
-                    .host_exec()
-                    .context("pipeline training requires the host executor")?;
-                let mut ms = ModelStage::new(
-                    exec,
-                    &self.params,
-                    &batch,
-                    &mut gbuf,
-                    layer_range.clone(),
-                    stage == 0,
-                    stage + 1 == pp,
-                    micro,
-                )?;
-                let timing = pipeline::run_1f1b(tr, first_rank, stage, pp, micro, &mut ms)?;
-                ms.exchange_tied(tr, first_rank, first_rank + pp - 1)?;
-                (timing, ms.replica_loss())
+            let (timing, replica_loss, report, measured) = match comm.as_deref_mut() {
+                None => {
+                    let (timing, replica_loss) = {
+                        let exec = self
+                            .rt
+                            .host_exec()
+                            .context("pipeline training requires the host executor")?;
+                        let mut ms = ModelStage::new(
+                            exec,
+                            &self.params,
+                            &batch,
+                            &mut gbuf,
+                            layer_range.clone(),
+                            stage == 0,
+                            stage + 1 == pp,
+                            micro,
+                        )?;
+                        let timing =
+                            pipeline::run_1f1b(tr, first_rank, stage, pp, micro, &mut ms)?;
+                        ms.exchange_tied(tr, first_rank, first_rank + pp - 1)?;
+                        (timing, ms.replica_loss())
+                    };
+                    let report = {
+                        let mut sub = SubTransport::new(&mut *tr, sub_members.clone())?;
+                        self.engine.allreduce_dist_stage(&mut sub, &gbuf, ranks.as_deref(), stage)?
+                    };
+                    (timing, replica_loss, report, None)
+                }
+                Some(comm_tr) => {
+                    let plan = stage_plan.as_ref().expect("overlap plan");
+                    let out = self.run_overlapped_step(
+                        tr,
+                        comm_tr,
+                        &batch,
+                        &mut gbuf,
+                        plan,
+                        ranks.as_deref(),
+                        layer_range.clone(),
+                        (first_rank, stage, pp),
+                        Some(&sub_members),
+                    )?;
+                    (out.timing, out.replica_loss, out.report, Some((out.spans, out.bwd_done)))
+                }
             };
 
             // per-replica loss to the coordinator (metrics-only traffic)
             if let Some(l) = replica_loss {
                 send_diag(tr, 0, &l.to_le_bytes())?;
             }
-
-            // this stage's compressed DP all-reduce + optimizer slice
-            let report = {
-                let mut sub = SubTransport::new(&mut *tr, sub_members.clone())?;
-                self.engine.allreduce_dist_stage(&mut sub, &gbuf, ranks.as_deref(), stage)?
-            };
             self.adam_update_range(&report.avg, step + 1, my_range.clone())?;
 
             // Tied-parameter sync: the last stage's head reads `tok_emb`,
@@ -746,6 +1044,8 @@ impl Trainer {
             }
 
             // stage diagnostics to the coordinator (subgroup roots)
+            let (ov_h, ov_b) =
+                measured.as_ref().map_or((0.0, 0.0), |(sp, bd)| hidden_busy(sp, *bd));
             if replica == 0 && stage != 0 {
                 let rels: Vec<f64> = report.tensor_errors.iter().map(|(_, _, e)| *e).collect();
                 let blob = encode_stage_diag(
@@ -753,6 +1053,8 @@ impl Trainer {
                     report.stage_original[stage] as u64,
                     &rels,
                     timing.last_bwd,
+                    ov_h,
+                    ov_b,
                 );
                 send_diag(tr, 0, &blob)?;
             }
@@ -789,12 +1091,16 @@ impl Trainer {
             stage_original[0] = report.stage_original[0];
             rels_by_stage[0] = report.tensor_errors.iter().map(|(_, _, e)| *e).collect();
             bwd_sum[0] += timing.last_bwd;
+            ov_hidden += ov_h;
+            ov_busy += ov_b;
             for s in 1..pp {
-                let (comp, orig, rels, lb) = decode_stage_diag(&recv_diag(tr, s)?)?;
+                let (comp, orig, rels, lb, h, b) = decode_stage_diag(&recv_diag(tr, s)?)?;
                 stage_compressed[s] = comp;
                 stage_original[s] = orig;
                 rels_by_stage[s] = rels;
                 bwd_sum[s] += lb;
+                ov_hidden += h;
+                ov_busy += b;
             }
             total_comm += stage_compressed.iter().sum::<usize>();
             total_orig += stage_original.iter().sum::<usize>();
@@ -860,6 +1166,11 @@ impl Trainer {
             // virtual clock
             let (iter_time, _comm_time) =
                 self.clock.step(&stage_compressed, &stage_original, ranks.as_deref());
+            // modeled overlap estimate (diagnostics only)
+            if let Some(plan) = full_plan.as_ref() {
+                let costs = self.overlap_bucket_costs(plan, ranks.as_deref());
+                model.add(&self.clock.overlap_step_estimate(&costs));
+            }
 
             // evaluation on assembled parameters
             if eval_step {
@@ -986,6 +1297,7 @@ impl Trainer {
                     .unwrap_or_else(|| self.window.history.clone()),
                 rank_trace: self.dac.as_ref().map(|d| d.rank_trace.clone()).unwrap_or_default(),
                 error_samples,
+                overlap: self.overlap_report(ov_hidden, ov_busy, &model),
                 curve,
             },
             calib,
@@ -1073,9 +1385,17 @@ fn recv_f32s_diag(tr: &mut dyn Transport, from: usize) -> Result<Vec<f32>> {
 
 /// Wire encoding of one stage's per-step diagnostics (subgroup root →
 /// coordinator): compressed/original float counts, the per-tensor
-/// rel_errors in engine order, and the measured last-backward time.
-fn encode_stage_diag(comp: u64, orig: u64, rels: &[f64], last_bwd: f64) -> Vec<u8> {
-    let mut out = Vec::with_capacity(28 + 8 * rels.len());
+/// rel_errors in engine order, the measured last-backward time, and
+/// the overlap hidden/busy comm seconds (zero on sequential runs).
+fn encode_stage_diag(
+    comp: u64,
+    orig: u64,
+    rels: &[f64],
+    last_bwd: f64,
+    ov_hidden: f64,
+    ov_busy: f64,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(44 + 8 * rels.len());
     out.extend(comp.to_le_bytes());
     out.extend(orig.to_le_bytes());
     out.extend((rels.len() as u32).to_le_bytes());
@@ -1083,15 +1403,19 @@ fn encode_stage_diag(comp: u64, orig: u64, rels: &[f64], last_bwd: f64) -> Vec<u
         out.extend(r.to_le_bytes());
     }
     out.extend(last_bwd.to_le_bytes());
+    out.extend(ov_hidden.to_le_bytes());
+    out.extend(ov_busy.to_le_bytes());
     out
 }
 
-fn decode_stage_diag(b: &[u8]) -> Result<(usize, usize, Vec<f64>, f64)> {
-    crate::ensure!(b.len() >= 28, "stage diag of {} bytes", b.len());
+type StageDiag = (usize, usize, Vec<f64>, f64, f64, f64);
+
+fn decode_stage_diag(b: &[u8]) -> Result<StageDiag> {
+    crate::ensure!(b.len() >= 44, "stage diag of {} bytes", b.len());
     let comp = u64::from_le_bytes(b[0..8].try_into().unwrap()) as usize;
     let orig = u64::from_le_bytes(b[8..16].try_into().unwrap()) as usize;
     let n = u32::from_le_bytes(b[16..20].try_into().unwrap()) as usize;
-    crate::ensure!(b.len() == 28 + 8 * n, "stage diag length mismatch ({} bytes, n={n})", b.len());
+    crate::ensure!(b.len() == 44 + 8 * n, "stage diag length mismatch ({} bytes, n={n})", b.len());
     let mut rels = Vec::with_capacity(n);
     for i in 0..n {
         let off = 20 + 8 * i;
@@ -1099,7 +1423,9 @@ fn decode_stage_diag(b: &[u8]) -> Result<(usize, usize, Vec<f64>, f64)> {
     }
     let off = 20 + 8 * n;
     let last_bwd = f64::from_le_bytes(b[off..off + 8].try_into().unwrap());
-    Ok((comp, orig, rels, last_bwd))
+    let ov_hidden = f64::from_le_bytes(b[off + 8..off + 16].try_into().unwrap());
+    let ov_busy = f64::from_le_bytes(b[off + 16..off + 24].try_into().unwrap());
+    Ok((comp, orig, rels, last_bwd, ov_hidden, ov_busy))
 }
 
 /// FNV-1a over the exact parameter bytes (replica-consistency check).
@@ -1162,12 +1488,21 @@ pub fn run_distributed(cfg: TrainConfig, backend: Backend, kind: TransportKind) 
     );
     crate::ensure!(cfg.dp >= 1, "dp must be >= 1");
     let world = cfg.dp;
-    let per_rank = run_group(kind, world, |rank, tr| {
-        let mut t = Trainer::new(cfg.clone(), backend)?;
-        let summary = t.run_rank(tr)?;
-        let params = if rank == 0 { t.params().to_vec() } else { Vec::new() };
-        Ok((summary, params))
-    })?;
+    let per_rank = if cfg.overlap {
+        run_group2(kind, world, |rank, tr, comm| {
+            let mut t = Trainer::new(cfg.clone(), backend)?;
+            let summary = t.run_rank(tr, Some(comm))?;
+            let params = if rank == 0 { t.params().to_vec() } else { Vec::new() };
+            Ok((summary, params))
+        })?
+    } else {
+        run_group(kind, world, |rank, tr| {
+            let mut t = Trainer::new(cfg.clone(), backend)?;
+            let summary = t.run_rank(tr, None)?;
+            let params = if rank == 0 { t.params().to_vec() } else { Vec::new() };
+            Ok((summary, params))
+        })?
+    };
     let mut counters = Vec::with_capacity(world);
     let mut summary = None;
     let mut params = Vec::new();
@@ -1200,12 +1535,21 @@ pub fn run_distributed_pp(
     crate::ensure!(cfg.pp >= 2, "run_distributed_pp needs pp >= 2 (run_distributed covers pp=1)");
     crate::ensure!(cfg.dp >= 1, "dp must be >= 1");
     let world = cfg.dp * cfg.pp;
-    let per_rank = run_group(kind, world, |rank, tr| {
-        let mut t = Trainer::new(cfg.clone(), backend)?;
-        let out = t.run_rank_pp(tr)?;
-        let params = if rank == 0 { t.params().to_vec() } else { Vec::new() };
-        Ok((out, params))
-    })?;
+    let per_rank = if cfg.overlap {
+        run_group2(kind, world, |rank, tr, comm| {
+            let mut t = Trainer::new(cfg.clone(), backend)?;
+            let out = t.run_rank_pp(tr, Some(comm))?;
+            let params = if rank == 0 { t.params().to_vec() } else { Vec::new() };
+            Ok((out, params))
+        })?
+    } else {
+        run_group(kind, world, |rank, tr| {
+            let mut t = Trainer::new(cfg.clone(), backend)?;
+            let out = t.run_rank_pp(tr, None)?;
+            let params = if rank == 0 { t.params().to_vec() } else { Vec::new() };
+            Ok((out, params))
+        })?
+    };
     let mut counters = Vec::with_capacity(world);
     let mut summary = None;
     let mut pipe = None;

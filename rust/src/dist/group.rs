@@ -61,6 +61,23 @@ pub fn rank_rng(seed: u64, rank: usize) -> Rng {
     Rng::new(seed).fork(0xD157_0000 ^ rank as u64)
 }
 
+/// Shared join protocol of the group runners: surface the lowest-rank
+/// error (with rank context) or a panic as one failure, otherwise the
+/// rank-indexed `(result, counter snapshot)` list.
+fn collect_ranks<R>(
+    joined: Vec<std::thread::Result<(Result<R>, Counters)>>,
+) -> Result<Vec<(R, Counters)>> {
+    let mut out = Vec::with_capacity(joined.len());
+    for (rank, j) in joined.into_iter().enumerate() {
+        match j {
+            Ok((Ok(r), c)) => out.push((r, c)),
+            Ok((Err(e), _)) => return Err(e.context(format!("rank {rank}"))),
+            Err(_) => return Err(err!("rank {rank} worker panicked")),
+        }
+    }
+    Ok(out)
+}
+
 /// Spawn `world` rank workers over a fresh `kind` mesh, run `f` on
 /// each, and return `(result, counter snapshot)` per rank, rank-indexed.
 /// The first rank error (lowest rank) is surfaced; a worker panic is
@@ -85,15 +102,42 @@ where
             .collect();
         handles.into_iter().map(|h| h.join()).collect()
     });
-    let mut out = Vec::with_capacity(world);
-    for (rank, j) in joined.into_iter().enumerate() {
-        match j {
-            Ok((Ok(r), c)) => out.push((r, c)),
-            Ok((Err(e), _)) => return Err(e.context(format!("rank {rank}"))),
-            Err(_) => return Err(err!("rank {rank} worker panicked")),
-        }
-    }
-    Ok(out)
+    collect_ranks(joined)
+}
+
+/// [`run_group`] with a **second, independent mesh** per rank — the
+/// comm plane of overlapped training. `f(rank, main, comm)` gets two
+/// transports with identical rank indexing: the compute thread keeps
+/// `main` for p2p/control traffic while a dedicated comm thread drains
+/// gradient-bucket collectives over `comm`, so the two never contend
+/// for one `&mut Transport`. The returned counter snapshot per rank is
+/// the merged view of both planes ([`Counters::merge`]), which is what
+/// the wire-volume calibration compares against sequential runs.
+pub fn run_group2<R, F>(kind: TransportKind, world: usize, f: F) -> Result<Vec<(R, Counters)>>
+where
+    R: Send,
+    F: Fn(usize, &mut dyn Transport, &mut dyn Transport) -> Result<R> + Sync,
+{
+    let mesh = make_mesh(kind, world)?;
+    let comm_mesh = make_mesh(kind, world)?;
+    let f = &f;
+    let joined: Vec<std::thread::Result<(Result<R>, Counters)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = mesh
+            .into_iter()
+            .zip(comm_mesh)
+            .enumerate()
+            .map(|(rank, (mut tr, mut comm))| {
+                s.spawn(move || {
+                    let out = f(rank, &mut *tr, &mut *comm);
+                    let mut counters = tr.counters().clone();
+                    counters.merge(comm.counters());
+                    (out, counters)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join()).collect()
+    });
+    collect_ranks(joined)
 }
 
 #[cfg(test)]
@@ -114,6 +158,28 @@ mod tests {
             for (x, c) in &out {
                 assert_eq!(*x, 1.0); // mean of 0,1,2
                 assert!(c.data_sent_bytes() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn group2_gives_independent_planes_and_merged_counters() {
+        for kind in [TransportKind::Mem, TransportKind::Tcp] {
+            let out = run_group2(kind, 2, |rank, main, comm| {
+                // concurrent-safe by construction: the planes are
+                // independent meshes, exercised here back to back
+                let mut a = vec![rank as f32; 3];
+                collective::all_reduce_mean(main, &mut a)?;
+                let mut b = vec![rank as f32; 5];
+                collective::all_reduce_mean(comm, &mut b)?;
+                Ok((a[0], b[0]))
+            })
+            .unwrap();
+            for ((x, y), c) in &out {
+                assert_eq!((*x, *y), (0.5, 0.5));
+                // merged snapshot covers both planes: 3 + 5 floats of
+                // ring traffic per rank at world 2 (factor 1.0)
+                assert_eq!(c.data_sent_bytes(), 4 * (3 + 5));
             }
         }
     }

@@ -24,5 +24,5 @@ pub mod collective;
 pub mod group;
 pub mod transport;
 
-pub use group::{run_group, TransportKind};
+pub use group::{run_group, run_group2, TransportKind};
 pub use transport::{Class, Counters, SubTransport, Transport};

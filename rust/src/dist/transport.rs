@@ -115,6 +115,26 @@ impl Counters {
     pub fn diag_sent_bytes(&self) -> u64 {
         self.diag.iter().map(|l| l.sent_bytes).sum()
     }
+
+    /// Fold another snapshot's per-link stats into this one, class by
+    /// class. Used by overlapped runs, where one rank's traffic splits
+    /// across two planes (the p2p/control mesh the compute thread owns
+    /// and the collective mesh the comm thread owns) with identical
+    /// rank indexing: the merged snapshot is what the wire-volume
+    /// calibration compares against the sequential path.
+    pub fn merge(&mut self, other: &Counters) {
+        assert_eq!(self.data.len(), other.data.len(), "merging counters of different worlds");
+        for (bucket, obucket) in
+            [(&mut self.data, &other.data), (&mut self.diag, &other.diag)]
+        {
+            for (l, o) in bucket.iter_mut().zip(obucket.iter()) {
+                l.sent_bytes += o.sent_bytes;
+                l.sent_msgs += o.sent_msgs;
+                l.recv_bytes += o.recv_bytes;
+                l.recv_msgs += o.recv_msgs;
+            }
+        }
+    }
 }
 
 /// One rank's endpoint into the group: point-to-point sends/receives
@@ -563,6 +583,26 @@ mod tests {
         assert!(SubTransport::new(&mut t0, vec![]).is_err());
         // valid singleton
         assert!(SubTransport::new(&mut t0, vec![0]).is_ok());
+    }
+
+    #[test]
+    fn counters_merge_adds_per_link_per_class() {
+        let mut mesh = mem_mesh(2);
+        let mut b = mesh.pop().unwrap();
+        let mut a = mesh.pop().unwrap();
+        a.send(1, &[0u8; 7]).unwrap();
+        a.set_class(Class::Diag);
+        a.send(1, &[0u8; 11]).unwrap();
+        b.recv(0).unwrap();
+        b.set_class(Class::Diag);
+        b.recv(0).unwrap();
+        let mut merged = a.counters().clone();
+        merged.merge(b.counters());
+        assert_eq!(merged.data[1].sent_bytes, 7);
+        assert_eq!(merged.data[0].recv_bytes, 7);
+        assert_eq!(merged.diag[1].sent_bytes, 11);
+        assert_eq!(merged.diag[0].recv_bytes, 11);
+        assert_eq!(merged.data[1].sent_msgs + merged.data[0].recv_msgs, 2);
     }
 
     #[test]

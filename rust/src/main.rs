@@ -47,6 +47,13 @@ fn spec() -> Spec {
                  workers over mem|tcp collectives (default: centralized \
                  in-process all-reduce)",
             ),
+            (
+                "overlap",
+                "",
+                "overlap bucketed gradient communication with backward compute \
+                 (per-layer buckets on a dedicated comm thread per rank; \
+                 byte-identical outputs; requires --transport)",
+            ),
             ("threshold", "X", "bench-diff: allowed fractional regression (default 0.25)"),
             ("config", "FILE", "TOML config file (flags override)"),
             ("out", "DIR", "output directory for tables (default runs)"),
@@ -113,6 +120,9 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     cfg.edgc.window = args.usize_or("window", cfg.edgc.window.min((cfg.steps / 10).max(4)))?;
     cfg.edgc.alpha = args.f64_or("alpha", cfg.edgc.alpha)?;
     cfg.edgc.beta = args.f64_or("beta", cfg.edgc.beta)?;
+    if args.switch("overlap") {
+        cfg.overlap = true;
+    }
     Ok(cfg)
 }
 
@@ -136,12 +146,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         (None, _) => backend_of(args)?,
     };
+    if cfg.overlap && transport.is_none() {
+        edgc::bail!("--overlap runs on real rank workers: pass --transport mem|tcp");
+    }
     // one worker per core by default; outputs are byte-identical for
     // any thread count (see util::par), so this is purely a speed knob
     edgc::util::par::set_threads(args.usize_or("threads", 0)?);
     println!(
         "[edgc] training {} steps, method={}, dp={}, pp={}, cluster={}, backend={:?}, \
-         threads={}, transport={}",
+         threads={}, transport={}{}",
         cfg.steps,
         cfg.method.name(),
         cfg.dp,
@@ -150,6 +163,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         backend,
         edgc::util::par::threads(),
         transport.map_or("centralized", |k| k.name()),
+        if cfg.overlap { ", overlap=on" } else { "" },
     );
     let out_dir = cfg.out_dir.clone();
     let dp = cfg.dp;
@@ -197,6 +211,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
     };
     s.curve.write(&out_dir)?;
+    if let Some(o) = &s.overlap {
+        println!(
+            "comm overlap        : measured {:.1}% hidden ({:.3}s comm-thread busy) | \
+             modeled {:.1}% hidden, {:.1}% iteration saving",
+            o.measured_hidden_frac * 100.0,
+            o.measured_busy_secs,
+            o.modeled_hidden_frac * 100.0,
+            o.modeled_iter_saving_frac * 100.0,
+        );
+    }
     println!("\nmethod              : {}", s.method);
     println!("final train loss    : {:.4}", s.final_train_loss);
     println!("final val loss / PPL: {:.4} / {:.2}", s.final_val_loss, s.final_ppl);
@@ -247,10 +271,11 @@ fn cmd_projection(args: &Args) -> Result<()> {
 }
 
 /// Gate the perf trajectory: diff a freshly produced `BENCH_*.json`
-/// against a committed seed and fail on any regression beyond
-/// `--threshold` (default 25%). Empty seeds pass trivially (the
-/// committed seeds bootstrap empty until a toolchain environment
-/// regenerates them).
+/// against a baseline record (in CI: the same benches run at the PR's
+/// merge-base) and fail on any `min_ns` regression beyond `--threshold`
+/// (default 25%) or on a benchmark that vanished from the current
+/// results. An empty baseline cannot gate anything, so it passes — but
+/// loudly, as a GitHub `::warning::` annotation, never silently.
 fn cmd_bench_diff(args: &Args) -> Result<()> {
     let (baseline, current) = match args.positionals.as_slice() {
         [b, c] => (b.as_str(), c.as_str()),
@@ -267,7 +292,10 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     let group = base.get("group").and_then(|g| g.as_str().map(str::to_string)).unwrap_or_default();
     let regressions = edgc::util::bench::diff_benchmarks(&base, &cur, threshold)?;
     if base.get("results")?.as_arr()?.is_empty() {
-        println!("[bench-diff] {group}: baseline seed is empty — gate passes trivially");
+        println!(
+            "::warning::[bench-diff] {group}: baseline {baseline} has no results — \
+             the perf gate compared nothing"
+        );
         return Ok(());
     }
     if regressions.is_empty() {

@@ -138,6 +138,7 @@ fn base_cfg(opts: &Opts, exp: &str, method: Method) -> TrainConfig {
         sim_params: 2_500_000_000,
         sim_tokens: 32 * 1024,
         eval_every: (opts.steps / 12).max(4),
+        overlap: false,
         out_dir: opts.out_dir.clone(),
     }
 }

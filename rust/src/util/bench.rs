@@ -179,13 +179,15 @@ impl BenchSet {
 }
 
 /// Compare two `BENCH_*.json` documents (the perf-trajectory gate
-/// behind `edgc bench-diff`): every named entry of `baseline` must
-/// exist in `current` with a `min_ns` no more than `threshold`
-/// (fractional, e.g. 0.25 = +25%) above the baseline's. Returns
-/// human-readable regression descriptions — empty means the gate
-/// passes. An empty baseline result list passes trivially: committed
-/// seeds start empty until a toolchain environment regenerates them,
-/// and an empty gate must not block CI.
+/// behind `edgc bench-diff`; in CI the baseline is the same benches run
+/// at the PR's merge-base): every named entry of `baseline` must exist
+/// in `current` — a benchmark that vanished is a gate failure, since a
+/// deleted or renamed bench could otherwise hide a regression — with a
+/// `min_ns` no more than `threshold` (fractional, e.g. 0.25 = +25%)
+/// above the baseline's. Returns human-readable regression
+/// descriptions — empty means the gate passes. An empty baseline
+/// result list has nothing to gate and passes here; the CLI surfaces
+/// that case as a `::warning::` annotation instead of passing silently.
 pub fn diff_benchmarks(baseline: &Json, current: &Json, threshold: f64) -> Result<Vec<String>> {
     crate::ensure!(threshold >= 0.0, "bench-diff threshold must be >= 0, got {threshold}");
     let base_rows = baseline.get("results")?.as_arr()?;
@@ -285,6 +287,12 @@ mod tests {
         // extra entries in current are fine (new benches land first)
         let extra = bench_doc(&[("a", 100.0), ("b", 200.0), ("c", 5.0)]);
         assert!(diff_benchmarks(&base, &extra, 0.25).unwrap().is_empty());
+        // a current run that produced nothing: every baseline entry is
+        // reported missing — a wholesale bench deletion cannot slip by
+        let gone = bench_doc(&[]);
+        let missing = diff_benchmarks(&base, &gone, 0.25).unwrap();
+        assert_eq!(missing.len(), 2);
+        assert!(missing.iter().all(|m| m.contains("missing")), "{missing:?}");
         // empty baseline (the committed-seed bootstrap state) passes
         let empty = bench_doc(&[]);
         assert!(diff_benchmarks(&empty, &bad, 0.25).unwrap().is_empty());

@@ -10,7 +10,7 @@ use std::sync::{Mutex, MutexGuard};
 
 use edgc::config::{Method, TrainConfig};
 use edgc::coordinator::pipeline::FRAME_HEADER_BYTES;
-use edgc::coordinator::{run_distributed, run_distributed_pp, Backend, Trainer};
+use edgc::coordinator::{run_distributed, run_distributed_pp, Backend, DistRun, Trainer};
 use edgc::dist::TransportKind;
 use edgc::repro::{campaign, Opts};
 use edgc::util::par;
@@ -50,6 +50,7 @@ fn tiny_cfg(method: Method, steps: usize) -> TrainConfig {
         sim_params: 2_500_000_000,
         sim_tokens: 32 * 1024,
         eval_every: 10,
+        overlap: false,
         out_dir: "/tmp/edgc-determinism-runs".into(),
     }
 }
@@ -233,10 +234,116 @@ fn pipeline_microbatch_split_invariance() {
     par::set_threads(1);
 }
 
-/// One cell of the CI pp×dp×transport matrix, selected via environment
-/// (EDGC_PP / EDGC_DP / EDGC_TRANSPORT) on the 4-layer `deep` preset so
-/// pp=4 splits real stages. Ignored by default; the `pp-dp-matrix` CI
-/// job runs it with `--ignored`.
+/// Run one distributed job for the topology in `cfg` (pp=1 → DP rank
+/// workers, pp≥2 → the pipeline grid).
+fn dist_run(cfg: &TrainConfig, kind: TransportKind) -> DistRun {
+    if cfg.pp >= 2 {
+        run_distributed_pp(cfg.clone(), Backend::Host, kind).unwrap()
+    } else {
+        run_distributed(cfg.clone(), Backend::Host, kind).unwrap()
+    }
+}
+
+/// The `--overlap` acceptance pin: the overlapped run must be
+/// byte-identical to the sequential distributed run — curve, final
+/// parameters, per-stage volume accounting, and the per-rank per-class
+/// wire-byte/message counters (the collectives move the exact same
+/// messages, just on a comm thread that overlaps backward) — and it
+/// must report the comm-hidden diagnostics the sequential run lacks.
+fn assert_overlap_matches_sequential(cfg: &TrainConfig, kind: TransportKind) {
+    let tag = format!("{:?} pp={} dp={} over {}", cfg.method, cfg.pp, cfg.dp, kind.name());
+    let mut seq_cfg = cfg.clone();
+    seq_cfg.overlap = false;
+    let mut ov_cfg = cfg.clone();
+    ov_cfg.overlap = true;
+    let seq = dist_run(&seq_cfg, kind);
+    let ov = dist_run(&ov_cfg, kind);
+    assert_eq!(ov.summary.curve.render(), seq.summary.curve.render(), "curve differs ({tag})");
+    let same = ov.params.len() == seq.params.len()
+        && ov.params.iter().zip(&seq.params).all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(same, "params differ ({tag})");
+    assert_eq!(
+        ov.summary.stage_comm_floats, seq.summary.stage_comm_floats,
+        "volume accounting differs ({tag})"
+    );
+    assert_eq!(
+        ov.summary.total_comm_floats, seq.summary.total_comm_floats,
+        "total volume differs ({tag})"
+    );
+    for (rank, (co, cs)) in ov.counters.iter().zip(&seq.counters).enumerate() {
+        assert_eq!(
+            co.data_sent_bytes(),
+            cs.data_sent_bytes(),
+            "rank {rank}: data wire bytes differ ({tag})"
+        );
+        assert_eq!(
+            co.data_sent_msgs(),
+            cs.data_sent_msgs(),
+            "rank {rank}: data message count differs ({tag})"
+        );
+        assert_eq!(
+            co.diag_sent_bytes(),
+            cs.diag_sent_bytes(),
+            "rank {rank}: diag wire bytes differ ({tag})"
+        );
+    }
+    let report = ov.summary.overlap.as_ref().unwrap_or_else(|| panic!("no overlap report ({tag})"));
+    assert!(report.measured_busy_secs >= 0.0);
+    assert!((0.0..=1.0).contains(&report.measured_hidden_frac), "{tag}");
+    assert!((0.0..=1.0).contains(&report.modeled_hidden_frac), "{tag}");
+    assert!(seq.summary.overlap.is_none(), "sequential run must not report overlap ({tag})");
+}
+
+/// `--overlap` byte-identity across the full {pp 1,2} × {dp 1,2}
+/// topology square (mem transport), plus tcp and a second thread count
+/// on the largest cell, plus the full EDGC control plane.
+#[test]
+fn overlap_matches_sequential_bytes() {
+    let _knob = hold_par_knob();
+    par::set_threads(1);
+    for (pp, dp) in [(1usize, 1usize), (1, 2), (2, 1), (2, 2)] {
+        let mut cfg = tiny_cfg(Method::FixedRank(8), 6);
+        cfg.pp = pp;
+        cfg.dp = dp;
+        assert_overlap_matches_sequential(&cfg, TransportKind::Mem);
+    }
+    // the full EDGC control plane (entropy windows, DAC broadcast) and
+    // the tcp transport on the largest cell
+    assert_overlap_matches_sequential(&tiny_cfg(Method::Edgc, 12), TransportKind::Tcp);
+    // tcp also on the dp-only topology (pp=1 takes the run_rank path,
+    // whose comm plane is the raw mesh rather than a stage subgroup)
+    {
+        let mut cfg = tiny_cfg(Method::FixedRank(8), 6);
+        cfg.pp = 1;
+        cfg.dp = 2;
+        assert_overlap_matches_sequential(&cfg, TransportKind::Tcp);
+    }
+    // thread-count invariance: the same pin holds at --threads 4
+    par::set_threads(4);
+    assert_overlap_matches_sequential(&tiny_cfg(Method::FixedRank(8), 6), TransportKind::Mem);
+    par::set_threads(1);
+}
+
+/// Overlapped runs keep the microbatch-split invariance: uneven and
+/// zero-length trailing microbatches change only when buckets are
+/// handed off, never the bytes.
+#[test]
+fn overlap_microbatch_split_invariance() {
+    let _knob = hold_par_knob();
+    par::set_threads(1);
+    for micro in [7usize, 12] {
+        let mut cfg = tiny_cfg(Method::FixedRank(8), 5);
+        cfg.dp = 1;
+        cfg.microbatches = micro; // batch 8: uneven at 7, empty tails at 12
+        assert_overlap_matches_sequential(&cfg, TransportKind::Mem);
+    }
+    par::set_threads(1);
+}
+
+/// One cell of the CI pp×dp×transport×overlap matrix, selected via
+/// environment (EDGC_PP / EDGC_DP / EDGC_TRANSPORT / EDGC_OVERLAP) on
+/// the 4-layer `deep` preset so pp=4 splits real stages. Ignored by
+/// default; the `pp-dp-matrix` CI job runs it with `--ignored`.
 #[test]
 #[ignore]
 fn pp_dp_matrix_cell() {
@@ -256,12 +363,21 @@ fn pp_dp_matrix_cell() {
         &std::env::var("EDGC_TRANSPORT").unwrap_or_else(|_| "mem".into()),
     )
     .unwrap();
+    let overlap = match std::env::var("EDGC_OVERLAP").as_deref() {
+        Ok("on") => true,
+        Ok("off") | Err(_) => false,
+        Ok(other) => panic!("EDGC_OVERLAP={other:?} is not on|off"),
+    };
     let mut cfg = tiny_cfg(Method::Edgc, 8);
     cfg.artifacts = "artifacts/deep".into();
     cfg.pp = pp;
     cfg.dp = dp;
     cfg.microbatches = 4;
-    assert_pp_matches_centralized(&cfg, kind);
+    if overlap {
+        assert_overlap_matches_sequential(&cfg, kind);
+    } else {
+        assert_pp_matches_centralized(&cfg, kind);
+    }
     par::set_threads(1);
 }
 
@@ -372,6 +488,34 @@ fn cli_pipeline_transport_smoke() {
     assert!(stdout.contains("pipe timing"), "missing calibration report:\n{stdout}");
     assert!(stdout.contains("modeled ring + p2p"), "missing wire report:\n{stdout}");
     std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn cli_overlap_smoke() {
+    // `edgc train --pp 2 --transport mem --overlap` spawns the comm
+    // threads and reports the measured + modeled comm-hidden fractions
+    let out = tmp_dir("cli-overlap");
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_edgc"))
+        .args([
+            "train", "--pp", "2", "--dp", "1", "--transport", "mem", "--overlap", "--steps",
+            "2", "--eval-every", "2", "--threads", "1", "--out", &out,
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&status.stdout);
+    let stderr = String::from_utf8_lossy(&status.stderr);
+    assert!(status.status.success(), "overlap train failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("overlap=on"), "unexpected output:\n{stdout}");
+    assert!(stdout.contains("comm overlap"), "missing comm-hidden report:\n{stdout}");
+    assert!(stdout.contains("modeled"), "missing modeled estimate:\n{stdout}");
+    std::fs::remove_dir_all(&out).ok();
+
+    // --overlap without a transport is a hard error
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_edgc"))
+        .args(["train", "--overlap", "--steps", "2"])
+        .output()
+        .unwrap();
+    assert!(!status.status.success(), "--overlap without --transport must be rejected");
 }
 
 #[test]

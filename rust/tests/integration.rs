@@ -34,6 +34,7 @@ fn tiny_cfg(method: Method, steps: usize) -> TrainConfig {
         sim_params: 2_500_000_000,
         sim_tokens: 32 * 1024,
         eval_every: 10,
+        overlap: false,
         out_dir: "/tmp/edgc-test-runs".into(),
     }
 }
@@ -175,4 +176,73 @@ fn runs_are_deterministic() {
         t.run().unwrap().final_train_loss
     };
     assert_eq!(run().to_bits(), run().to_bits());
+}
+
+// ------------------------------------------------------- bench-diff CLI
+
+fn bench_json(dir: &std::path::Path, name: &str, entries: &[(&str, f64)]) -> String {
+    let rows = entries
+        .iter()
+        .map(|(n, m)| {
+            format!(
+                "{{\"name\": \"{n}\", \"iters\": 1, \"min_ns\": {m}, \
+                 \"p50_ns\": {m}, \"mean_ns\": {m}}}"
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(", ");
+    let path = dir.join(name);
+    std::fs::write(
+        &path,
+        format!("{{\"group\": \"it\", \"smoke\": true, \"results\": [{rows}]}}"),
+    )
+    .unwrap();
+    path.to_string_lossy().into_owned()
+}
+
+fn run_bench_diff(baseline: &str, current: &str) -> (bool, String, String) {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_edgc"))
+        .args(["bench-diff", baseline, current])
+        .output()
+        .unwrap();
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+/// The perf-trajectory gate end to end: regressions and vanished
+/// benchmarks fail the process; an empty baseline passes but emits a
+/// GitHub `::warning::` annotation instead of staying silent.
+#[test]
+fn bench_diff_cli_gates_and_warns() {
+    let dir = std::env::temp_dir().join(format!("edgc-bench-diff-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = bench_json(&dir, "base.json", &[("a", 100.0), ("b", 200.0)]);
+
+    // within threshold: passes
+    let ok = bench_json(&dir, "ok.json", &[("a", 110.0), ("b", 150.0)]);
+    let (pass, stdout, _) = run_bench_diff(&base, &ok);
+    assert!(pass, "in-threshold diff must pass:\n{stdout}");
+
+    // >25% regression: fails and names the entry
+    let slow = bench_json(&dir, "slow.json", &[("a", 200.0), ("b", 200.0)]);
+    let (pass, _, stderr) = run_bench_diff(&base, &slow);
+    assert!(!pass, "regression must fail the gate");
+    assert!(stderr.contains("a:"), "regression report missing:\n{stderr}");
+
+    // a benchmark that vanished from current results: fails
+    let gone = bench_json(&dir, "gone.json", &[("a", 100.0)]);
+    let (pass, _, stderr) = run_bench_diff(&base, &gone);
+    assert!(!pass, "vanished benchmark must fail the gate");
+    assert!(stderr.contains("missing"), "missing-bench report absent:\n{stderr}");
+
+    // empty baseline: passes, but loudly (GitHub warning annotation)
+    let empty = bench_json(&dir, "empty.json", &[]);
+    let (pass, stdout, _) = run_bench_diff(&empty, &ok);
+    assert!(pass, "empty baseline must not block:\n{stdout}");
+    assert!(stdout.contains("::warning::"), "empty baseline must warn:\n{stdout}");
+
+    std::fs::remove_dir_all(&dir).ok();
 }
