@@ -1,0 +1,115 @@
+//! Bench: the blocked compute kernels behind every hot path — the
+//! PowerSGD factor matmuls at the paper-scale 2048×2048 rank-64 bucket
+//! (with the retained scalar reference timed next to the blocked path,
+//! so the rewrite's single-thread win is measured in-run, not assumed),
+//! the skinny P/Q factor shapes, layernorm/GELU, and one full
+//! transformer block at the `small` preset (attention + fused MLP).
+//! Feeds the CI perf trajectory via `--json BENCH_kernels.json`.
+
+use edgc::runtime::host::{self, HostExec};
+use edgc::runtime::Manifest;
+use edgc::tensor::{self, Mat};
+use edgc::util::bench::{BenchOpts, BenchSet};
+use edgc::util::par;
+use edgc::util::rng::Rng;
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let mut set = BenchSet::with_opts("kernels", &opts);
+
+    par::set_threads(1);
+
+    // ---- paper-scale 2048×2048 rank-64 bucket (the PowerSGD matmuls) ----
+    let (m, n, r) = (2048usize, 2048usize, 64usize);
+    let mut rng = Rng::new(11);
+    let g: Vec<f32> = rng.normal_vec(m * n, 0.02); // the gradient M
+    let q: Vec<f32> = rng.normal_vec(n * r, 0.05); // Q factor [n, r]
+    let p: Vec<f32> = rng.normal_vec(m * r, 0.05); // P factor [m, r]
+
+    // P = M·Q — blocked vs the retained scalar reference. The printed
+    // ratio is the tentpole's single-thread speedup, measured in-run.
+    let blocked = set.run(&format!("mm_{m}x{n}_r{r}_t1"), || {
+        std::hint::black_box(tensor::mm(&g, &q, m, n, r));
+    });
+    tensor::force_scalar(true);
+    let scalar = set.run(&format!("mm_{m}x{n}_r{r}_scalar_t1"), || {
+        std::hint::black_box(tensor::mm(&g, &q, m, n, r));
+    });
+    tensor::force_scalar(false);
+    println!(
+        "{:<44} {:.2}x (scalar -> blocked, 1 thread)",
+        format!("kernels/mm_{m}x{n}_r{r}_speedup"),
+        scalar.min_ns / blocked.min_ns.max(1.0)
+    );
+
+    // Q' = Mᵀ·P̂ (the transpose-free mm_tn) and decompress P̂·Q̄ᵀ (mm_nt)
+    set.run(&format!("mm_tn_{m}x{n}_r{r}_t1"), || {
+        std::hint::black_box(tensor::mm_tn(&g, &p, m, n, r));
+    });
+    set.run(&format!("mm_nt_{m}x{n}_r{r}_t1"), || {
+        std::hint::black_box(tensor::mm_nt(&p, &q, m, r, n));
+    });
+
+    // skinny factor shapes: PᵀP gram accumulate and Gram–Schmidt on P
+    let mut gram = vec![0.0f32; r * r];
+    set.run(&format!("acc_tn_{m}x{r}_gram_t1"), || {
+        tensor::acc_tn(&p, &p, m, r, r, &mut gram);
+        std::hint::black_box(&gram);
+    });
+    let pm = Mat::from_vec(m, r, p.clone());
+    set.run(&format!("gram_schmidt_{m}x{r}_t1"), || {
+        std::hint::black_box(pm.gram_schmidt(1e-8));
+    });
+
+    // ---- layernorm / GELU at e2e100m width (2048 rows × 768) ----
+    let (rows, d) = (2048usize, 768usize);
+    let x: Vec<f32> = rng.normal_vec(rows * d, 0.5);
+    let dy: Vec<f32> = rng.normal_vec(rows * d, 0.5);
+    let lg: Vec<f32> = rng.normal_vec(d, 0.1);
+    let lb: Vec<f32> = rng.normal_vec(d, 0.1);
+    set.run(&format!("layernorm_fwd_{rows}x{d}_t1"), || {
+        std::hint::black_box(host::layernorm_fwd(&x, &lg, &lb, rows, d));
+    });
+    let (_, ln) = host::layernorm_fwd(&x, &lg, &lb, rows, d);
+    let mut dg = vec![0.0f32; d];
+    let mut db = vec![0.0f32; d];
+    set.run(&format!("layernorm_bwd_{rows}x{d}_t1"), || {
+        std::hint::black_box(host::layernorm_bwd(&dy, &ln, &lg, rows, d, &mut dg, &mut db));
+    });
+    set.run(&format!("gelu_fwd_{rows}x{d}_t1"), || {
+        std::hint::black_box(host::gelu_fwd(&x));
+    });
+    let (_, tv) = host::gelu_fwd(&x);
+    set.run(&format!("gelu_bwd_{rows}x{d}_t1"), || {
+        std::hint::black_box(host::gelu_bwd(&dy, &x, &tv));
+    });
+
+    // ---- one transformer block, `small` preset (covers the per-head
+    // attention loops plus the fused ln→matmul→GELU MLP path) ----
+    let man = Manifest::synthesize("small", 8, 0).expect("small manifest");
+    let exec = HostExec::new(&man).expect("host exec");
+    let flat = host::init_params(&man);
+    let row_len = man.seq_len + 1;
+    let batch: Vec<i32> =
+        (0..8 * row_len).map(|i| (i.wrapping_mul(2654435761) % man.vocab) as i32).collect();
+    let x0 = exec.embed_fwd(&flat, &batch, 8).expect("embed_fwd");
+    set.run("layer_fwd_small_b8_t1", || {
+        let mut xb = x0.clone();
+        std::hint::black_box(exec.layer_fwd(&flat, 0, &mut xb, 8).expect("layer_fwd"));
+    });
+
+    // ---- the big bucket again at 4 deterministic workers (outputs are
+    // byte-identical; only the wall clock may differ) ----
+    par::set_threads(4);
+    let t4 = set.run(&format!("mm_{m}x{n}_r{r}_t4"), || {
+        std::hint::black_box(tensor::mm(&g, &q, m, n, r));
+    });
+    par::set_threads(1);
+    println!(
+        "{:<44} {:.2}x (threads 1 -> 4)",
+        format!("kernels/mm_{m}x{n}_r{r}_thread_speedup"),
+        blocked.min_ns / t4.min_ns.max(1.0)
+    );
+
+    set.finish(&opts).expect("bench json report");
+}

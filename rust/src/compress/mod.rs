@@ -173,7 +173,7 @@ impl TensorCompressor {
         let p_hat = p_avg.gram_schmidt(1e-8);
         let mut q_avg = Mat::zeros(n, r_eff);
         for mi in &ms {
-            q_avg.add_assign(&mi.t().matmul(&p_hat));
+            q_avg.add_assign(&mi.t_matmul(&p_hat));
         }
         q_avg.scale(1.0 / k as f32);
 
@@ -183,7 +183,7 @@ impl TensorCompressor {
         // extra serial m·n sweeps and the diff allocation); the (num,
         // den) reduction combines per-chunk partials in chunk order, so
         // rel_error is byte-identical for any thread count.
-        let approx = p_hat.matmul(&q_avg.t());
+        let approx = p_hat.matmul_nt(&q_avg);
         let inv_k = 1.0f64 / k as f64;
         let fchunk = par::items_per_chunk(2 * k, par::CHUNK_WORK);
         let partials = par::map_chunks(m * n, fchunk, |_, jr| {
@@ -277,13 +277,13 @@ impl TensorCompressor {
         // 3. P̂ = orth(P̄) — identical on every rank — then Q′ᵢ = Mᵢᵀ·P̂ ;
         // all-reduce mean (r_eff·n floats on the wire)
         let p_hat = p_avg.gram_schmidt(1e-8);
-        let mut q_avg = mi.t().matmul(&p_hat);
+        let mut q_avg = mi.t_matmul(&p_hat);
         collective::all_reduce_mean(tr, &mut q_avg.data)?;
 
         // 4. decompress; rank 0 computes the mean-gradient diagnostic
         // from a metrics-only gather, replicating round_host's
         // chunk-ordered (num, den) reduction exactly.
-        let approx = p_hat.matmul(&q_avg.t());
+        let approx = p_hat.matmul_nt(&q_avg);
         let fchunk = par::items_per_chunk(2 * world, par::CHUNK_WORK);
         tr.set_class(Class::Diag);
         let gathered = collective::gather_to_root(tr, &mi.data)?;

@@ -55,6 +55,12 @@ fn spec() -> Spec {
                  byte-identical outputs; requires --transport)",
             ),
             ("threshold", "X", "bench-diff: allowed fractional regression (default 0.25)"),
+            (
+                "min-ns",
+                "NS",
+                "bench-diff: noise floor — regressions gate against \
+                 max(baseline, NS) ns (default 1000)",
+            ),
             ("config", "FILE", "TOML config file (flags override)"),
             ("out", "DIR", "output directory for tables (default runs)"),
             ("jobs", "N", "reproduce: parallel experiment workers (default: all cores)"),
@@ -285,12 +291,23 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
         ),
     };
     let threshold = args.f64_or("threshold", 0.25)?;
+    let min_ns = args.f64_or("min-ns", edgc::util::bench::DEFAULT_MIN_NS)?;
     let base = Json::parse(&std::fs::read_to_string(baseline)?)
         .map_err(|e| e.context(format!("parsing {baseline}")))?;
     let cur = Json::parse(&std::fs::read_to_string(current)?)
         .map_err(|e| e.context(format!("parsing {current}")))?;
     let group = base.get("group").and_then(|g| g.as_str().map(str::to_string)).unwrap_or_default();
-    let regressions = edgc::util::bench::diff_benchmarks(&base, &cur, threshold)?;
+    let regressions = edgc::util::bench::diff_benchmarks(&base, &cur, threshold, min_ns)?;
+    // base-vs-head table: stdout always, and onto the PR page when GitHub
+    // provides a step-summary sink.
+    let table = edgc::util::bench::summary_table(&base, &cur, threshold, min_ns)?;
+    println!("[bench-diff] {group}: base {baseline} vs head {current}");
+    print!("{table}");
+    if let Ok(path) = std::env::var("GITHUB_STEP_SUMMARY") {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        writeln!(f, "### bench-diff: {group}\n\n{table}")?;
+    }
     if base.get("results")?.as_arr()?.is_empty() {
         println!(
             "::warning::[bench-diff] {group}: baseline {baseline} has no results — \

@@ -15,7 +15,8 @@
 
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
-use crate::tensor::{mm, Mat};
+use crate::tensor::kernels;
+use crate::tensor::{acc_tn, mm, mm_nt, Mat};
 use crate::util::error::Result;
 use crate::util::par::{self, ParSlice};
 use crate::util::rng::Rng;
@@ -52,58 +53,10 @@ pub fn init_params(man: &Manifest) -> Vec<f32> {
 
 // ---------------------------------------------------------- linear algebra
 
-// The matmul kernel `mm` is shared with the tensor layer (one copy of
-// the ikj loop + row-block chunking — see tensor::mm); the transposed
-// variants below are executor-local.
-
-/// out[m,n] = a[m,k] @ b[n,k]ᵀ (row-dot form, row-block parallel).
-fn mm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    let mut out = vec![0.0f32; m * n];
-    let rows_per = par::items_per_chunk(2 * k * n, par::CHUNK_WORK);
-    par::for_each_chunk_mut(&mut out, rows_per * n.max(1), |ci, block| {
-        let row0 = ci * rows_per;
-        for (bi, orow) in block.chunks_mut(n).enumerate() {
-            let arow = &a[(row0 + bi) * k..(row0 + bi + 1) * k];
-            for (j, o) in orow.iter_mut().enumerate() {
-                let brow = &b[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for kk in 0..k {
-                    acc += arow[kk] * brow[kk];
-                }
-                *o = acc;
-            }
-        }
-    });
-    out
-}
-
-/// out[k,n] += a[rows,k]ᵀ @ b[rows,n] (weight-gradient accumulation).
-/// Parallel over output rows kk; every out element still accumulates
-/// r = 0..rows in order, so bytes match the serial r-major loop.
-fn acc_tn(a: &[f32], b: &[f32], rows: usize, k: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), rows * k);
-    debug_assert_eq!(b.len(), rows * n);
-    debug_assert_eq!(out.len(), k * n);
-    let rows_per = par::items_per_chunk(2 * rows * n, par::CHUNK_WORK);
-    par::for_each_chunk_mut(out, rows_per * n.max(1), |ci, block| {
-        let k0 = ci * rows_per;
-        for (bi, orow) in block.chunks_mut(n).enumerate() {
-            let kk = k0 + bi;
-            for r in 0..rows {
-                let av = a[r * k + kk];
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &b[r * n..(r + 1) * n];
-                for j in 0..n {
-                    orow[j] += av * brow[j];
-                }
-            }
-        }
-    });
-}
+// All matmul variants are shared with the tensor layer (one copy of the
+// blocked packed-panel driver + the retained scalar references — see
+// tensor::kernels); only the bias helpers and the fused passes below
+// are executor-local.
 
 fn add_bias(x: &mut [f32], bias: &[f32], rows: usize, n: usize) {
     debug_assert_eq!(x.len(), rows * n);
@@ -135,7 +88,9 @@ fn acc_bias(dy: &[f32], rows: usize, n: usize, out: &mut [f32]) {
 
 // ----------------------------------------------------------------- layers
 
-struct LnCache {
+/// Layernorm forward cache (pub for the kernel benches; fields stay
+/// private — callers treat it as opaque).
+pub struct LnCache {
     /// Normalized activations x̂ [rows, d].
     xhat: Vec<f32>,
     /// Per-row 1/σ.
@@ -144,7 +99,42 @@ struct LnCache {
 
 const LN_EPS: f64 = 1e-5;
 
-fn layernorm_fwd(x: &[f32], g: &[f32], b: &[f32], rows: usize, d: usize) -> (Vec<f32>, LnCache) {
+/// One layernorm row: writes x̂ and the scaled output, returns 1/σ.
+/// Shared by [`layernorm_fwd`] and the fused layernorm→matmul prologue
+/// ([`layernorm_mm`]) so the two paths stay byte-identical by
+/// construction. The mean/variance reductions are serial f64 chains in
+/// a fixed order — the precision policy forbids reassociating them.
+#[inline]
+fn ln_one_row(row: &[f32], g: &[f32], b: &[f32], o: &mut [f32], xh: &mut [f32]) -> f32 {
+    let d = row.len();
+    let mut mu = 0.0f64;
+    for &v in row {
+        mu += v as f64;
+    }
+    mu /= d as f64;
+    let mut var = 0.0f64;
+    for &v in row {
+        let dv = v as f64 - mu;
+        var += dv * dv;
+    }
+    var /= d as f64;
+    let iv = 1.0 / (var + LN_EPS).sqrt();
+    for j in 0..d {
+        let h = ((row[j] as f64 - mu) * iv) as f32;
+        xh[j] = h;
+        o[j] = h * g[j] + b[j];
+    }
+    iv as f32
+}
+
+/// Layernorm over rows (pub for the kernel benches).
+pub fn layernorm_fwd(
+    x: &[f32],
+    g: &[f32],
+    b: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, LnCache) {
     let mut out = vec![0.0f32; rows * d];
     let mut xhat = vec![0.0f32; rows * d];
     let mut inv = vec![0.0f32; rows];
@@ -163,26 +153,13 @@ fn layernorm_fwd(x: &[f32], g: &[f32], b: &[f32], rows: usize, d: usize) -> (Vec
             let ib = unsafe { pi.range_mut(rr.clone()) };
             for (li, r) in rr.enumerate() {
                 let row = &x[r * d..(r + 1) * d];
-                let mut mu = 0.0f64;
-                for &v in row {
-                    mu += v as f64;
-                }
-                mu /= d as f64;
-                let mut var = 0.0f64;
-                for &v in row {
-                    let dv = v as f64 - mu;
-                    var += dv * dv;
-                }
-                var /= d as f64;
-                let iv = 1.0 / (var + LN_EPS).sqrt();
-                ib[li] = iv as f32;
-                let xh = &mut xb[li * d..(li + 1) * d];
-                let o = &mut ob[li * d..(li + 1) * d];
-                for j in 0..d {
-                    let h = ((row[j] as f64 - mu) * iv) as f32;
-                    xh[j] = h;
-                    o[j] = h * g[j] + b[j];
-                }
+                ib[li] = ln_one_row(
+                    row,
+                    g,
+                    b,
+                    &mut ob[li * d..(li + 1) * d],
+                    &mut xb[li * d..(li + 1) * d],
+                );
             }
         });
     }
@@ -201,7 +178,7 @@ fn layernorm_fwd(x: &[f32], g: &[f32], b: &[f32], rows: usize, d: usize) -> (Vec
 /// pipeline executor match the centralized backward bit-for-bit.
 /// (A per-row-chunk partial reduction — the previous scheme — groups
 /// the f32 adds differently when the total row count changes.)
-fn layernorm_bwd(
+pub fn layernorm_bwd(
     dy: &[f32],
     cache: &LnCache,
     g: &[f32],
@@ -267,7 +244,7 @@ const GELU_A: f32 = 0.044715;
 
 /// tanh-approximation GELU (jax.nn.gelu default); returns (out, tanh).
 /// Element-wise: fixed chunks parallelize with identical bytes.
-fn gelu_fwd(x: &[f32]) -> (Vec<f32>, Vec<f32>) {
+pub fn gelu_fwd(x: &[f32]) -> (Vec<f32>, Vec<f32>) {
     let mut out = vec![0.0f32; x.len()];
     let mut tv = vec![0.0f32; x.len()];
     {
@@ -289,7 +266,7 @@ fn gelu_fwd(x: &[f32]) -> (Vec<f32>, Vec<f32>) {
     (out, tv)
 }
 
-fn gelu_bwd(dy: &[f32], x: &[f32], tv: &[f32]) -> Vec<f32> {
+pub fn gelu_bwd(dy: &[f32], x: &[f32], tv: &[f32]) -> Vec<f32> {
     let mut dx = vec![0.0f32; x.len()];
     let chunk = par::items_per_chunk(16, par::CHUNK_WORK);
     par::for_each_chunk_mut(&mut dx, chunk, |ci, block| {
@@ -301,6 +278,194 @@ fn gelu_bwd(dy: &[f32], x: &[f32], tv: &[f32]) -> Vec<f32> {
         }
     });
     dx
+}
+
+// ------------------------------------------------------------ fused passes
+
+/// Result of a fused layernorm → matmul (+bias, +GELU) pass.
+struct LnMm {
+    /// Layernorm output [rows, d] (the matmul's A operand).
+    ln_out: Vec<f32>,
+    ln: LnCache,
+    /// Matmul output (+bias) [rows, n] — the pre-activation when
+    /// `want_gelu`.
+    out: Vec<f32>,
+    /// `(tanh cache, gelu(out))` when `want_gelu`.
+    act: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+/// Fused layernorm → matmul → (+bias) → (GELU): one pass over the row
+/// stream instead of four. The layernorm prologue runs inside the
+/// blocked driver's row-chunk worker right before that chunk's A rows
+/// are packed (so ln_out is still cache-hot when packed), and the
+/// bias/GELU epilogue transforms the chunk's C block while it is still
+/// resident. `w` is `[d, n]` row-major, or `[n, d]` when `w_t` (the
+/// tied-head logits path).
+///
+/// Bytes are identical to the unfused composition
+/// `layernorm_fwd → mm/mm_nt → add_bias → gelu_fwd` (pinned in the
+/// module tests): the prologue reuses [`ln_one_row`], the matmul
+/// accumulates k-terms ascending like every kernel, and the epilogue
+/// applies the same per-element ops in the same order. Below the
+/// blocked-size cutoff (or under `tensor::force_scalar`) it *runs* the
+/// unfused composition.
+fn layernorm_mm(
+    x: &[f32],
+    lng: &[f32],
+    lnb: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    rows: usize,
+    d: usize,
+    n: usize,
+    w_t: bool,
+    want_gelu: bool,
+) -> LnMm {
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(w.len(), d * n);
+    if !kernels::use_blocked(rows, d, n) {
+        let (ln_out, ln) = layernorm_fwd(x, lng, lnb, rows, d);
+        let mut out = if w_t {
+            mm_nt(&ln_out, w, rows, d, n)
+        } else {
+            mm(&ln_out, w, rows, d, n)
+        };
+        if let Some(bv) = bias {
+            add_bias(&mut out, bv, rows, n);
+        }
+        let act = if want_gelu {
+            let (h_act, h_tanh) = gelu_fwd(&out);
+            Some((h_tanh, h_act))
+        } else {
+            None
+        };
+        return LnMm { ln_out, ln, out, act };
+    }
+    let mut ln_out = vec![0.0f32; rows * d];
+    let mut xhat = vec![0.0f32; rows * d];
+    let mut inv = vec![0.0f32; rows];
+    let mut out = vec![0.0f32; rows * n];
+    let (mut h_tanh, mut h_act) = if want_gelu {
+        (vec![0.0f32; rows * n], vec![0.0f32; rows * n])
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    {
+        let pl = ParSlice::new(&mut ln_out);
+        let px = ParSlice::new(&mut xhat);
+        let pi = ParSlice::new(&mut inv);
+        let pt = ParSlice::new(&mut h_tanh);
+        let pa = ParSlice::new(&mut h_act);
+        let pre = |i0: usize, mc: usize| {
+            // SAFETY: the driver hands row block i0..i0+mc to exactly
+            // one worker; these views die before pack_a takes its own.
+            let ob = unsafe { pl.range_mut(i0 * d..(i0 + mc) * d) };
+            let xb = unsafe { px.range_mut(i0 * d..(i0 + mc) * d) };
+            let ib = unsafe { pi.range_mut(i0..i0 + mc) };
+            for li in 0..mc {
+                let row = &x[(i0 + li) * d..(i0 + li + 1) * d];
+                ib[li] = ln_one_row(
+                    row,
+                    lng,
+                    lnb,
+                    &mut ob[li * d..(li + 1) * d],
+                    &mut xb[li * d..(li + 1) * d],
+                );
+            }
+        };
+        let pack_a = |i0: usize, mr: usize, p0: usize, kc: usize, dst: &mut [f32]| {
+            // SAFETY: rows i0..i0+mr lie inside this worker's block,
+            // fully written by `pre` before any packing (same worker —
+            // sequential, non-overlapping-lifetime views are allowed).
+            let rows_v = unsafe { pl.range_mut(i0 * d..(i0 + mr) * d) };
+            kernels::pack_a_rm(rows_v, d, 0, mr, p0, kc, dst);
+        };
+        let epi = |i0: usize, mc: usize, cblock: &mut [f32]| {
+            if let Some(bv) = bias {
+                for row in cblock.chunks_mut(n) {
+                    for (v, &bj) in row.iter_mut().zip(bv) {
+                        *v += bj;
+                    }
+                }
+            }
+            if want_gelu {
+                // SAFETY: this worker's row block of the act buffers
+                let tb = unsafe { pt.range_mut(i0 * n..(i0 + mc) * n) };
+                let ab = unsafe { pa.range_mut(i0 * n..(i0 + mc) * n) };
+                for (li, &v) in cblock.iter().enumerate() {
+                    let t = (GELU_C * (v + GELU_A * v * v * v)).tanh();
+                    tb[li] = t;
+                    ab[li] = 0.5 * v * (1.0 + t);
+                }
+            }
+        };
+        if w_t {
+            kernels::gebp(
+                rows,
+                d,
+                n,
+                &mut out,
+                &pack_a,
+                |j0, nr, p0, kc, dst| kernels::pack_b_cm(w, d, j0, nr, p0, kc, dst),
+                &pre,
+                &epi,
+            );
+        } else {
+            kernels::gebp(
+                rows,
+                d,
+                n,
+                &mut out,
+                &pack_a,
+                |j0, nr, p0, kc, dst| kernels::pack_b_rm(w, n, j0, nr, p0, kc, dst),
+                &pre,
+                &epi,
+            );
+        }
+    }
+    let act = if want_gelu { Some((h_tanh, h_act)) } else { None };
+    LnMm { ln_out, ln: LnCache { xhat, inv }, out, act }
+}
+
+/// Fused `gelu_bwd(dy @ wᵀ)`: the MLP backward's matmul→GELU-derivative
+/// pass with the transform applied in the matmul epilogue while the C
+/// block is resident. `w` is `[n, k]` row-major (logical Bᵀ). Bytes
+/// match `gelu_bwd(mm_nt(dy, w, …), h_pre, h_tanh)` exactly (same
+/// per-element op order); below the cutoff it runs that composition.
+fn mm_nt_gelu_bwd(
+    dy: &[f32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    h_pre: &[f32],
+    h_tanh: &[f32],
+) -> Vec<f32> {
+    debug_assert_eq!(h_pre.len(), rows * n);
+    debug_assert_eq!(h_tanh.len(), rows * n);
+    if !kernels::use_blocked(rows, k, n) {
+        let dh_act = mm_nt(dy, w, rows, k, n);
+        return gelu_bwd(&dh_act, h_pre, h_tanh);
+    }
+    let mut out = vec![0.0f32; rows * n];
+    kernels::gebp(
+        rows,
+        k,
+        n,
+        &mut out,
+        |i0, mr, p0, kc, dst| kernels::pack_a_rm(dy, k, i0, mr, p0, kc, dst),
+        |j0, nr, p0, kc, dst| kernels::pack_b_cm(w, k, j0, nr, p0, kc, dst),
+        |_: usize, _: usize| {},
+        |i0: usize, _mc: usize, cblock: &mut [f32]| {
+            let off = i0 * n;
+            for (li, o) in cblock.iter_mut().enumerate() {
+                let (v, t) = (h_pre[off + li], h_tanh[off + li]);
+                let dt = (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * v * v);
+                *o *= 0.5 * (1.0 + t) + 0.5 * v * dt;
+            }
+        },
+    );
+    out
 }
 
 // -------------------------------------------------------------- the model
@@ -578,26 +743,24 @@ impl HostExec {
         ensure!(layer < self.n_layer, "layer {layer} out of {}", self.n_layer);
         ensure!(x.len() == rows * d, "layer_fwd: x has {} floats for {rows} rows", x.len());
         let pre = format!("h{layer}.");
-        let (ln1_out, ln1) = layernorm_fwd(
-            x,
-            self.p(flat, &format!("{pre}ln1_g"))?,
-            self.p(flat, &format!("{pre}ln1_b"))?,
-            rows,
-            d,
-        );
-        let (att_out, att) = self.attention_fwd(flat, &pre, ln1_out, bsz)?;
+        let (att_out, att, ln1) = self.attention_fwd(flat, &pre, x.as_slice(), bsz)?;
         par::add_assign(x, &att_out);
-        let (ln2_out, ln2) = layernorm_fwd(
+        let f = 4 * d;
+        // fused ln2 → fc matmul → +bias → GELU
+        let lm = layernorm_mm(
             x,
             self.p(flat, &format!("{pre}ln2_g"))?,
             self.p(flat, &format!("{pre}ln2_b"))?,
+            self.p(flat, &format!("{pre}fc_w"))?,
+            Some(self.p(flat, &format!("{pre}fc_b"))?),
             rows,
             d,
+            f,
+            false,
+            true,
         );
-        let f = 4 * d;
-        let mut h_pre = mm(&ln2_out, self.p(flat, &format!("{pre}fc_w"))?, rows, d, f);
-        add_bias(&mut h_pre, self.p(flat, &format!("{pre}fc_b"))?, rows, f);
-        let (h_act, h_tanh) = gelu_fwd(&h_pre);
+        let (ln2_out, ln2, h_pre) = (lm.ln_out, lm.ln, lm.out);
+        let (h_tanh, h_act) = lm.act.expect("gelu requested");
         let mlp = mm(&h_act, self.p(flat, &format!("{pre}fc2_w"))?, rows, f, d);
         let fc2_b = self.p(flat, &format!("{pre}fc2_b"))?;
         let rows_per = par::items_per_chunk(2 * d, par::CHUNK_WORK);
@@ -638,9 +801,20 @@ impl HostExec {
             ensure!(t >= 0 && (t as usize) < v, "token {t} out of vocab {v}");
         }
         let tok_emb = self.p(flat, "tok_emb")?;
-        let (lnf_out, lnf) =
-            layernorm_fwd(x, self.p(flat, "lnf_g")?, self.p(flat, "lnf_b")?, rows, d);
-        let logits = mm_nt(&lnf_out, tok_emb, rows, d, v);
+        // fused lnf → tied-head logits (B = tok_embᵀ, never materialized)
+        let lm = layernorm_mm(
+            x,
+            self.p(flat, "lnf_g")?,
+            self.p(flat, "lnf_b")?,
+            tok_emb,
+            None,
+            rows,
+            d,
+            v,
+            true,
+            false,
+        );
+        let (lnf_out, lnf, logits) = (lm.ln_out, lm.ln, lm.out);
 
         // Cross entropy (per example mean over positions). Examples are
         // independent; losses[b] and the dlogits row block of example b
@@ -744,8 +918,16 @@ impl HostExec {
             let sb = self.spec(&format!("{pre}fc2_b"))?;
             acc_bias(dx.as_slice(), rows, d, &mut g[sb.offset..sb.offset + d]);
         }
-        let dh_act = mm_nt(dx.as_slice(), self.p(flat, &format!("{pre}fc2_w"))?, rows, d, f);
-        let dh_pre = gelu_bwd(&dh_act, &c.h_pre, &c.h_tanh);
+        // fused dh_pre = gelu'(h_pre) ⊙ (dx @ fc2_wᵀ)
+        let dh_pre = mm_nt_gelu_bwd(
+            dx.as_slice(),
+            self.p(flat, &format!("{pre}fc2_w"))?,
+            rows,
+            d,
+            f,
+            &c.h_pre,
+            &c.h_tanh,
+        );
         {
             let sw = self.spec(&format!("{pre}fc_w"))?;
             acc_tn(&c.ln2_out, &dh_pre, rows, d, f, &mut g[sw.offset..sw.offset + d * f]);
@@ -860,20 +1042,34 @@ impl HostExec {
         Ok(s.offset..s.offset + s.size())
     }
 
+    /// Fused ln1 → causal attention over the layer input `x` [R, D]:
+    /// the qkv projection consumes the layernorm prologue inside one
+    /// blocked pass. Returns (attention output, cache, ln1 cache).
     fn attention_fwd(
         &self,
         flat: &[f32],
         pre: &str,
-        x: Vec<f32>,
+        x: &[f32],
         bsz: usize,
-    ) -> Result<(Vec<f32>, AttCache)> {
+    ) -> Result<(Vec<f32>, AttCache, LnCache)> {
         let (s, d, h) = (self.seq_len, self.d_model, self.n_head);
         let hd = d / h;
         let rows = bsz * s;
         let scale = 1.0 / (hd as f64).sqrt() as f32;
 
-        let mut qkv = mm(&x, self.p(flat, &format!("{pre}qkv_w"))?, rows, d, 3 * d);
-        add_bias(&mut qkv, self.p(flat, &format!("{pre}qkv_b"))?, rows, 3 * d);
+        let lm = layernorm_mm(
+            x,
+            self.p(flat, &format!("{pre}ln1_g"))?,
+            self.p(flat, &format!("{pre}ln1_b"))?,
+            self.p(flat, &format!("{pre}qkv_w"))?,
+            Some(self.p(flat, &format!("{pre}qkv_b"))?),
+            rows,
+            d,
+            3 * d,
+            false,
+            false,
+        );
+        let (ln1_out, ln1, qkv) = (lm.ln_out, lm.ln, lm.out);
 
         let head_sz = s * hd;
         let mut q = vec![0.0f32; bsz * h * head_sz];
@@ -953,7 +1149,7 @@ impl HostExec {
 
         let mut out = mm(&y, self.p(flat, &format!("{pre}proj_w"))?, rows, d, d);
         add_bias(&mut out, self.p(flat, &format!("{pre}proj_b"))?, rows, d);
-        Ok((out, AttCache { x, q, k, v, w, y }))
+        Ok((out, AttCache { x: ln1_out, q, k, v, w, y }, ln1))
     }
 
     /// dx w.r.t. the attention input; weight grads accumulated in `g`.
@@ -1142,7 +1338,7 @@ fn ps_phase2(man: &Manifest, tag: &str, inputs: &[Value]) -> Result<Vec<Value>> 
         }
     }
     let p_hat = p_avg.gram_schmidt(1e-8);
-    let mut q_new = a.t().matmul(&p_hat);
+    let mut q_new = a.t_matmul(&p_hat);
     for row in 0..b.n {
         for c in 0..b.r_max {
             *q_new.at_mut(row, c) *= mask[c];
@@ -1161,7 +1357,7 @@ fn ps_finalize(man: &Manifest, tag: &str, inputs: &[Value]) -> Result<Vec<Value>
     let a = as_mat(&inputs[0], b.m, b.n, "ps_finalize a")?;
     let p_hat = as_mat(&inputs[1], b.m, b.r_max, "ps_finalize p")?;
     let q_avg = as_mat(&inputs[2], b.n, b.r_max, "ps_finalize q")?;
-    let approx = p_hat.matmul(&q_avg.t());
+    let approx = p_hat.matmul_nt(&q_avg);
     let residual: Vec<f32> = a.data.iter().zip(&approx.data).map(|(x, y)| x - y).collect();
     Ok(vec![
         Value::F32 { dims: vec![b.m, b.n], data: approx.data },
@@ -1369,5 +1565,86 @@ mod tests {
         let rt = tiny();
         assert!(rt.run("nope", &[]).is_err());
         assert!(rt.run("ps_phase1_9x9", &[]).is_err());
+    }
+
+    fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn fused_layernorm_mm_matches_composition() {
+        // shape over the blocked cutoff so the fused gebp path runs
+        let (rows, d, n) = (48usize, 40usize, 96usize);
+        assert!(rows * d * n >= 1 << 16);
+        let mut rng = Rng::new(21);
+        let x = rng.normal_vec(rows * d, 1.0);
+        let lng: Vec<f32> = (0..d).map(|j| 1.0 + 0.01 * j as f32).collect();
+        let lnb = rng.normal_vec(d, 0.1);
+        let w = rng.normal_vec(d * n, 0.5);
+        let bias = rng.normal_vec(n, 0.3);
+        let lm = layernorm_mm(&x, &lng, &lnb, &w, Some(&bias), rows, d, n, false, true);
+        let (ln_ref, ln_cache) = layernorm_fwd(&x, &lng, &lnb, rows, d);
+        let mut out_ref = mm(&ln_ref, &w, rows, d, n);
+        add_bias(&mut out_ref, &bias, rows, n);
+        let (act_ref, tanh_ref) = gelu_fwd(&out_ref);
+        assert!(bits_eq(&lm.ln_out, &ln_ref), "ln_out");
+        assert!(bits_eq(&lm.ln.xhat, &ln_cache.xhat), "xhat");
+        assert!(bits_eq(&lm.ln.inv, &ln_cache.inv), "inv");
+        assert!(bits_eq(&lm.out, &out_ref), "pre-activation");
+        let (h_tanh, h_act) = lm.act.expect("gelu requested");
+        assert!(bits_eq(&h_tanh, &tanh_ref), "tanh cache");
+        assert!(bits_eq(&h_act, &act_ref), "activation");
+    }
+
+    #[test]
+    fn fused_layernorm_mm_nt_matches_composition() {
+        // the tied-head logits path: w stored [n, d], no bias, no gelu
+        let (rows, d, n) = (64usize, 48usize, 80usize);
+        assert!(rows * d * n >= 1 << 16);
+        let mut rng = Rng::new(22);
+        let x = rng.normal_vec(rows * d, 1.0);
+        let lng: Vec<f32> = (0..d).map(|j| 1.0 - 0.005 * j as f32).collect();
+        let lnb = rng.normal_vec(d, 0.1);
+        let w = rng.normal_vec(n * d, 0.5);
+        let lm = layernorm_mm(&x, &lng, &lnb, &w, None, rows, d, n, true, false);
+        let (ln_ref, _) = layernorm_fwd(&x, &lng, &lnb, rows, d);
+        let out_ref = mm_nt(&ln_ref, &w, rows, d, n);
+        assert!(bits_eq(&lm.ln_out, &ln_ref), "ln_out");
+        assert!(bits_eq(&lm.out, &out_ref), "logits");
+        assert!(lm.act.is_none());
+    }
+
+    #[test]
+    fn fused_mm_nt_gelu_bwd_matches_composition() {
+        let (rows, k, n) = (48usize, 40usize, 96usize);
+        assert!(rows * k * n >= 1 << 16);
+        let mut rng = Rng::new(23);
+        let dy = rng.normal_vec(rows * k, 1.0);
+        let w = rng.normal_vec(n * k, 0.5);
+        let h_pre = rng.normal_vec(rows * n, 1.0);
+        let (_, h_tanh) = gelu_fwd(&h_pre);
+        let fused = mm_nt_gelu_bwd(&dy, &w, rows, k, n, &h_pre, &h_tanh);
+        let dh_act = mm_nt(&dy, &w, rows, k, n);
+        let unfused = gelu_bwd(&dh_act, &h_pre, &h_tanh);
+        assert!(bits_eq(&fused, &unfused));
+    }
+
+    #[test]
+    fn train_step_bytes_invariant_under_force_scalar() {
+        // Whole-model before/after pin at unit scope: the blocked and
+        // fused passes must not change a single training-step byte.
+        // (tests/determinism.rs pins the same on a full pp×dp run.)
+        let rt = tiny();
+        let man = rt.manifest.clone();
+        let params = rt.init_params().unwrap();
+        let batch = seq_batch(&man, 2);
+        let exec = HostExec::new(&man).unwrap();
+        crate::tensor::force_scalar(true);
+        let scalar = exec.train_step(&params, &batch);
+        crate::tensor::force_scalar(false);
+        let (l_s, g_s) = scalar.unwrap();
+        let (l_b, g_b) = exec.train_step(&params, &batch).unwrap();
+        assert!(bits_eq(&l_s, &l_b), "losses diverge under blocking");
+        assert!(bits_eq(&g_s, &g_b), "grads diverge under blocking");
     }
 }

@@ -1,0 +1,544 @@
+//! Cache-blocked, packed-panel matmul kernels (std-only — plain loops
+//! the autovectorizer turns into SIMD; no intrinsics crates).
+//!
+//! One BLIS-style driver ([`gebp`]) serves every mm variant: A×B
+//! ([`mm`]), A×Bᵀ ([`mm_nt`]) and Aᵀ×B ([`mm_tn`] / [`acc_tn`]) differ
+//! only in how their panels are *packed*, so blocking and tuning can
+//! never diverge between the paths. Layout:
+//!
+//! - B is packed once per call into `[k-panel][j-strip][p][NR]` order
+//!   (tails zero-padded to NR lanes), in parallel over strips.
+//! - Each row-chunk worker packs its own A strips as `[p][MR]` panels
+//!   and walks k-panels × j-strips × i-strips, calling the register
+//!   micro-kernel on MR×NR tiles.
+//!
+//! # Byte-determinism
+//!
+//! The blocked kernels obey the same contract as everything in
+//! `util::par`: chunk boundaries are pure functions of the problem
+//! shape (row chunks are aligned to MR via
+//! `items_per_chunk_aligned`), and every output element accumulates
+//! its k-terms in ascending order. The micro-kernel *loads C into the
+//! register tile, accumulates the panel, and stores* — never "compute
+//! panel sum, then add", which would regroup f32 additions across
+//! panels and change bytes.
+//!
+//! The retained scalar references ([`scalar_mm_acc`] etc.) skip
+//! `a == 0.0` terms; the blocked path cannot. On finite inputs the
+//! results are still bitwise equal: an f32 accumulator that starts at
+//! +0.0 can never become −0.0 (x + (−x) = +0.0, +0.0 + (−0.0) = +0.0),
+//! and adding a ±0.0 product to any accumulator is then a bitwise
+//! no-op. The paths diverge only on inf/NaN inputs (0·inf = NaN),
+//! which the training pipeline never produces. `tests/kernels.rs`
+//! property-pins blocked == scalar across awkward shapes and thread
+//! counts, and `tests/determinism.rs` pins a whole deep-preset
+//! pp×dp×overlap run byte-identical under [`force_scalar`].
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::util::par;
+
+/// Micro-tile rows: one register accumulator row per A lane.
+pub const MR: usize = 4;
+/// Micro-tile columns: two 8-lane (or four 4-lane) SIMD vectors.
+pub const NR: usize = 16;
+/// k-panel depth: an MR and an NR panel of KC f32s both sit in L1.
+pub const KC: usize = 256;
+
+/// Work target per row chunk (larger than `par::CHUNK_WORK` so each
+/// worker reuses the packed B across many rows before re-reading it).
+const GEBP_CHUNK_WORK: usize = par::CHUNK_WORK * 4;
+
+/// Below this flop count (m·k·n) packing costs more than it saves; the
+/// scalar reference runs instead. Kept low so the tiny-preset
+/// integration tests exercise the blocked and fused paths.
+const BLOCK_MIN_FLOPS: usize = 1 << 16;
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Route every dispatching kernel (and the fused passes in
+/// `runtime::host`) to the retained scalar references — the
+/// "before-the-rewrite" behaviour, kept callable so tests can pin the
+/// blocked paths byte-identical on whole training runs.
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+/// Whether [`force_scalar`] is currently set.
+pub fn scalar_forced() -> bool {
+    FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// Dispatch decision for an m×k×n product (shared with the fused
+/// layernorm→matmul / matmul→GELU passes so fusion and blocking always
+/// agree).
+#[inline]
+pub(crate) fn use_blocked(m: usize, k: usize, n: usize) -> bool {
+    !scalar_forced() && k > 0 && m.saturating_mul(k).saturating_mul(n) >= BLOCK_MIN_FLOPS
+}
+
+// ---------------------------------------------------------------------------
+// Panel packing. All packers write `kc` panel rows into `dst`; `dst` is
+// pre-zeroed per strip, so lanes beyond `mr`/`nr` are zero padding.
+
+/// A panel from row-major A (`lda` = row stride): dst[p*MR + i] = a[i0+i][p0+p].
+pub(crate) fn pack_a_rm(
+    a: &[f32],
+    lda: usize,
+    i0: usize,
+    mr: usize,
+    p0: usize,
+    kc: usize,
+    dst: &mut [f32],
+) {
+    for i in 0..mr {
+        let src = &a[(i0 + i) * lda + p0..(i0 + i) * lda + p0 + kc];
+        for (p, &v) in src.iter().enumerate() {
+            dst[p * MR + i] = v;
+        }
+    }
+}
+
+/// A panel where the *logical* A is the transpose of row-major storage
+/// (`lda` = stored row stride): dst[p*MR + i] = a[p0+p][i0+i].
+pub(crate) fn pack_a_cm(
+    a: &[f32],
+    lda: usize,
+    i0: usize,
+    mr: usize,
+    p0: usize,
+    kc: usize,
+    dst: &mut [f32],
+) {
+    for (p, drow) in dst.chunks_mut(MR).take(kc).enumerate() {
+        let src = &a[(p0 + p) * lda + i0..(p0 + p) * lda + i0 + mr];
+        drow[..mr].copy_from_slice(src);
+    }
+}
+
+/// B strip from row-major B (`ldb` = row stride): dst[p*NR + j] = b[p0+p][j0+j].
+pub(crate) fn pack_b_rm(
+    b: &[f32],
+    ldb: usize,
+    j0: usize,
+    nr: usize,
+    p0: usize,
+    kc: usize,
+    dst: &mut [f32],
+) {
+    for (p, drow) in dst.chunks_mut(NR).take(kc).enumerate() {
+        let src = &b[(p0 + p) * ldb + j0..(p0 + p) * ldb + j0 + nr];
+        drow[..nr].copy_from_slice(src);
+    }
+}
+
+/// B strip where the logical B is the transpose of row-major storage
+/// (`ldb` = stored row stride): dst[p*NR + j] = b[j0+j][p0+p].
+pub(crate) fn pack_b_cm(
+    b: &[f32],
+    ldb: usize,
+    j0: usize,
+    nr: usize,
+    p0: usize,
+    kc: usize,
+    dst: &mut [f32],
+) {
+    for j in 0..nr {
+        let src = &b[(j0 + j) * ldb + p0..(j0 + j) * ldb + p0 + kc];
+        for (p, &v) in src.iter().enumerate() {
+            dst[p * NR + j] = v;
+        }
+    }
+}
+
+/// MR×NR register micro-kernel: loads the C tile, accumulates one
+/// packed k-panel in ascending-p order, stores. The two fixed-bound
+/// inner loops unroll into an MR×NR grid of independent fma chains.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn micro(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    c: &mut [f32],
+    r0: usize,
+    j0: usize,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for i in 0..mr {
+        acc[i][..nr].copy_from_slice(&c[(r0 + i) * ldc + j0..(r0 + i) * ldc + j0 + nr]);
+    }
+    for p in 0..kc {
+        let a4 = &ap[p * MR..p * MR + MR];
+        let b16 = &bp[p * NR..p * NR + NR];
+        for (arow, &av) in acc.iter_mut().zip(a4) {
+            for (x, &bv) in arow.iter_mut().zip(b16) {
+                *x += av * bv;
+            }
+        }
+    }
+    for i in 0..mr {
+        c[(r0 + i) * ldc + j0..(r0 + i) * ldc + j0 + nr].copy_from_slice(&acc[i][..nr]);
+    }
+}
+
+/// Blocked panel driver: `out[m,n] += A[m,k] · B[k,n]` where the
+/// packers define how A/B panels are gathered from their storage.
+///
+/// `pre(i0, mc)` runs once per row chunk before any packing (the fused
+/// layernorm prologue writes the chunk's A rows there); `epi(i0, mc,
+/// cblock)` runs after the chunk's product is complete (bias add / GELU
+/// epilogues). Row-chunk boundaries are MR-aligned and pure in the
+/// problem shape, so bytes are thread-count invariant.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gebp<PA, PB, PRE, EPI>(
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    pack_a: PA,
+    pack_b: PB,
+    pre: PRE,
+    epi: EPI,
+) where
+    PA: Fn(usize, usize, usize, usize, &mut [f32]) + Sync,
+    PB: Fn(usize, usize, usize, usize, &mut [f32]) + Sync,
+    PRE: Fn(usize, usize) + Sync,
+    EPI: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let ns = n.div_ceil(NR);
+    let kp = k.div_ceil(KC);
+    // Pack all of B once, in parallel over (k-panel, j-strip) cells.
+    let mut bpack = vec![0.0f32; kp * ns * KC * NR];
+    par::for_each_chunk_mut(&mut bpack, KC * NR, |ci, dst| {
+        let (ip, js) = (ci / ns, ci % ns);
+        let p0 = ip * KC;
+        let kc = KC.min(k - p0);
+        let j0 = js * NR;
+        let nr = NR.min(n - j0);
+        pack_b(j0, nr, p0, kc, dst);
+    });
+    let rows_per = par::items_per_chunk_aligned(2 * k * n, GEBP_CHUNK_WORK, MR);
+    par::for_each_chunk_mut(out, rows_per * n, |ci, cblock| {
+        let i0 = ci * rows_per;
+        let mc = cblock.len() / n;
+        pre(i0, mc);
+        let mrs = mc.div_ceil(MR);
+        let mut apack = vec![0.0f32; mrs * KC * MR];
+        for ip in 0..kp {
+            let p0 = ip * KC;
+            let kc = KC.min(k - p0);
+            for is in 0..mrs {
+                let mr = MR.min(mc - is * MR);
+                pack_a(i0 + is * MR, mr, p0, kc, &mut apack[is * KC * MR..is * KC * MR + kc * MR]);
+            }
+            for js in 0..ns {
+                let j0 = js * NR;
+                let nr = NR.min(n - j0);
+                let bpanel = &bpack[(ip * ns + js) * KC * NR..(ip * ns + js) * KC * NR + kc * NR];
+                for is in 0..mrs {
+                    let mr = MR.min(mc - is * MR);
+                    let apanel = &apack[is * KC * MR..is * KC * MR + kc * MR];
+                    micro(kc, apanel, bpanel, cblock, is * MR, j0, n, mr, nr);
+                }
+            }
+        }
+        epi(i0, mc, cblock);
+    });
+}
+
+fn no_pre(_i0: usize, _mc: usize) {}
+fn no_epi(_i0: usize, _mc: usize, _c: &mut [f32]) {}
+
+// ---------------------------------------------------------------------------
+// Scalar references: the pre-rewrite loops, verbatim — retained both as
+// the small-shape fast path and as the byte oracle the blocked kernels
+// are pinned against.
+
+/// out[m,n] += a[m,k] @ b[k,n], scalar ikj with zero-skip.
+pub fn scalar_mm_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), m * n);
+    let rows_per = par::items_per_chunk(2 * k * n, par::CHUNK_WORK);
+    par::for_each_chunk_mut(out, rows_per * n.max(1), |ci, block| {
+        let row0 = ci * rows_per;
+        for (bi, orow) in block.chunks_mut(n).enumerate() {
+            let arow = &a[(row0 + bi) * k..(row0 + bi + 1) * k];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    });
+}
+
+/// out[m,n] += a[m,k] @ b[n,k]ᵀ, scalar row-dot form (serial k
+/// ascending per element — same order as the blocked path).
+pub fn scalar_mm_nt_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), m * n);
+    let rows_per = par::items_per_chunk(2 * k * n, par::CHUNK_WORK);
+    par::for_each_chunk_mut(out, rows_per * n.max(1), |ci, block| {
+        let row0 = ci * rows_per;
+        for (bi, orow) in block.chunks_mut(n).enumerate() {
+            let arow = &a[(row0 + bi) * k..(row0 + bi + 1) * k];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = *o;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                *o = acc;
+            }
+        }
+    });
+}
+
+/// out[k,n] += a[rows,k]ᵀ @ b[rows,n], scalar with zero-skip: each
+/// output element accumulates r = 0..rows in order (the microbatch
+/// accumulation-order contract — see runtime/host.rs).
+pub fn scalar_acc_tn(a: &[f32], b: &[f32], rows: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), k * n);
+    let rows_per = par::items_per_chunk(2 * rows * n, par::CHUNK_WORK);
+    par::for_each_chunk_mut(out, rows_per * n.max(1), |ci, block| {
+        let k0 = ci * rows_per;
+        for (bi, orow) in block.chunks_mut(n).enumerate() {
+            let kk = k0 + bi;
+            for r in 0..rows {
+                let av = a[r * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[r * n..(r + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Blocked entry points (pub so the property pins and benches can force
+// the blocked path regardless of the size cutoff).
+
+/// Blocked out += a[m,k] @ b[k,n].
+pub fn mm_blocked(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    gebp(
+        m,
+        k,
+        n,
+        out,
+        |i0, mr, p0, kc, dst| pack_a_rm(a, k, i0, mr, p0, kc, dst),
+        |j0, nr, p0, kc, dst| pack_b_rm(b, n, j0, nr, p0, kc, dst),
+        no_pre,
+        no_epi,
+    );
+}
+
+/// Blocked out += a[m,k] @ b[n,k]ᵀ.
+pub fn mm_nt_blocked(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    gebp(
+        m,
+        k,
+        n,
+        out,
+        |i0, mr, p0, kc, dst| pack_a_rm(a, k, i0, mr, p0, kc, dst),
+        |j0, nr, p0, kc, dst| pack_b_cm(b, k, j0, nr, p0, kc, dst),
+        no_pre,
+        no_epi,
+    );
+}
+
+/// Blocked out += a[rows,k]ᵀ @ b[rows,n] (logical m' = k, k' = rows).
+pub fn acc_tn_blocked(a: &[f32], b: &[f32], rows: usize, k: usize, n: usize, out: &mut [f32]) {
+    gebp(
+        k,
+        rows,
+        n,
+        out,
+        |i0, mr, p0, kc, dst| pack_a_cm(a, k, i0, mr, p0, kc, dst),
+        |j0, nr, p0, kc, dst| pack_b_rm(b, n, j0, nr, p0, kc, dst),
+        no_pre,
+        no_epi,
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Dispatching public kernels.
+
+/// out[m,n] = a[m,k] @ b[k,n] over raw row-major slices. The single
+/// shared matmul kernel — [`super::Mat::matmul`] and the runtime host
+/// executor both call it, so chunking/tuning changes cannot diverge the
+/// paths. Blocked above the size cutoff, scalar below; bitwise
+/// identical either way on finite inputs (module docs).
+pub fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    if use_blocked(m, k, n) {
+        mm_blocked(a, b, m, k, n, &mut out);
+    } else {
+        scalar_mm_acc(a, b, m, k, n, &mut out);
+    }
+    out
+}
+
+/// out[m,n] = a[m,k] @ b[n,k]ᵀ — B transposed logically, never
+/// materialized (projection onto embeddings, `W·xᵀ`-style backward).
+pub fn mm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut out = vec![0.0f32; m * n];
+    if use_blocked(m, k, n) {
+        mm_nt_blocked(a, b, m, k, n, &mut out);
+    } else {
+        scalar_mm_nt_acc(a, b, m, k, n, &mut out);
+    }
+    out
+}
+
+/// out[m,n] = a[rows,m]ᵀ @ b[rows,n] — A transposed logically, never
+/// materialized (weight-gradient shape, PowerSGD phase 2).
+pub fn mm_tn(a: &[f32], b: &[f32], rows: usize, m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), rows * m);
+    debug_assert_eq!(b.len(), rows * n);
+    let mut out = vec![0.0f32; m * n];
+    acc_tn(a, b, rows, m, n, &mut out);
+    out
+}
+
+/// out[k,n] += a[rows,k]ᵀ @ b[rows,n] — the gradient accumulator. Every
+/// output element accumulates r = 0..rows strictly ascending (the 1F1B
+/// microbatch invariance contract).
+pub fn acc_tn(a: &[f32], b: &[f32], rows: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), rows * k);
+    debug_assert_eq!(b.len(), rows * n);
+    debug_assert_eq!(out.len(), k * n);
+    if use_blocked(k, rows, n) {
+        acc_tn_blocked(a, b, rows, k, n, out);
+    } else {
+        scalar_acc_tn(a, b, rows, k, n, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    /// Shapes straddling every block boundary: 0/1, MR±1, NR±1, KC±1,
+    /// non-multiples.
+    const EDGES: [usize; 10] = [1, 3, 4, 5, 15, 16, 17, 33, 255, 257];
+
+    #[test]
+    fn blocked_mm_matches_scalar_on_edge_shapes() {
+        let mut rng = Rng::new(11);
+        for &m in &EDGES[..6] {
+            for &k in &EDGES {
+                for &n in &EDGES[..6] {
+                    let a = rng.normal_vec(m * k, 1.0);
+                    let b = rng.normal_vec(k * n, 1.0);
+                    let mut blocked = vec![0.0f32; m * n];
+                    mm_blocked(&a, &b, m, k, n, &mut blocked);
+                    let mut scalar = vec![0.0f32; m * n];
+                    scalar_mm_acc(&a, &b, m, k, n, &mut scalar);
+                    assert!(bits_eq(&blocked, &scalar), "mm {m}x{k}x{n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_mm_nt_matches_scalar_on_edge_shapes() {
+        let mut rng = Rng::new(12);
+        for &(m, k, n) in &[(5, 257, 17), (16, 16, 16), (1, 255, 4), (33, 256, 33), (4, 1, 15)] {
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(n * k, 1.0);
+            let mut blocked = vec![0.0f32; m * n];
+            mm_nt_blocked(&a, &b, m, k, n, &mut blocked);
+            let mut scalar = vec![0.0f32; m * n];
+            scalar_mm_nt_acc(&a, &b, m, k, n, &mut scalar);
+            assert!(bits_eq(&blocked, &scalar), "mm_nt {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn blocked_acc_tn_matches_scalar_and_accumulates() {
+        let mut rng = Rng::new(13);
+        for &(rows, k, n) in &[(257, 5, 17), (16, 16, 16), (255, 1, 33), (256, 33, 4)] {
+            let a = rng.normal_vec(rows * k, 1.0);
+            let b = rng.normal_vec(rows * n, 1.0);
+            // nonzero initial out: += semantics must match bitwise too
+            let init = rng.normal_vec(k * n, 0.5);
+            let mut blocked = init.clone();
+            acc_tn_blocked(&a, &b, rows, k, n, &mut blocked);
+            let mut scalar = init;
+            scalar_acc_tn(&a, &b, rows, k, n, &mut scalar);
+            assert!(bits_eq(&blocked, &scalar), "acc_tn {rows}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn zero_dims_are_safe() {
+        for &(m, k, n) in &[(0, 5, 7), (5, 0, 7), (5, 7, 0), (0, 0, 0)] {
+            assert_eq!(mm(&vec![0.0; m * k], &vec![0.0; k * n], m, k, n).len(), m * n);
+            assert_eq!(mm_nt(&vec![0.0; m * k], &vec![0.0; n * k], m, k, n).len(), m * n);
+            let mut out = vec![1.0f32; k * n];
+            acc_tn(&vec![0.0; m * k], &vec![0.0; m * n], m, k, n, &mut out);
+            assert!(out.iter().all(|&x| x == 1.0), "k=0 rows leave out untouched");
+        }
+    }
+
+    #[test]
+    fn dispatch_is_transparent_across_the_cutoff() {
+        // A shape over the cutoff: the dispatcher (blocked, unless a
+        // concurrent test holds force_scalar — bitwise identical either
+        // way) must match the scalar reference.
+        let mut rng = Rng::new(14);
+        let (m, k, n) = (48, 40, 72); // 138 240 flops ≥ 2^16
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let fast = mm(&a, &b, m, k, n);
+        let mut slow = vec![0.0f32; m * n];
+        scalar_mm_acc(&a, &b, m, k, n, &mut slow);
+        assert!(bits_eq(&fast, &slow));
+        // force_scalar reroutes the same call
+        force_scalar(true);
+        let forced = mm(&a, &b, m, k, n);
+        force_scalar(false);
+        assert!(bits_eq(&forced, &slow));
+    }
+
+    #[test]
+    fn mm_tn_matches_transpose_then_mm() {
+        let mut rng = Rng::new(15);
+        let (rows, m, n) = (37, 17, 21);
+        let a = rng.normal_vec(rows * m, 1.0);
+        let b = rng.normal_vec(rows * n, 1.0);
+        let got = mm_tn(&a, &b, rows, m, n);
+        // explicit transpose reference
+        let mut at = vec![0.0f32; m * rows];
+        for r in 0..rows {
+            for c in 0..m {
+                at[c * rows + r] = a[r * m + c];
+            }
+        }
+        let want = mm(&at, &b, m, rows, n);
+        assert!(bits_eq(&got, &want));
+    }
+}

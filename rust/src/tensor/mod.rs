@@ -4,10 +4,18 @@
 //! coordinator's own linear algebra: buffer views over the flat parameter
 //! vector, the pure-rust PowerSGD reference (tested against the python
 //! oracle via golden files), Pearson correlation for the Fig.-4 analysis,
-//! and the statistics the GDS/CQM controllers consume.
+//! and the statistics the GDS/CQM controllers consume. The matmul
+//! substrate lives in [`kernels`] — one cache-blocked packed-panel
+//! driver behind [`mm`] / [`mm_nt`] / [`mm_tn`] / [`acc_tn`], with
+//! retained scalar references pinned bitwise-equal (see that module's
+//! determinism notes).
 
 use crate::util::par;
 use crate::util::rng::Rng;
+
+pub mod kernels;
+
+pub use kernels::{acc_tn, force_scalar, mm, mm_nt, mm_tn, scalar_forced};
 
 /// Dense row-major f32 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -44,15 +52,29 @@ impl Mat {
     pub fn t(&self) -> Mat {
         let (m, n) = (self.rows, self.cols);
         let mut out = Mat::zeros(n, m);
+        if m == 0 || n == 0 {
+            return out;
+        }
         // Output rows (input columns) are independent: block-parallel
-        // with bytes identical to the serial loop for any thread count.
-        let rows_per = par::items_per_chunk(m, par::CHUNK_WORK / 8);
+        // with bytes identical to the serial loop for any thread count
+        // (pure data movement — tiling cannot change any value). 32×32
+        // tiles keep both the read strip and the write strip resident,
+        // so neither side pays a strided cache miss per element.
+        const TILE: usize = 32;
+        let rows_per = par::items_per_chunk_aligned(m, par::CHUNK_WORK / 8, TILE);
         par::for_each_chunk_mut(&mut out.data, rows_per * m, |ci, block| {
             let c0 = ci * rows_per;
-            for (bi, orow) in block.chunks_mut(m).enumerate() {
-                let c = c0 + bi;
-                for (r, o) in orow.iter_mut().enumerate() {
-                    *o = self.data[r * n + c];
+            let bc = block.len() / m; // output rows (input cols) here
+            for ct in (0..bc).step_by(TILE) {
+                let cte = (ct + TILE).min(bc);
+                for rt in (0..m).step_by(TILE) {
+                    let rte = (rt + TILE).min(m);
+                    for rr in rt..rte {
+                        let src = &self.data[rr * n + c0 + ct..rr * n + c0 + cte];
+                        for (cc, &v) in src.iter().enumerate() {
+                            block[(ct + cc) * m + rr] = v;
+                        }
+                    }
                 }
             }
         });
@@ -68,6 +90,31 @@ impl Mat {
             rows: self.rows,
             cols: other.cols,
             data: mm(&self.data, &other.data, self.rows, self.cols, other.cols),
+        }
+    }
+
+    /// C = selfᵀ · other without materializing the transpose. Bitwise
+    /// equal to `self.t().matmul(other)` on finite inputs: each output
+    /// element accumulates the shared dimension in the same ascending
+    /// order either way.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul inner dim");
+        Mat {
+            rows: self.cols,
+            cols: other.cols,
+            data: mm_tn(&self.data, &other.data, self.rows, self.cols, other.cols),
+        }
+    }
+
+    /// C = self · otherᵀ without materializing the transpose. Bitwise
+    /// equal to `self.matmul(&other.t())` on finite inputs (same
+    /// ascending accumulation order per element).
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt inner dim");
+        Mat {
+            rows: self.rows,
+            cols: other.rows,
+            data: mm_nt(&self.data, &other.data, self.rows, self.cols, other.rows),
         }
     }
 
@@ -119,33 +166,59 @@ impl Mat {
                 if i == 0 {
                     break;
                 }
-                // d_j = q_j · col for all j < i; each dot is serial over
-                // rows inside one chunk worker.
+                // d_j = q_j · col for all j < i. Row-outer / j-inner:
+                // each dot still accumulates rows in ascending order
+                // (bytes unchanged vs the j-outer form), but the inner
+                // loop now runs over adjacent columns — a strip of
+                // independent f64 chains the autovectorizer can keep in
+                // SIMD lanes, instead of one serial chain per dot.
                 let js_per = par::items_per_chunk(2 * m, par::CHUNK_WORK / 4);
+                let qd = &q.data;
                 let dots: Vec<f64> = par::map_chunks(i, js_per, |_, jr| {
-                    jr.map(|j| {
-                        let mut dot = 0.0f64;
-                        for rr in 0..m {
-                            dot += q.at(rr, j) as f64 * col[rr] as f64;
+                    let mut acc = vec![0.0f64; jr.len()];
+                    for (rr, &cv) in col.iter().enumerate() {
+                        let qrow = &qd[rr * r + jr.start..rr * r + jr.end];
+                        for (d, &qv) in acc.iter_mut().zip(qrow) {
+                            *d += qv as f64 * cv as f64;
                         }
-                        dot
-                    })
-                    .collect::<Vec<f64>>()
+                    }
+                    acc
                 })
                 .into_iter()
                 .flatten()
                 .collect();
                 // col -= Q[:, :i] · d, parallel over row blocks; every
-                // element accumulates j = 0..i in order.
-                let qd = &q.data;
+                // element accumulates j = 0..i in order. Four rows at a
+                // time: each row keeps its own serial j-ascending chain
+                // (bytes unchanged), interleaving the chains for ILP.
                 let rows_per = par::items_per_chunk(2 * i, par::CHUNK_WORK / 4);
                 par::for_each_chunk_mut(&mut col, rows_per, |ci, block| {
                     let r0 = ci * rows_per;
-                    for (bi, c) in block.iter_mut().enumerate() {
-                        let qrow = &qd[(r0 + bi) * r..(r0 + bi) * r + i];
+                    let mut bi = 0;
+                    while bi + 4 <= block.len() {
+                        let base = (r0 + bi) * r;
+                        let q0 = &qd[base..base + i];
+                        let q1 = &qd[base + r..base + r + i];
+                        let q2 = &qd[base + 2 * r..base + 2 * r + i];
+                        let q3 = &qd[base + 3 * r..base + 3 * r + i];
+                        let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+                        for (j, &dj) in dots.iter().enumerate() {
+                            a0 += dj * q0[j] as f64;
+                            a1 += dj * q1[j] as f64;
+                            a2 += dj * q2[j] as f64;
+                            a3 += dj * q3[j] as f64;
+                        }
+                        block[bi] -= a0 as f32;
+                        block[bi + 1] -= a1 as f32;
+                        block[bi + 2] -= a2 as f32;
+                        block[bi + 3] -= a3 as f32;
+                        bi += 4;
+                    }
+                    for (off, c) in block[bi..].iter_mut().enumerate() {
+                        let qrow = &qd[(r0 + bi + off) * r..(r0 + bi + off) * r + i];
                         let mut acc = 0.0f64;
-                        for (j, &qv) in qrow.iter().enumerate() {
-                            acc += dots[j] * qv as f64;
+                        for (&dj, &qv) in dots.iter().zip(qrow) {
+                            acc += dj * qv as f64;
                         }
                         *c -= acc as f32;
                     }
@@ -224,35 +297,6 @@ impl Mat {
     }
 }
 
-/// out[m,n] = a[m,k] @ b[k,n] over raw row-major slices (f32, ikj loop
-/// order: streams b rows, vectorizes the inner j loop, skips zero a
-/// entries). Output rows are independent, so row blocks parallelize
-/// with bytes identical to the serial loop for any thread count. The
-/// single matmul kernel — [`Mat::matmul`] and the runtime host executor
-/// both call it, so chunking/tuning changes cannot diverge the paths.
-pub fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
-    let rows_per = par::items_per_chunk(2 * k * n, par::CHUNK_WORK);
-    par::for_each_chunk_mut(&mut out, rows_per * n.max(1), |ci, block| {
-        let row0 = ci * rows_per;
-        for (bi, orow) in block.chunks_mut(n).enumerate() {
-            let arow = &a[(row0 + bi) * k..(row0 + bi + 1) * k];
-            for (kk, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &b[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    orow[j] += av * brow[j];
-                }
-            }
-        }
-    });
-    out
-}
-
 /// Pearson correlation coefficient of two equal-length slices.
 pub fn pearson(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len());
@@ -323,6 +367,44 @@ mod tests {
         let mut rng = Rng::new(0);
         let a = Mat::randn(5, 7, 1.0, &mut rng);
         assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn transpose_tiled_matches_naive() {
+        // dims straddle the 32×32 tile boundary and the chunk size
+        let mut rng = Rng::new(7);
+        for &(m, n) in &[(1, 1), (31, 33), (32, 32), (64, 65), (97, 5), (0, 4)] {
+            let a = Mat::randn(m, n, 1.0, &mut rng);
+            let t = a.t();
+            assert_eq!((t.rows, t.cols), (n, m));
+            for r in 0..m {
+                for c in 0..n {
+                    assert_eq!(t.at(c, r).to_bits(), a.at(r, c).to_bits(), "({r},{c})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let mut rng = Rng::new(8);
+        let a = Mat::randn(37, 13, 1.0, &mut rng);
+        let b = Mat::randn(37, 19, 1.0, &mut rng);
+        let fast = a.t_matmul(&b);
+        let slow = a.t().matmul(&b);
+        assert_eq!((fast.rows, fast.cols), (13, 19));
+        assert!(fast.data.iter().zip(&slow.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(21, 37, 1.0, &mut rng);
+        let b = Mat::randn(17, 37, 1.0, &mut rng);
+        let fast = a.matmul_nt(&b);
+        let slow = a.matmul(&b.t());
+        assert_eq!((fast.rows, fast.cols), (21, 17));
+        assert!(fast.data.iter().zip(&slow.data).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]

@@ -178,18 +178,32 @@ impl BenchSet {
     }
 }
 
+/// Default noise floor for [`diff_benchmarks`]: entries whose baseline
+/// `min_ns` sits below 1 µs time mostly harness overhead, and a few ns
+/// of jitter clears a 25% relative threshold — so the gate compares
+/// against `max(base_min, min_ns)` instead of the raw baseline.
+pub const DEFAULT_MIN_NS: f64 = 1000.0;
+
 /// Compare two `BENCH_*.json` documents (the perf-trajectory gate
 /// behind `edgc bench-diff`; in CI the baseline is the same benches run
 /// at the PR's merge-base): every named entry of `baseline` must exist
 /// in `current` — a benchmark that vanished is a gate failure, since a
 /// deleted or renamed bench could otherwise hide a regression — with a
 /// `min_ns` no more than `threshold` (fractional, e.g. 0.25 = +25%)
-/// above the baseline's. Returns human-readable regression
-/// descriptions — empty means the gate passes. An empty baseline
-/// result list has nothing to gate and passes here; the CLI surfaces
-/// that case as a `::warning::` annotation instead of passing silently.
-pub fn diff_benchmarks(baseline: &Json, current: &Json, threshold: f64) -> Result<Vec<String>> {
+/// above `max(base_min, min_ns)`; the `min_ns` noise floor keeps
+/// sub-microsecond entries from flapping the gate on scheduler jitter.
+/// Returns human-readable regression descriptions — empty means the
+/// gate passes. An empty baseline result list has nothing to gate and
+/// passes here; the CLI surfaces that case as a `::warning::`
+/// annotation instead of passing silently.
+pub fn diff_benchmarks(
+    baseline: &Json,
+    current: &Json,
+    threshold: f64,
+    min_ns: f64,
+) -> Result<Vec<String>> {
     crate::ensure!(threshold >= 0.0, "bench-diff threshold must be >= 0, got {threshold}");
+    crate::ensure!(min_ns >= 0.0, "bench-diff noise floor must be >= 0, got {min_ns}");
     let base_rows = baseline.get("results")?.as_arr()?;
     if base_rows.is_empty() {
         return Ok(Vec::new());
@@ -206,19 +220,81 @@ pub fn diff_benchmarks(baseline: &Json, current: &Json, threshold: f64) -> Resul
             None => out.push(format!("{name}: in baseline but missing from current run")),
             Some(r) => {
                 let cur_min = r.get("min_ns")?.as_f64()?;
-                if base_min > 0.0 && cur_min > base_min * (1.0 + threshold) {
+                if base_min > 0.0 && cur_min > base_min.max(min_ns) * (1.0 + threshold) {
                     out.push(format!(
-                        "{name}: min {} -> {} (+{:.1}%, allowed +{:.0}%)",
+                        "{name}: min {} -> {} (+{:.1}%, allowed +{:.0}% over {})",
                         BenchResult::human(base_min),
                         BenchResult::human(cur_min),
                         (cur_min / base_min - 1.0) * 100.0,
-                        threshold * 100.0
+                        threshold * 100.0,
+                        BenchResult::human(base_min.max(min_ns))
                     ));
                 }
             }
         }
     }
     Ok(out)
+}
+
+/// Render the base-vs-head comparison as a GitHub-flavored markdown
+/// table (the `$GITHUB_STEP_SUMMARY` payload `edgc bench-diff` appends
+/// so the trajectory is visible on the PR page). Covers the union of
+/// both documents: baseline-only rows show as `missing`, head-only rows
+/// as `new`, and regressions past the gate (same rule as
+/// [`diff_benchmarks`]) as `REGRESSED`.
+pub fn summary_table(
+    baseline: &Json,
+    current: &Json,
+    threshold: f64,
+    min_ns: f64,
+) -> Result<String> {
+    let base_rows = baseline.get("results")?.as_arr()?;
+    let cur_rows = current.get("results")?.as_arr()?;
+    let mut s = String::from(
+        "| benchmark | base min | head min | Δ | status |\n|---|---:|---:|---:|---|\n",
+    );
+    for row in base_rows {
+        let name = row.get("name")?.as_str()?;
+        let base_min = row.get("min_ns")?.as_f64()?;
+        let found = cur_rows
+            .iter()
+            .find(|r| r.opt("name").and_then(|n| n.as_str().ok()) == Some(name));
+        match found {
+            None => {
+                s.push_str(&format!(
+                    "| {name} | {} | — | — | missing |\n",
+                    BenchResult::human(base_min)
+                ));
+            }
+            Some(r) => {
+                let cur_min = r.get("min_ns")?.as_f64()?;
+                let delta = if base_min > 0.0 {
+                    format!("{:+.1}%", (cur_min / base_min - 1.0) * 100.0)
+                } else {
+                    "—".to_string()
+                };
+                let regressed =
+                    base_min > 0.0 && cur_min > base_min.max(min_ns) * (1.0 + threshold);
+                let status = if regressed { "REGRESSED" } else { "ok" };
+                s.push_str(&format!(
+                    "| {name} | {} | {} | {delta} | {status} |\n",
+                    BenchResult::human(base_min),
+                    BenchResult::human(cur_min)
+                ));
+            }
+        }
+    }
+    for row in cur_rows {
+        let name = row.get("name")?.as_str()?;
+        let seen = base_rows
+            .iter()
+            .any(|r| r.opt("name").and_then(|n| n.as_str().ok()) == Some(name));
+        if !seen {
+            let cur_min = row.get("min_ns")?.as_f64()?;
+            s.push_str(&format!("| {name} | — | {} | — | new |\n", BenchResult::human(cur_min)));
+        }
+    }
+    Ok(s)
 }
 
 #[cfg(test)]
@@ -273,31 +349,65 @@ mod tests {
 
     #[test]
     fn diff_benchmarks_gates_regressions() {
-        let base = bench_doc(&[("a", 100.0), ("b", 200.0)]);
+        let base = bench_doc(&[("a", 2000.0), ("b", 4000.0)]);
         // within threshold: +20% on a, improvement on b
-        let ok = bench_doc(&[("a", 120.0), ("b", 150.0)]);
-        assert!(diff_benchmarks(&base, &ok, 0.25).unwrap().is_empty());
+        let ok = bench_doc(&[("a", 2400.0), ("b", 3000.0)]);
+        assert!(diff_benchmarks(&base, &ok, 0.25, DEFAULT_MIN_NS).unwrap().is_empty());
         // a regresses 2x, b disappears
-        let bad = bench_doc(&[("a", 200.0)]);
-        let mut regs = diff_benchmarks(&base, &bad, 0.25).unwrap();
+        let bad = bench_doc(&[("a", 4000.0)]);
+        let mut regs = diff_benchmarks(&base, &bad, 0.25, DEFAULT_MIN_NS).unwrap();
         regs.sort();
         assert_eq!(regs.len(), 1 + 1);
         assert!(regs[0].starts_with("a:"), "{regs:?}");
         assert!(regs[1].starts_with("b:"), "{regs:?}");
         // extra entries in current are fine (new benches land first)
-        let extra = bench_doc(&[("a", 100.0), ("b", 200.0), ("c", 5.0)]);
-        assert!(diff_benchmarks(&base, &extra, 0.25).unwrap().is_empty());
+        let extra = bench_doc(&[("a", 2000.0), ("b", 4000.0), ("c", 5.0)]);
+        assert!(diff_benchmarks(&base, &extra, 0.25, DEFAULT_MIN_NS).unwrap().is_empty());
         // a current run that produced nothing: every baseline entry is
         // reported missing — a wholesale bench deletion cannot slip by
         let gone = bench_doc(&[]);
-        let missing = diff_benchmarks(&base, &gone, 0.25).unwrap();
+        let missing = diff_benchmarks(&base, &gone, 0.25, DEFAULT_MIN_NS).unwrap();
         assert_eq!(missing.len(), 2);
         assert!(missing.iter().all(|m| m.contains("missing")), "{missing:?}");
         // empty baseline (the committed-seed bootstrap state) passes
         let empty = bench_doc(&[]);
-        assert!(diff_benchmarks(&empty, &bad, 0.25).unwrap().is_empty());
-        // negative threshold rejected
-        assert!(diff_benchmarks(&base, &ok, -0.1).is_err());
+        assert!(diff_benchmarks(&empty, &bad, 0.25, DEFAULT_MIN_NS).unwrap().is_empty());
+        // negative threshold / floor rejected
+        assert!(diff_benchmarks(&base, &ok, -0.1, DEFAULT_MIN_NS).is_err());
+        assert!(diff_benchmarks(&base, &ok, 0.25, -1.0).is_err());
+    }
+
+    #[test]
+    fn diff_benchmarks_noise_floor_boundary() {
+        // baseline 100 ns, floor 1000 ns: the effective gate is
+        // 1000 * 1.25 = 1250 ns, even though that is +1150% relative.
+        let base = bench_doc(&[("tiny", 100.0)]);
+        let at = bench_doc(&[("tiny", 1250.0)]);
+        assert!(diff_benchmarks(&base, &at, 0.25, 1000.0).unwrap().is_empty());
+        let over = bench_doc(&[("tiny", 1250.1)]);
+        let regs = diff_benchmarks(&base, &over, 0.25, 1000.0).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("over 1.00 µs"), "{regs:?}");
+        // floor 0 restores the raw relative gate
+        let small = bench_doc(&[("tiny", 126.0)]);
+        assert_eq!(diff_benchmarks(&base, &small, 0.25, 0.0).unwrap().len(), 1);
+        // above the floor the floor is inert: 2000 -> 2600 still fails
+        let base2 = bench_doc(&[("big", 2000.0)]);
+        let over2 = bench_doc(&[("big", 2600.0)]);
+        assert_eq!(diff_benchmarks(&base2, &over2, 0.25, 1000.0).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn summary_table_covers_union() {
+        let base = bench_doc(&[("a", 2000.0), ("gone", 500.0)]);
+        let cur = bench_doc(&[("a", 5000.0), ("fresh", 300.0)]);
+        let t = summary_table(&base, &cur, 0.25, DEFAULT_MIN_NS).unwrap();
+        assert!(t.starts_with("| benchmark |"), "{t}");
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 2 + 3, "{t}");
+        assert!(t.contains("| a | 2.00 µs | 5.00 µs | +150.0% | REGRESSED |"), "{t}");
+        assert!(t.contains("| gone | 500 ns | — | — | missing |"), "{t}");
+        assert!(t.contains("| fresh | — | 300 ns | — | new |"), "{t}");
     }
 
     #[test]

@@ -84,6 +84,16 @@ pub fn items_per_chunk(work_per_item: usize, target: usize) -> usize {
     (target / work_per_item.max(1)).max(1)
 }
 
+/// Like [`items_per_chunk`], rounded **up** to a multiple of `align`
+/// (and at least `align`). The blocked kernels chunk output rows in
+/// whole micro-tile strips so a register tile is never split across two
+/// workers; the result is still a pure function of the problem shape,
+/// so invariant 1 holds.
+pub fn items_per_chunk_aligned(work_per_item: usize, target: usize, align: usize) -> usize {
+    let align = align.max(1);
+    items_per_chunk(work_per_item, target).div_ceil(align) * align
+}
+
 /// Default per-chunk work target: big enough that spawn/join overhead
 /// is noise, small enough that a handful of chunks load-balance.
 pub const CHUNK_WORK: usize = 1 << 20;
@@ -378,6 +388,17 @@ mod tests {
         assert_eq!(items_per_chunk(0, 100), 100);
         assert_eq!(items_per_chunk(1000, 100), 1);
         assert_eq!(items_per_chunk(10, 100), 10);
+    }
+
+    #[test]
+    fn items_per_chunk_aligned_rounds_up() {
+        // exact multiple stays put; everything else rounds up
+        assert_eq!(items_per_chunk_aligned(10, 100, 5), 10);
+        assert_eq!(items_per_chunk_aligned(10, 100, 4), 12);
+        // tiny chunk is lifted to one full alignment unit
+        assert_eq!(items_per_chunk_aligned(1000, 100, 4), 4);
+        // align 0 degrades to the unaligned value
+        assert_eq!(items_per_chunk_aligned(10, 100, 0), items_per_chunk(10, 100));
     }
 
     #[test]

@@ -381,6 +381,44 @@ fn pp_dp_matrix_cell() {
     par::set_threads(1);
 }
 
+/// The kernel-rewrite pin: one whole deep-preset pp×dp×overlap training
+/// run routed through the retained scalar kernel references
+/// (`tensor::force_scalar`) must be byte-identical — curve and final
+/// parameters — to the same run on the blocked micro-kernels and fused
+/// layernorm→matmul / matmul→GELU passes. The scalar references keep the
+/// pre-rewrite reduction orders exactly, so this is the "before vs
+/// after the rewrite" byte-identity the blocking scheme promises, at
+/// full integration scope and at a thread count > 1.
+#[test]
+fn blocked_kernels_byte_identical_to_scalar_reference() {
+    let _knob = hold_par_knob();
+    // reset the process-global kernel switch even if an assert fires
+    struct Reset;
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            edgc::tensor::force_scalar(false);
+        }
+    }
+    let _reset = Reset;
+    par::set_threads(2);
+    let mut cfg = tiny_cfg(Method::Edgc, 6);
+    cfg.artifacts = "artifacts/deep".into();
+    cfg.overlap = true;
+    edgc::tensor::force_scalar(true);
+    let scalar = dist_run(&cfg, TransportKind::Mem);
+    edgc::tensor::force_scalar(false);
+    let blocked = dist_run(&cfg, TransportKind::Mem);
+    par::set_threads(1);
+    assert_eq!(
+        scalar.summary.curve.render(),
+        blocked.summary.curve.render(),
+        "curve differs between scalar-reference and blocked kernels"
+    );
+    let same = scalar.params.len() == blocked.params.len()
+        && scalar.params.iter().zip(&blocked.params).all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(same, "params differ between scalar-reference and blocked kernels");
+}
+
 fn tmp_dir(tag: &str) -> String {
     std::env::temp_dir()
         .join(format!("edgc-determinism-{tag}-{}", std::process::id()))

@@ -1,0 +1,121 @@
+//! Blocked-kernel byte-identity properties: every blocked micro-kernel
+//! path must be bitwise equal to its retained scalar reference across
+//! awkward shapes — dimensions at 0, 1, one off the MR/NR/KC block
+//! edges, and non-multiples — and across `--threads {1, 4}` (the
+//! blocking scheme fixes chunk boundaries and reduction order, so the
+//! thread count must never reach the bytes). Kept in its own
+//! integration-test binary because it flips the process-global thread
+//! knob.
+
+use std::sync::{Mutex, MutexGuard};
+
+use edgc::tensor::kernels;
+use edgc::util::rng::Rng;
+use edgc::util::{par, prop};
+
+/// Serialize tests that flip the global thread knob (see
+/// `tests/determinism.rs` for the rationale).
+static PAR_KNOB: Mutex<()> = Mutex::new(());
+
+fn hold_par_knob() -> MutexGuard<'static, ()> {
+    PAR_KNOB.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Shape edges around the block constants: 0, 1, MR±1, NR±1, KC±1 and
+/// non-multiples in between.
+const AWKWARD: [usize; 12] = [0, 1, 3, 4, 5, 15, 16, 17, 33, 100, 255, 257];
+
+fn pick(rng: &mut Rng) -> usize {
+    AWKWARD[rng.below(AWKWARD.len())]
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn blocked_mm_bitwise_equals_scalar_across_shapes_and_threads() {
+    let _knob = hold_par_knob();
+    for &t in &[1usize, 4] {
+        par::set_threads(t);
+        prop::check(&format!("mm blocked == scalar (threads {t})"), 60, |rng| {
+            let (m, k, n) = (pick(rng), pick(rng), pick(rng));
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(k * n, 1.0);
+            let mut blocked = vec![0.0f32; m * n];
+            kernels::mm_blocked(&a, &b, m, k, n, &mut blocked);
+            let mut scalar = vec![0.0f32; m * n];
+            kernels::scalar_mm_acc(&a, &b, m, k, n, &mut scalar);
+            prop::expect(bits_eq(&blocked, &scalar), format!("mm {m}x{k}x{n} diverged"))
+        });
+    }
+    par::set_threads(1);
+}
+
+#[test]
+fn blocked_mm_nt_bitwise_equals_scalar_across_shapes_and_threads() {
+    let _knob = hold_par_knob();
+    for &t in &[1usize, 4] {
+        par::set_threads(t);
+        prop::check(&format!("mm_nt blocked == scalar (threads {t})"), 60, |rng| {
+            let (m, k, n) = (pick(rng), pick(rng), pick(rng));
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(n * k, 1.0);
+            let mut blocked = vec![0.0f32; m * n];
+            kernels::mm_nt_blocked(&a, &b, m, k, n, &mut blocked);
+            let mut scalar = vec![0.0f32; m * n];
+            kernels::scalar_mm_nt_acc(&a, &b, m, k, n, &mut scalar);
+            prop::expect(bits_eq(&blocked, &scalar), format!("mm_nt {m}x{k}x{n} diverged"))
+        });
+    }
+    par::set_threads(1);
+}
+
+#[test]
+fn blocked_acc_tn_bitwise_equals_scalar_across_shapes_and_threads() {
+    let _knob = hold_par_knob();
+    for &t in &[1usize, 4] {
+        par::set_threads(t);
+        prop::check(&format!("acc_tn blocked == scalar (threads {t})"), 60, |rng| {
+            let (rows, k, n) = (pick(rng), pick(rng), pick(rng));
+            let a = rng.normal_vec(rows * k, 1.0);
+            let b = rng.normal_vec(rows * n, 1.0);
+            // nonzero initial accumulator: the += contract is on the line
+            let init = rng.normal_vec(k * n, 0.5);
+            let mut blocked = init.clone();
+            kernels::acc_tn_blocked(&a, &b, rows, k, n, &mut blocked);
+            let mut scalar = init;
+            kernels::scalar_acc_tn(&a, &b, rows, k, n, &mut scalar);
+            prop::expect(bits_eq(&blocked, &scalar), format!("acc_tn {rows}x{k}x{n} diverged"))
+        });
+    }
+    par::set_threads(1);
+}
+
+#[test]
+fn dispatchers_are_thread_count_invariant() {
+    let _knob = hold_par_knob();
+    // dispatcher-level (mm/mm_nt/mm_tn pick blocked or scalar from the
+    // shape): bytes must not depend on the thread count either way
+    let (m, k, n) = (65usize, 130, 47); // blocked side of the cutoff
+    let (sm, sk, sn) = (5usize, 9, 7); // scalar side
+    let mut rng = Rng::new(0xED6C);
+    for &(mm, kk, nn) in &[(m, k, n), (sm, sk, sn)] {
+        let a = rng.normal_vec(mm * kk, 1.0);
+        let b = rng.normal_vec(kk * nn, 1.0);
+        let bt = rng.normal_vec(nn * kk, 1.0);
+        let bn = rng.normal_vec(mm * nn, 1.0); // mm_tn's B: [rows, n]
+        par::set_threads(1);
+        let r1 = kernels::mm(&a, &b, mm, kk, nn);
+        let r1n = kernels::mm_nt(&a, &bt, mm, kk, nn);
+        let r1t = kernels::mm_tn(&a, &bn, mm, kk, nn);
+        par::set_threads(4);
+        let r4 = kernels::mm(&a, &b, mm, kk, nn);
+        let r4n = kernels::mm_nt(&a, &bt, mm, kk, nn);
+        let r4t = kernels::mm_tn(&a, &bn, mm, kk, nn);
+        par::set_threads(1);
+        assert!(bits_eq(&r1, &r4), "mm {mm}x{kk}x{nn}: threads changed bytes");
+        assert!(bits_eq(&r1n, &r4n), "mm_nt {mm}x{kk}x{nn}: threads changed bytes");
+        assert!(bits_eq(&r1t, &r4t), "mm_tn {mm}x{kk}x{nn}: threads changed bytes");
+    }
+}
