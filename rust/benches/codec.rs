@@ -1,0 +1,55 @@
+//! Bench: the `dist::codec` wire layer — lossless frame compression and
+//! bf16 factor quantization on representative payloads (a PowerSGD
+//! 2048×8 rank-8 factor and an 8192-float activation frame). Besides
+//! encode/decode throughput, each payload records its wire-byte count
+//! as a `metric` pseudo-entry, so the same `bench-diff` +25% gate that
+//! guards timings also gates compression-ratio regressions. Feeds
+//! `BENCH_codec.json` via `--json` (the CI `bench-smoke` job uploads
+//! the per-commit smoke version).
+
+use edgc::dist::codec::{self, Codec, Lane};
+use edgc::util::bench::{BenchOpts, BenchSet};
+use edgc::util::par;
+use edgc::util::rng::Rng;
+
+fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 * v.len());
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let mut set = BenchSet::with_opts("codec", &opts);
+    par::set_threads(1);
+
+    // PowerSGD P-factor shape for the tiny model (2048×8, small scale —
+    // narrow exponent range, the case the byte-plane split exploits)
+    let factor = f32s_to_bytes(&Rng::new(1).normal_vec(2048 * 8, 0.02));
+    // activation-frame shape: 8192 floats of unit-ish scale
+    let act = f32s_to_bytes(&Rng::new(2).normal_vec(8192, 0.5));
+
+    for (name, payload) in [("lossless_factor_64KiB", &factor), ("lossless_act_32KiB", &act)] {
+        let wire = codec::encode(Codec::Lossless, Lane::Frame, payload);
+        set.run(&format!("{name}_encode"), || {
+            std::hint::black_box(codec::encode(Codec::Lossless, Lane::Frame, payload));
+        });
+        set.run(&format!("{name}_decode"), || {
+            std::hint::black_box(codec::decode(&wire).expect("codec decode"));
+        });
+        set.metric(&format!("{name}_wire_bytes"), wire.len() as f64);
+    }
+
+    let wire = codec::encode(Codec::Bf16, Lane::Factor, &factor);
+    set.run("bf16_factor_64KiB_encode", || {
+        std::hint::black_box(codec::encode(Codec::Bf16, Lane::Factor, &factor));
+    });
+    set.run("bf16_factor_64KiB_decode", || {
+        std::hint::black_box(codec::decode(&wire).expect("codec decode"));
+    });
+    set.metric("bf16_factor_64KiB_wire_bytes", wire.len() as f64);
+
+    set.finish(&opts).expect("bench json report");
+}

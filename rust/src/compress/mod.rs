@@ -22,12 +22,25 @@
 //! Communication volume per replica: r_eff·(m+n) floats vs m·n
 //! uncompressed — the quantity the netsim layer prices.
 
+use crate::dist::codec::Lane;
 use crate::dist::collective;
 use crate::dist::transport::{Class, Transport};
 use crate::tensor::Mat;
 use crate::util::error::Result;
 use crate::util::par;
 use crate::util::rng::Rng;
+
+/// All-reduce mean on the wire's **factor lane**: tags the payload as
+/// PowerSGD P/Q factors so a lossy codec (`--codec bf16|f16`) may
+/// quantize it, restoring the frame lane afterwards even on error.
+/// Everything else (`round_dist`'s diag gather, pipeline frames, rank
+/// broadcasts) stays on the bit-exact frame lane.
+fn factor_all_reduce(tr: &mut dyn Transport, buf: &mut [f32]) -> Result<()> {
+    tr.set_lane(Lane::Factor);
+    let r = collective::all_reduce_mean(tr, buf);
+    tr.set_lane(Lane::Frame);
+    r
+}
 
 /// Bytes-on-the-wire accounting for one tensor round.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -269,16 +282,17 @@ impl TensorCompressor {
         }
         let mi = Mat::from_vec(m, n, d);
 
-        // 2. Pᵢ = Mᵢ·Q_active ; all-reduce mean (r_eff·m floats on the wire)
+        // 2. Pᵢ = Mᵢ·Q_active ; all-reduce mean (r_eff·m floats on the
+        // wire, factor lane: lossy codecs quantize exactly this)
         let qm = self.active_q(r_eff);
         let mut p_avg = mi.matmul(&qm);
-        collective::all_reduce_mean(tr, &mut p_avg.data)?;
+        factor_all_reduce(tr, &mut p_avg.data)?;
 
         // 3. P̂ = orth(P̄) — identical on every rank — then Q′ᵢ = Mᵢᵀ·P̂ ;
         // all-reduce mean (r_eff·n floats on the wire)
         let p_hat = p_avg.gram_schmidt(1e-8);
         let mut q_avg = mi.t_matmul(&p_hat);
-        collective::all_reduce_mean(tr, &mut q_avg.data)?;
+        factor_all_reduce(tr, &mut q_avg.data)?;
 
         // 4. decompress; rank 0 computes the mean-gradient diagnostic
         // from a metrics-only gather, replicating round_host's

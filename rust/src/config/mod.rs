@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 use crate::util::error::{Context, Result};
 use crate::{bail, err};
 
+use crate::dist::codec::Codec;
 use crate::netsim::{Cluster, CLUSTER1_V100, CLUSTER2_H100, CLUSTER3_SCALING};
 
 /// A scalar or array value.
@@ -281,6 +282,12 @@ pub struct TrainConfig {
     /// Byte-identical outputs to the sequential path (the overlap is an
     /// execution-schedule change only); requires `--transport`.
     pub overlap: bool,
+    /// Wire codec for distributed transports (`--codec`, `wire.codec`):
+    /// `off` ships raw bytes, `lossless` is a bit-exact pure wire win,
+    /// `bf16`/`f16` additionally quantize the PowerSGD factor lane
+    /// (lossy — part of the numerics contract; see DESIGN.md §Layered
+    /// wire stack). Centralized runs move no bytes and ignore it.
+    pub codec: Codec,
     /// Output directory for metrics tables.
     pub out_dir: String,
 }
@@ -304,6 +311,7 @@ impl Default for TrainConfig {
             sim_tokens: 32 * 1024,
             eval_every: 25,
             overlap: false,
+            codec: Codec::Off,
             out_dir: "runs".into(),
         }
     }
@@ -329,6 +337,7 @@ impl TrainConfig {
         c.lr = t.f64_or("run.lr", c.lr)?;
         c.eval_every = t.usize_or("run.eval_every", c.eval_every)?;
         c.overlap = t.bool_or("run.overlap", c.overlap)?;
+        c.codec = Codec::parse(&t.str_or("wire.codec", c.codec.name())?)?;
         c.corpus_tokens = t.usize_or("run.corpus_tokens", c.corpus_tokens)?;
         c.out_dir = t.str_or("run.out_dir", &c.out_dir)?;
         c.dp = t.usize_or("parallel.dp", c.dp)?;
@@ -377,6 +386,9 @@ alpha = 0.25
 
 [cluster]
 preset = "cluster1"
+
+[wire]
+codec = "lossless"
 "#;
 
     #[test]
@@ -415,11 +427,14 @@ preset = "cluster1"
         assert!((c.edgc.alpha - 0.25).abs() < 1e-12);
         assert_eq!(c.edgc.beta, 0.25); // default retained
         assert_eq!(c.cluster.name, "cluster1-v100-32gbps");
+        assert_eq!(c.codec, Codec::Lossless);
     }
 
     #[test]
     fn train_config_defaults_on_empty() {
         let c = TrainConfig::from_toml("").unwrap();
+        assert_eq!(c.codec, Codec::Off);
+        assert!(TrainConfig::from_toml("[wire]\ncodec = \"zstd\"\n").is_err());
         assert_eq!(c.steps, TrainConfig::default().steps);
         assert_eq!(c.method, Method::Edgc);
     }

@@ -11,6 +11,11 @@
 //! one explicit, shared [`StagePlan`]: embeddings on stage 0, contiguous
 //! balanced layer ranges per stage, final layernorm on the last stage.
 //! 1-D tensors are never compressed.
+//!
+//! The engine is agnostic to the `dist::codec` wire layer below the
+//! transport: `--codec lossless` leaves every distributed path here
+//! bit-identical (pinned in this module's tests), and the volume
+//! accounting is in *logical* bytes either way.
 
 use std::ops::Range;
 use std::sync::mpsc::Receiver;
@@ -1103,6 +1108,40 @@ mod tests {
             "measured {logical} vs accounted {}",
             rep_c.total_compressed()
         );
+    }
+
+    /// `allreduce_dist` under `--codec lossless` is bit-identical to
+    /// the centralized engine, and the logical wire-volume identity is
+    /// codec-invariant (only the separate wire counters may change).
+    #[test]
+    fn allreduce_dist_under_lossless_codec_matches_centralized_bitwise() {
+        let world = 3usize;
+        let mut rng = Rng::new(40);
+        let grads: Vec<Vec<f32>> = (0..world).map(|_| rng.normal_vec(56, 1.0)).collect();
+        let mut central = Engine::new(&mini_manifest(), 2, world, true, Backend::Host, 5);
+        let rep_c = central.allreduce(None, &grads, Some(&[1, 2])).unwrap();
+
+        let out = crate::dist::run_group(crate::dist::TransportKind::Mem, world, |rank, tr| {
+            tr.set_codec(crate::dist::Codec::Lossless);
+            let mut e = Engine::new(&mini_manifest(), 2, world, true, Backend::Host, 5);
+            e.allreduce_dist(tr, &grads[rank], Some(&[1, 2]))
+        })
+        .unwrap();
+        for (rank, (rep, _)) in out.iter().enumerate() {
+            let same = rep.avg.iter().zip(&rep_c.avg).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "avg differs at rank {rank} under the lossless codec");
+            assert_eq!(rep.stage_compressed, rep_c.stage_compressed);
+        }
+        // the exact logical ring identity survives the codec unchanged
+        let total_bytes: u64 = out.iter().map(|(_, c)| c.data_sent_bytes()).sum();
+        let logical = total_bytes as f64 / crate::netsim::ring_wire_bytes(world, 1);
+        assert!(
+            (logical - rep_c.total_compressed() as f64).abs() < 1e-9,
+            "measured {logical} vs accounted {}",
+            rep_c.total_compressed()
+        );
+        // the wire counters measure what actually moved
+        assert!(out.iter().all(|(_, c)| c.data_sent_wire_bytes() > 0));
     }
 
     #[test]

@@ -8,7 +8,11 @@
 //! * **activation framing** — a 13-byte header (kind, microbatch, rows,
 //!   cols) plus the f32 payload; framing is part of the data-class
 //!   payload, so the wire-volume calibration accounts it exactly
-//!   (`netsim::p2p_wire_bytes`);
+//!   (`netsim::p2p_wire_bytes`). Frames pass transparently through the
+//!   `dist::codec` wire layer below the transport: `--codec lossless`
+//!   moves them bit-exactly, and the calibration identities stay in
+//!   *logical* bytes either way (pinned below in
+//!   `frames_are_bit_exact_through_lossless_codec`);
 //! * [`run_1f1b`] — the schedule driver: executes
 //!   `pipesim::stage_ops(stage, pp, micro)` — the *same* op list the
 //!   simulator prices — with blocking per-link receives enforcing the
@@ -634,7 +638,8 @@ impl StageStep for ModelStage<'_> {
 mod tests {
     use super::*;
     use crate::coordinator::engine::StagePlan;
-    use crate::dist::{run_group, TransportKind};
+    use crate::dist::codec::CODEC_HEADER_BYTES;
+    use crate::dist::{run_group, Codec, TransportKind};
     use crate::runtime::host::{init_params, HostExec};
     use crate::runtime::Manifest;
     use crate::util::rng::Rng;
@@ -665,6 +670,58 @@ mod tests {
         let mut enc = encode_frame(FrameKind::Fwd, 1, 0, 0, &[]).unwrap();
         enc[0] = 7;
         assert!(decode_frame(&enc).is_err());
+    }
+
+    /// Frames — including the zero-length microbatch edge — move
+    /// bit-exactly through a lossless-codec'd mesh, and the logical
+    /// byte counters stay codec-invariant (the wire counters may
+    /// shrink; they never exceed logical + one codec header per frame).
+    #[test]
+    fn frames_are_bit_exact_through_lossless_codec() {
+        let frames = [
+            (FrameKind::Fwd, 0usize, 4usize, 6usize),
+            (FrameKind::Bwd, 1, 3, 6),
+            (FrameKind::Tied, 0, 0, 5), // zero-length edge
+            (FrameKind::Fwd, 2, 32, 16),
+        ];
+        let mut rng = Rng::new(11);
+        let payloads: Vec<Vec<f32>> = frames
+            .iter()
+            .map(|&(_, _, r, c)| (0..r * c).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let expect_logical: u64 =
+            frames.iter().map(|&(_, _, r, c)| (FRAME_HEADER_BYTES + 4 * r * c) as u64).sum();
+        let out = run_group(TransportKind::Mem, 2, |rank, tr| {
+            tr.set_codec(Codec::Lossless);
+            if rank == 0 {
+                for (&(kind, mb, rows, cols), data) in frames.iter().zip(&payloads) {
+                    send_frame(tr, 1, kind, mb, rows, cols, data)?;
+                }
+                Ok(Vec::new())
+            } else {
+                let mut got = Vec::new();
+                for &(kind, mb, ..) in &frames {
+                    got.push(recv_frame(tr, 0, kind, mb)?);
+                }
+                Ok(got)
+            }
+        })
+        .unwrap();
+        let got = &out[1].0;
+        assert_eq!(got.len(), frames.len());
+        for ((f, &(kind, mb, rows, cols)), data) in got.iter().zip(&frames).zip(&payloads) {
+            assert_eq!(f.kind, kind);
+            assert_eq!((f.mb, f.rows, f.cols), (mb, rows, cols));
+            let same = f.data.iter().zip(data).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "frame payload differs through the codec");
+        }
+        let c0 = &out[0].1;
+        assert_eq!(c0.data_sent_bytes(), expect_logical, "logical counters are codec-invariant");
+        assert!(
+            c0.data_sent_wire_bytes()
+                <= expect_logical + (frames.len() * CODEC_HEADER_BYTES) as u64,
+            "wire bytes bounded by logical + one header per frame"
+        );
     }
 
     /// The tentpole pin: staged 1F1B execution over a real mesh

@@ -24,7 +24,8 @@ use crate::coordinator::engine::{AllreduceReport, Backend, BucketKey, Engine, Gr
 use crate::coordinator::pipeline::{self, ModelStage, OverlapHooks, PipeTiming};
 use crate::data::{build_probes, Batcher, SynthCorpus};
 use crate::dist::{
-    collective, run_group, run_group2, Class, Counters, SubTransport, Transport, TransportKind,
+    collective, run_group, run_group2, Class, Codec, Counters, SubTransport, Transport,
+    TransportKind,
 };
 use crate::entropy::{Gds, GdsConfig, WindowStats};
 use crate::eval;
@@ -63,6 +64,48 @@ pub struct RunSummary {
     /// Diagnostics only: the curve and every decision stay identical to
     /// the sequential path (the byte-determinism contract).
     pub overlap: Option<OverlapReport>,
+    /// Logical vs on-wire byte split of a distributed run, summed over
+    /// every rank's transport counters (all-zero for centralized runs,
+    /// which move no bytes). Diagnostics only — nothing feeds back.
+    pub wire: WireReport,
+}
+
+/// Measured wire-codec accounting of one distributed run (DESIGN.md
+/// §Layered wire stack): logical bytes are what the collectives and
+/// frames exchanged (the quantity `netsim`'s identities price), wire
+/// bytes are what actually crossed the links after the codec. The two
+/// are equal under `--codec off`, so the split is reported — and the
+/// ratio well-defined — for every run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WireReport {
+    pub codec: Codec,
+    /// Data-class logical payload bytes, summed over all ranks' sends.
+    pub data_logical: u64,
+    /// Data-class post-codec bytes actually put on the wire.
+    pub data_wire: u64,
+    /// Diag-class (metrics-only) logical bytes.
+    pub diag_logical: u64,
+    /// Diag-class post-codec wire bytes.
+    pub diag_wire: u64,
+}
+
+impl WireReport {
+    /// Sum the per-rank counter snapshots of a finished group run.
+    pub fn from_counters(codec: Codec, counters: &[Counters]) -> WireReport {
+        WireReport {
+            codec,
+            data_logical: counters.iter().map(|c| c.data_sent_bytes()).sum(),
+            data_wire: counters.iter().map(|c| c.data_sent_wire_bytes()).sum(),
+            diag_logical: counters.iter().map(|c| c.diag_sent_bytes()).sum(),
+            diag_wire: counters.iter().map(|c| c.diag_sent_wire_bytes()).sum(),
+        }
+    }
+
+    /// Measured data-class compression ratio, logical / wire (≥ 1 means
+    /// the codec paid for its headers; 1.0 exactly under `--codec off`).
+    pub fn data_ratio(&self) -> f64 {
+        netsim::codec_ratio(self.data_logical, self.data_wire)
+    }
 }
 
 /// Measured + modeled communication-hiding report of one overlapped
@@ -509,6 +552,7 @@ impl Trainer {
             rank_trace: self.dac.as_ref().map(|d| d.rank_trace.clone()).unwrap_or_default(),
             error_samples,
             overlap: None,
+            wire: WireReport::default(),
             curve,
         })
     }
@@ -549,6 +593,13 @@ impl Trainer {
             self.backend == Backend::Host,
             "distributed training runs the host backend (--backend host)"
         );
+        // Arm the wire codec on every plane before any traffic: every
+        // rank runs this ahead of its first send, so both ends of each
+        // link agree on the framing for the whole run.
+        tr.set_codec(self.cfg.codec);
+        if let Some(c) = comm.as_mut() {
+            c.set_codec(self.cfg.codec);
+        }
         let wall = crate::metrics::Stopwatch::start();
         let mut curve = Table::new(
             &format!("curve-{}", self.cfg.method.name()),
@@ -744,6 +795,7 @@ impl Trainer {
             rank_trace: self.dac.as_ref().map(|d| d.rank_trace.clone()).unwrap_or_default(),
             error_samples,
             overlap: self.overlap_report(ov_hidden, ov_busy, &model),
+            wire: WireReport::default(), // filled in by run_distributed
             curve,
         }))
     }
@@ -897,6 +949,13 @@ impl Trainer {
             dp * pp
         );
         crate::ensure!(micro >= 1, "need at least one microbatch");
+        // Arm the wire codec on every plane before any traffic (see
+        // run_rank): activation/tied frames and DP collectives all pass
+        // through it.
+        tr.set_codec(self.cfg.codec);
+        if let Some(c) = comm.as_mut() {
+            c.set_codec(self.cfg.codec);
+        }
         let g_rank = tr.rank();
         let stage = g_rank % pp;
         let replica = g_rank / pp;
@@ -1298,6 +1357,7 @@ impl Trainer {
                 rank_trace: self.dac.as_ref().map(|d| d.rank_trace.clone()).unwrap_or_default(),
                 error_samples,
                 overlap: self.overlap_report(ov_hidden, ov_busy, &model),
+                wire: WireReport::default(), // filled in by run_distributed_pp
                 curve,
             },
             calib,
@@ -1514,7 +1574,9 @@ pub fn run_distributed(cfg: TrainConfig, backend: Backend, kind: TransportKind) 
         }
         counters.push(c);
     }
-    Ok(DistRun { summary: summary.expect("rank 0 summary"), params, counters, pipe: None })
+    let mut summary = summary.expect("rank 0 summary");
+    summary.wire = WireReport::from_counters(cfg.codec, &counters);
+    Ok(DistRun { summary, params, counters, pipe: None })
 }
 
 /// Run one training job as `cfg.dp × cfg.pp` real stage workers over a
@@ -1563,5 +1625,7 @@ pub fn run_distributed_pp(
         }
         counters.push(c);
     }
-    Ok(DistRun { summary: summary.expect("rank 0 summary"), params, counters, pipe })
+    let mut summary = summary.expect("rank 0 summary");
+    summary.wire = WireReport::from_counters(cfg.codec, &counters);
+    Ok(DistRun { summary, params, counters, pipe })
 }

@@ -1,0 +1,809 @@
+//! Pluggable wire codecs: the layer between the collectives / p2p
+//! framing and the byte [`Transport`](super::transport::Transport)s
+//! (DESIGN.md §Layered wire stack).
+//!
+//! Every logical payload a transport ships — P/Q factor chunks from the
+//! compressed all-reduce, 1F1B activation/tied-embedding frames, rank
+//! broadcasts, diag gathers — passes through the rank's active
+//! [`Codec`] on `send` and is decoded back on `recv`. The codec is
+//! invisible to callers: collectives and the pipeline keep exchanging
+//! *logical* bytes, counters record both the logical and the on-wire
+//! size, and `netsim`'s analytic identities keep pricing logical bytes.
+//!
+//! Two codec families ship in-tree:
+//!
+//! * **`lossless`** — byte-plane transpose (f32 payloads interleave
+//!   sign/exponent and mantissa bytes; splitting index-mod-4 planes
+//!   groups the compressible exponent bytes together) followed by the
+//!   best of {raw, RLE, canonical order-0 Huffman, delta+Huffman} per
+//!   plane, chosen by smallest encoding. Bit-exact by construction, so
+//!   it sits *outside* the numerics contract: every run is required to
+//!   be byte-identical to `--codec off` (pinned in
+//!   `tests/determinism.rs`), it just moves fewer wire bytes.
+//! * **`bf16` / `f16`** — round-to-nearest-even quantization of f32
+//!   payloads on the [`Lane::Factor`] lane (the PowerSGD P/Q factor
+//!   all-reduces tagged by `compress::round_dist`). Lossy: these join
+//!   the numerics contract and carry their own determinism pins
+//!   (byte-identical across threads × transports × overlap × pp
+//!   arrangement at fixed dp). Non-factor lanes fall back to the
+//!   lossless codec so control/frame traffic stays bit-exact.
+//!
+//! Wire format when a codec is active: a [`CODEC_HEADER_BYTES`]-byte
+//! header `[method: u8][logical_len: u32 LE]` followed by the method's
+//! body. The header is self-describing — the receiver needs no lane or
+//! codec state, and any encoder may fall back to `method = raw` when
+//! compression would not shrink the payload (so the worst case is
+//! `logical + 5` wire bytes). `Codec::Off` bypasses this module
+//! entirely: raw payload bytes on the wire, zero overhead, exactly the
+//! pre-codec framing.
+//!
+//! Determinism: every choice an encoder makes (plane mode selection,
+//! Huffman tie-breaks, RLE run boundaries) is a pure function of the
+//! payload bytes, so identical logical bytes produce identical wire
+//! bytes on every transport, thread count and rank layout.
+
+use crate::ensure;
+use crate::util::error::Result;
+
+/// Which wire codec a transport applies to outgoing payloads.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Codec {
+    /// Raw logical bytes on the wire (no header, no overhead).
+    #[default]
+    Off,
+    /// Bit-exact plane-transpose entropy codec on every lane.
+    Lossless,
+    /// bf16 RNE quantization of factor payloads; lossless elsewhere.
+    Bf16,
+    /// IEEE f16 RNE quantization of factor payloads; lossless elsewhere.
+    F16,
+}
+
+impl Codec {
+    pub fn parse(s: &str) -> Result<Codec> {
+        match s {
+            "off" => Ok(Codec::Off),
+            "lossless" => Ok(Codec::Lossless),
+            "bf16" => Ok(Codec::Bf16),
+            "f16" => Ok(Codec::F16),
+            other => Err(crate::err!(
+                "unknown codec {other:?} (expected off|lossless|bf16|f16)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::Off => "off",
+            Codec::Lossless => "lossless",
+            Codec::Bf16 => "bf16",
+            Codec::F16 => "f16",
+        }
+    }
+
+    /// Whether this codec can alter payload values (on the factor lane).
+    pub fn is_lossy(&self) -> bool {
+        matches!(self, Codec::Bf16 | Codec::F16)
+    }
+}
+
+/// Payload lane tag: what kind of logical bytes the next sends carry.
+/// Mirrors the [`Class`](super::transport::Class) accounting toggle —
+/// `compress::round_dist` switches to `Factor` around the P/Q factor
+/// all-reduces and restores `Frame` after, so only factor payloads are
+/// ever quantized by a lossy codec.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Lane {
+    /// Activation/tied/control frames and any other non-factor bytes.
+    #[default]
+    Frame,
+    /// PowerSGD P/Q factor chunks (f32, quantizable).
+    Factor,
+}
+
+/// `[method: u8][logical_len: u32 LE]` — prepended to every encoded
+/// payload when the codec is not `Off`.
+pub const CODEC_HEADER_BYTES: usize = 5;
+
+const M_RAW: u8 = 0;
+const M_LOSSLESS: u8 = 1;
+const M_BF16: u8 = 2;
+const M_F16: u8 = 3;
+
+/// Encode `payload` for the wire under `(codec, lane)`. Never called
+/// with `Codec::Off` on the hot path — transports pass raw bytes
+/// through untouched in that case — but handles it as a raw frame for
+/// completeness.
+pub fn encode(codec: Codec, lane: Lane, payload: &[u8]) -> Vec<u8> {
+    debug_assert!(payload.len() <= u32::MAX as usize, "payload exceeds u32 framing");
+    let (method, body) = match (codec, lane) {
+        (Codec::Off, _) => (M_RAW, payload.to_vec()),
+        (Codec::Bf16, Lane::Factor) if payload.len() % 4 == 0 => (M_BF16, bf16_encode(payload)),
+        (Codec::F16, Lane::Factor) if payload.len() % 4 == 0 => (M_F16, f16_encode(payload)),
+        _ => match lossless_encode(payload) {
+            Some(b) => (M_LOSSLESS, b),
+            None => (M_RAW, payload.to_vec()),
+        },
+    };
+    let mut out = Vec::with_capacity(CODEC_HEADER_BYTES + body.len());
+    out.push(method);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Decode a wire frame produced by [`encode`] back to logical bytes.
+pub fn decode(wire: &[u8]) -> Result<Vec<u8>> {
+    ensure!(wire.len() >= CODEC_HEADER_BYTES, "codec frame too short: {} bytes", wire.len());
+    let method = wire[0];
+    let logical = u32::from_le_bytes([wire[1], wire[2], wire[3], wire[4]]) as usize;
+    let body = &wire[CODEC_HEADER_BYTES..];
+    match method {
+        M_RAW => {
+            ensure!(body.len() == logical, "raw frame length {} != header {logical}", body.len());
+            Ok(body.to_vec())
+        }
+        M_LOSSLESS => lossless_decode(body, logical),
+        M_BF16 => {
+            ensure!(
+                logical % 4 == 0 && body.len() == logical / 2,
+                "bf16 frame body {} bytes for logical {logical}",
+                body.len()
+            );
+            Ok(bf16_decode(body))
+        }
+        M_F16 => {
+            ensure!(
+                logical % 4 == 0 && body.len() == logical / 2,
+                "f16 frame body {} bytes for logical {logical}",
+                body.len()
+            );
+            Ok(f16_decode(body))
+        }
+        other => Err(crate::err!("unknown codec method {other}")),
+    }
+}
+
+/// The bytes a peer would actually receive if this payload were sent
+/// under `(codec, lane)` — i.e. the lossy round-trip — or `None` when
+/// the pair is bit-exact. Collectives use this to keep locally exactly
+/// what they ship (`all_gather` keeps its own chunk, `broadcast` keeps
+/// the root's copy): without it, a lossy codec would hand the sender a
+/// higher-precision copy than its peers and desynchronize replicas.
+pub fn lossy_roundtrip(codec: Codec, lane: Lane, payload: &[u8]) -> Option<Vec<u8>> {
+    match (codec, lane) {
+        (Codec::Bf16, Lane::Factor) if payload.len() % 4 == 0 => {
+            Some(bf16_decode(&bf16_encode(payload)))
+        }
+        (Codec::F16, Lane::Factor) if payload.len() % 4 == 0 => {
+            Some(f16_decode(&f16_encode(payload)))
+        }
+        _ => None,
+    }
+}
+
+// --------------------------------------------------------- quantizers
+
+/// f32 → bf16 with round-to-nearest-even (carry into the exponent —
+/// including overflow to inf — falls out of the integer add).
+fn f32_bits_to_bf16(bits: u32) -> u16 {
+    if (bits >> 23) & 0xff == 0xff {
+        // Inf/NaN: truncate; keep NaN signaling a NaN even if its
+        // payload lived entirely in the dropped mantissa bits.
+        let mut h = (bits >> 16) as u16;
+        if bits & 0x007f_ffff != 0 && h & 0x7f == 0 {
+            h |= 1;
+        }
+        return h;
+    }
+    let round = ((bits >> 16) & 1) + 0x7fff;
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+fn bf16_to_f32_bits(h: u16) -> u32 {
+    (h as u32) << 16
+}
+
+/// f32 → IEEE binary16 with round-to-nearest-even; overflow saturates
+/// to ±inf, underflow rounds through the subnormal range to ±0.
+fn f32_bits_to_f16(bits: u32) -> u16 {
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32 - 127;
+    let man = bits & 0x007f_ffff;
+    if exp == 128 {
+        // inf / NaN
+        let m = (man >> 13) as u16 & 0x3ff;
+        return sign | 0x7c00 | if man != 0 { m.max(1) } else { 0 };
+    }
+    if exp > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if exp >= -14 {
+        // normal range: drop 13 mantissa bits with RNE
+        let mut m = man >> 13;
+        let rem = man & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && m & 1 == 1) {
+            m += 1;
+        }
+        let mut e = (exp + 15) as u32;
+        if m == 0x400 {
+            m = 0;
+            e += 1;
+        }
+        if e >= 31 {
+            return sign | 0x7c00;
+        }
+        return sign | ((e as u16) << 10) | m as u16;
+    }
+    if exp >= -25 {
+        // subnormal: shift the full 24-bit significand into place
+        let full = man | 0x0080_0000;
+        let shift = (13 - 14 - exp) as u32; // in 14..=24
+        let mut m = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        if rem > halfway || (rem == halfway && m & 1 == 1) {
+            m += 1;
+        }
+        if m == 0x400 {
+            return sign | (1 << 10); // rounded up to the smallest normal
+        }
+        return sign | m as u16;
+    }
+    sign // underflow to zero
+}
+
+fn f16_to_f32_bits(h: u16) -> u32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    if exp == 31 {
+        return sign | 0x7f80_0000 | (man << 13);
+    }
+    if exp == 0 {
+        if man == 0 {
+            return sign;
+        }
+        // subnormal: normalize into f32's much wider exponent range
+        let mut e = -14i32;
+        let mut m = man;
+        while m & 0x400 == 0 {
+            m <<= 1;
+            e -= 1;
+        }
+        return sign | (((e + 127) as u32) << 23) | ((m & 0x3ff) << 13);
+    }
+    sign | ((exp + 127 - 15) << 23) | (man << 13)
+}
+
+fn quant_encode(payload: &[u8], f: impl Fn(u32) -> u16) -> Vec<u8> {
+    debug_assert_eq!(payload.len() % 4, 0);
+    let mut out = Vec::with_capacity(payload.len() / 2);
+    for w in payload.chunks_exact(4) {
+        let bits = u32::from_le_bytes([w[0], w[1], w[2], w[3]]);
+        out.extend_from_slice(&f(bits).to_le_bytes());
+    }
+    out
+}
+
+fn quant_decode(body: &[u8], f: impl Fn(u16) -> u32) -> Vec<u8> {
+    debug_assert_eq!(body.len() % 2, 0);
+    let mut out = Vec::with_capacity(body.len() * 2);
+    for h in body.chunks_exact(2) {
+        let bits = f(u16::from_le_bytes([h[0], h[1]]));
+        out.extend_from_slice(&bits.to_le_bytes());
+    }
+    out
+}
+
+fn bf16_encode(payload: &[u8]) -> Vec<u8> {
+    quant_encode(payload, f32_bits_to_bf16)
+}
+
+fn bf16_decode(body: &[u8]) -> Vec<u8> {
+    quant_decode(body, bf16_to_f32_bits)
+}
+
+fn f16_encode(payload: &[u8]) -> Vec<u8> {
+    quant_encode(payload, f32_bits_to_f16)
+}
+
+fn f16_decode(body: &[u8]) -> Vec<u8> {
+    quant_decode(body, f16_to_f32_bits)
+}
+
+// ---------------------------------------------------- lossless codec
+
+/// Number of interleaved byte planes (one per byte of an f32 word, so
+/// exponent/sign bytes — low-entropy on gradient-shaped data — land in
+/// one plane and the near-random mantissa bytes in the others).
+const PLANES: usize = 4;
+
+const P_RAW: u8 = 0;
+const P_RLE: u8 = 1;
+const P_HUF: u8 = 2;
+const P_DELTA_HUF: u8 = 3;
+
+/// Longest Huffman code we will emit; bounded so the bit-writer's u64
+/// accumulator never overflows (7 pending bits + 56 ≤ 64). Realistic
+/// plane statistics top out far below this (depth grows ~log_φ of the
+/// plane length); a pathological plane falls back to another mode.
+const MAX_CODE_LEN: u32 = 56;
+
+/// Encode the whole payload as plane blocks; `None` when the encoding
+/// is not strictly smaller than the raw payload (caller sends raw).
+fn lossless_encode(payload: &[u8]) -> Option<Vec<u8>> {
+    if payload.len() < 16 {
+        return None; // header + block framing can't win on tiny frames
+    }
+    let mut body = Vec::with_capacity(payload.len() / 2);
+    for p in 0..PLANES {
+        let plane: Vec<u8> = payload.iter().skip(p).step_by(PLANES).copied().collect();
+        let mut mode = P_RAW;
+        let mut best = plane.clone();
+        if let Some(r) = rle_encode(&plane) {
+            if r.len() < best.len() {
+                mode = P_RLE;
+                best = r;
+            }
+        }
+        if let Some(h) = huffman_encode(&plane) {
+            if h.len() < best.len() {
+                mode = P_HUF;
+                best = h;
+            }
+        }
+        let delta = delta_encode(&plane);
+        if let Some(h) = huffman_encode(&delta) {
+            if h.len() < best.len() {
+                mode = P_DELTA_HUF;
+                best = h;
+            }
+        }
+        body.push(mode);
+        body.extend_from_slice(&(best.len() as u32).to_le_bytes());
+        body.extend_from_slice(&best);
+    }
+    if body.len() < payload.len() {
+        Some(body)
+    } else {
+        None
+    }
+}
+
+fn lossless_decode(body: &[u8], logical: usize) -> Result<Vec<u8>> {
+    let mut planes: Vec<Vec<u8>> = Vec::with_capacity(PLANES);
+    let mut at = 0usize;
+    for p in 0..PLANES {
+        ensure!(body.len() >= at + 5, "lossless frame truncated at plane {p}");
+        let mode = body[at];
+        let len =
+            u32::from_le_bytes([body[at + 1], body[at + 2], body[at + 3], body[at + 4]]) as usize;
+        at += 5;
+        ensure!(body.len() >= at + len, "lossless plane {p} body truncated");
+        let enc = &body[at..at + len];
+        at += len;
+        let plane_len = (logical + PLANES - 1 - p) / PLANES;
+        let plane = match mode {
+            P_RAW => {
+                ensure!(enc.len() == plane_len, "raw plane {p} length mismatch");
+                enc.to_vec()
+            }
+            P_RLE => rle_decode(enc, plane_len)?,
+            P_HUF => huffman_decode(enc, plane_len)?,
+            P_DELTA_HUF => delta_decode(&huffman_decode(enc, plane_len)?),
+            other => crate::bail!("unknown plane mode {other}"),
+        };
+        planes.push(plane);
+    }
+    ensure!(at == body.len(), "trailing bytes after lossless planes");
+    let mut out = vec![0u8; logical];
+    for (p, plane) in planes.iter().enumerate() {
+        for (i, &b) in plane.iter().enumerate() {
+            out[p + i * PLANES] = b;
+        }
+    }
+    Ok(out)
+}
+
+/// Wrapping byte delta: `d[0] = b[0]`, `d[i] = b[i] - b[i-1]`.
+fn delta_encode(plane: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(plane.len());
+    let mut prev = 0u8;
+    for &b in plane {
+        out.push(b.wrapping_sub(prev));
+        prev = b;
+    }
+    out
+}
+
+fn delta_decode(deltas: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(deltas.len());
+    let mut prev = 0u8;
+    for &d in deltas {
+        prev = prev.wrapping_add(d);
+        out.push(prev);
+    }
+    out
+}
+
+// RLE token stream: control byte `c < 128` → the next `c + 1` bytes are
+// literals; `c >= 128` → the next byte repeats `c - 126` times (runs of
+// 2..=129). Runs shorter than 3 bytes ride in literal blocks.
+fn rle_encode(plane: &[u8]) -> Option<Vec<u8>> {
+    let mut out = Vec::with_capacity(plane.len() / 4 + 8);
+    let mut lit_start = 0usize;
+    let mut i = 0usize;
+    while i < plane.len() {
+        let mut run = 1usize;
+        while i + run < plane.len() && plane[i + run] == plane[i] && run < 129 {
+            run += 1;
+        }
+        if run >= 3 {
+            flush_literals(&mut out, &plane[lit_start..i]);
+            out.push((run + 126) as u8);
+            out.push(plane[i]);
+            i += run;
+            lit_start = i;
+        } else {
+            i += run;
+        }
+        if out.len() >= plane.len() {
+            return None; // not going to win; bail early
+        }
+    }
+    flush_literals(&mut out, &plane[lit_start..]);
+    if out.len() < plane.len() {
+        Some(out)
+    } else {
+        None
+    }
+}
+
+fn flush_literals(out: &mut Vec<u8>, mut lits: &[u8]) {
+    while !lits.is_empty() {
+        let n = lits.len().min(128);
+        out.push((n - 1) as u8);
+        out.extend_from_slice(&lits[..n]);
+        lits = &lits[n..];
+    }
+}
+
+fn rle_decode(enc: &[u8], expect: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(expect);
+    let mut at = 0usize;
+    while at < enc.len() {
+        let c = enc[at] as usize;
+        at += 1;
+        if c < 128 {
+            let n = c + 1;
+            ensure!(enc.len() >= at + n, "rle literal block truncated");
+            out.extend_from_slice(&enc[at..at + n]);
+            at += n;
+        } else {
+            ensure!(at < enc.len(), "rle run truncated");
+            let n = c - 126;
+            let b = enc[at];
+            at += 1;
+            out.resize(out.len() + n, b);
+        }
+        ensure!(out.len() <= expect, "rle output exceeds plane length");
+    }
+    ensure!(out.len() == expect, "rle output {} != plane length {expect}", out.len());
+    Ok(out)
+}
+
+// Canonical order-0 Huffman. Body: 256 code-length bytes, then the
+// MSB-first bitstream (the plane length from the frame header says how
+// many symbols to decode, so no terminator is needed).
+
+/// Deterministic code lengths via the two-queue method over symbols
+/// sorted by (frequency, symbol); ties always prefer the leaf queue.
+fn huffman_lengths(freq: &[u64; 256]) -> Option<[u8; 256]> {
+    let mut lens = [0u8; 256];
+    let mut leaves: Vec<(u64, usize)> =
+        freq.iter().enumerate().filter(|(_, &f)| f > 0).map(|(s, &f)| (f, s)).collect();
+    if leaves.is_empty() {
+        return Some(lens);
+    }
+    if leaves.len() == 1 {
+        lens[leaves[0].1] = 1;
+        return Some(lens);
+    }
+    leaves.sort(); // by (freq, symbol): the deterministic merge order
+    // node: (weight, members) — members tracked as symbol lists so we
+    // can bump depths without building an explicit tree (≤256 leaves).
+    let mut q1: std::collections::VecDeque<(u64, Vec<usize>)> =
+        leaves.iter().map(|&(f, s)| (f, vec![s])).collect();
+    let mut q2: std::collections::VecDeque<(u64, Vec<usize>)> = std::collections::VecDeque::new();
+    let mut pop_min = |q1: &mut std::collections::VecDeque<(u64, Vec<usize>)>,
+                       q2: &mut std::collections::VecDeque<(u64, Vec<usize>)>| {
+        match (q1.front(), q2.front()) {
+            (Some(a), Some(b)) if b.0 < a.0 => q2.pop_front().unwrap(),
+            (Some(_), _) => q1.pop_front().unwrap(),
+            (None, Some(_)) => q2.pop_front().unwrap(),
+            (None, None) => unreachable!(),
+        }
+    };
+    while q1.len() + q2.len() > 1 {
+        let a = pop_min(&mut q1, &mut q2);
+        let b = pop_min(&mut q1, &mut q2);
+        let mut members = a.1;
+        members.extend_from_slice(&b.1);
+        for &s in &members {
+            lens[s] = lens[s].saturating_add(1);
+        }
+        q2.push_back((a.0 + b.0, members));
+    }
+    if lens.iter().any(|&l| l as u32 > MAX_CODE_LEN) {
+        return None;
+    }
+    Some(lens)
+}
+
+/// Canonical code assignment: symbols sorted by (length, symbol).
+fn canonical_codes(lens: &[u8; 256]) -> [u64; 256] {
+    let mut order: Vec<usize> = (0..256).filter(|&s| lens[s] > 0).collect();
+    order.sort_by_key(|&s| (lens[s], s));
+    let mut codes = [0u64; 256];
+    let mut code = 0u64;
+    let mut prev_len = 0u8;
+    for &s in &order {
+        code <<= (lens[s] - prev_len) as u32;
+        codes[s] = code;
+        code += 1;
+        prev_len = lens[s];
+    }
+    codes
+}
+
+fn huffman_encode(plane: &[u8]) -> Option<Vec<u8>> {
+    if plane.len() < 300 {
+        return None; // the 256-byte table dominates small planes
+    }
+    let mut freq = [0u64; 256];
+    for &b in plane {
+        freq[b as usize] += 1;
+    }
+    let lens = huffman_lengths(&freq)?;
+    let codes = canonical_codes(&lens);
+    let total_bits: u64 = freq.iter().enumerate().map(|(s, &f)| f * lens[s] as u64).sum();
+    let out_len = 256 + total_bits.div_ceil(8) as usize;
+    if out_len >= plane.len() {
+        return None;
+    }
+    let mut out = Vec::with_capacity(out_len);
+    out.extend_from_slice(&lens);
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    for &b in plane {
+        let len = lens[b as usize] as u32;
+        acc = (acc << len) | codes[b as usize];
+        nbits += len;
+        while nbits >= 8 {
+            out.push((acc >> (nbits - 8)) as u8);
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push((acc << (8 - nbits)) as u8);
+    }
+    Some(out)
+}
+
+fn huffman_decode(enc: &[u8], expect: usize) -> Result<Vec<u8>> {
+    ensure!(enc.len() >= 256, "huffman table truncated");
+    let mut lens = [0u8; 256];
+    lens.copy_from_slice(&enc[..256]);
+    let max_len = *lens.iter().max().unwrap() as u32;
+    ensure!(expect == 0 || max_len > 0, "huffman table empty for nonempty plane");
+    ensure!(max_len <= MAX_CODE_LEN, "huffman code length {max_len} too long");
+    // canonical decode tables: per length, the first code, the count,
+    // and the offset into the (length, symbol)-sorted symbol list.
+    let mut order: Vec<usize> = (0..256).filter(|&s| lens[s] > 0).collect();
+    order.sort_by_key(|&s| (lens[s], s));
+    let mut first = vec![0u64; (max_len + 2) as usize];
+    let mut count = vec![0u64; (max_len + 2) as usize];
+    let mut offset = vec![0usize; (max_len + 2) as usize];
+    for &s in &order {
+        count[lens[s] as usize] += 1;
+    }
+    let mut code = 0u64;
+    let mut off = 0usize;
+    for l in 1..=max_len as usize {
+        first[l] = code;
+        offset[l] = off;
+        code = (code + count[l]) << 1;
+        off += count[l] as usize;
+    }
+    let bits = &enc[256..];
+    let mut out = Vec::with_capacity(expect);
+    let mut at = 0usize; // bit cursor
+    while out.len() < expect {
+        let mut code = 0u64;
+        let mut l = 0usize;
+        loop {
+            ensure!(at < bits.len() * 8, "huffman bitstream truncated");
+            let bit = (bits[at / 8] >> (7 - (at % 8))) & 1;
+            at += 1;
+            code = (code << 1) | bit as u64;
+            l += 1;
+            ensure!(l <= max_len as usize, "invalid huffman code");
+            if count[l] > 0 && (first[l]..first[l] + count[l]).contains(&code) {
+                let idx = offset[l] + (code - first[l]) as usize;
+                out.push(order[idx] as u8);
+                break;
+            }
+        }
+    }
+    ensure!((bits.len() * 8).saturating_sub(at) < 8, "trailing bytes after huffman stream");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(codec: Codec, lane: Lane, payload: &[u8]) -> Vec<u8> {
+        let wire = encode(codec, lane, payload);
+        decode(&wire).unwrap()
+    }
+
+    #[test]
+    fn lossless_roundtrips_structured_and_random_payloads() {
+        let mut rng = Rng::new(7);
+        let cases: Vec<Vec<u8>> = vec![
+            vec![],
+            vec![42],
+            vec![0; 3],
+            b"unaligned-frame".to_vec(),
+            vec![0u8; 4096],
+            (0..4096).map(|i| (i % 7) as u8).collect(),
+            (0..5000).map(|_| (rng.below(256)) as u8).collect(),
+            (0..1024).flat_map(|i| (0.001f32 * i as f32).to_le_bytes()).collect(),
+        ];
+        for payload in &cases {
+            assert_eq!(&roundtrip(Codec::Lossless, Lane::Frame, payload), payload);
+            assert_eq!(&roundtrip(Codec::Lossless, Lane::Factor, payload), payload);
+        }
+    }
+
+    #[test]
+    fn lossless_shrinks_f32_gradient_shaped_payloads() {
+        let mut rng = Rng::new(3);
+        let payload: Vec<u8> =
+            (0..8192).flat_map(|_| (rng.normal() as f32 * 0.01).to_le_bytes()).collect();
+        let wire = encode(Codec::Lossless, Lane::Frame, &payload);
+        assert!(wire.len() < payload.len(), "wire {} >= logical {}", wire.len(), payload.len());
+        assert_eq!(decode(&wire).unwrap(), payload);
+    }
+
+    #[test]
+    fn lossless_worst_case_overhead_is_bounded() {
+        let mut rng = Rng::new(11);
+        let payload: Vec<u8> = (0..257).map(|_| rng.below(256) as u8).collect();
+        let wire = encode(Codec::Lossless, Lane::Frame, &payload);
+        // raw fallback: header only
+        assert!(wire.len() <= payload.len() + CODEC_HEADER_BYTES);
+        assert_eq!(decode(&wire).unwrap(), payload);
+    }
+
+    #[test]
+    fn off_and_raw_headers_decode() {
+        let wire = encode(Codec::Off, Lane::Frame, b"abc");
+        assert_eq!(wire[0], M_RAW);
+        assert_eq!(decode(&wire).unwrap(), b"abc");
+        assert!(decode(&[M_LOSSLESS]).is_err());
+        assert!(decode(&[9, 0, 0, 0, 0]).is_err());
+        let mut bad = encode(Codec::Lossless, Lane::Frame, &[7u8; 64]);
+        bad.truncate(bad.len() - 1);
+        assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn bf16_roundtrip_is_exhaustively_stable() {
+        // every bf16 value decodes to an f32 that re-encodes to itself
+        for h in 0..=u16::MAX {
+            let f = bf16_to_f32_bits(h);
+            assert_eq!(f32_bits_to_bf16(f), h, "bf16 {h:#06x} not a fixed point");
+        }
+    }
+
+    #[test]
+    fn f16_roundtrip_is_exhaustively_stable() {
+        for h in 0..=u16::MAX {
+            let f = f16_to_f32_bits(h);
+            assert_eq!(f32_bits_to_f16(f), h, "f16 {h:#06x} not a fixed point");
+        }
+    }
+
+    #[test]
+    fn bf16_quantization_error_is_half_ulp() {
+        let mut rng = Rng::new(5);
+        for _ in 0..2000 {
+            let x = (rng.normal() as f32) * 3.0;
+            let q = f32::from_bits(bf16_to_f32_bits(f32_bits_to_bf16(x.to_bits())));
+            assert!(
+                (q - x).abs() <= x.abs() / 256.0 + f32::MIN_POSITIVE,
+                "bf16({x}) = {q}, err {}",
+                (q - x).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn f16_matches_known_values() {
+        for (x, h) in [
+            (0.0f32, 0x0000u16),
+            (-0.0, 0x8000),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (65504.0, 0x7bff),
+            (1e9, 0x7c00), // overflow -> inf
+            (f32::INFINITY, 0x7c00),
+            (6.1035156e-5, 0x0400), // smallest normal
+            (5.9604645e-8, 0x0001), // smallest subnormal
+            (1e-12, 0x0000), // underflow -> 0
+        ] {
+            assert_eq!(f32_bits_to_f16(x.to_bits()), h, "f16({x})");
+        }
+        assert!(f32::from_bits(f16_to_f32_bits(f32_bits_to_f16(f32::NAN.to_bits()))).is_nan());
+    }
+
+    #[test]
+    fn factor_lane_quantizes_and_frame_lane_stays_exact() {
+        let payload: Vec<u8> = (0..256).flat_map(|i| (i as f32 * 1.01).to_le_bytes()).collect();
+        let wire = encode(Codec::Bf16, Lane::Factor, &payload);
+        assert_eq!(wire[0], M_BF16);
+        assert_eq!(wire.len(), CODEC_HEADER_BYTES + payload.len() / 2);
+        let got = decode(&wire).unwrap();
+        assert_ne!(got, payload); // lossy
+        assert_eq!(got, lossy_roundtrip(Codec::Bf16, Lane::Factor, &payload).unwrap());
+        // frame lane under a lossy codec stays bit-exact
+        let frame = encode(Codec::Bf16, Lane::Frame, &payload);
+        assert_eq!(decode(&frame).unwrap(), payload);
+        // unaligned factor payloads fall back to bit-exact encoding
+        let odd = vec![1u8, 2, 3];
+        assert_eq!(decode(&encode(Codec::Bf16, Lane::Factor, &odd)).unwrap(), odd);
+        assert!(lossy_roundtrip(Codec::Bf16, Lane::Factor, &odd).is_none());
+        assert!(lossy_roundtrip(Codec::Lossless, Lane::Factor, &payload).is_none());
+    }
+
+    #[test]
+    fn rle_handles_long_runs_and_literal_chunks() {
+        let mut plane = vec![9u8; 1000];
+        plane.extend((0..300).map(|i| (i * 13 % 251) as u8));
+        let enc = rle_encode(&plane).unwrap();
+        assert!(enc.len() < plane.len());
+        assert_eq!(rle_decode(&enc, plane.len()).unwrap(), plane);
+        assert!(rle_decode(&enc, plane.len() - 1).is_err());
+    }
+
+    #[test]
+    fn huffman_rejects_tables_that_cannot_win() {
+        assert!(huffman_encode(&[1, 2, 3]).is_none()); // too small
+        let uniform: Vec<u8> = (0..4096).map(|i| (i % 256) as u8).collect();
+        assert!(huffman_encode(&uniform).is_none()); // 8-bit codes + table
+    }
+
+    #[test]
+    fn huffman_roundtrips_skewed_planes() {
+        let mut rng = Rng::new(9);
+        let plane: Vec<u8> =
+            (0..5000).map(|_| if rng.below(10) < 8 { 0 } else { rng.below(16) as u8 }).collect();
+        let enc = huffman_encode(&plane).unwrap();
+        assert!(enc.len() < plane.len());
+        assert_eq!(huffman_decode(&enc, plane.len()).unwrap(), plane);
+    }
+
+    #[test]
+    fn codec_parse_and_names_roundtrip() {
+        for c in [Codec::Off, Codec::Lossless, Codec::Bf16, Codec::F16] {
+            assert_eq!(Codec::parse(c.name()).unwrap(), c);
+        }
+        assert!(Codec::parse("zstd").is_err());
+        assert!(Codec::Bf16.is_lossy() && Codec::F16.is_lossy());
+        assert!(!Codec::Off.is_lossy() && !Codec::Lossless.is_lossy());
+    }
+}

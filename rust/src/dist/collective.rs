@@ -24,6 +24,19 @@
 //! Both transports deliver per-link FIFO, and every receive names its
 //! peer, so the fold inputs — hence the output bytes — are independent
 //! of cross-link timing.
+//!
+//! **Wire codecs** (DESIGN.md §Layered wire stack) sit *below* this
+//! layer, inside the transports: the collectives exchange logical f32
+//! bytes and every identity above is stated in logical bytes, which is
+//! also what the counters' `sent_bytes` record (`sent_wire_bytes`
+//! carries the post-codec size). The one place a codec shows through is
+//! lossiness: under `bf16`/`f16` on the factor lane, everything a rank
+//! *keeps* that peers got through the wire must take the same
+//! round-trip — [`all_gather`] passes its own chunk and [`broadcast_bytes`]
+//! the root copy through `Transport::lossy_view`, so all ranks hold
+//! byte-identical results. (`reduce_scatter_mean` folds the owner's own
+//! contribution at full precision — that asymmetry is private to the
+//! owner and leaves with the uniformly-quantized all-gather.)
 
 use std::ops::Range;
 
@@ -134,7 +147,13 @@ pub fn all_gather(tr: &mut dyn Transport, mine: &[f32], len: usize) -> Result<Ve
         }
     }
     let mut out = vec![0.0f32; len];
-    out[my].copy_from_slice(mine);
+    // Keep what we shipped: under a lossy codec, peers received the
+    // quantized chunk, so the local copy must take the same round-trip
+    // (skipped at world == 1, where nothing crosses a wire).
+    match if world > 1 { tr.lossy_view(&payload) } else { None } {
+        Some(w) => out[my].copy_from_slice(&bytes_to_f32s(&w)?),
+        None => out[my].copy_from_slice(mine),
+    }
     for s in 1..world {
         let from = (rank + world - s) % world;
         let r = chunk_range(len, world, from);
@@ -179,7 +198,12 @@ pub fn broadcast_bytes(
         for peer in (0..world).filter(|&q| q != root) {
             tr.send(peer, p)?;
         }
-        Ok(p.to_vec())
+        // Keep what we shipped (see all_gather): the root's returned
+        // copy must match what peers decoded from the wire.
+        match if world > 1 { tr.lossy_view(p) } else { None } {
+            Some(w) => Ok(w),
+            None => Ok(p.to_vec()),
+        }
     } else {
         ensure!(payload.is_none(), "non-root rank {rank} supplied a broadcast payload");
         tr.recv(root)
@@ -315,8 +339,9 @@ mod tests {
 
     #[test]
     fn all_reduce_wire_volume_is_exactly_ring() {
-        // Total data-class payload across the group = 2(k−1)·4·len bytes
-        // for any chunk split (the netsim calibration identity).
+        // Total data-class *logical* payload across the group =
+        // 2(k−1)·4·len bytes for any chunk split (the netsim calibration
+        // identity; codecs only move the wire-byte counter).
         for &(world, len) in &[(2usize, 9usize), (4, 10), (5, 3)] {
             let sent: u64 = on_mesh(world, |tr| {
                 let mut b = vec![1.0f32; len];
@@ -327,6 +352,68 @@ mod tests {
             .sum();
             let want = crate::netsim::ring_wire_bytes(world, len);
             assert_eq!(sent as f64, want, "world={world} len={len}");
+        }
+    }
+
+    #[test]
+    fn lossless_codec_is_bit_exact_with_logical_identity() {
+        use crate::dist::codec::Codec;
+        use crate::util::rng::Rng;
+        // Includes a len < world case (empty chunks) — the codec must
+        // not disturb the lockstep schedule or the logical-byte identity.
+        for &(world, len) in &[(2usize, 4096usize), (3, 10), (5, 3)] {
+            let grads: Vec<Vec<f32>> =
+                (0..world).map(|r| Rng::new(300 + r as u64).normal_vec(len, 1.0)).collect();
+            let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+            let (want, _) = allreduce_mean(&refs);
+            let got = on_mesh(world, |tr| {
+                tr.set_codec(Codec::Lossless);
+                let mut b = grads[tr.rank()].clone();
+                all_reduce_mean(tr, &mut b)?;
+                Ok((b, tr.counters().data_sent_bytes(), tr.counters().data_sent_wire_bytes()))
+            });
+            for (rank, (g, _, _)) in got.iter().enumerate() {
+                let same = g.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "world={world} len={len} rank={rank}");
+            }
+            let logical: u64 = got.iter().map(|(_, l, _)| *l).sum();
+            assert_eq!(logical as f64, crate::netsim::ring_wire_bytes(world, len));
+            if len >= 4096 {
+                let wire: u64 = got.iter().map(|(_, _, w)| *w).sum();
+                assert!(wire < logical, "wire {wire} >= logical {logical}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_factor_allreduce_keeps_ranks_in_lockstep() {
+        use crate::dist::codec::{Codec, Lane};
+        use crate::util::rng::Rng;
+        for &(world, len) in &[(2usize, 33usize), (4, 10)] {
+            let grads: Vec<Vec<f32>> =
+                (0..world).map(|r| Rng::new(500 + r as u64).normal_vec(len, 1.0)).collect();
+            let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+            let (exact, _) = allreduce_mean(&refs);
+            let got = on_mesh(world, |tr| {
+                tr.set_codec(Codec::Bf16);
+                tr.set_lane(Lane::Factor);
+                let mut b = grads[tr.rank()].clone();
+                all_reduce_mean(tr, &mut b)?;
+                tr.set_lane(Lane::Frame);
+                Ok(b)
+            });
+            // the lossy_view round-trip keeps every rank byte-identical
+            for (rank, g) in got.iter().enumerate() {
+                let same = g.iter().zip(&got[0]).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "world={world} len={len} rank={rank} diverged");
+            }
+            // close to the exact mean (contributions and the gathered
+            // chunks each carry ≤ 2⁻⁸ relative quantization error) ...
+            for (a, b) in got[0].iter().zip(&exact) {
+                assert!((a - b).abs() <= b.abs() / 64.0 + 0.05, "bf16 mean {a} vs exact {b}");
+            }
+            // ... but genuinely quantized, not silently bit-exact
+            assert!(got[0].iter().zip(&exact).any(|(a, b)| a.to_bits() != b.to_bits()));
         }
     }
 

@@ -12,7 +12,11 @@
 //!
 //! * [`transport`] — `Transport` trait + in-process channel mesh and
 //!   TCP-loopback mesh, per-link byte/message counters (data vs diag
-//!   traffic classes)
+//!   traffic classes, logical vs post-codec wire bytes)
+//! * [`codec`] — the wire codec layer between collectives/p2p framing
+//!   and the transports: bit-exact `lossless` plane-transpose entropy
+//!   coding for every frame, lossy `bf16`/`f16` quantization of the
+//!   PowerSGD factor lane (DESIGN.md §Layered wire stack)
 //! * [`collective`] — chunked reduce-scatter / all-gather / broadcast
 //!   over f32 slices; fixed chunk boundaries and rank-ordered folds
 //!   make every result byte-identical to `compress::allreduce_mean`
@@ -20,9 +24,11 @@
 //! * [`group`] — `run_group`: scoped rank worker threads over a mesh,
 //!   per-rank counter snapshots, rank-forked RNG streams
 
+pub mod codec;
 pub mod collective;
 pub mod group;
 pub mod transport;
 
+pub use codec::{Codec, Lane};
 pub use group::{run_group, run_group2, TransportKind};
 pub use transport::{Class, Counters, SubTransport, Transport};

@@ -26,11 +26,19 @@
 //! metrics-only traffic — the full-gradient gathers behind the Fig.-10
 //! relative-error diagnostic, which a production build would skip and
 //! which therefore must not pollute the calibrated byte counts.
+//!
+//! Both transports apply the rank's active wire [`Codec`] on `send` and
+//! undo it on `recv` (DESIGN.md §Layered wire stack): callers exchange
+//! *logical* bytes, while each [`LinkStats`] records the logical and
+//! the post-codec wire size side by side. `Codec::Off` (the default)
+//! bypasses encoding entirely — raw payload bytes on the wire, and
+//! `wire == logical` in every counter.
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
 
+use super::codec::{self, Codec, Lane};
 use crate::util::error::{Context, Result};
 use crate::{bail, ensure};
 
@@ -48,11 +56,19 @@ pub enum Class {
 }
 
 /// Byte/message counters for one directed link pair (this rank ↔ peer).
+///
+/// `*_bytes` are **logical** payload bytes — what the caller handed to
+/// `send` / got back from `recv`, and what `netsim`'s analytic models
+/// price. `*_wire_bytes` are what actually crossed the link after the
+/// active codec (equal to logical when `Codec::Off`); the ratio of the
+/// two is the measured compression ratio surfaced in the run report.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct LinkStats {
     pub sent_bytes: u64,
+    pub sent_wire_bytes: u64,
     pub sent_msgs: u64,
     pub recv_bytes: u64,
+    pub recv_wire_bytes: u64,
     pub recv_msgs: u64,
 }
 
@@ -89,21 +105,28 @@ impl Counters {
         }
     }
 
-    fn on_send(&mut self, to: usize, bytes: usize) {
+    fn on_send(&mut self, to: usize, logical: usize, wire: usize) {
         let l = &mut self.bucket()[to];
-        l.sent_bytes += bytes as u64;
+        l.sent_bytes += logical as u64;
+        l.sent_wire_bytes += wire as u64;
         l.sent_msgs += 1;
     }
 
-    fn on_recv(&mut self, from: usize, bytes: usize) {
+    fn on_recv(&mut self, from: usize, logical: usize, wire: usize) {
         let l = &mut self.bucket()[from];
-        l.recv_bytes += bytes as u64;
+        l.recv_bytes += logical as u64;
+        l.recv_wire_bytes += wire as u64;
         l.recv_msgs += 1;
     }
 
-    /// Total payload bytes this rank sent on the data class.
+    /// Total logical payload bytes this rank sent on the data class.
     pub fn data_sent_bytes(&self) -> u64 {
         self.data.iter().map(|l| l.sent_bytes).sum()
+    }
+
+    /// Total post-codec bytes this rank put on the wire, data class.
+    pub fn data_sent_wire_bytes(&self) -> u64 {
+        self.data.iter().map(|l| l.sent_wire_bytes).sum()
     }
 
     /// Total data-class messages this rank sent.
@@ -111,9 +134,14 @@ impl Counters {
         self.data.iter().map(|l| l.sent_msgs).sum()
     }
 
-    /// Total payload bytes this rank sent on the diag class.
+    /// Total logical payload bytes this rank sent on the diag class.
     pub fn diag_sent_bytes(&self) -> u64 {
         self.diag.iter().map(|l| l.sent_bytes).sum()
+    }
+
+    /// Total post-codec bytes this rank put on the wire, diag class.
+    pub fn diag_sent_wire_bytes(&self) -> u64 {
+        self.diag.iter().map(|l| l.sent_wire_bytes).sum()
     }
 
     /// Fold another snapshot's per-link stats into this one, class by
@@ -129,8 +157,10 @@ impl Counters {
         {
             for (l, o) in bucket.iter_mut().zip(obucket.iter()) {
                 l.sent_bytes += o.sent_bytes;
+                l.sent_wire_bytes += o.sent_wire_bytes;
                 l.sent_msgs += o.sent_msgs;
                 l.recv_bytes += o.recv_bytes;
+                l.recv_wire_bytes += o.recv_wire_bytes;
                 l.recv_msgs += o.recv_msgs;
             }
         }
@@ -143,16 +173,35 @@ impl Counters {
 pub trait Transport: Send {
     fn rank(&self) -> usize;
     fn world(&self) -> usize;
-    /// Send one message to `to` (payload bytes only are counted; any
-    /// framing overhead is transport-internal).
+    /// Send one message of *logical* payload bytes to `to`; the active
+    /// codec decides what crosses the wire (counters record both; any
+    /// transport framing overhead beyond that is transport-internal).
     fn send(&mut self, to: usize, payload: &[u8]) -> Result<()>;
-    /// Receive the next message *from a specific peer* (per-link FIFO).
+    /// Receive the next message *from a specific peer* (per-link FIFO),
+    /// decoded back to logical bytes.
     fn recv(&mut self, from: usize) -> Result<Vec<u8>>;
     fn counters(&self) -> &Counters;
     fn counters_mut(&mut self) -> &mut Counters;
     /// Switch the accounting bucket for subsequent traffic.
     fn set_class(&mut self, class: Class) {
         self.counters_mut().set_class(class);
+    }
+    /// The wire codec applied to subsequent sends (both directions keep
+    /// their own codec state; every rank of a group sets the same one).
+    fn codec(&self) -> Codec;
+    fn set_codec(&mut self, codec: Codec);
+    /// The payload lane subsequent sends carry (see [`Lane`]): lossy
+    /// codecs quantize only `Lane::Factor` traffic.
+    fn lane(&self) -> Lane;
+    fn set_lane(&mut self, lane: Lane);
+    /// What a peer would actually receive if `payload` were sent now —
+    /// `Some(quantized)` under a lossy codec/lane pair, `None` when the
+    /// wire is bit-exact. Collectives apply this to the chunks they
+    /// keep locally (own all-gather chunk, broadcast root copy) so a
+    /// lossy codec can never hand the sender a higher-precision copy
+    /// than its peers.
+    fn lossy_view(&self, payload: &[u8]) -> Option<Vec<u8>> {
+        codec::lossy_roundtrip(self.codec(), self.lane(), payload)
     }
 }
 
@@ -235,9 +284,45 @@ impl Transport for SubTransport<'_> {
     fn counters_mut(&mut self) -> &mut Counters {
         self.inner.counters_mut()
     }
+
+    fn codec(&self) -> Codec {
+        self.inner.codec()
+    }
+
+    fn set_codec(&mut self, codec: Codec) {
+        self.inner.set_codec(codec);
+    }
+
+    fn lane(&self) -> Lane {
+        self.inner.lane()
+    }
+
+    fn set_lane(&mut self, lane: Lane) {
+        self.inner.set_lane(lane);
+    }
 }
 
 // ------------------------------------------------------------ in-process
+
+/// Encode `payload` for the wire; `None` means raw passthrough
+/// (`Codec::Off` adds no header and no overhead).
+fn wire_encode(codec: Codec, lane: Lane, payload: &[u8]) -> Option<Vec<u8>> {
+    if codec == Codec::Off {
+        None
+    } else {
+        Some(codec::encode(codec, lane, payload))
+    }
+}
+
+/// Decode a received wire message back to `(logical_bytes, wire_len)`.
+fn wire_decode(codec: Codec, msg: Vec<u8>) -> Result<(Vec<u8>, usize)> {
+    let wire = msg.len();
+    if codec == Codec::Off {
+        Ok((msg, wire))
+    } else {
+        Ok((codec::decode(&msg)?, wire))
+    }
+}
 
 /// In-process mesh endpoint: one unbounded FIFO per ordered rank pair.
 pub struct MemTransport {
@@ -246,6 +331,8 @@ pub struct MemTransport {
     peers: Vec<Option<Sender<Vec<u8>>>>,
     inbox: Vec<Option<Receiver<Vec<u8>>>>,
     counters: Counters,
+    codec: Codec,
+    lane: Lane,
 }
 
 /// Build the full in-process mesh: `world` endpoints, rank-indexed.
@@ -274,6 +361,8 @@ pub fn mem_mesh(world: usize) -> Vec<MemTransport> {
             peers,
             inbox,
             counters: Counters::new(world),
+            codec: Codec::Off,
+            lane: Lane::Frame,
         })
         .collect()
 }
@@ -293,10 +382,15 @@ impl Transport for MemTransport {
             .get(to)
             .and_then(|p| p.as_ref())
             .with_context(|| format!("rank {}: no link to rank {to}", self.rank))?;
-        tx.send(payload.to_vec())
+        let wire = match wire_encode(self.codec, self.lane, payload) {
+            Some(w) => w,
+            None => payload.to_vec(),
+        };
+        let wire_len = wire.len();
+        tx.send(wire)
             .ok()
             .with_context(|| format!("rank {}: link to rank {to} closed", self.rank))?;
-        self.counters.on_send(to, payload.len());
+        self.counters.on_send(to, payload.len(), wire_len);
         Ok(())
     }
 
@@ -310,8 +404,9 @@ impl Transport for MemTransport {
             .recv()
             .ok()
             .with_context(|| format!("rank {}: link from rank {from} closed", self.rank))?;
-        self.counters.on_recv(from, msg.len());
-        Ok(msg)
+        let (logical, wire_len) = wire_decode(self.codec, msg)?;
+        self.counters.on_recv(from, logical.len(), wire_len);
+        Ok(logical)
     }
 
     fn counters(&self) -> &Counters {
@@ -320,6 +415,22 @@ impl Transport for MemTransport {
 
     fn counters_mut(&mut self) -> &mut Counters {
         &mut self.counters
+    }
+
+    fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    fn set_codec(&mut self, codec: Codec) {
+        self.codec = codec;
+    }
+
+    fn lane(&self) -> Lane {
+        self.lane
+    }
+
+    fn set_lane(&mut self, lane: Lane) {
+        self.lane = lane;
     }
 }
 
@@ -334,6 +445,8 @@ pub struct TcpTransport {
     streams: Vec<Option<TcpStream>>,
     inbox: Vec<Option<Receiver<Vec<u8>>>>,
     counters: Counters,
+    codec: Codec,
+    lane: Lane,
 }
 
 fn reader_loop(mut stream: TcpStream, tx: Sender<Vec<u8>>) {
@@ -417,6 +530,8 @@ pub fn tcp_mesh(world: usize) -> Result<Vec<TcpTransport>> {
             streams: writers,
             inbox,
             counters: Counters::new(world),
+            codec: Codec::Off,
+            lane: Lane::Frame,
         });
     }
     Ok(out)
@@ -432,18 +547,20 @@ impl Transport for TcpTransport {
     }
 
     fn send(&mut self, to: usize, payload: &[u8]) -> Result<()> {
-        if payload.len() > MAX_FRAME {
-            bail!("frame of {} bytes exceeds MAX_FRAME", payload.len());
+        let encoded = wire_encode(self.codec, self.lane, payload);
+        let wire: &[u8] = encoded.as_deref().unwrap_or(payload);
+        if wire.len() > MAX_FRAME {
+            bail!("frame of {} wire bytes exceeds MAX_FRAME", wire.len());
         }
         let s = self
             .streams
             .get_mut(to)
             .and_then(|p| p.as_mut())
             .with_context(|| format!("rank {}: no link to rank {to}", self.rank))?;
-        s.write_all(&(payload.len() as u32).to_le_bytes())
-            .and_then(|_| s.write_all(payload))
+        s.write_all(&(wire.len() as u32).to_le_bytes())
+            .and_then(|_| s.write_all(wire))
             .with_context(|| format!("rank {}: send to rank {to}", self.rank))?;
-        self.counters.on_send(to, payload.len());
+        self.counters.on_send(to, payload.len(), wire.len());
         Ok(())
     }
 
@@ -457,8 +574,9 @@ impl Transport for TcpTransport {
             .recv()
             .ok()
             .with_context(|| format!("rank {}: link from rank {from} closed", self.rank))?;
-        self.counters.on_recv(from, msg.len());
-        Ok(msg)
+        let (logical, wire_len) = wire_decode(self.codec, msg)?;
+        self.counters.on_recv(from, logical.len(), wire_len);
+        Ok(logical)
     }
 
     fn counters(&self) -> &Counters {
@@ -467,6 +585,22 @@ impl Transport for TcpTransport {
 
     fn counters_mut(&mut self) -> &mut Counters {
         &mut self.counters
+    }
+
+    fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    fn set_codec(&mut self, codec: Codec) {
+        self.codec = codec;
+    }
+
+    fn lane(&self) -> Lane {
+        self.lane
+    }
+
+    fn set_lane(&mut self, lane: Lane) {
+        self.lane = lane;
     }
 }
 
@@ -493,6 +627,9 @@ mod tests {
                 a.send(1, b"ping").unwrap();
                 assert_eq!(a.recv(1).unwrap(), b"pong");
                 assert_eq!(a.counters().data[1].sent_bytes, 4);
+                // Codec::Off: wire bytes == logical bytes
+                assert_eq!(a.counters().data[1].sent_wire_bytes, 4);
+                assert_eq!(a.counters().data[1].recv_wire_bytes, 4);
                 assert_eq!(a.counters().data[1].recv_msgs, 1);
             });
             s.spawn(move || {
@@ -510,6 +647,74 @@ mod tests {
     #[test]
     fn tcp_ping_pong_counts() {
         ping_pong(tcp_mesh(2).unwrap());
+    }
+
+    fn lossless_codec_link(mut mesh: Vec<impl Transport>) {
+        let b = mesh.pop().unwrap();
+        let a = mesh.pop().unwrap();
+        let (mut a, mut b) = (a, b);
+        a.set_codec(Codec::Lossless);
+        b.set_codec(Codec::Lossless);
+        let payload = vec![0u8; 4096]; // highly compressible
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                a.send(1, &payload).unwrap();
+                a.send(1, &[]).unwrap(); // zero-length frames survive
+                let l = a.counters().data[1];
+                assert_eq!(l.sent_bytes, 4096);
+                assert!(
+                    l.sent_wire_bytes < 4096 && l.sent_wire_bytes >= codec::CODEC_HEADER_BYTES as u64,
+                    "wire {} for 4096 logical",
+                    l.sent_wire_bytes
+                );
+                assert_eq!(a.recv(1).unwrap(), b"done");
+            });
+            s.spawn(move || {
+                assert_eq!(b.recv(0).unwrap(), vec![0u8; 4096]);
+                assert_eq!(b.recv(0).unwrap(), Vec::<u8>::new());
+                let l = b.counters().data[0];
+                assert_eq!(l.recv_bytes, 4096);
+                assert!(l.recv_wire_bytes < 4096);
+                b.send(0, b"done").unwrap();
+            });
+        });
+    }
+
+    #[test]
+    fn mem_lossless_codec_shrinks_wire_counts() {
+        lossless_codec_link(mem_mesh(2));
+    }
+
+    #[test]
+    fn tcp_lossless_codec_shrinks_wire_counts() {
+        lossless_codec_link(tcp_mesh(2).unwrap());
+    }
+
+    #[test]
+    fn bf16_quantizes_factor_lane_only() {
+        let mut mesh = mem_mesh(2);
+        let mut b = mesh.pop().unwrap();
+        let mut a = mesh.pop().unwrap();
+        a.set_codec(Codec::Bf16);
+        b.set_codec(Codec::Bf16);
+        let payload: Vec<u8> =
+            [1.0f32, 1.001, -0.333, 7.5].iter().flat_map(|x| x.to_le_bytes()).collect();
+        a.set_lane(Lane::Factor);
+        let expect = a.lossy_view(&payload).unwrap();
+        a.send(1, &payload).unwrap();
+        let got = b.recv(0).unwrap();
+        assert_eq!(got, expect); // lossy_view is exactly what peers see
+        assert_ne!(got, payload);
+        assert_eq!(a.counters().data[1].sent_bytes, 16);
+        assert_eq!(
+            a.counters().data[1].sent_wire_bytes,
+            (codec::CODEC_HEADER_BYTES + 8) as u64
+        );
+        // back on the frame lane everything is bit-exact again
+        a.set_lane(Lane::Frame);
+        assert!(a.lossy_view(&payload).is_none());
+        a.send(1, &payload).unwrap();
+        assert_eq!(b.recv(0).unwrap(), payload);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use edgc::util::error::Result;
 
 use edgc::config::{cluster_by_name, Method, TrainConfig};
 use edgc::coordinator::{run_distributed, run_distributed_pp, Backend, Trainer};
-use edgc::dist::TransportKind;
+use edgc::dist::{Codec, TransportKind};
 use edgc::repro;
 use edgc::runtime::Runtime;
 use edgc::util::cli::{Args, Spec};
@@ -54,7 +54,14 @@ fn spec() -> Spec {
                  (per-layer buckets on a dedicated comm thread per rank; \
                  byte-identical outputs; requires --transport)",
             ),
-            ("threshold", "X", "bench-diff: allowed fractional regression (default 0.25)"),
+            (
+                "codec",
+                "NAME",
+                "wire codec for distributed runs: off|lossless|bf16|f16 \
+                 (lossless is bit-exact; bf16/f16 quantize PowerSGD factors; \
+                 default off)",
+            ),
+        ("threshold", "X", "bench-diff: allowed fractional regression (default 0.25)"),
             (
                 "min-ns",
                 "NS",
@@ -129,6 +136,9 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if args.switch("overlap") {
         cfg.overlap = true;
     }
+    if let Some(c) = args.opt("codec") {
+        cfg.codec = Codec::parse(c)?;
+    }
     Ok(cfg)
 }
 
@@ -160,7 +170,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     edgc::util::par::set_threads(args.usize_or("threads", 0)?);
     println!(
         "[edgc] training {} steps, method={}, dp={}, pp={}, cluster={}, backend={:?}, \
-         threads={}, transport={}{}",
+         threads={}, transport={}{}{}",
         cfg.steps,
         cfg.method.name(),
         cfg.dp,
@@ -170,6 +180,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         edgc::util::par::threads(),
         transport.map_or("centralized", |k| k.name()),
         if cfg.overlap { ", overlap=on" } else { "" },
+        if cfg.codec == Codec::Off {
+            String::new()
+        } else {
+            format!(", codec={}", cfg.codec.name())
+        },
     );
     let out_dir = cfg.out_dir.clone();
     let dp = cfg.dp;
@@ -187,14 +202,22 @@ fn cmd_train(args: &Args) -> Result<()> {
         Some(kind) if real_pp => {
             // real pipeline-parallel execution: dp x pp stage workers
             let run = run_distributed_pp(cfg, backend, kind)?;
-            let measured: u64 = run.counters.iter().map(|c| c.data_sent_bytes()).sum();
+            let w = &run.summary.wire;
             let ring = edgc::netsim::ring_wire_bytes(dp, run.summary.total_comm_floats);
             let cal = run.pipe.as_ref().expect("pipeline calibration");
             println!(
-                "wire traffic        : {measured} bytes measured over {} \
+                "wire traffic        : {} bytes measured over {} \
                  ({:.0} modeled ring + p2p)",
+                w.data_logical,
                 kind.name(),
                 ring + cal.modeled_p2p_bytes
+            );
+            println!(
+                "wire codec          : {} — {} wire bytes for {} logical ({:.2}x ratio)",
+                w.codec.name(),
+                w.data_wire,
+                w.data_logical,
+                w.data_ratio()
             );
             println!(
                 "pipe timing         : measured microback {:.3}ms (stage last-bwd fit) \
@@ -206,12 +229,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         Some(kind) => {
             let run = run_distributed(cfg, backend, kind)?;
-            let measured: u64 = run.counters.iter().map(|c| c.data_sent_bytes()).sum();
+            let w = &run.summary.wire;
             let modeled = edgc::netsim::ring_wire_bytes(dp, run.summary.total_comm_floats);
             println!(
-                "wire traffic        : {measured} bytes measured over {} ({:.0} modeled ring)",
+                "wire traffic        : {} bytes measured over {} ({:.0} modeled ring)",
+                w.data_logical,
                 kind.name(),
                 modeled
+            );
+            println!(
+                "wire codec          : {} — {} wire bytes for {} logical ({:.2}x ratio)",
+                w.codec.name(),
+                w.data_wire,
+                w.data_logical,
+                w.data_ratio()
             );
             run.summary
         }

@@ -98,12 +98,15 @@ pub fn ring_traffic_factor(k: usize) -> f64 {
     2.0 * (k - 1) as f64 / k as f64
 }
 
-/// Modeled wire bytes summed over all `k` participants for all-reducing
-/// `floats` f32 values: `2(k−1) · 4 · floats`. This is the identity the
-/// `dist` transports' measured data-class counters are calibrated
-/// against — it holds exactly for the chunked reduce-scatter +
-/// all-gather schedule at any chunk split (`tests/determinism.rs` pins
-/// the measured/modeled agreement for full training runs).
+/// Modeled **logical** wire bytes summed over all `k` participants for
+/// all-reducing `floats` f32 values: `2(k−1) · 4 · floats`. This is the
+/// identity the `dist` transports' measured data-class counters are
+/// calibrated against — it holds exactly for the chunked reduce-scatter
+/// + all-gather schedule at any chunk split (`tests/determinism.rs`
+/// pins the measured/modeled agreement for full training runs). A wire
+/// codec (`--codec`) changes only the physical byte count, reported
+/// separately as `sent_wire_bytes` / [`codec_ratio`]; the logical
+/// identity here is codec-invariant.
 pub fn ring_wire_bytes(k: usize, floats: usize) -> f64 {
     if k <= 1 {
         return 0.0;
@@ -111,8 +114,20 @@ pub fn ring_wire_bytes(k: usize, floats: usize) -> f64 {
     (2 * (k - 1)) as f64 * 4.0 * floats as f64
 }
 
-/// Modeled payload bytes of one training step's 1F1B activation
-/// exchange, summed over all workers: each of the `dp` replicas moves,
+/// Measured compression ratio of a wire codec: `logical / wire` bytes
+/// (> 1 means the codec shrank the traffic, 1.0 when nothing moved or
+/// no codec is active). The run report prints this next to the modeled
+/// logical volume, and `BENCH_codec.json` trends it per frame family.
+pub fn codec_ratio(logical: u64, wire: u64) -> f64 {
+    if wire == 0 {
+        1.0
+    } else {
+        logical as f64 / wire as f64
+    }
+}
+
+/// Modeled **logical** payload bytes of one training step's 1F1B
+/// activation exchange, summed over all workers: each of the `dp` replicas moves,
 /// per adjacent stage pair (`pp − 1` hops), `micro` forward frames and
 /// `micro` backward frames whose f32 payloads tile the replica's
 /// `rows × width` activation matrix, plus `frame_overhead` header bytes
@@ -135,7 +150,7 @@ pub fn p2p_wire_bytes(
     (dp * (pp - 1)) as f64 * per_hop
 }
 
-/// Modeled payload bytes of one step's tied-embedding traffic: the
+/// Modeled **logical** payload bytes of one step's tied-embedding traffic: the
 /// gradient frame (last stage → stage 0, `frame_overhead + 4·V·D`) plus
 /// the post-optimizer weight sync (stage 0 → last stage, a raw `4·V·D`
 /// f32 payload so the tied head reads the freshly updated matrix), per
@@ -293,6 +308,14 @@ mod tests {
         // tied: one framed vocab x d gradient + one raw weight sync per
         // replica
         assert_eq!(tied_wire_bytes(2, 3, 16, 4, 13), 3.0 * (13.0 + 8.0 * 64.0));
+    }
+
+    #[test]
+    fn codec_ratio_is_logical_over_wire() {
+        assert_eq!(codec_ratio(1000, 500), 2.0);
+        assert_eq!(codec_ratio(1000, 1000), 1.0);
+        assert!(codec_ratio(1000, 1005) < 1.0); // headers can cost on tiny frames
+        assert_eq!(codec_ratio(0, 0), 1.0); // nothing moved
     }
 
     #[test]

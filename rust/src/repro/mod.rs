@@ -139,6 +139,7 @@ fn base_cfg(opts: &Opts, exp: &str, method: Method) -> TrainConfig {
         sim_tokens: 32 * 1024,
         eval_every: (opts.steps / 12).max(4),
         overlap: false,
+        codec: crate::dist::Codec::Off,
         out_dir: opts.out_dir.clone(),
     }
 }

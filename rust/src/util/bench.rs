@@ -140,6 +140,19 @@ impl BenchSet {
         r
     }
 
+    /// Record a non-timing metric as a pseudo bench entry: `value`
+    /// lands in the `min_ns`/`p50_ns`/`mean_ns` slots (iters = 1), so
+    /// the same `bench-diff` threshold gate that guards timings also
+    /// guards this number — e.g. wire bytes per frame under a codec.
+    /// Use values well above the gate's noise floor
+    /// ([`DEFAULT_MIN_NS`] = 1000), or the floor will absorb
+    /// regressions: prefer raw byte counts over 0..1 ratios.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        let r = BenchResult { iters: 1, mean_ns: value, min_ns: value, p50_ns: value };
+        println!("{:<44} metric {value:.0}", format!("{}/{}", self.group, name));
+        self.results.push((name.to_string(), r));
+    }
+
     /// The group's results as a JSON value (the `BENCH_*.json` schema).
     pub fn to_json(&self) -> Json {
         let rows: Vec<Json> = self
@@ -408,6 +421,21 @@ mod tests {
         assert!(t.contains("| a | 2.00 µs | 5.00 µs | +150.0% | REGRESSED |"), "{t}");
         assert!(t.contains("| gone | 500 ns | — | — | missing |"), "{t}");
         assert!(t.contains("| fresh | — | 300 ns | — | new |"), "{t}");
+    }
+
+    #[test]
+    fn metric_entries_ride_the_same_gate() {
+        let mut set = BenchSet::with_opts("unit", &BenchOpts { smoke: true, json: None });
+        set.metric("wire_bytes_per_frame", 32_768.0);
+        let j = set.to_json();
+        let rows = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("min_ns").unwrap().as_f64().unwrap(), 32_768.0);
+        assert_eq!(rows[0].get("iters").unwrap().as_f64().unwrap(), 1.0);
+        // a +50% metric regression trips the standard diff gate
+        let worse = bench_doc(&[("wire_bytes_per_frame", 49_152.0)]);
+        let base = bench_doc(&[("wire_bytes_per_frame", 32_768.0)]);
+        assert_eq!(diff_benchmarks(&base, &worse, 0.25, DEFAULT_MIN_NS).unwrap().len(), 1);
     }
 
     #[test]

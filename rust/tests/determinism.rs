@@ -11,7 +11,7 @@ use std::sync::{Mutex, MutexGuard};
 use edgc::config::{Method, TrainConfig};
 use edgc::coordinator::pipeline::FRAME_HEADER_BYTES;
 use edgc::coordinator::{run_distributed, run_distributed_pp, Backend, DistRun, Trainer};
-use edgc::dist::TransportKind;
+use edgc::dist::{Codec, TransportKind};
 use edgc::repro::{campaign, Opts};
 use edgc::util::par;
 
@@ -51,6 +51,7 @@ fn tiny_cfg(method: Method, steps: usize) -> TrainConfig {
         sim_tokens: 32 * 1024,
         eval_every: 10,
         overlap: false,
+        codec: Codec::Off,
         out_dir: "/tmp/edgc-determinism-runs".into(),
     }
 }
@@ -194,6 +195,19 @@ fn assert_pp_matches_centralized(cfg: &TrainConfig, kind: TransportKind) {
         + cal.modeled_p2p_bytes;
     let rel = (total_measured as f64 - total_modeled).abs() / total_modeled;
     assert!(rel < 0.01, "total measured {total_measured} B vs modeled {total_modeled} B ({tag})");
+    // the 1% identity above is in *logical* bytes (codec-invariant);
+    // what actually moved is measured separately per codec
+    let total_wire: u64 = run.counters.iter().map(|c| c.data_sent_wire_bytes()).sum();
+    match cfg.codec {
+        Codec::Off => assert_eq!(
+            total_wire, total_measured,
+            "off codec must move exactly the logical bytes ({tag})"
+        ),
+        _ => {
+            let ratio = edgc::netsim::codec_ratio(total_measured, total_wire);
+            assert!(ratio > 1.0, "{:?} measured ratio {ratio} <= 1 ({tag})", cfg.codec);
+        }
+    }
     // measured timings exist for every stage and fit a positive microback
     assert_eq!(cal.mean_last_bwd.len(), pp);
     assert!(cal.mean_last_bwd.iter().all(|&t| t > 0.0), "{:?}", cal.mean_last_bwd);
@@ -286,6 +300,13 @@ fn assert_overlap_matches_sequential(cfg: &TrainConfig, kind: TransportKind) {
             cs.diag_sent_bytes(),
             "rank {rank}: diag wire bytes differ ({tag})"
         );
+        // same messages through the same codec: the post-codec wire
+        // byte counts must agree too
+        assert_eq!(
+            co.data_sent_wire_bytes(),
+            cs.data_sent_wire_bytes(),
+            "rank {rank}: post-codec data wire bytes differ ({tag})"
+        );
     }
     let report = ov.summary.overlap.as_ref().unwrap_or_else(|| panic!("no overlap report ({tag})"));
     assert!(report.measured_busy_secs >= 0.0);
@@ -340,10 +361,156 @@ fn overlap_microbatch_split_invariance() {
     par::set_threads(1);
 }
 
-/// One cell of the CI pp×dp×transport×overlap matrix, selected via
-/// environment (EDGC_PP / EDGC_DP / EDGC_TRANSPORT / EDGC_OVERLAP) on
-/// the 4-layer `deep` preset so pp=4 splits real stages. Ignored by
-/// default; the `pp-dp-matrix` CI job runs it with `--ignored`.
+/// The `--codec lossless` acceptance pin: byte-identical to
+/// `--codec off` — curve, final parameters, and the *logical* per-rank
+/// byte/message counters — while the data-class wire bytes measurably
+/// shrink (and `--codec off` moves exactly the logical bytes).
+fn assert_lossless_matches_off(cfg: &TrainConfig, kind: TransportKind) {
+    let tag = format!(
+        "{:?} pp={} dp={} overlap={} over {}",
+        cfg.method,
+        cfg.pp,
+        cfg.dp,
+        cfg.overlap,
+        kind.name()
+    );
+    let mut off_cfg = cfg.clone();
+    off_cfg.codec = Codec::Off;
+    let mut lossless_cfg = cfg.clone();
+    lossless_cfg.codec = Codec::Lossless;
+    let off = dist_run(&off_cfg, kind);
+    let lossless = dist_run(&lossless_cfg, kind);
+    assert_eq!(
+        lossless.summary.curve.render(),
+        off.summary.curve.render(),
+        "curve differs ({tag})"
+    );
+    let same = lossless.params.len() == off.params.len()
+        && lossless.params.iter().zip(&off.params).all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(same, "params differ ({tag})");
+    for (rank, (cl, co)) in lossless.counters.iter().zip(&off.counters).enumerate() {
+        assert_eq!(
+            cl.data_sent_bytes(),
+            co.data_sent_bytes(),
+            "rank {rank}: logical data bytes differ ({tag})"
+        );
+        assert_eq!(
+            cl.data_sent_msgs(),
+            co.data_sent_msgs(),
+            "rank {rank}: data message count differs ({tag})"
+        );
+        assert_eq!(
+            cl.diag_sent_bytes(),
+            co.diag_sent_bytes(),
+            "rank {rank}: logical diag bytes differ ({tag})"
+        );
+        assert_eq!(
+            co.data_sent_wire_bytes(),
+            co.data_sent_bytes(),
+            "rank {rank}: off codec must move exactly the logical bytes ({tag})"
+        );
+    }
+    let logical: u64 = lossless.counters.iter().map(|c| c.data_sent_bytes()).sum();
+    let wire: u64 = lossless.counters.iter().map(|c| c.data_sent_wire_bytes()).sum();
+    if logical > 0 {
+        assert!(wire < logical, "lossless wire {wire} B did not shrink {logical} B ({tag})");
+    }
+    // the run summary carries the measured split and ratio
+    assert_eq!(lossless.summary.wire.codec, Codec::Lossless, "{tag}");
+    assert_eq!(lossless.summary.wire.data_logical, logical, "{tag}");
+    assert_eq!(lossless.summary.wire.data_wire, wire, "{tag}");
+    if logical > 0 {
+        assert!(lossless.summary.wire.data_ratio() > 1.0, "{tag}");
+    }
+    assert_eq!(off.summary.wire.codec, Codec::Off, "{tag}");
+}
+
+/// The layered-wire-stack acceptance pin: `--codec lossless` is
+/// byte-identical to `--codec off` across the {pp 1,2} × {dp 1,2}
+/// square (mem transport) and the overlapped pp=2 dp=2 cell on both
+/// transports (the tcp cell with the full EDGC control plane).
+#[test]
+fn lossless_codec_is_byte_identical_to_off() {
+    let _knob = hold_par_knob();
+    par::set_threads(1);
+    for (pp, dp) in [(1usize, 1usize), (1, 2), (2, 1), (2, 2)] {
+        let mut cfg = tiny_cfg(Method::FixedRank(8), 4);
+        cfg.pp = pp;
+        cfg.dp = dp;
+        assert_lossless_matches_off(&cfg, TransportKind::Mem);
+    }
+    for (method, kind) in
+        [(Method::FixedRank(8), TransportKind::Mem), (Method::Edgc, TransportKind::Tcp)]
+    {
+        let mut cfg = tiny_cfg(method, 6);
+        cfg.overlap = true; // pp=2 dp=2 from tiny_cfg
+        assert_lossless_matches_off(&cfg, kind);
+    }
+    par::set_threads(1);
+}
+
+/// bf16 factor quantization is lossy but *deterministically* lossy:
+/// identical output bytes across transports and overlap modes at a
+/// fixed dp, visibly different from the f32 run (the quantization
+/// really happened), with a bounded final-loss delta.
+#[test]
+fn bf16_codec_is_deterministic_and_bounded() {
+    let _knob = hold_par_knob();
+    par::set_threads(1);
+    let mut cfg = tiny_cfg(Method::FixedRank(8), 8);
+    cfg.pp = 1; // dp=2 rank workers: the factor all-reduce is on the wire
+    cfg.codec = Codec::Bf16;
+    let mem = dist_run(&cfg, TransportKind::Mem);
+    let tcp = dist_run(&cfg, TransportKind::Tcp);
+    assert_eq!(
+        mem.summary.curve.render(),
+        tcp.summary.curve.render(),
+        "bf16 curve differs between mem and tcp"
+    );
+    let same = mem.params.len() == tcp.params.len()
+        && mem.params.iter().zip(&tcp.params).all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(same, "bf16 params differ between mem and tcp");
+    let mut ov_cfg = cfg.clone();
+    ov_cfg.overlap = true;
+    let ov = dist_run(&ov_cfg, TransportKind::Mem);
+    assert_eq!(
+        ov.summary.curve.render(),
+        mem.summary.curve.render(),
+        "bf16 overlapped run differs from sequential"
+    );
+    // the numerics contract is honest: bf16 deltas are visible, not
+    // hidden behind a bitwise-equality claim ...
+    let mut off_cfg = cfg.clone();
+    off_cfg.codec = Codec::Off;
+    let full = dist_run(&off_cfg, TransportKind::Mem);
+    assert!(
+        mem.params.iter().zip(&full.params).any(|(a, b)| a.to_bits() != b.to_bits()),
+        "bf16 run is bitwise equal to the f32 run — the quantizer never engaged"
+    );
+    // ... and bounded: the training outcome stays close
+    let (a, b) = (mem.summary.final_train_loss, full.summary.final_train_loss);
+    assert!(
+        (a - b).abs() < 0.1 * b.abs().max(1.0),
+        "bf16 final loss {a} strays too far from f32 {b}"
+    );
+    // factors went over the wire smaller than their logical size
+    assert_eq!(mem.summary.wire.codec, Codec::Bf16);
+    assert!(
+        mem.summary.wire.data_wire < mem.summary.wire.data_logical,
+        "bf16 wire {} B did not shrink {} B",
+        mem.summary.wire.data_wire,
+        mem.summary.wire.data_logical
+    );
+    par::set_threads(1);
+}
+
+/// One cell of the CI pp×dp×transport×overlap×codec matrix, selected
+/// via environment (EDGC_PP / EDGC_DP / EDGC_TRANSPORT / EDGC_OVERLAP
+/// / EDGC_CODEC) on the 4-layer `deep` preset so pp=4 splits real
+/// stages. Ignored by default; the `pp-dp-matrix` CI job runs it with
+/// `--ignored`. codec=lossless re-runs the cell with wire compression
+/// on — the byte-identity against the centralized/sequential reference
+/// (which never sees a codec) is exactly the off-equivalence pin.
 #[test]
 #[ignore]
 fn pp_dp_matrix_cell() {
@@ -368,11 +535,16 @@ fn pp_dp_matrix_cell() {
         Ok("off") | Err(_) => false,
         Ok(other) => panic!("EDGC_OVERLAP={other:?} is not on|off"),
     };
+    let codec = match std::env::var("EDGC_CODEC") {
+        Ok(v) => Codec::parse(&v).unwrap_or_else(|e| panic!("EDGC_CODEC: {e}")),
+        Err(_) => Codec::Off,
+    };
     let mut cfg = tiny_cfg(Method::Edgc, 8);
     cfg.artifacts = "artifacts/deep".into();
     cfg.pp = pp;
     cfg.dp = dp;
     cfg.microbatches = 4;
+    cfg.codec = codec;
     if overlap {
         assert_overlap_matches_sequential(&cfg, kind);
     } else {
@@ -554,6 +726,35 @@ fn cli_overlap_smoke() {
         .output()
         .unwrap();
     assert!(!status.status.success(), "--overlap without --transport must be rejected");
+}
+
+#[test]
+fn cli_codec_smoke() {
+    // `edgc train --dp 2 --transport mem --codec lossless` reports the
+    // measured compression ratio next to the wire counters
+    let out = tmp_dir("cli-codec");
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_edgc"))
+        .args([
+            "train", "--dp", "2", "--transport", "mem", "--codec", "lossless", "--steps", "4",
+            "--eval-every", "4", "--threads", "1", "--out", &out,
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&status.stdout);
+    let stderr = String::from_utf8_lossy(&status.stderr);
+    assert!(status.status.success(), "codec train failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("codec=lossless"), "unexpected output:\n{stdout}");
+    assert!(stdout.contains("wire traffic"), "missing counter report:\n{stdout}");
+    assert!(stdout.contains("wire codec"), "missing codec report:\n{stdout}");
+    assert!(stdout.contains("x ratio"), "missing measured ratio:\n{stdout}");
+    std::fs::remove_dir_all(&out).ok();
+
+    // an unknown codec name is a hard error
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_edgc"))
+        .args(["train", "--dp", "2", "--transport", "mem", "--codec", "zstd"])
+        .output()
+        .unwrap();
+    assert!(!status.status.success(), "unknown codec must be rejected");
 }
 
 #[test]

@@ -35,6 +35,7 @@ fn tiny_cfg(method: Method, steps: usize) -> TrainConfig {
         sim_tokens: 32 * 1024,
         eval_every: 10,
         overlap: false,
+        codec: edgc::dist::Codec::Off,
         out_dir: "/tmp/edgc-test-runs".into(),
     }
 }

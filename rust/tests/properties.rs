@@ -191,6 +191,157 @@ fn prop_ring_collectives_equal_allreduce_mean_bitwise() {
     });
 }
 
+// ----------------------------------------------------------------- codec
+
+#[test]
+fn prop_lossless_roundtrip_arbitrary_payloads() {
+    use edgc::dist::codec::{self, Codec, Lane, CODEC_HEADER_BYTES};
+    // Bit-exact for every payload, bounded overhead for the worst case:
+    // the lossless codec may fall back to raw framing but never costs
+    // more than the 5-byte header.
+    check("lossless roundtrip", 60, |rng| {
+        let len = match rng.below(5) {
+            0 => rng.below(4),             // 0..=3: degenerate sizes
+            1 => 1 + rng.below(16),        // below the compression floor
+            2 => 16 + rng.below(300),      // RLE-only territory
+            _ => 1200 + rng.below(40_000), // Huffman-eligible planes
+        };
+        let payload: Vec<u8> = match rng.below(4) {
+            0 => (0..len).map(|_| rng.below(256) as u8).collect(), // uniform noise
+            1 => vec![0u8; len],                                   // all-zero
+            2 => (0..len).map(|i| (i % 7) as u8).collect(),        // periodic
+            _ => {
+                // f32-shaped small normals: the training payload shape
+                let mut out = Vec::with_capacity(len + 4);
+                while out.len() < len {
+                    out.extend_from_slice(&((rng.normal() * 0.02) as f32).to_le_bytes());
+                }
+                out.truncate(len);
+                out
+            }
+        };
+        let wire = codec::encode(Codec::Lossless, Lane::Frame, &payload);
+        if wire.len() > payload.len() + CODEC_HEADER_BYTES {
+            return Err(format!(
+                "len {}: wire {} exceeds logical + header",
+                payload.len(),
+                wire.len()
+            ));
+        }
+        let back = codec::decode(&wire).map_err(|e| e.to_string())?;
+        expect(back == payload, format!("len {len}: roundtrip differs"))
+    });
+}
+
+#[test]
+fn prop_lossless_ring_collectives_bitwise() {
+    use edgc::dist::{Codec, TransportKind};
+    // The lossless codec preserves the ring-collective determinism
+    // contract verbatim: bit-for-bit equal to the centralized mean on
+    // every rank — including zero-length and len < ranks chunks — with
+    // the *logical* wire identity intact. Mostly mem; a few tcp cases
+    // keep the framed-socket path honest without slowing the suite.
+    check("lossless ring == allreduce_mean", 24, |rng| {
+        let world = 1 + rng.below(5);
+        let len = match rng.below(4) {
+            0 => rng.below(world.max(1)), // 0..world (incl. 0)
+            1 => world + rng.below(2),    // right at the chunk boundary
+            _ => 1 + rng.below(3000),     // general case
+        };
+        let kind = if rng.below(6) == 0 { TransportKind::Tcp } else { TransportKind::Mem };
+        let grads: Vec<Vec<f32>> = (0..world).map(|_| rng.normal_vec(len, 1.0)).collect();
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let (want, _) = allreduce_mean(&refs);
+        let got = edgc::dist::run_group(kind, world, |rank, tr| {
+            tr.set_codec(Codec::Lossless);
+            let mut buf = grads[rank].clone();
+            edgc::dist::collective::all_reduce_mean(tr, &mut buf)?;
+            Ok(buf)
+        })
+        .map_err(|e| e.to_string())?;
+        for (rank, (out, _)) in got.iter().enumerate() {
+            let same = out.len() == want.len()
+                && out.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+            if !same {
+                return Err(format!("world={world} len={len}: rank {rank} bytes differ"));
+            }
+        }
+        let sent: u64 = got.iter().map(|(_, c)| c.data_sent_bytes()).sum();
+        expect(
+            sent as f64 == edgc::netsim::ring_wire_bytes(world, len),
+            format!("world={world} len={len}: logical bytes {sent} != ring model"),
+        )
+    });
+}
+
+#[test]
+fn prop_bf16_quantization_error_bound() {
+    use edgc::dist::codec::{self, Codec, Lane};
+    // bf16 keeps 8 significand bits; round-to-nearest-even bounds the
+    // relative error of every normal f32 by 2^-9. Checked through the
+    // public wire path (encode → decode on the factor lane) at 2^-8
+    // slack across nine decades of magnitude.
+    check("bf16 error bound", 40, |rng| {
+        let n = 4 * (1 + rng.below(64));
+        let scale = 10f64.powi(rng.below(9) as i32 - 4);
+        let vals: Vec<f32> = rng.normal_vec(n, scale);
+        let mut bytes = Vec::with_capacity(4 * n);
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let wire = codec::encode(Codec::Bf16, Lane::Factor, &bytes);
+        if wire.len() >= bytes.len() {
+            return Err(format!("bf16 wire {} did not halve {} logical", wire.len(), bytes.len()));
+        }
+        let back = codec::decode(&wire).map_err(|e| e.to_string())?;
+        for (i, (c, v)) in back.chunks_exact(4).zip(&vals).enumerate() {
+            let q = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            let bound = v.abs() / 256.0 + f32::MIN_POSITIVE;
+            if (q - v).abs() > bound {
+                return Err(format!("value {i}: {v} -> {q} strays past {bound}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bf16_factor_allreduce_ranks_in_lockstep() {
+    use edgc::dist::{Codec, Lane, TransportKind};
+    // Lossy quantization must never desynchronize replicas: under the
+    // bf16 factor codec, every rank of an all-reduce holds *identical*
+    // bytes afterwards (keep-what-you-ship), and the fold is
+    // transport-invariant (mem and tcp agree bitwise).
+    check("bf16 factor lockstep", 12, |rng| {
+        let world = 2 + rng.below(3);
+        let len = match rng.below(3) {
+            0 => rng.below(world), // zero-length / len < ranks chunks
+            _ => 1 + rng.below(512),
+        };
+        let grads: Vec<Vec<f32>> = (0..world).map(|_| rng.normal_vec(len, 1.0)).collect();
+        let run = |kind: TransportKind| {
+            edgc::dist::run_group(kind, world, |rank, tr| {
+                tr.set_codec(Codec::Bf16);
+                tr.set_lane(Lane::Factor);
+                let mut buf = grads[rank].clone();
+                edgc::dist::collective::all_reduce_mean(tr, &mut buf)?;
+                Ok(buf)
+            })
+            .map_err(|e| e.to_string())
+        };
+        let mem = run(TransportKind::Mem)?;
+        for (rank, (out, _)) in mem.iter().enumerate() {
+            let same = out.iter().zip(&mem[0].0).all(|(a, b)| a.to_bits() == b.to_bits());
+            if !same {
+                return Err(format!("world={world} len={len}: rank {rank} desynchronized"));
+            }
+        }
+        let tcp = run(TransportKind::Tcp)?;
+        let same = tcp[0].0.iter().zip(&mem[0].0).all(|(a, b)| a.to_bits() == b.to_bits());
+        expect(same, format!("world={world} len={len}: tcp differs from mem"))
+    });
+}
+
 // --------------------------------------------------------------- pipesim
 
 #[test]
