@@ -1,0 +1,386 @@
+//! Binary framing for snapshot files (in-tree, zero external deps).
+//!
+//! A snapshot file is a flat sequence of named, individually-checksummed
+//! sections:
+//!
+//! ```text
+//! "EDGCKPT1"                                      8-byte magic / version
+//! [u32 LE section count]
+//! per section:
+//!   [u32 LE name len][name bytes (UTF-8)]
+//!   [u64 LE payload len][u64 LE FNV-64 of payload][payload bytes]
+//! [u64 LE FNV-64 of everything above]             whole-file checksum
+//! ```
+//!
+//! Every length is validated before use and every checksum is verified on
+//! decode, so a truncated or bit-flipped file fails loudly — naming the
+//! damaged section — instead of resuming from garbage. Payload contents are
+//! opaque here; [`Enc`]/[`Dec`] are the little-endian scalar/slab codecs
+//! the state layer builds payloads with.
+
+use crate::util::error::Result;
+use crate::{bail, ensure};
+
+/// File magic; the trailing digit is the format version.
+pub const MAGIC: &[u8; 8] = b"EDGCKPT1";
+
+/// FNV-1a over a byte slice — same constants as the trainer's f32 param
+/// checksum, reused for wire-independent snapshot integrity.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One decoded section: `(name, payload)`.
+pub type Section = (String, Vec<u8>);
+
+/// Frame a list of sections into a self-checksummed snapshot file image.
+pub fn encode(sections: &[Section]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    for (name, payload) in sections {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&fnv64(payload).to_le_bytes());
+        out.extend_from_slice(payload);
+    }
+    let file_sum = fnv64(&out);
+    out.extend_from_slice(&file_sum.to_le_bytes());
+    out
+}
+
+/// Decode and fully validate a snapshot file image. Errors name the
+/// damaged section (or the framing layer) so `--resume` failures are
+/// actionable.
+pub fn decode(bytes: &[u8]) -> Result<Vec<Section>> {
+    ensure!(
+        bytes.len() >= MAGIC.len() + 4 + 8,
+        "snapshot truncated: {} bytes is smaller than an empty snapshot",
+        bytes.len()
+    );
+    ensure!(
+        &bytes[..MAGIC.len()] == MAGIC,
+        "bad snapshot magic {:?} (expected {:?}) — not a snapshot or wrong format version",
+        String::from_utf8_lossy(&bytes[..MAGIC.len().min(bytes.len())]),
+        String::from_utf8_lossy(MAGIC)
+    );
+    let body_end = bytes.len() - 8;
+    let stored_file_sum = u64::from_le_bytes(bytes[body_end..].try_into().unwrap());
+    let actual_file_sum = fnv64(&bytes[..body_end]);
+    ensure!(
+        stored_file_sum == actual_file_sum,
+        "snapshot file checksum mismatch: stored {stored_file_sum:#018x}, \
+         computed {actual_file_sum:#018x} — file is corrupt or truncated"
+    );
+
+    let mut d = Dec::new(&bytes[MAGIC.len()..body_end]);
+    let count = d.u32().map_err(|e| e.context("section count"))? as usize;
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let name = (|| -> Result<String> {
+            let n = d.u32()? as usize;
+            ensure!(n <= 4096, "section name length {n} is implausible");
+            let raw = d.bytes(n)?;
+            Ok(std::str::from_utf8(raw)?.to_string())
+        })()
+        .map_err(|e| e.context(format!("section {i} header")))?;
+        let (payload_len, stored_sum) = (|| -> Result<(usize, u64)> {
+            Ok((d.u64()? as usize, d.u64()?))
+        })()
+        .map_err(|e| e.context(format!("section {name:?} header")))?;
+        let payload = d
+            .bytes(payload_len)
+            .map_err(|e| e.context(format!("section {name:?} payload (truncated?)")))?;
+        let actual = fnv64(payload);
+        ensure!(
+            stored_sum == actual,
+            "section {name:?} checksum mismatch: stored {stored_sum:#018x}, \
+             computed {actual:#018x} — snapshot is corrupt"
+        );
+        out.push((name, payload.to_vec()));
+    }
+    ensure!(d.remaining() == 0, "{} trailing bytes after the last section", d.remaining());
+    Ok(out)
+}
+
+/// Little-endian payload writer. All snapshot section payloads are built
+/// through this so the byte layout is defined in exactly one place.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Enc::default()
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u64(&mut self, x: u64) -> &mut Self {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+        self
+    }
+
+    pub fn usize(&mut self, x: usize) -> &mut Self {
+        self.u64(x as u64)
+    }
+
+    pub fn bool(&mut self, b: bool) -> &mut Self {
+        self.buf.push(b as u8);
+        self
+    }
+
+    /// f64 stored as raw bits — checkpoints must be bit-exact, so floats
+    /// never go through decimal formatting.
+    pub fn f64(&mut self, x: f64) -> &mut Self {
+        self.u64(x.to_bits())
+    }
+
+    pub fn opt_f64(&mut self, x: Option<f64>) -> &mut Self {
+        match x {
+            Some(v) => self.bool(true).f64(v),
+            None => self.bool(false),
+        }
+    }
+
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+        self
+    }
+
+    /// Length-prefixed f32 slab (raw bits).
+    pub fn f32s(&mut self, xs: &[f32]) -> &mut Self {
+        self.usize(xs.len());
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        self
+    }
+
+    /// Length-prefixed f64 slab (raw bits).
+    pub fn f64s(&mut self, xs: &[f64]) -> &mut Self {
+        self.usize(xs.len());
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        self
+    }
+
+    /// Length-prefixed u64 slab.
+    pub fn u64s(&mut self, xs: &[u64]) -> &mut Self {
+        self.usize(xs.len());
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self
+    }
+}
+
+/// Bounds-checked little-endian payload reader mirroring [`Enc`].
+pub struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(b: &'a [u8]) -> Self {
+        Dec { b, i: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.remaining(),
+            "need {n} bytes, only {} remain at offset {}",
+            self.remaining(),
+            self.i
+        );
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        let x = self.u64()?;
+        ensure!(x <= usize::MAX as u64, "value {x} overflows usize");
+        Ok(x as usize)
+    }
+
+    /// A length field about to drive an allocation: reject lengths larger
+    /// than the bytes that could possibly back them, so a corrupt header
+    /// can't request terabytes.
+    fn alloc_len(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.usize()?;
+        ensure!(
+            n.checked_mul(elem_bytes).is_some_and(|b| b <= self.remaining()),
+            "slab length {n} (x{elem_bytes}B) exceeds the {} remaining bytes",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.bytes(1)?[0] {
+            0 => Ok(false),
+            1 => Ok(true),
+            x => bail!("invalid bool byte {x:#04x}"),
+        }
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn opt_f64(&mut self) -> Result<Option<f64>> {
+        Ok(if self.bool()? { Some(self.f64()?) } else { None })
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.alloc_len(1)?;
+        Ok(std::str::from_utf8(self.bytes(n)?)?.to_string())
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.alloc_len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f32::from_bits(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap())));
+        }
+        Ok(out)
+    }
+
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.alloc_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.alloc_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    /// All scalar fields consumed — payloads must be read exactly.
+    pub fn done(&self) -> Result<()> {
+        ensure!(self.remaining() == 0, "{} unread payload bytes", self.remaining());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_sections() -> Vec<Section> {
+        let mut e = Enc::new();
+        e.u64(42).f64(1.5).opt_f64(None).opt_f64(Some(-0.25)).str("hello").bool(true);
+        e.f32s(&[1.0, -2.5, f32::MIN_POSITIVE]).f64s(&[0.1, 0.2]).u64s(&[7, 8, 9]);
+        vec![
+            ("alpha".to_string(), e.finish()),
+            ("empty".to_string(), Vec::new()),
+            ("raw".to_string(), (0u8..255).collect()),
+        ]
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise() {
+        let sections = sample_sections();
+        let img = encode(&sections);
+        assert_eq!(decode(&img).unwrap(), sections);
+    }
+
+    #[test]
+    fn enc_dec_scalars_roundtrip() {
+        let mut e = Enc::new();
+        e.u64(u64::MAX).f64(f64::NAN).opt_f64(Some(2.0)).str("é😀").bool(false);
+        let buf = e.finish();
+        let mut d = Dec::new(&buf);
+        assert_eq!(d.u64().unwrap(), u64::MAX);
+        assert!(d.f64().unwrap().is_nan());
+        assert_eq!(d.opt_f64().unwrap(), Some(2.0));
+        assert_eq!(d.str().unwrap(), "é😀");
+        assert!(!d.bool().unwrap());
+        d.done().unwrap();
+    }
+
+    #[test]
+    fn corruption_names_the_section() {
+        let sections = sample_sections();
+        let img = encode(&sections);
+        // Flip one payload byte of the "raw" section (near the file end,
+        // before the trailing file checksum) and repair the file checksum
+        // so the per-section check is what fires.
+        let mut bad = img.clone();
+        let flip_at = bad.len() - 8 - 10;
+        bad[flip_at] ^= 0x40;
+        let body_end = bad.len() - 8;
+        let sum = fnv64(&bad[..body_end]).to_le_bytes();
+        bad[body_end..].copy_from_slice(&sum);
+        let err = decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("\"raw\""), "error should name the section: {err}");
+        assert!(err.contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn flipped_bit_fails_file_checksum() {
+        let img = encode(&sample_sections());
+        for at in [0, 9, img.len() / 2, img.len() - 9] {
+            let mut bad = img.clone();
+            bad[at] ^= 1;
+            assert!(decode(&bad).is_err(), "flip at {at} must not decode");
+        }
+    }
+
+    #[test]
+    fn truncation_fails_loudly() {
+        let img = encode(&sample_sections());
+        for keep in [0, 4, MAGIC.len(), img.len() / 3, img.len() - 1] {
+            assert!(decode(&img[..keep]).is_err(), "truncated to {keep} must not decode");
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let mut img = encode(&sample_sections());
+        img[7] = b'2'; // future format version
+        let err = decode(&img).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_length_cannot_request_huge_alloc() {
+        let mut e = Enc::new();
+        e.f32s(&[1.0, 2.0]);
+        let mut buf = e.finish();
+        buf[..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Dec::new(&buf).f32s().is_err());
+    }
+}

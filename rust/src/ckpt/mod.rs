@@ -1,0 +1,515 @@
+//! Deterministic checkpoint/resume subsystem.
+//!
+//! A checkpoint is a directory of per-rank snapshot files plus a JSON
+//! manifest, written atomically:
+//!
+//! ```text
+//! <ckpt-dir>/
+//!   latest                    name of the newest finalized step dir
+//!   step-00000004/
+//!     MANIFEST.json           step, config fingerprint, grid, per-file FNV-64
+//!     rank-0000.bin           framed sections (ckpt::frame), per-section FNV-64
+//!     rank-0001.bin           ...one file per global rank...
+//! ```
+//!
+//! Every worker in the dp×pp grid writes its own `rank-NNNN.bin` into a
+//! hidden `.tmp-step-*` directory (each file itself written temp+rename);
+//! after a Diag-class barrier confirms all files landed, rank 0 writes the
+//! manifest, renames the whole directory into place, flips the `latest`
+//! pointer, and prunes old snapshots (retention [`RETAIN`]). A crash at any
+//! point leaves either the previous checkpoint or a complete new one —
+//! never a half-written directory behind the `latest` pointer.
+//!
+//! The *contents* of the sections — and why restoring them makes a resumed
+//! run byte-identical to the unbroken one — live in [`state`]
+//! (`Trainer::save_snapshot` / `Trainer::restore_snapshot`); see DESIGN.md
+//! §Checkpointing.
+
+pub mod frame;
+pub mod state;
+
+use std::path::{Path, PathBuf};
+
+use crate::config::TrainConfig;
+use crate::util::error::{Context, Result};
+use crate::util::json::{obj, Json};
+use crate::{bail, ensure};
+
+use frame::{fnv64, Section};
+
+/// Snapshot format version (also baked into the file magic).
+pub const VERSION: usize = 1;
+
+/// How many finalized snapshots to keep (`latest` plus one fallback).
+pub const RETAIN: usize = 2;
+
+/// FNV-64 fingerprint of every config field that shapes the training
+/// stream. Resume refuses a snapshot whose fingerprint disagrees with the
+/// live config: the restored state machine (EF residuals, warm-Q, DAC
+/// windows) is only meaningful under the exact same run. Fields that do
+/// *not* affect the stream — output/checkpoint paths, `save_every`,
+/// `resume`, `stop_after` — are deliberately excluded, so a run may be
+/// resumed with a different snapshot cadence or output directory.
+pub fn fingerprint(cfg: &TrainConfig) -> u64 {
+    let e = &cfg.edgc;
+    let canon = format!(
+        "v{VERSION};artifacts={};steps={};dp={};pp={};tp={};micro={};lr={:016x};seed={};\
+         method={};alpha={:016x};beta={:016x};window={};step_limit={};warmup={:016x};\
+         aligned={};cluster={};corpus={};sim_params={};sim_tokens={};eval_every={};\
+         overlap={};codec={}",
+        cfg.artifacts,
+        cfg.steps,
+        cfg.dp,
+        cfg.pp,
+        cfg.tp,
+        cfg.microbatches,
+        cfg.lr.to_bits(),
+        cfg.seed,
+        cfg.method.name(),
+        e.alpha.to_bits(),
+        e.beta.to_bits(),
+        e.window,
+        e.step_limit,
+        e.min_warmup_frac.to_bits(),
+        e.stage_aligned,
+        cfg.cluster.name,
+        cfg.corpus_tokens,
+        cfg.sim_params,
+        cfg.sim_tokens,
+        cfg.eval_every,
+        cfg.overlap,
+        cfg.codec.name(),
+    );
+    fnv64(canon.as_bytes())
+}
+
+pub fn step_dir_name(steps_done: usize) -> String {
+    format!("step-{steps_done:08}")
+}
+
+pub fn rank_file_name(g_rank: usize) -> String {
+    format!("rank-{g_rank:04}.bin")
+}
+
+fn tmp_step_dir(ckpt_dir: &Path, steps_done: usize) -> PathBuf {
+    ckpt_dir.join(format!(".tmp-{}", step_dir_name(steps_done)))
+}
+
+/// Write `bytes` to `path` atomically: temp file in the same directory,
+/// then rename (atomic on every platform we run on).
+fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(())
+}
+
+/// Frame and write one rank's sections into the in-progress (hidden)
+/// step directory. Returns the whole-file FNV-64 — the value the trainer
+/// all-gathers on the Diag plane so rank 0 can cross-check the manifest
+/// against what each worker actually wrote.
+pub fn write_rank_file(
+    ckpt_dir: &Path,
+    steps_done: usize,
+    g_rank: usize,
+    sections: &[Section],
+) -> Result<u64> {
+    let dir = tmp_step_dir(ckpt_dir, steps_done);
+    std::fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+    let image = frame::encode(sections);
+    let sum = fnv64(&image);
+    atomic_write(&dir.join(rank_file_name(g_rank)), &image)?;
+    Ok(sum)
+}
+
+/// Read and fully validate one rank's snapshot file from a finalized
+/// step directory.
+pub fn read_rank_file(step_dir: &Path, g_rank: usize) -> Result<Vec<Section>> {
+    let path = step_dir.join(rank_file_name(g_rank));
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading snapshot file {}", path.display()))?;
+    frame::decode(&bytes).with_context(|| format!("decoding {}", path.display()))
+}
+
+/// One rank file's manifest entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankFile {
+    pub rank: usize,
+    pub file: String,
+    pub bytes: u64,
+    pub checksum: u64,
+}
+
+/// The checkpoint manifest (`MANIFEST.json`): what `--resume` validates
+/// before touching any rank file, and what `edgc ckpt inspect` prints.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub version: usize,
+    pub step: usize,
+    pub fingerprint: u64,
+    pub world: usize,
+    pub dp: usize,
+    pub pp: usize,
+    pub ranks: Vec<RankFile>,
+}
+
+fn hex(x: u64) -> String {
+    format!("{x:#018x}")
+}
+
+fn from_hex(s: &str) -> Result<u64> {
+    let digits = s.strip_prefix("0x").context("checksum missing 0x prefix")?;
+    Ok(u64::from_str_radix(digits, 16)?)
+}
+
+impl Manifest {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("version", Json::from(self.version)),
+            ("step", Json::from(self.step)),
+            // u64 checksums don't fit f64 — stored as hex strings.
+            ("fingerprint", Json::from(hex(self.fingerprint))),
+            ("world", Json::from(self.world)),
+            ("dp", Json::from(self.dp)),
+            ("pp", Json::from(self.pp)),
+            (
+                "ranks",
+                Json::Arr(
+                    self.ranks
+                        .iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("rank", Json::from(r.rank)),
+                                ("file", Json::from(r.file.as_str())),
+                                ("bytes", Json::from(r.bytes as usize)),
+                                ("checksum", Json::from(hex(r.checksum))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let mut ranks = Vec::new();
+        for r in j.get("ranks")?.as_arr()? {
+            ranks.push(RankFile {
+                rank: r.get("rank")?.as_usize()?,
+                file: r.get("file")?.as_str()?.to_string(),
+                bytes: r.get("bytes")?.as_usize()? as u64,
+                checksum: from_hex(r.get("checksum")?.as_str()?)?,
+            });
+        }
+        Ok(Manifest {
+            version: j.get("version")?.as_usize()?,
+            step: j.get("step")?.as_usize()?,
+            fingerprint: from_hex(j.get("fingerprint")?.as_str()?)?,
+            world: j.get("world")?.as_usize()?,
+            dp: j.get("dp")?.as_usize()?,
+            pp: j.get("pp")?.as_usize()?,
+            ranks,
+        })
+    }
+
+    /// Read and parse `MANIFEST.json` from a finalized step directory.
+    pub fn read(step_dir: &Path) -> Result<Manifest> {
+        let path = step_dir.join("MANIFEST.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let m = Manifest::from_json(&Json::parse(&text)?)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        ensure!(
+            m.version == VERSION,
+            "snapshot manifest version {} unsupported (this build reads {VERSION})",
+            m.version
+        );
+        Ok(m)
+    }
+}
+
+/// Rank 0's finalization: verify every rank file landed in the hidden
+/// step directory with the checksum its writer reported, write the
+/// manifest, atomically publish the directory, flip `latest`, and prune
+/// snapshots beyond [`RETAIN`]. Returns the published directory.
+pub fn finalize(
+    ckpt_dir: &Path,
+    steps_done: usize,
+    fingerprint: u64,
+    dp: usize,
+    pp: usize,
+    rank_checksums: &[u64],
+) -> Result<PathBuf> {
+    let tmp = tmp_step_dir(ckpt_dir, steps_done);
+    let mut ranks = Vec::with_capacity(rank_checksums.len());
+    for (rank, &reported) in rank_checksums.iter().enumerate() {
+        let file = rank_file_name(rank);
+        let path = tmp.join(&file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("rank {rank} snapshot missing at {}", path.display()))?;
+        let on_disk = fnv64(&bytes);
+        ensure!(
+            on_disk == reported,
+            "rank {rank} snapshot checksum mismatch at finalize: worker reported \
+             {}, disk has {} — concurrent writer or disk fault",
+            hex(reported),
+            hex(on_disk)
+        );
+        ranks.push(RankFile { rank, file, bytes: bytes.len() as u64, checksum: on_disk });
+    }
+    let manifest = Manifest {
+        version: VERSION,
+        step: steps_done,
+        fingerprint,
+        world: rank_checksums.len(),
+        dp,
+        pp,
+        ranks,
+    };
+    atomic_write(&tmp.join("MANIFEST.json"), manifest.to_json().to_string_pretty().as_bytes())?;
+
+    let name = step_dir_name(steps_done);
+    let published = ckpt_dir.join(&name);
+    if published.exists() {
+        std::fs::remove_dir_all(&published)
+            .with_context(|| format!("replacing existing {}", published.display()))?;
+    }
+    std::fs::rename(&tmp, &published)
+        .with_context(|| format!("publishing snapshot {}", published.display()))?;
+    atomic_write(&ckpt_dir.join("latest"), name.as_bytes())?;
+    prune(ckpt_dir, RETAIN)?;
+    Ok(published)
+}
+
+/// Remove finalized `step-*` directories beyond the newest `keep`.
+fn prune(ckpt_dir: &Path, keep: usize) -> Result<()> {
+    let mut steps: Vec<String> = Vec::new();
+    for entry in std::fs::read_dir(ckpt_dir)? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().to_string();
+        if name.starts_with("step-") && entry.file_type()?.is_dir() {
+            steps.push(name);
+        }
+    }
+    // Zero-padded names sort lexicographically == numerically.
+    steps.sort();
+    for old in steps.iter().rev().skip(keep) {
+        std::fs::remove_dir_all(ckpt_dir.join(old))
+            .with_context(|| format!("pruning old snapshot {old}"))?;
+    }
+    Ok(())
+}
+
+/// Resolve a `--resume` argument to a finalized step directory: either
+/// the argument *is* one (contains `MANIFEST.json`), or it is a
+/// checkpoint root whose `latest` pointer names one.
+pub fn resolve_resume_dir(dir: &str) -> Result<PathBuf> {
+    let p = PathBuf::from(dir);
+    ensure!(p.is_dir(), "resume directory {dir:?} does not exist");
+    if p.join("MANIFEST.json").is_file() {
+        return Ok(p);
+    }
+    let pointer = p.join("latest");
+    if !pointer.is_file() {
+        bail!(
+            "{dir:?} is neither a snapshot (no MANIFEST.json) nor a checkpoint \
+             root (no `latest` pointer) — nothing to resume from"
+        );
+    }
+    let name = std::fs::read_to_string(&pointer)?.trim().to_string();
+    let target = p.join(&name);
+    ensure!(
+        target.join("MANIFEST.json").is_file(),
+        "latest pointer names {name:?} but {} has no MANIFEST.json — \
+         checkpoint directory is damaged",
+        target.display()
+    );
+    Ok(target)
+}
+
+/// `edgc ckpt inspect`: render the manifest plus every rank file's
+/// decoded section table (decoding re-verifies all checksums, so a clean
+/// inspect doubles as an integrity check).
+pub fn inspect(dir: &str) -> Result<String> {
+    use std::fmt::Write as _;
+    let step_dir = resolve_resume_dir(dir)?;
+    let m = Manifest::read(&step_dir)?;
+    let mut out = String::new();
+    let _ = writeln!(out, "snapshot {}", step_dir.display());
+    let _ = writeln!(out, "  version      {}", m.version);
+    let _ = writeln!(out, "  step         {}", m.step);
+    let _ = writeln!(out, "  fingerprint  {}", hex(m.fingerprint));
+    let _ = writeln!(out, "  grid         dp={} pp={} world={}", m.dp, m.pp, m.world);
+    for r in &m.ranks {
+        let _ = writeln!(out, "  {}  {} bytes  {}", r.file, r.bytes, hex(r.checksum));
+        let sections = read_rank_file(&step_dir, r.rank)?;
+        for (name, payload) in &sections {
+            let _ = writeln!(
+                out,
+                "    {name:<10} {:>10} bytes  {}",
+                payload.len(),
+                hex(fnv64(payload))
+            );
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("edgc-ckpt-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_step(dir: &Path, step: usize, world: usize) -> PathBuf {
+        let mut sums = Vec::new();
+        for rank in 0..world {
+            let sections =
+                vec![("meta".to_string(), vec![rank as u8; 16]), ("params".to_string(), vec![7; 64])];
+            sums.push(write_rank_file(dir, step, rank, &sections).unwrap());
+        }
+        finalize(dir, step, 0xFEED, world, 1, &sums).unwrap()
+    }
+
+    #[test]
+    fn write_finalize_read_roundtrip() {
+        let dir = tmp("roundtrip");
+        let published = write_step(&dir, 4, 2);
+        assert!(published.ends_with("step-00000004"));
+        let m = Manifest::read(&published).unwrap();
+        assert_eq!(m.step, 4);
+        assert_eq!(m.world, 2);
+        assert_eq!(m.fingerprint, 0xFEED);
+        let sections = read_rank_file(&published, 1).unwrap();
+        assert_eq!(sections[0], ("meta".to_string(), vec![1u8; 16]));
+        // latest pointer resolves to the published dir
+        let resolved = resolve_resume_dir(dir.to_str().unwrap()).unwrap();
+        assert_eq!(resolved, published);
+        // the step dir itself also resolves
+        assert_eq!(resolve_resume_dir(published.to_str().unwrap()).unwrap(), published);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retention_prunes_old_snapshots() {
+        let dir = tmp("retain");
+        for step in [2, 4, 6, 8] {
+            write_step(&dir, step, 1);
+        }
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| {
+                let n = e.unwrap().file_name().to_string_lossy().to_string();
+                n.starts_with("step-").then_some(n)
+            })
+            .collect();
+        assert_eq!(names.len(), RETAIN, "{names:?}");
+        assert!(names.contains(&"step-00000008".to_string()));
+        assert!(names.contains(&"step-00000006".to_string()));
+        let resolved = resolve_resume_dir(dir.to_str().unwrap()).unwrap();
+        assert!(resolved.ends_with("step-00000008"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_errors_are_loud_and_specific() {
+        let missing = resolve_resume_dir("/nonexistent/edgc-ckpt").unwrap_err().to_string();
+        assert!(missing.contains("does not exist"), "{missing}");
+
+        let dir = tmp("loud");
+        let empty = resolve_resume_dir(dir.to_str().unwrap()).unwrap_err().to_string();
+        assert!(empty.contains("nothing to resume"), "{empty}");
+
+        // dangling latest pointer
+        std::fs::write(dir.join("latest"), "step-00000099").unwrap();
+        let dangling = resolve_resume_dir(dir.to_str().unwrap()).unwrap_err().to_string();
+        assert!(dangling.contains("step-00000099"), "{dangling}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_rank_file_names_section() {
+        let dir = tmp("corrupt");
+        let published = write_step(&dir, 3, 1);
+        let path = published.join(rank_file_name(0));
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip a payload byte of the "params" section and repair the file
+        // checksum so the per-section check is the one that fires.
+        let at = bytes.len() - 8 - 20;
+        bytes[at] ^= 0x10;
+        let body = bytes.len() - 8;
+        let sum = fnv64(&bytes[..body]).to_le_bytes();
+        bytes[body..].copy_from_slice(&sum);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_rank_file(&published, 0).unwrap_err().to_string();
+        assert!(err.contains("\"params\""), "error must name the section: {err}");
+        // inspect surfaces the same failure instead of printing garbage
+        assert!(inspect(published.to_str().unwrap()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_rank_file_fails_loudly() {
+        let dir = tmp("trunc");
+        let published = write_step(&dir, 5, 1);
+        let path = published.join(rank_file_name(0));
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let err = read_rank_file(&published, 0).unwrap_err().to_string();
+        assert!(err.contains("checksum") || err.contains("truncated"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn inspect_renders_manifest_and_sections() {
+        let dir = tmp("inspect");
+        let published = write_step(&dir, 7, 2);
+        let text = inspect(dir.to_str().unwrap()).unwrap();
+        assert!(text.contains("step         7"), "{text}");
+        assert!(text.contains("fingerprint  0x000000000000feed"), "{text}");
+        assert!(text.contains("dp=2 pp=1 world=2"), "{text}");
+        assert!(text.contains("rank-0001.bin"), "{text}");
+        assert!(text.contains("params"), "{text}");
+        let _ = published;
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_tracks_stream_shaping_fields_only() {
+        let base = TrainConfig::default();
+        let fp = fingerprint(&base);
+        assert_eq!(fp, fingerprint(&base.clone()), "deterministic");
+        let mut lr = base.clone();
+        lr.lr *= 2.0;
+        assert_ne!(fp, fingerprint(&lr), "lr shapes the stream");
+        let mut seed = base.clone();
+        seed.seed += 1;
+        assert_ne!(fp, fingerprint(&seed));
+        let mut steps = base.clone();
+        steps.steps += 1;
+        assert_ne!(fp, fingerprint(&steps), "steps drives the DAC warm-up floor");
+        // Paths and snapshot cadence must NOT pin the fingerprint.
+        let mut knobs = base.clone();
+        knobs.out_dir = "elsewhere".into();
+        knobs.save_every = 17;
+        knobs.ckpt_dir = Some("x".into());
+        knobs.resume = Some("y".into());
+        knobs.stop_after = Some(3);
+        assert_eq!(fp, fingerprint(&knobs));
+    }
+
+    #[test]
+    fn finalize_rejects_checksum_disagreement() {
+        let dir = tmp("disagree");
+        let sum = write_rank_file(&dir, 9, 0, &[("meta".to_string(), vec![1, 2, 3])]).unwrap();
+        let err = finalize(&dir, 9, 0, 1, 1, &[sum ^ 1]).unwrap_err().to_string();
+        assert!(err.contains("rank 0"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,677 @@
+//! Trainer-state (de)serialization: what goes *inside* a rank's snapshot
+//! file, and why restoring it makes a resumed run byte-identical to the
+//! unbroken one (DESIGN.md §Checkpointing).
+//!
+//! Each worker in the dp×pp grid serializes exactly the state it owns:
+//!
+//! * `meta`     — step count, rank, world, config fingerprint
+//! * `params`   — this worker's parameter slice (full vector when pp=1)
+//! * `tied`     — last-stage-only mirror of the tied embedding slice
+//! * `adam`     — first/second moments over the same slice
+//! * `compress` — per owned tensor: warm-started Q, the private reseed
+//!   stream, and the error-feedback slot(s) this worker holds
+//! * `batcher`  — per-replica data-loader cursors
+//! * `counters` — transport byte/message counters (distributed runs), so
+//!   a resumed run's logical wire totals continue instead of resetting
+//! * `coord`    — rank 0 only: GDS sample count, the open entropy window
+//!   plus completed-window histories, the DAC controller state and its
+//!   public traces, the virtual clock, and the run accumulators (curve
+//!   rows, comm totals, error samples)
+//!
+//! Everything is stored as raw bits through [`frame::Enc`]; no float ever
+//! passes through decimal formatting, which is what makes the resumed
+//! loss curve *byte*-identical rather than merely close.
+
+use std::ops::Range;
+use std::path::Path;
+
+use crate::ckpt::{self, frame, frame::Section};
+use crate::coordinator::trainer::Trainer;
+use crate::dist::collective;
+use crate::dist::transport::{Class, Counters, LinkStats, Transport};
+use crate::ensure;
+use crate::metrics::Table;
+use crate::util::error::{Context, Result};
+
+/// Which slice of the training state one worker owns — the single
+/// description all three execution paths (centralized, DP ranks, pp×dp
+/// stage workers) reduce to when saving or restoring.
+#[derive(Clone, Debug)]
+pub struct RankLayout {
+    /// Global rank (0 for the centralized path).
+    pub g_rank: usize,
+    /// Number of rank files in the snapshot.
+    pub world: usize,
+    /// Pipeline stage, when the worker executes one (`run_rank_pp`).
+    pub stage: Option<usize>,
+    /// Error-feedback slot this worker holds (its transport-local DP
+    /// replica index); ignored when `all_slots`.
+    pub slot: usize,
+    /// Centralized runs hold *every* replica's EF slot in one process.
+    pub all_slots: bool,
+    /// Owned parameter range (the full vector unless pipelined).
+    pub my_range: Range<usize>,
+    /// Last pipeline stage additionally mirrors the tied embedding.
+    pub tied_range: Option<Range<usize>>,
+}
+
+impl RankLayout {
+    /// The centralized `Trainer::run` path: one process owns everything.
+    pub fn centralized(n_params: usize) -> RankLayout {
+        RankLayout {
+            g_rank: 0,
+            world: 1,
+            stage: None,
+            slot: 0,
+            all_slots: true,
+            my_range: 0..n_params,
+            tied_range: None,
+        }
+    }
+
+    /// One DP rank of `Trainer::run_rank`: full parameter vector, one EF
+    /// slot.
+    pub fn dp_rank(rank: usize, dp: usize, n_params: usize) -> RankLayout {
+        RankLayout {
+            g_rank: rank,
+            world: dp,
+            stage: None,
+            slot: rank,
+            all_slots: false,
+            my_range: 0..n_params,
+            tied_range: None,
+        }
+    }
+
+    /// One stage worker of `Trainer::run_rank_pp` (global rank
+    /// `replica·pp + stage`): owns its stage's parameter range, the EF
+    /// slot is the *subgroup-local* replica index, and the last stage
+    /// mirrors the tied embedding.
+    pub fn pp_rank(
+        g_rank: usize,
+        dp: usize,
+        pp: usize,
+        my_range: Range<usize>,
+        tied_range: Option<Range<usize>>,
+    ) -> RankLayout {
+        RankLayout {
+            g_rank,
+            world: dp * pp,
+            stage: Some(g_rank % pp),
+            slot: g_rank / pp,
+            all_slots: false,
+            my_range,
+            tied_range,
+        }
+    }
+}
+
+/// Rank 0's run accumulators — the part of the training stream that
+/// lives in the step loop's locals rather than in `Trainer` fields.
+#[derive(Clone, Debug, Default)]
+pub struct CoordAccum {
+    pub curve_rows: Vec<Vec<f64>>,
+    pub total_comm: usize,
+    pub total_orig: usize,
+    pub stage_comm_floats: Vec<usize>,
+    pub error_samples: Vec<(usize, String, usize, f64)>,
+    pub last_val: f64,
+    pub last_loss: f64,
+}
+
+impl CoordAccum {
+    /// Snapshot the step loop's accumulators for a save point.
+    #[allow(clippy::too_many_arguments)]
+    pub fn capture(
+        curve: &Table,
+        total_comm: usize,
+        total_orig: usize,
+        stage_comm_floats: &[usize],
+        error_samples: &[(usize, String, usize, f64)],
+        last_val: f64,
+        last_loss: f64,
+    ) -> CoordAccum {
+        CoordAccum {
+            curve_rows: curve.rows.clone(),
+            total_comm,
+            total_orig,
+            stage_comm_floats: stage_comm_floats.to_vec(),
+            error_samples: error_samples.to_vec(),
+            last_val,
+            last_loss,
+        }
+    }
+
+    /// Re-seed the step loop's accumulators from a restored snapshot.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply(
+        self,
+        curve: &mut Table,
+        total_comm: &mut usize,
+        total_orig: &mut usize,
+        stage_comm_floats: &mut [usize],
+        error_samples: &mut Vec<(usize, String, usize, f64)>,
+        last_val: &mut f64,
+        last_loss: &mut f64,
+    ) -> Result<()> {
+        let ncols = curve.columns.len();
+        for row in &self.curve_rows {
+            ensure!(
+                row.len() == ncols,
+                "restored curve row has {} columns, live table has {ncols}",
+                row.len()
+            );
+        }
+        curve.rows = self.curve_rows;
+        *total_comm = self.total_comm;
+        *total_orig = self.total_orig;
+        ensure!(
+            stage_comm_floats.len() == self.stage_comm_floats.len(),
+            "restored stage_comm_floats has {} stages, live run has {}",
+            self.stage_comm_floats.len(),
+            stage_comm_floats.len()
+        );
+        stage_comm_floats.copy_from_slice(&self.stage_comm_floats);
+        *error_samples = self.error_samples;
+        *last_val = self.last_val;
+        *last_loss = self.last_loss;
+        Ok(())
+    }
+}
+
+/// What `Trainer::restore_snapshot` hands back to the step loop.
+pub struct ResumePoint {
+    /// First step the resumed loop executes (== the snapshot's step).
+    pub start_step: usize,
+    /// Rank 0's accumulators (None on other ranks' files).
+    pub coord: Option<CoordAccum>,
+    /// Transport counter baseline at the save point (distributed runs):
+    /// merged into the live transport so logical wire totals continue.
+    pub counters_base: Option<Counters>,
+}
+
+fn enc_range(e: &mut frame::Enc, r: &Range<usize>) {
+    e.usize(r.start).usize(r.end);
+}
+
+fn dec_range(d: &mut frame::Dec) -> Result<Range<usize>> {
+    let lo = d.usize()?;
+    let hi = d.usize()?;
+    ensure!(lo <= hi, "inverted range {lo}..{hi}");
+    Ok(lo..hi)
+}
+
+fn counters_to_flat(plane: &[LinkStats]) -> Vec<u64> {
+    plane
+        .iter()
+        .flat_map(|l| {
+            [l.sent_bytes, l.sent_wire_bytes, l.sent_msgs, l.recv_bytes, l.recv_wire_bytes, l.recv_msgs]
+        })
+        .collect()
+}
+
+fn counters_from_flat(flat: &[u64]) -> Result<Vec<LinkStats>> {
+    ensure!(flat.len() % 6 == 0, "counter plane of {} words is not 6-aligned", flat.len());
+    Ok(flat
+        .chunks_exact(6)
+        .map(|c| LinkStats {
+            sent_bytes: c[0],
+            sent_wire_bytes: c[1],
+            sent_msgs: c[2],
+            recv_bytes: c[3],
+            recv_wire_bytes: c[4],
+            recv_msgs: c[5],
+        })
+        .collect())
+}
+
+impl Trainer {
+    /// Does this tensor's EF/Q state belong to the worker described by
+    /// `layout`? (Pipelined workers own only their stage's tensors.)
+    fn owns_tensor(layout: &RankLayout, stage: usize) -> bool {
+        layout.stage.map_or(true, |s| s == stage)
+    }
+
+    /// Serialize this worker's slice of the training state and write it
+    /// into the in-progress snapshot for `steps_done`. Returns the
+    /// written file's whole-file FNV-64 (the value the save barrier
+    /// all-gathers for rank 0's manifest).
+    pub fn save_snapshot(
+        &self,
+        steps_done: usize,
+        layout: &RankLayout,
+        counters: Option<&Counters>,
+        coord: Option<&CoordAccum>,
+    ) -> Result<u64> {
+        let dir = self.cfg.ckpt_dir.as_deref().context("save_snapshot without --ckpt-dir")?;
+        let mut sections: Vec<Section> = Vec::new();
+
+        let mut e = frame::Enc::new();
+        e.usize(steps_done)
+            .usize(layout.g_rank)
+            .usize(layout.world)
+            .u64(ckpt::fingerprint(&self.cfg));
+        sections.push(("meta".to_string(), e.finish()));
+
+        let mut e = frame::Enc::new();
+        enc_range(&mut e, &layout.my_range);
+        e.f32s(&self.params[layout.my_range.clone()]);
+        sections.push(("params".to_string(), e.finish()));
+
+        if let Some(tied) = &layout.tied_range {
+            let mut e = frame::Enc::new();
+            enc_range(&mut e, tied);
+            e.f32s(&self.params[tied.clone()]);
+            sections.push(("tied".to_string(), e.finish()));
+        }
+
+        let mut e = frame::Enc::new();
+        enc_range(&mut e, &layout.my_range);
+        e.f32s(&self.opt_m[layout.my_range.clone()]);
+        e.f32s(&self.opt_v[layout.my_range.clone()]);
+        sections.push(("adam".to_string(), e.finish()));
+
+        let mut e = frame::Enc::new();
+        let owned: Vec<_> = self
+            .engine
+            .tensors
+            .iter()
+            .filter(|t| Self::owns_tensor(layout, t.stage))
+            .collect();
+        e.usize(owned.len());
+        for t in owned {
+            let c = &t.comp;
+            e.str(&t.spec.name).usize(c.m).usize(c.n).usize(c.r_max);
+            e.f32s(&c.q.data);
+            let (rs, rspare) = c.reseed_snapshot();
+            e.u64(rs);
+            match rspare {
+                Some(v) => e.bool(true).f64(v),
+                None => e.bool(false),
+            };
+            if c.error_feedback && layout.all_slots {
+                e.usize(c.errors.len());
+                for (slot, err) in c.errors.iter().enumerate() {
+                    e.usize(slot).f32s(err);
+                }
+            } else if c.error_feedback {
+                ensure!(
+                    layout.slot < c.errors.len(),
+                    "EF slot {} out of {} for tensor {:?}",
+                    layout.slot,
+                    c.errors.len(),
+                    t.spec.name
+                );
+                e.usize(1).usize(layout.slot).f32s(&c.errors[layout.slot]);
+            } else {
+                e.usize(0);
+            }
+        }
+        sections.push(("compress".to_string(), e.finish()));
+
+        let mut e = frame::Enc::new();
+        let cursors: Vec<u64> = self.batchers.iter().map(|b| b.cursor() as u64).collect();
+        e.u64s(&cursors);
+        sections.push(("batcher".to_string(), e.finish()));
+
+        if let Some(cnt) = counters {
+            let mut e = frame::Enc::new();
+            e.usize(cnt.data.len());
+            e.u64s(&counters_to_flat(&cnt.data));
+            e.u64s(&counters_to_flat(&cnt.diag));
+            sections.push(("counters".to_string(), e.finish()));
+        }
+
+        if let Some(acc) = coord {
+            let mut e = frame::Enc::new();
+            e.usize(self.gds.measure_count());
+            let (meas, sig) = self.window.open_window();
+            e.f64s(meas).f64s(sig);
+            e.f64s(&self.window.history).f64s(&self.window.sigma_history);
+            match &self.dac {
+                None => {
+                    e.bool(false);
+                }
+                Some(dac) => {
+                    let (h_ini, h_peak, decline, warm, r_prev) = dac.snapshot_state();
+                    e.bool(true).opt_f64(h_ini).f64(h_peak).usize(decline).bool(warm).f64(r_prev);
+                    e.f64s(&dac.entropy_trace);
+                    e.usize(dac.rank_trace.len());
+                    for &(w, r) in &dac.rank_trace {
+                        e.usize(w).f64(r);
+                    }
+                }
+            }
+            e.f64(self.clock.total).f64(self.clock.comm_total).f64(self.clock.compute_total);
+            e.usize(acc.curve_rows.len());
+            for row in &acc.curve_rows {
+                e.f64s(row);
+            }
+            e.usize(acc.total_comm).usize(acc.total_orig);
+            let scf: Vec<u64> = acc.stage_comm_floats.iter().map(|&x| x as u64).collect();
+            e.u64s(&scf);
+            e.usize(acc.error_samples.len());
+            for (step, name, stage, err) in &acc.error_samples {
+                e.usize(*step).str(name).usize(*stage).f64(*err);
+            }
+            e.f64(acc.last_val).f64(acc.last_loss);
+            sections.push(("coord".to_string(), e.finish()));
+        }
+
+        ckpt::write_rank_file(Path::new(dir), steps_done, layout.g_rank, &sections)
+    }
+
+    /// Locate the snapshot named by `cfg.resume`, validate it against the
+    /// live config, and restore this worker's slice of the training
+    /// state. Every mismatch is a loud typed error naming what differs.
+    pub fn restore_snapshot(&mut self, layout: &RankLayout) -> Result<ResumePoint> {
+        let dir = self.cfg.resume.as_deref().context("restore_snapshot without --resume")?;
+        let step_dir = ckpt::resolve_resume_dir(dir)?;
+        let m = ckpt::Manifest::read(&step_dir)?;
+
+        let live_fp = ckpt::fingerprint(&self.cfg);
+        ensure!(
+            m.fingerprint == live_fp,
+            "snapshot fingerprint {:#018x} disagrees with the live config's {live_fp:#018x} — \
+             the snapshot was written under a different run configuration \
+             (steps/seed/method/dp/pp/codec/... must all match to resume)",
+            m.fingerprint
+        );
+        ensure!(
+            m.world == layout.world && m.dp == self.cfg.dp && m.pp == self.cfg.pp,
+            "snapshot grid dp={} pp={} world={} does not match the live run's \
+             dp={} pp={} world={}",
+            m.dp,
+            m.pp,
+            m.world,
+            self.cfg.dp,
+            self.cfg.pp,
+            layout.world
+        );
+
+        let sections = ckpt::read_rank_file(&step_dir, layout.g_rank)?;
+        let section = |name: &str| -> Result<&[u8]> {
+            sections
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, p)| p.as_slice())
+                .with_context(|| format!("snapshot has no {name:?} section"))
+        };
+
+        let mut d = frame::Dec::new(section("meta")?);
+        let steps_done = d.usize()?;
+        let file_rank = d.usize()?;
+        let file_world = d.usize()?;
+        let file_fp = d.u64()?;
+        d.done().map_err(|e| e.context("section \"meta\""))?;
+        ensure!(
+            file_rank == layout.g_rank && file_world == layout.world,
+            "rank file says rank {file_rank}/{file_world}, expected {}/{}",
+            layout.g_rank,
+            layout.world
+        );
+        ensure!(steps_done == m.step, "meta step {steps_done} != manifest step {}", m.step);
+        ensure!(file_fp == m.fingerprint, "meta fingerprint disagrees with the manifest");
+
+        let mut d = frame::Dec::new(section("params")?);
+        let r = dec_range(&mut d)?;
+        ensure!(
+            r == layout.my_range,
+            "params range {}..{} does not match this worker's {}..{}",
+            r.start,
+            r.end,
+            layout.my_range.start,
+            layout.my_range.end
+        );
+        let xs = d.f32s()?;
+        d.done().map_err(|e| e.context("section \"params\""))?;
+        ensure!(xs.len() == r.len(), "params slab of {} floats for a {}-range", xs.len(), r.len());
+        self.params[r].copy_from_slice(&xs);
+
+        if let Some(tied) = &layout.tied_range {
+            let mut d = frame::Dec::new(section("tied")?);
+            let r = dec_range(&mut d)?;
+            ensure!(r == *tied, "tied range {}..{} unexpected", r.start, r.end);
+            let xs = d.f32s()?;
+            d.done().map_err(|e| e.context("section \"tied\""))?;
+            ensure!(xs.len() == r.len(), "tied slab length mismatch");
+            self.params[r].copy_from_slice(&xs);
+        }
+
+        let mut d = frame::Dec::new(section("adam")?);
+        let r = dec_range(&mut d)?;
+        ensure!(r == layout.my_range, "adam range {}..{} unexpected", r.start, r.end);
+        let ms = d.f32s()?;
+        let vs = d.f32s()?;
+        d.done().map_err(|e| e.context("section \"adam\""))?;
+        ensure!(ms.len() == r.len() && vs.len() == r.len(), "adam slab length mismatch");
+        self.opt_m[r.clone()].copy_from_slice(&ms);
+        self.opt_v[r].copy_from_slice(&vs);
+
+        let mut d = frame::Dec::new(section("compress")?);
+        let count = d.usize()?;
+        let mut consumed = 0usize;
+        for t in self.engine.tensors.iter_mut().filter(|t| Self::owns_tensor(layout, t.stage)) {
+            ensure!(
+                consumed < count,
+                "snapshot has {count} compressor entries, run owns more (next: {:?})",
+                t.spec.name
+            );
+            consumed += 1;
+            let name = d.str()?;
+            ensure!(
+                name == t.spec.name,
+                "compressor entry {name:?} does not match engine tensor {:?} — \
+                 tensor order diverged",
+                t.spec.name
+            );
+            let c = &mut t.comp;
+            let (m_, n_, r_max) = (d.usize()?, d.usize()?, d.usize()?);
+            ensure!(
+                m_ == c.m && n_ == c.n && r_max == c.r_max,
+                "tensor {name:?} shape {m_}x{n_} r_max {r_max} != live {}x{} r_max {}",
+                c.m,
+                c.n,
+                c.r_max
+            );
+            let q = d.f32s()?;
+            ensure!(q.len() == c.q.data.len(), "tensor {name:?} Q slab length mismatch");
+            c.q.data.copy_from_slice(&q);
+            let rs = d.u64()?;
+            let rspare = if d.bool()? { Some(d.f64()?) } else { None };
+            c.reseed_restore(rs, rspare);
+            let slots = d.usize()?;
+            ensure!(
+                (slots == 0) == !c.error_feedback,
+                "tensor {name:?} has {slots} EF slots, live error_feedback={}",
+                c.error_feedback
+            );
+            for _ in 0..slots {
+                let slot = d.usize()?;
+                ensure!(
+                    slot < c.errors.len(),
+                    "tensor {name:?} EF slot {slot} out of {}",
+                    c.errors.len()
+                );
+                let err = d.f32s()?;
+                ensure!(err.len() == c.errors[slot].len(), "tensor {name:?} EF slab mismatch");
+                c.errors[slot].copy_from_slice(&err);
+            }
+        }
+        ensure!(consumed == count, "snapshot has {count} compressor entries, run owns {consumed}");
+        d.done().map_err(|e| e.context("section \"compress\""))?;
+
+        let mut d = frame::Dec::new(section("batcher")?);
+        let cursors = d.u64s()?;
+        d.done().map_err(|e| e.context("section \"batcher\""))?;
+        ensure!(
+            cursors.len() == self.batchers.len(),
+            "snapshot has {} data cursors, run has {} replicas",
+            cursors.len(),
+            self.batchers.len()
+        );
+        for (b, &c) in self.batchers.iter_mut().zip(&cursors) {
+            b.set_cursor(c as usize);
+        }
+
+        let counters_base = match section("counters") {
+            Err(_) => None,
+            Ok(payload) => {
+                let mut d = frame::Dec::new(payload);
+                let world = d.usize()?;
+                let data = counters_from_flat(&d.u64s()?)?;
+                let diag = counters_from_flat(&d.u64s()?)?;
+                d.done().map_err(|e| e.context("section \"counters\""))?;
+                ensure!(
+                    data.len() == world && diag.len() == world,
+                    "counter planes of {}/{} links for world {world}",
+                    data.len(),
+                    diag.len()
+                );
+                Some(Counters::from_links(data, diag))
+            }
+        };
+
+        let coord = match section("coord") {
+            Err(_) => None,
+            Ok(payload) => {
+                let mut d = frame::Dec::new(payload);
+                self.gds.set_measure_count(d.usize()?);
+                let meas = d.f64s()?;
+                let sig = d.f64s()?;
+                self.window.set_open_window(meas, sig);
+                self.window.history = d.f64s()?;
+                self.window.sigma_history = d.f64s()?;
+                let dac_present = d.bool()?;
+                ensure!(
+                    dac_present == self.dac.is_some(),
+                    "snapshot {} a DAC controller, live run {}",
+                    if dac_present { "carries" } else { "lacks" },
+                    if self.dac.is_some() { "has one" } else { "does not" }
+                );
+                if let Some(dac) = self.dac.as_mut() {
+                    let h_ini = d.opt_f64()?;
+                    let h_peak = d.f64()?;
+                    let decline = d.usize()?;
+                    let warm = d.bool()?;
+                    let r_prev = d.f64()?;
+                    dac.restore_state(h_ini, h_peak, decline, warm, r_prev);
+                    dac.entropy_trace = d.f64s()?;
+                    let n = d.usize()?;
+                    let mut trace = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let w = d.usize()?;
+                        trace.push((w, d.f64()?));
+                    }
+                    dac.rank_trace = trace;
+                }
+                self.clock.total = d.f64()?;
+                self.clock.comm_total = d.f64()?;
+                self.clock.compute_total = d.f64()?;
+                let nrows = d.usize()?;
+                let mut curve_rows = Vec::with_capacity(nrows);
+                for _ in 0..nrows {
+                    curve_rows.push(d.f64s()?);
+                }
+                let total_comm = d.usize()?;
+                let total_orig = d.usize()?;
+                let stage_comm_floats: Vec<usize> =
+                    d.u64s()?.into_iter().map(|x| x as usize).collect();
+                let n = d.usize()?;
+                let mut error_samples = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let step = d.usize()?;
+                    let name = d.str()?;
+                    let stage = d.usize()?;
+                    error_samples.push((step, name, stage, d.f64()?));
+                }
+                let last_val = d.f64()?;
+                let last_loss = d.f64()?;
+                d.done().map_err(|e| e.context("section \"coord\""))?;
+                Some(CoordAccum {
+                    curve_rows,
+                    total_comm,
+                    total_orig,
+                    stage_comm_floats,
+                    error_samples,
+                    last_val,
+                    last_loss,
+                })
+            }
+        };
+
+        Ok(ResumePoint { start_step: steps_done, coord, counters_base })
+    }
+
+    /// `cfg.resume` as a [`ResumePoint`], or `None` when not resuming —
+    /// the one-liner the three step loops call before their first step.
+    pub fn resume_point(&mut self, layout: &RankLayout) -> Result<Option<ResumePoint>> {
+        if self.cfg.resume.is_none() {
+            return Ok(None);
+        }
+        Ok(Some(self.restore_snapshot(layout)?))
+    }
+
+    /// Is `step` (0-based, just executed) a save point?
+    pub fn save_due(&self, step: usize) -> bool {
+        self.cfg.save_every > 0 && (step + 1) % self.cfg.save_every == 0
+    }
+
+    /// Centralized save point: one rank file, finalized immediately.
+    pub fn save_centralized(
+        &self,
+        steps_done: usize,
+        layout: &RankLayout,
+        coord: &CoordAccum,
+    ) -> Result<()> {
+        let sum = self.save_snapshot(steps_done, layout, None, Some(coord))?;
+        let dir = self.cfg.ckpt_dir.as_deref().context("save without --ckpt-dir")?;
+        ckpt::finalize(
+            Path::new(dir),
+            steps_done,
+            ckpt::fingerprint(&self.cfg),
+            self.cfg.dp,
+            self.cfg.pp,
+            &[sum],
+        )?;
+        Ok(())
+    }
+
+    /// Distributed save point: every rank writes its file, a Diag-class
+    /// barrier (all-gather of file checksums) proves all files landed,
+    /// then rank 0 finalizes. Runs at the same program-order point of
+    /// the step on every rank, so the per-link-FIFO transports keep the
+    /// barrier from ever crossing data-class traffic.
+    pub fn save_distributed(
+        &self,
+        tr: &mut dyn Transport,
+        comm: Option<&dyn Transport>,
+        steps_done: usize,
+        layout: &RankLayout,
+        coord: Option<&CoordAccum>,
+    ) -> Result<()> {
+        // Counter snapshot BEFORE the save barrier's own (diag) traffic:
+        // the snapshot must describe the training stream, not the save.
+        let mut snap = tr.counters().clone();
+        if let Some(c) = comm {
+            snap.merge(c.counters());
+        }
+        let sum = self.save_snapshot(steps_done, layout, Some(&snap), coord)?;
+        tr.set_class(Class::Diag);
+        let sums = collective::all_gather_u64(tr, sum);
+        tr.set_class(Class::Data);
+        let sums = sums?;
+        if layout.g_rank == 0 {
+            let dir = self.cfg.ckpt_dir.as_deref().context("save without --ckpt-dir")?;
+            ckpt::finalize(
+                Path::new(dir),
+                steps_done,
+                ckpt::fingerprint(&self.cfg),
+                self.cfg.dp,
+                self.cfg.pp,
+                &sums,
+            )?;
+        }
+        Ok(())
+    }
+}

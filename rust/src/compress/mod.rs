@@ -105,6 +105,19 @@ impl TensorCompressor {
         }
     }
 
+    /// Snapshot the private reseed stream position for checkpointing
+    /// (live cross-step state: [`TensorCompressor::ensure_active_columns`]
+    /// draws from it whenever the DAC raises the rank back up).
+    pub fn reseed_snapshot(&self) -> (u64, Option<f64>) {
+        self.reseed.snapshot()
+    }
+
+    /// Restore the reseed stream captured by
+    /// [`TensorCompressor::reseed_snapshot`].
+    pub fn reseed_restore(&mut self, state: u64, spare: Option<f64>) {
+        self.reseed = Rng::restore(state, spare);
+    }
+
     /// Re-seed dead (≈zero) columns among the first `r_eff` of Q.
     ///
     /// After the rank decreases, masked columns are stored as zeros; if

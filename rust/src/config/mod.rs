@@ -290,6 +290,17 @@ pub struct TrainConfig {
     pub codec: Codec,
     /// Output directory for metrics tables.
     pub out_dir: String,
+    /// Snapshot every k steps into [`TrainConfig::ckpt_dir`] (0 = never).
+    pub save_every: usize,
+    /// Checkpoint directory (`--ckpt-dir`); required when `save_every > 0`.
+    pub ckpt_dir: Option<String>,
+    /// Resume from the latest snapshot in this directory (`--resume`).
+    pub resume: Option<String>,
+    /// Stop after this many steps *without* changing the planned horizon
+    /// (`--stop-after`): the DAC warm-up floor and schedules still derive
+    /// from `steps`, so an interrupted-then-resumed run is byte-identical
+    /// to the unbroken one. Used by the resume-determinism tests and CI.
+    pub stop_after: Option<usize>,
 }
 
 impl Default for TrainConfig {
@@ -313,6 +324,10 @@ impl Default for TrainConfig {
             overlap: false,
             codec: Codec::Off,
             out_dir: "runs".into(),
+            save_every: 0,
+            ckpt_dir: None,
+            resume: None,
+            stop_after: None,
         }
     }
 }
@@ -355,8 +370,36 @@ impl TrainConfig {
         c.cluster = cluster_by_name(&t.str_or("cluster.preset", "cluster1")?)?;
         c.sim_params = t.usize_or("cluster.sim_params", c.sim_params)?;
         c.sim_tokens = t.usize_or("cluster.sim_tokens", c.sim_tokens)?;
+        c.save_every = t.usize_or("run.save_every", c.save_every)?;
+        if let Some(v) = t.get("run.ckpt_dir") {
+            c.ckpt_dir = Some(v.as_str().context("run.ckpt_dir")?.to_string());
+        }
         c.edgc.validate().context("[edgc] section")?;
+        c.validate_ckpt().context("[run] section")?;
         Ok(c)
+    }
+
+    /// Reject inconsistent checkpoint knobs (shared by TOML and CLI
+    /// layering — both end here). Filesystem checks (directory writable,
+    /// snapshot present) happen at use sites, which report richer errors.
+    pub fn validate_ckpt(&self) -> Result<()> {
+        if self.save_every > 0 {
+            crate::ensure!(
+                self.ckpt_dir.is_some(),
+                "save_every = {} requires a checkpoint directory (ckpt_dir / --ckpt-dir)",
+                self.save_every
+            );
+        }
+        if let Some(dir) = &self.ckpt_dir {
+            crate::ensure!(!dir.is_empty(), "ckpt_dir must not be empty");
+        }
+        if let Some(dir) = &self.resume {
+            crate::ensure!(!dir.is_empty(), "resume directory must not be empty");
+        }
+        if let Some(k) = self.stop_after {
+            crate::ensure!(k >= 1, "stop_after must be >= 1 (got {k})");
+        }
+        Ok(())
     }
 }
 
@@ -449,6 +492,22 @@ codec = "lossless"
         }
         assert!(TrainConfig::from_toml("[edgc]\nalpha = 1.0\nbeta = 0.05\n").is_ok());
         assert!(EdgcParams::default().validate().is_ok());
+    }
+
+    #[test]
+    fn ckpt_knobs_parse_and_validate() {
+        let c = TrainConfig::from_toml("[run]\nsave_every = 5\nckpt_dir = \"ckpts\"\n").unwrap();
+        assert_eq!(c.save_every, 5);
+        assert_eq!(c.ckpt_dir.as_deref(), Some("ckpts"));
+        // save_every without a directory is the broken half-config.
+        let e = TrainConfig::from_toml("[run]\nsave_every = 5\n").unwrap_err().to_string();
+        assert!(e.contains("ckpt_dir"), "{e}");
+        // save_every = 0 (off) needs no directory.
+        assert!(TrainConfig::from_toml("[run]\nsave_every = 0\n").is_ok());
+        assert!(TrainConfig::from_toml("[run]\nckpt_dir = \"\"\n").is_err());
+        let mut bad = TrainConfig::default();
+        bad.stop_after = Some(0);
+        assert!(bad.validate_ckpt().is_err());
     }
 
     #[test]

@@ -177,6 +177,37 @@ impl Dac {
         self.rank_trace.push((self.entropy_trace.len() - 1, r_new));
     }
 
+    /// Capture the private warm-up/controller state for checkpointing:
+    /// `(h_ini if activated, h_peak, decline_windows, warmup_done, r_prev)`.
+    /// The public traces are snapshotted separately by the caller.
+    pub fn snapshot_state(&self) -> (Option<f64>, f64, usize, bool, f64) {
+        (
+            self.activation.map(|a| a.h_ini),
+            self.h_peak,
+            self.decline_windows,
+            self.warmup_done,
+            self.r_prev,
+        )
+    }
+
+    /// Restore the controller state captured by [`Dac::snapshot_state`].
+    /// Must be applied to a freshly-built `Dac` with identical construction
+    /// parameters, otherwise post-resume decisions diverge.
+    pub fn restore_state(
+        &mut self,
+        h_ini: Option<f64>,
+        h_peak: f64,
+        decline_windows: usize,
+        warmup_done: bool,
+        r_prev: f64,
+    ) {
+        self.activation = h_ini.map(|h| ActivationRef { h_ini: h });
+        self.h_peak = h_peak;
+        self.decline_windows = decline_windows;
+        self.warmup_done = warmup_done;
+        self.r_prev = r_prev;
+    }
+
     /// Stage-1 rank for the current window (None during warm-up).
     pub fn stage1_rank(&self) -> Option<usize> {
         if self.warmup_done {
@@ -354,6 +385,33 @@ mod tests {
         }
         assert_eq!(d.entropy_trace.len(), 6);
         assert!(!d.rank_trace.is_empty());
+    }
+
+    #[test]
+    fn snapshot_restore_reproduces_decisions() {
+        // Drive one controller halfway, snapshot, rebuild a fresh one,
+        // restore, and check the two make bitwise-equal decisions on the
+        // remaining windows (the checkpoint/resume contract).
+        let entropies = [4.0, 3.95, 3.9, 3.0, 2.5, 2.0, 2.4, 2.6];
+        let mut a = mk(100, 10);
+        for (w, &h) in entropies.iter().enumerate().take(4) {
+            a.on_window(10 + w * 10, h);
+        }
+        let (h_ini, h_peak, dw, done, r_prev) = a.snapshot_state();
+        let mut b = mk(100, 10);
+        b.restore_state(h_ini, h_peak, dw, done, r_prev);
+        b.entropy_trace = a.entropy_trace.clone();
+        b.rank_trace = a.rank_trace.clone();
+        for (w, &h) in entropies.iter().enumerate().skip(4) {
+            a.on_window(10 + w * 10, h);
+            b.on_window(10 + w * 10, h);
+        }
+        assert_eq!(a.stage1_rank(), b.stage1_rank());
+        assert_eq!(a.rank_trace, b.rank_trace);
+        assert_eq!(
+            a.entropy_trace.iter().map(|h| h.to_bits()).collect::<Vec<_>>(),
+            b.entropy_trace.iter().map(|h| h.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

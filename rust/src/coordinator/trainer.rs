@@ -17,6 +17,7 @@ use std::time::Instant;
 use crate::util::error::{Context, Result};
 
 use crate::baselines;
+use crate::ckpt::state::{CoordAccum, RankLayout};
 use crate::config::{Method, TrainConfig};
 use crate::coordinator::clock::{BucketCost, VirtualClock};
 use crate::coordinator::dac::{Dac, RankBounds};
@@ -186,14 +187,16 @@ pub struct Trainer {
     pub backend: Backend,
     pub engine: Engine,
     pub dac: Option<Dac>,
-    params: Vec<f32>,
-    opt_m: Vec<f32>,
-    opt_v: Vec<f32>,
-    batchers: Vec<Batcher>,
+    // pub(crate): the checkpoint layer (`ckpt::state`) serializes these
+    // directly — they are the complete cross-step training state.
+    pub(crate) params: Vec<f32>,
+    pub(crate) opt_m: Vec<f32>,
+    pub(crate) opt_v: Vec<f32>,
+    pub(crate) batchers: Vec<Batcher>,
     corpus: SynthCorpus,
-    gds: Gds,
-    window: WindowStats,
-    clock: VirtualClock,
+    pub(crate) gds: Gds,
+    pub(crate) window: WindowStats,
+    pub(crate) clock: VirtualClock,
 }
 
 impl Trainer {
@@ -440,7 +443,30 @@ impl Trainer {
 
         let mut last_val = f64::NAN;
         let mut last_loss = f64::NAN;
-        for step in 0..self.cfg.steps {
+
+        // Checkpoint plumbing: restore a snapshot when resuming, and
+        // honor --stop-after (model an interruption at step k without
+        // changing the planned horizon the DAC warm-up floor derives
+        // from).
+        let layout = RankLayout::centralized(self.params.len());
+        let mut start_step = 0usize;
+        if let Some(rp) = self.resume_point(&layout)? {
+            start_step = rp.start_step;
+            rp.coord
+                .context("snapshot lacks the coordinator section")?
+                .apply(
+                    &mut curve,
+                    &mut total_comm,
+                    &mut total_orig,
+                    &mut stage_comm_floats,
+                    &mut error_samples,
+                    &mut last_val,
+                    &mut last_loss,
+                )?;
+        }
+        let end_step = self.cfg.stop_after.map_or(self.cfg.steps, |k| k.min(self.cfg.steps));
+
+        for step in start_step..end_step {
             // 1. per-replica train steps
             let mut losses = Vec::with_capacity(self.cfg.dp);
             let mut grads = Vec::with_capacity(self.cfg.dp);
@@ -512,6 +538,19 @@ impl Trainer {
                 iter_time,
                 self.clock.total,
             ]);
+
+            if self.save_due(step) {
+                let acc = CoordAccum::capture(
+                    &curve,
+                    total_comm,
+                    total_orig,
+                    &stage_comm_floats,
+                    &error_samples,
+                    last_val,
+                    last_loss,
+                );
+                self.save_centralized(step + 1, &layout, &acc)?;
+            }
         }
 
         // final evaluation
@@ -628,7 +667,34 @@ impl Trainer {
 
         let mut last_val = f64::NAN;
         let mut last_loss = f64::NAN;
-        for step in 0..self.cfg.steps {
+
+        // Checkpoint plumbing (see `run`): every rank restores its own
+        // slice; the restored counter baseline merges into the live
+        // transport so logical wire totals continue across the resume.
+        let layout = RankLayout::dp_rank(rank, self.cfg.dp, self.params.len());
+        let mut start_step = 0usize;
+        if let Some(rp) = self.resume_point(&layout)? {
+            start_step = rp.start_step;
+            if let Some(base) = rp.counters_base {
+                tr.counters_mut().merge(&base);
+            }
+            if rank == 0 {
+                rp.coord
+                    .context("rank-0 snapshot lacks the coordinator section")?
+                    .apply(
+                        &mut curve,
+                        &mut total_comm,
+                        &mut total_orig,
+                        &mut stage_comm_floats,
+                        &mut error_samples,
+                        &mut last_val,
+                        &mut last_loss,
+                    )?;
+            }
+        }
+        let end_step = self.cfg.stop_after.map_or(self.cfg.steps, |k| k.min(self.cfg.steps));
+
+        for step in start_step..end_step {
             let batch = self.batchers[rank].next_train();
 
             // rank decision on rank 0 (it owns the DAC), broadcast —
@@ -742,6 +808,21 @@ impl Trainer {
                     iter_time,
                     self.clock.total,
                 ]);
+            }
+
+            if self.save_due(step) {
+                let acc = (rank == 0).then(|| {
+                    CoordAccum::capture(
+                        &curve,
+                        total_comm,
+                        total_orig,
+                        &stage_comm_floats,
+                        &error_samples,
+                        last_val,
+                        last_loss,
+                    )
+                });
+                self.save_distributed(tr, comm.as_deref(), step + 1, &layout, acc.as_ref())?;
             }
         }
 
@@ -1007,7 +1088,41 @@ impl Trainer {
 
         let mut last_val = f64::NAN;
         let mut last_loss = f64::NAN;
-        for step in 0..self.cfg.steps {
+
+        // Checkpoint plumbing (see `run`): each stage worker saves and
+        // restores exactly its own parameter/moment/EF slices per the
+        // StagePlan; the last stage also mirrors the tied embedding it
+        // reads before stage 0's per-step sync overwrites it.
+        let layout = RankLayout::pp_rank(
+            g_rank,
+            dp,
+            pp,
+            my_range.clone(),
+            (stage + 1 == pp).then(|| tok_range.clone()),
+        );
+        let mut start_step = 0usize;
+        if let Some(rp) = self.resume_point(&layout)? {
+            start_step = rp.start_step;
+            if let Some(base) = rp.counters_base {
+                tr.counters_mut().merge(&base);
+            }
+            if g_rank == 0 {
+                rp.coord
+                    .context("rank-0 snapshot lacks the coordinator section")?
+                    .apply(
+                        &mut curve,
+                        &mut total_comm,
+                        &mut total_orig,
+                        &mut stage_comm_floats,
+                        &mut error_samples,
+                        &mut last_val,
+                        &mut last_loss,
+                    )?;
+            }
+        }
+        let end_step = self.cfg.stop_after.map_or(self.cfg.steps, |k| k.min(self.cfg.steps));
+
+        for step in start_step..end_step {
             let batch = self.batchers[replica].next_train();
 
             // rank decision on the coordinator (it owns the DAC), broadcast
@@ -1127,6 +1242,13 @@ impl Trainer {
             }
 
             if g_rank != 0 {
+                // Save point for non-coordinator workers: same
+                // program-order position in the step as rank 0's hook
+                // below (after all of this step's diag sends), so the
+                // barrier's diag collective never crosses step traffic.
+                if self.save_due(step) {
+                    self.save_distributed(tr, comm.as_deref(), step + 1, &layout, None)?;
+                }
                 continue;
             }
 
@@ -1258,6 +1380,19 @@ impl Trainer {
                 iter_time,
                 self.clock.total,
             ]);
+
+            if self.save_due(step) {
+                let acc = CoordAccum::capture(
+                    &curve,
+                    total_comm,
+                    total_orig,
+                    &stage_comm_floats,
+                    &error_samples,
+                    last_val,
+                    last_loss,
+                );
+                self.save_distributed(tr, comm.as_deref(), step + 1, &layout, Some(&acc))?;
+            }
         }
 
         // per-stage replica consistency: every DP replica of this stage

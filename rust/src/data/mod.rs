@@ -161,6 +161,17 @@ impl Batcher {
     pub fn train_tokens(&self) -> usize {
         self.train.len()
     }
+
+    /// The stream position — together with the construction arguments this
+    /// is the batcher's entire state, so checkpoints store only this.
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    /// Restore a stream position captured by [`Batcher::cursor`].
+    pub fn set_cursor(&mut self, cursor: usize) {
+        self.cursor = cursor;
+    }
 }
 
 /// A held-out continuation probe (Table-IV substitute): after a shared

@@ -199,6 +199,39 @@ mod tests {
         assert!(msg.contains("rank"), "{msg}");
     }
 
+    /// Fault injection: rank 1 completes one collective, then dies
+    /// mid-step (its error return drops its transport, closing its
+    /// links). The survivors — blocked waiting on the dead rank's next
+    /// message — must get a typed error naming the dead rank on both
+    /// transports; a watchdog bounds the teardown so a regression here
+    /// fails instead of hanging the suite.
+    #[test]
+    fn dead_rank_mid_step_tears_group_down_loudly() {
+        for kind in [TransportKind::Mem, TransportKind::Tcp] {
+            let (tx, rx) = std::sync::mpsc::channel();
+            std::thread::spawn(move || {
+                tx.send(run_group(kind, 3, |rank, tr| {
+                    let mut buf = vec![rank as f32; 4];
+                    collective::all_reduce_mean(tr, &mut buf)?;
+                    if rank == 1 {
+                        crate::bail!("injected fault: rank 1 dies mid-step");
+                    }
+                    tr.recv(1).map(|_| buf[0])
+                }))
+                .ok();
+            });
+            let r = rx
+                .recv_timeout(std::time::Duration::from_secs(60))
+                .unwrap_or_else(|_| panic!("{}: group hung after rank 1 died", kind.name()));
+            let msg = r.unwrap_err().to_string();
+            assert!(
+                msg.contains("rank 1"),
+                "{}: teardown error must name the dead rank: {msg}",
+                kind.name()
+            );
+        }
+    }
+
     #[test]
     fn transport_kind_parse() {
         assert_eq!(TransportKind::parse("mem").unwrap(), TransportKind::Mem);

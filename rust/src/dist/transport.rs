@@ -90,6 +90,15 @@ impl Counters {
         }
     }
 
+    /// Rebuild a counter snapshot from per-link stats restored out of a
+    /// checkpoint (`ckpt::state`). The active class resets to `Data` —
+    /// a restored snapshot is a baseline to `merge` live traffic into,
+    /// not a live accounting bucket.
+    pub fn from_links(data: Vec<LinkStats>, diag: Vec<LinkStats>) -> Counters {
+        assert_eq!(data.len(), diag.len(), "counter planes of different worlds");
+        Counters { class: Class::Data, data, diag }
+    }
+
     pub fn class(&self) -> Class {
         self.class
     }

@@ -153,6 +153,18 @@ impl Gds {
         iter % self.period == 0
     }
 
+    /// Number of measurements taken so far — the sampler's only live
+    /// cross-step state (the subsample phase is derived from it), so
+    /// checkpoints store just this counter.
+    pub fn measure_count(&self) -> usize {
+        self.measure_count
+    }
+
+    /// Restore a measurement count captured by [`Gds::measure_count`].
+    pub fn set_measure_count(&mut self, count: usize) {
+        self.measure_count = count;
+    }
+
     /// Measure entropy of a gradient slice (β-subsampled). Callers gate on
     /// [`Gds::due`]; measuring off-schedule is allowed (warm-up probes).
     pub fn measure(&mut self, grad: &[f32]) -> Estimate {
@@ -201,6 +213,19 @@ impl WindowStats {
         self.history.push(mean);
         self.sigma_history.push(smean);
         Some(mean)
+    }
+
+    /// The open (not yet rolled) window's raw measurements and sigmas, for
+    /// checkpointing mid-window state: `(measurements, sigmas)`.
+    pub fn open_window(&self) -> (&[f64], &[f64]) {
+        (&self.measurements, &self.sigmas)
+    }
+
+    /// Restore an open window captured by [`WindowStats::open_window`].
+    /// The completed-window histories are public and restored directly.
+    pub fn set_open_window(&mut self, measurements: Vec<f64>, sigmas: Vec<f64>) {
+        self.measurements = measurements;
+        self.sigmas = sigmas;
     }
 
     /// Last two completed windows, if available: (previous, current).

@@ -18,6 +18,8 @@
 //! * [`entropy`] — GDS: two-level gradient down-sampling + entropy estimate
 //! * [`cqm`] — CQM: Marchenko–Pastur error model `g(r; m, n)` and the
 //!   Theorem-3 rank update
+//! * [`ckpt`] — deterministic checkpoint/resume: framed per-rank
+//!   snapshots with per-section checksums (`--save-every`/`--resume`)
 //! * [`compress`] — PowerSGD engine: factor state, error feedback, masks
 //! * [`dist`] — multi-rank data parallelism: pluggable transports
 //!   (in-process mesh, TCP loopback), deterministic ring-volume
@@ -36,6 +38,7 @@
 //!   JSON, bench harness, property testing, CLI)
 
 pub mod baselines;
+pub mod ckpt;
 pub mod compress;
 pub mod config;
 pub mod coordinator;

@@ -5,13 +5,14 @@
 //!   reproduce <exp>    regenerate a paper table/figure (or `all`)
 //!   projection         paper-scale Table-III projection (simulator only)
 //!   info               print the artifact manifest summary
+//!   ckpt inspect <dir> print a snapshot manifest (step, fingerprint, sections)
 //!
 //! Examples:
 //!   edgc train --artifacts artifacts/tiny --method edgc --steps 200
 //!   edgc reproduce table3 --steps 240 --out runs
 //!   edgc projection --cluster cluster2 --params 12100000000 --dp 4
 
-use edgc::util::error::Result;
+use edgc::util::error::{Context, Result};
 
 use edgc::config::{cluster_by_name, Method, TrainConfig};
 use edgc::coordinator::{run_distributed, run_distributed_pp, Backend, Trainer};
@@ -61,7 +62,26 @@ fn spec() -> Spec {
                  (lossless is bit-exact; bf16/f16 quantize PowerSGD factors; \
                  default off)",
             ),
-        ("threshold", "X", "bench-diff: allowed fractional regression (default 0.25)"),
+            (
+                "save-every",
+                "N",
+                "snapshot the full training state every N steps into --ckpt-dir \
+                 (N >= 1; default: never)",
+            ),
+            ("ckpt-dir", "DIR", "checkpoint directory (required with --save-every)"),
+            (
+                "resume",
+                "DIR",
+                "resume from the latest snapshot under DIR (or a specific \
+                 step-XXXXXXXX directory); byte-identical to the unbroken run",
+            ),
+            (
+                "stop-after",
+                "N",
+                "halt after N steps without changing the planned horizon \
+                 (schedules still derive from --steps; used to model interruption)",
+            ),
+            ("threshold", "X", "bench-diff: allowed fractional regression (default 0.25)"),
             (
                 "min-ns",
                 "NS",
@@ -93,17 +113,20 @@ fn main() -> Result<()> {
         print!("{}", spec.help());
         println!(
             "\nsubcommands: train | reproduce <exp|all> | projection | info \
-             | bench-diff <baseline.json> <current.json>"
+             | bench-diff <baseline.json> <current.json> | ckpt inspect <dir>"
         );
         println!("experiments: {}", repro::ALL.join(", "));
         return Ok(());
     }
-    match args.require_subcommand(&["train", "reproduce", "projection", "info", "bench-diff"])? {
+    match args
+        .require_subcommand(&["train", "reproduce", "projection", "info", "bench-diff", "ckpt"])?
+    {
         "train" => cmd_train(&args),
         "reproduce" => cmd_reproduce(&args),
         "projection" => cmd_projection(&args),
         "info" => cmd_info(&args),
         "bench-diff" => cmd_bench_diff(&args),
+        "ckpt" => cmd_ckpt(&args),
         _ => unreachable!(),
     }
 }
@@ -139,7 +162,40 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(c) = args.opt("codec") {
         cfg.codec = Codec::parse(c)?;
     }
+    if args.opt("save-every").is_some() {
+        let n = args.usize_or("save-every", 0)?;
+        edgc::ensure!(
+            n >= 1,
+            "--save-every must be >= 1 (got {n}); drop the flag to disable snapshots"
+        );
+        cfg.save_every = n;
+    }
+    if let Some(d) = args.opt("ckpt-dir") {
+        cfg.ckpt_dir = Some(d.to_string());
+    }
+    if let Some(d) = args.opt("resume") {
+        cfg.resume = Some(d.to_string());
+    }
+    if args.opt("stop-after").is_some() {
+        cfg.stop_after = Some(args.usize_or("stop-after", 0)?);
+    }
+    cfg.validate_ckpt()?;
+    if let Some(dir) = &cfg.ckpt_dir {
+        probe_writable(dir)?;
+    }
     Ok(cfg)
+}
+
+/// `--ckpt-dir` must be writable before training burns any steps: create
+/// it and round-trip a probe file so a bad path fails at launch, not at
+/// the first snapshot.
+fn probe_writable(dir: &str) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("--ckpt-dir {dir:?} cannot be created"))?;
+    let probe = std::path::Path::new(dir).join(".edgc-write-probe");
+    std::fs::write(&probe, b"ok").with_context(|| format!("--ckpt-dir {dir:?} is not writable"))?;
+    std::fs::remove_file(&probe).ok();
+    Ok(())
 }
 
 fn backend_of(args: &Args) -> Result<Backend> {
@@ -357,6 +413,22 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
         eprintln!("[bench-diff] REGRESSION {r}");
     }
     edgc::bail!("{} bench entr(ies) regressed beyond {:.0}%", regressions.len(), threshold * 100.0)
+}
+
+/// `edgc ckpt inspect <dir>` — print a snapshot's manifest (step, config
+/// fingerprint, per-rank file checksums, section sizes) without loading
+/// any of the tensors.
+fn cmd_ckpt(args: &Args) -> Result<()> {
+    match args.positionals.as_slice() {
+        [op, dir] if op.as_str() == "inspect" => {
+            print!("{}", edgc::ckpt::inspect(dir)?);
+            Ok(())
+        }
+        _ => edgc::bail!(
+            "usage: edgc ckpt inspect <dir>  (dir: a --ckpt-dir root or one \
+             step-XXXXXXXX snapshot directory)"
+        ),
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

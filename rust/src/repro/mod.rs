@@ -141,6 +141,10 @@ fn base_cfg(opts: &Opts, exp: &str, method: Method) -> TrainConfig {
         overlap: false,
         codec: crate::dist::Codec::Off,
         out_dir: opts.out_dir.clone(),
+        save_every: 0,
+        ckpt_dir: None,
+        resume: None,
+        stop_after: None,
     }
 }
 

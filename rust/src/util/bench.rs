@@ -106,7 +106,9 @@ pub struct BenchSet {
     pub group: String,
     warmup: usize,
     budget_ms: u64,
-    results: Vec<(String, BenchResult)>,
+    /// `(name, kind, result)` — kind is "timing" or "metric" and drives
+    /// how reports render the numbers (time units vs raw values).
+    results: Vec<(String, &'static str, BenchResult)>,
 }
 
 impl BenchSet {
@@ -136,7 +138,7 @@ impl BenchSet {
             BenchResult::human(r.mean_ns),
             r.iters
         );
-        self.results.push((name.to_string(), r));
+        self.results.push((name.to_string(), "timing", r));
         r
     }
 
@@ -150,7 +152,7 @@ impl BenchSet {
     pub fn metric(&mut self, name: &str, value: f64) {
         let r = BenchResult { iters: 1, mean_ns: value, min_ns: value, p50_ns: value };
         println!("{:<44} metric {value:.0}", format!("{}/{}", self.group, name));
-        self.results.push((name.to_string(), r));
+        self.results.push((name.to_string(), "metric", r));
     }
 
     /// The group's results as a JSON value (the `BENCH_*.json` schema).
@@ -158,9 +160,10 @@ impl BenchSet {
         let rows: Vec<Json> = self
             .results
             .iter()
-            .map(|(name, r)| {
+            .map(|(name, kind, r)| {
                 obj(vec![
                     ("name", Json::from(name.as_str())),
+                    ("kind", Json::from(*kind)),
                     ("iters", Json::from(r.iters)),
                     ("min_ns", Json::from(r.min_ns)),
                     ("p50_ns", Json::from(r.p50_ns)),
@@ -197,6 +200,23 @@ impl BenchSet {
 /// against `max(base_min, min_ns)` instead of the raw baseline.
 pub const DEFAULT_MIN_NS: f64 = 1000.0;
 
+/// Entry kind recorded in `BENCH_*.json` rows ("timing" | "metric");
+/// baselines predating the tag read as timings.
+fn kind_of(row: &Json) -> &str {
+    row.opt("kind").and_then(|k| k.as_str().ok()).unwrap_or("timing")
+}
+
+/// Render one entry's number for reports: timings in time units,
+/// pseudo-metric entries ([`BenchSet::metric`] — e.g. wire bytes per
+/// frame) as the raw value, never misread as nanoseconds.
+fn render(kind: &str, v: f64) -> String {
+    if kind == "metric" {
+        format!("{v:.0}")
+    } else {
+        BenchResult::human(v)
+    }
+}
+
 /// Compare two `BENCH_*.json` documents (the perf-trajectory gate
 /// behind `edgc bench-diff`; in CI the baseline is the same benches run
 /// at the PR's merge-base): every named entry of `baseline` must exist
@@ -232,15 +252,16 @@ pub fn diff_benchmarks(
         match found {
             None => out.push(format!("{name}: in baseline but missing from current run")),
             Some(r) => {
+                let kind = kind_of(row);
                 let cur_min = r.get("min_ns")?.as_f64()?;
                 if base_min > 0.0 && cur_min > base_min.max(min_ns) * (1.0 + threshold) {
                     out.push(format!(
                         "{name}: min {} -> {} (+{:.1}%, allowed +{:.0}% over {})",
-                        BenchResult::human(base_min),
-                        BenchResult::human(cur_min),
+                        render(kind, base_min),
+                        render(kind, cur_min),
                         (cur_min / base_min - 1.0) * 100.0,
                         threshold * 100.0,
-                        BenchResult::human(base_min.max(min_ns))
+                        render(kind, base_min.max(min_ns))
                     ));
                 }
             }
@@ -268,6 +289,7 @@ pub fn summary_table(
     );
     for row in base_rows {
         let name = row.get("name")?.as_str()?;
+        let kind = kind_of(row);
         let base_min = row.get("min_ns")?.as_f64()?;
         let found = cur_rows
             .iter()
@@ -276,7 +298,7 @@ pub fn summary_table(
             None => {
                 s.push_str(&format!(
                     "| {name} | {} | — | — | missing |\n",
-                    BenchResult::human(base_min)
+                    render(kind, base_min)
                 ));
             }
             Some(r) => {
@@ -291,8 +313,8 @@ pub fn summary_table(
                 let status = if regressed { "REGRESSED" } else { "ok" };
                 s.push_str(&format!(
                     "| {name} | {} | {} | {delta} | {status} |\n",
-                    BenchResult::human(base_min),
-                    BenchResult::human(cur_min)
+                    render(kind, base_min),
+                    render(kind, cur_min)
                 ));
             }
         }
@@ -304,7 +326,10 @@ pub fn summary_table(
             .any(|r| r.opt("name").and_then(|n| n.as_str().ok()) == Some(name));
         if !seen {
             let cur_min = row.get("min_ns")?.as_f64()?;
-            s.push_str(&format!("| {name} | — | {} | — | new |\n", BenchResult::human(cur_min)));
+            s.push_str(&format!(
+                "| {name} | — | {} | — | new |\n",
+                render(kind_of(row), cur_min)
+            ));
         }
     }
     Ok(s)
@@ -436,6 +461,40 @@ mod tests {
         let worse = bench_doc(&[("wire_bytes_per_frame", 49_152.0)]);
         let base = bench_doc(&[("wire_bytes_per_frame", 32_768.0)]);
         assert_eq!(diff_benchmarks(&base, &worse, 0.25, DEFAULT_MIN_NS).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn summary_table_renders_metric_entries_raw() {
+        // a metric entry (e.g. wire bytes) shows its raw value in the
+        // markdown summary, never misread as "65.54 µs"; the kind tag
+        // round-trips through the JSON report
+        let mut set = BenchSet::with_opts("unit", &BenchOpts { smoke: true, json: None });
+        set.metric("wire_bytes", 65_536.0);
+        let doc = Json::parse(&set.to_json().to_string_pretty()).unwrap();
+        let rows = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("kind").unwrap().as_str().unwrap(), "metric");
+        let t = summary_table(&doc, &doc, 0.25, DEFAULT_MIN_NS).unwrap();
+        assert!(t.contains("| wire_bytes | 65536 | 65536 | +0.0% | ok |"), "{t}");
+        assert!(!t.contains("µs"), "metric rendered as a time unit:\n{t}");
+        // metric-only rows on either side of the union render raw too
+        let none = bench_doc(&[]);
+        let missing = summary_table(&doc, &none, 0.25, DEFAULT_MIN_NS).unwrap();
+        assert!(missing.contains("| wire_bytes | 65536 | — | — | missing |"), "{missing}");
+        let fresh = summary_table(&none, &doc, 0.25, DEFAULT_MIN_NS).unwrap();
+        assert!(fresh.contains("| wire_bytes | — | 65536 | — | new |"), "{fresh}");
+        // baselines predating the kind tag still render as timings
+        let old = bench_doc(&[("m", 65_536.0)]);
+        let t2 = summary_table(&old, &old, 0.25, DEFAULT_MIN_NS).unwrap();
+        assert!(t2.contains("65.54 µs"), "{t2}");
+        // and a regressed metric reports raw values through the gate
+        let worse_doc = {
+            let mut w = BenchSet::with_opts("unit", &BenchOpts { smoke: true, json: None });
+            w.metric("wire_bytes", 131_072.0);
+            Json::parse(&w.to_json().to_string_pretty()).unwrap()
+        };
+        let regs = diff_benchmarks(&doc, &worse_doc, 0.25, DEFAULT_MIN_NS).unwrap();
+        assert_eq!(regs.len(), 1);
+        assert!(regs[0].contains("65536 -> 131072"), "{regs:?}");
     }
 
     #[test]

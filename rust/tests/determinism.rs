@@ -53,6 +53,10 @@ fn tiny_cfg(method: Method, steps: usize) -> TrainConfig {
         overlap: false,
         codec: Codec::Off,
         out_dir: "/tmp/edgc-determinism-runs".into(),
+        save_every: 0,
+        ckpt_dir: None,
+        resume: None,
+        stop_after: None,
     }
 }
 
@@ -539,13 +543,23 @@ fn pp_dp_matrix_cell() {
         Ok(v) => Codec::parse(&v).unwrap_or_else(|e| panic!("EDGC_CODEC: {e}")),
         Err(_) => Codec::Off,
     };
+    let resume = match std::env::var("EDGC_RESUME").as_deref() {
+        Ok("on") => true,
+        Ok("off") | Err(_) => false,
+        Ok(other) => panic!("EDGC_RESUME={other:?} is not on|off"),
+    };
     let mut cfg = tiny_cfg(Method::Edgc, 8);
     cfg.artifacts = "artifacts/deep".into();
     cfg.pp = pp;
     cfg.dp = dp;
     cfg.microbatches = 4;
     cfg.codec = codec;
-    if overlap {
+    if resume {
+        // resume dimension: interrupt the cell at step 3, resume, and
+        // demand bytes identical to the cell's own unbroken run
+        cfg.overlap = overlap;
+        assert_resume_matches_unbroken(&cfg, kind, 3);
+    } else if overlap {
         assert_overlap_matches_sequential(&cfg, kind);
     } else {
         assert_pp_matches_centralized(&cfg, kind);
@@ -755,6 +769,283 @@ fn cli_codec_smoke() {
         .output()
         .unwrap();
     assert!(!status.status.success(), "unknown codec must be rejected");
+}
+
+// ------------------------------------------------- checkpoint / resume
+
+/// Interrupt-at-step-k + `--resume` byte-identity for one matrix cell:
+/// run A unbroken; run B with `--save-every k --stop-after k` so it
+/// snapshots and halts after k steps; run C resuming from B's snapshot.
+/// C must match A bit for bit — curve, final parameters, entropy/rank
+/// traces, volume accounting, and the Data-class logical wire counters
+/// (which are cumulative across the interruption: the snapshot carries
+/// the counter baseline). Diag-class counters are *not* compared: the
+/// save barrier itself moves diag traffic the unbroken run never sees.
+/// Returns the unbroken run so callers can sanity-check its traces.
+fn assert_resume_matches_unbroken(cfg: &TrainConfig, kind: TransportKind, k: usize) -> DistRun {
+    let tag = format!(
+        "{:?} pp={} dp={} overlap={} codec={} over {}, interrupt at {k}",
+        cfg.method,
+        cfg.pp,
+        cfg.dp,
+        cfg.overlap,
+        cfg.codec.name(),
+        kind.name()
+    );
+    let dir = tmp_dir(&format!(
+        "ckpt-pp{}dp{}-{}-ov{}-{}",
+        cfg.pp,
+        cfg.dp,
+        kind.name(),
+        cfg.overlap as u8,
+        cfg.codec.name()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    let unbroken = dist_run(cfg, kind);
+
+    let mut save_cfg = cfg.clone();
+    save_cfg.save_every = k;
+    save_cfg.stop_after = Some(k);
+    save_cfg.ckpt_dir = Some(dir.clone());
+    let interrupted = dist_run(&save_cfg, kind);
+    assert_eq!(interrupted.summary.curve.rows.len(), k, "interrupted run length ({tag})");
+
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.resume = Some(dir.clone());
+    let resumed = dist_run(&resume_cfg, kind);
+
+    assert_eq!(resumed.summary.curve.render(), unbroken.summary.curve.render(), "curve ({tag})");
+    let same = resumed.params.len() == unbroken.params.len()
+        && resumed.params.iter().zip(&unbroken.params).all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(same, "params differ ({tag})");
+    assert_eq!(resumed.summary.entropy_trace, unbroken.summary.entropy_trace, "entropy ({tag})");
+    assert_eq!(resumed.summary.rank_trace, unbroken.summary.rank_trace, "ranks ({tag})");
+    assert_eq!(resumed.summary.error_samples, unbroken.summary.error_samples, "errors ({tag})");
+    assert_eq!(
+        resumed.summary.total_comm_floats, unbroken.summary.total_comm_floats,
+        "total volume ({tag})"
+    );
+    assert_eq!(
+        resumed.summary.stage_comm_floats, unbroken.summary.stage_comm_floats,
+        "stage volumes ({tag})"
+    );
+    for (rank, (cr, cu)) in resumed.counters.iter().zip(&unbroken.counters).enumerate() {
+        assert_eq!(
+            cr.data_sent_bytes(),
+            cu.data_sent_bytes(),
+            "rank {rank}: logical data bytes ({tag})"
+        );
+        assert_eq!(
+            cr.data_sent_msgs(),
+            cu.data_sent_msgs(),
+            "rank {rank}: data message count ({tag})"
+        );
+        assert_eq!(
+            cr.data_sent_wire_bytes(),
+            cu.data_sent_wire_bytes(),
+            "rank {rank}: post-codec data bytes ({tag})"
+        );
+    }
+    assert_eq!(resumed.summary.wire.data_logical, unbroken.summary.wire.data_logical, "{tag}");
+    assert_eq!(resumed.summary.wire.data_wire, unbroken.summary.wire.data_wire, "{tag}");
+    std::fs::remove_dir_all(&dir).ok();
+    unbroken
+}
+
+/// The checkpoint acceptance pin: interrupt-at-3 + resume byte-identity
+/// for *every* cell of {pp 1,2} x {dp 1,2} x {mem,tcp} x {overlap
+/// on,off} x {codec off,lossless,bf16}.
+#[test]
+fn resume_matches_unbroken_matrix() {
+    let _knob = hold_par_knob();
+    par::set_threads(1);
+    for (pp, dp) in [(1usize, 1usize), (1, 2), (2, 1), (2, 2)] {
+        for kind in [TransportKind::Mem, TransportKind::Tcp] {
+            for overlap in [false, true] {
+                for codec in [Codec::Off, Codec::Lossless, Codec::Bf16] {
+                    let mut cfg = tiny_cfg(Method::FixedRank(8), 6);
+                    cfg.pp = pp;
+                    cfg.dp = dp;
+                    cfg.overlap = overlap;
+                    cfg.codec = codec;
+                    assert_resume_matches_unbroken(&cfg, kind, 3);
+                }
+            }
+        }
+    }
+    par::set_threads(1);
+}
+
+/// The full EDGC control plane across an interruption: GDS sample
+/// history, the open entropy window, DAC warm-up state and the
+/// warm-started Q factors all restore exactly — the entropy and rank
+/// traces of the resumed run match the unbroken one bit for bit. Pins
+/// an interruption mid-window (k=3) and one exactly at a window roll
+/// (k=5, window size 5).
+#[test]
+fn resume_preserves_edgc_control_plane() {
+    let _knob = hold_par_knob();
+    par::set_threads(1);
+    for (k, kind, overlap) in
+        [(3usize, TransportKind::Mem, false), (5, TransportKind::Tcp, true)]
+    {
+        let mut cfg = tiny_cfg(Method::Edgc, 12);
+        cfg.overlap = overlap;
+        let unbroken = assert_resume_matches_unbroken(&cfg, kind, k);
+        // the comparison above must have been meaningful, not empty-vs-empty
+        assert!(!unbroken.summary.entropy_trace.is_empty(), "no entropy measured at k={k}");
+    }
+    par::set_threads(1);
+}
+
+/// Centralized (`Trainer::run`) save/resume: the in-process path writes
+/// and restores the same snapshot sections as the rank workers.
+#[test]
+fn centralized_resume_matches_unbroken() {
+    let _knob = hold_par_knob();
+    par::set_threads(1);
+    let dir = tmp_dir("ckpt-central");
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = tiny_cfg(Method::Edgc, 12);
+    let (unbroken_params, unbroken_curve, unbroken_entropy) = {
+        let mut t = Trainer::new(cfg.clone(), Backend::Host).unwrap();
+        let s = t.run().unwrap();
+        (t.params().to_vec(), s.curve.render(), s.entropy_trace.clone())
+    };
+    let mut save_cfg = cfg.clone();
+    save_cfg.save_every = 4;
+    save_cfg.stop_after = Some(4);
+    save_cfg.ckpt_dir = Some(dir.clone());
+    Trainer::new(save_cfg, Backend::Host).unwrap().run().unwrap();
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.resume = Some(dir.clone());
+    let mut t = Trainer::new(resume_cfg, Backend::Host).unwrap();
+    let s = t.run().unwrap();
+    assert_eq!(s.curve.render(), unbroken_curve, "curve differs after centralized resume");
+    assert_eq!(s.entropy_trace, unbroken_entropy, "entropy trace differs");
+    let same = t.params().len() == unbroken_params.len()
+        && t.params().iter().zip(&unbroken_params).all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(same, "params differ after centralized resume");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Resume rejections are loud typed errors, never panics: a missing
+/// directory, a config whose fingerprint disagrees with the snapshot, a
+/// truncated snapshot file, and a bit-flipped payload (the error names
+/// the damaged section).
+#[test]
+fn resume_rejects_missing_and_corrupt_snapshots() {
+    let _knob = hold_par_knob();
+    par::set_threads(1);
+    let dir = tmp_dir("ckpt-reject");
+    std::fs::remove_dir_all(&dir).ok();
+    let mut save_cfg = tiny_cfg(Method::FixedRank(8), 6);
+    save_cfg.save_every = 2;
+    save_cfg.stop_after = Some(2);
+    save_cfg.ckpt_dir = Some(dir.clone());
+    Trainer::new(save_cfg, Backend::Host).unwrap().run().unwrap();
+
+    let resume_err = |dir: &str| -> String {
+        let mut cfg = tiny_cfg(Method::FixedRank(8), 6);
+        cfg.resume = Some(dir.to_string());
+        Trainer::new(cfg, Backend::Host).unwrap().run().unwrap_err().to_string()
+    };
+
+    let err = resume_err("/nonexistent/edgc-resume");
+    assert!(err.contains("does not exist"), "{err}");
+
+    // config drift: a different lr is a different training stream
+    let mut drift = tiny_cfg(Method::FixedRank(8), 6);
+    drift.lr *= 2.0;
+    drift.resume = Some(dir.clone());
+    let err = Trainer::new(drift, Backend::Host).unwrap().run().unwrap_err().to_string();
+    assert!(err.contains("fingerprint"), "{err}");
+
+    let step_dir = edgc::ckpt::resolve_resume_dir(&dir).unwrap();
+    let file = step_dir.join(edgc::ckpt::rank_file_name(0));
+    let pristine = std::fs::read(&file).unwrap();
+
+    // flip one payload byte of the last section ("coord" on the
+    // centralized rank) and repair the whole-file checksum so the
+    // per-section check is the one that fires — the error names it
+    let mut flipped = pristine.clone();
+    let at = flipped.len() - 8 - 10;
+    flipped[at] ^= 0x20;
+    let body = flipped.len() - 8;
+    let sum = edgc::ckpt::frame::fnv64(&flipped[..body]).to_le_bytes();
+    flipped[body..].copy_from_slice(&sum);
+    std::fs::write(&file, &flipped).unwrap();
+    let err = resume_err(&dir);
+    assert!(err.contains("\"coord\""), "error must name the damaged section: {err}");
+    assert!(err.contains("checksum"), "{err}");
+
+    // truncation fails the whole-file checksum
+    std::fs::write(&file, &pristine[..pristine.len() / 2]).unwrap();
+    let err = resume_err(&dir);
+    assert!(err.contains("checksum") || err.contains("truncated"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_ckpt_save_inspect_resume_smoke() {
+    // `edgc train --save-every 2 --ckpt-dir D` snapshots, `edgc ckpt
+    // inspect D` prints the manifest, `edgc train --resume D` completes
+    let out = tmp_dir("cli-ckpt-out");
+    let ckpt = tmp_dir("cli-ckpt-dir");
+    std::fs::remove_dir_all(&ckpt).ok();
+    let run = |args: &[&str]| {
+        let o = std::process::Command::new(env!("CARGO_BIN_EXE_edgc")).args(args).output().unwrap();
+        (
+            o.status.success(),
+            String::from_utf8_lossy(&o.stdout).into_owned(),
+            String::from_utf8_lossy(&o.stderr).into_owned(),
+        )
+    };
+    let (ok, stdout, stderr) = run(&[
+        "train", "--backend", "host", "--steps", "4", "--eval-every", "4", "--threads", "1",
+        "--save-every", "2", "--ckpt-dir", &ckpt, "--out", &out,
+    ]);
+    assert!(ok, "saving train failed:\n{stdout}\n{stderr}");
+    let (ok, stdout, stderr) = run(&["ckpt", "inspect", &ckpt]);
+    assert!(ok, "inspect failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("step         4"), "{stdout}");
+    assert!(stdout.contains("fingerprint"), "{stdout}");
+    assert!(stdout.contains("rank-0000.bin"), "{stdout}");
+    assert!(stdout.contains("params"), "{stdout}");
+    let (ok, stdout, stderr) = run(&[
+        "train", "--backend", "host", "--steps", "4", "--eval-every", "4", "--threads", "1",
+        "--resume", &ckpt, "--out", &out,
+    ]);
+    assert!(ok, "resuming train failed:\n{stdout}\n{stderr}");
+    std::fs::remove_dir_all(&out).ok();
+    std::fs::remove_dir_all(&ckpt).ok();
+}
+
+#[test]
+fn cli_ckpt_flag_rejections() {
+    // each misuse fails at launch with a clear message, not a panic or
+    // a half-finished run
+    let run = |args: &[&str]| {
+        let o = std::process::Command::new(env!("CARGO_BIN_EXE_edgc")).args(args).output().unwrap();
+        (o.status.success(), String::from_utf8_lossy(&o.stderr).into_owned())
+    };
+    let (ok, stderr) = run(&["train", "--save-every", "0", "--ckpt-dir", "/tmp/x"]);
+    assert!(!ok, "--save-every 0 must be rejected");
+    assert!(stderr.contains(">= 1"), "{stderr}");
+
+    let (ok, stderr) = run(&["train", "--save-every", "2"]);
+    assert!(!ok, "--save-every without --ckpt-dir must be rejected");
+    assert!(stderr.contains("--ckpt-dir"), "{stderr}");
+
+    let (ok, stderr) = run(&["train", "--steps", "2", "--resume", "/nonexistent/edgc-ckpt"]);
+    assert!(!ok, "--resume into nothing must be rejected");
+    assert!(stderr.contains("does not exist"), "{stderr}");
+
+    // an unwritable checkpoint directory fails the launch probe
+    let (ok, stderr) =
+        run(&["train", "--save-every", "2", "--ckpt-dir", "/dev/null/ckpts"]);
+    assert!(!ok, "unwritable --ckpt-dir must be rejected");
+    assert!(stderr.contains("cannot be created"), "{stderr}");
 }
 
 #[test]

@@ -37,6 +37,10 @@ fn tiny_cfg(method: Method, steps: usize) -> TrainConfig {
         overlap: false,
         codec: edgc::dist::Codec::Off,
         out_dir: "/tmp/edgc-test-runs".into(),
+        save_every: 0,
+        ckpt_dir: None,
+        resume: None,
+        stop_after: None,
     }
 }
 

@@ -524,3 +524,72 @@ fn prop_rng_streams_reproducible_and_distinct() {
         expect(x == y && x != z, format!("{x} {y} {z}"))
     });
 }
+
+// ------------------------------------------------------------------ ckpt
+
+#[test]
+fn prop_ckpt_framing_roundtrip_and_corruption_detection() {
+    use edgc::ckpt::frame;
+    // Arbitrary section lists round-trip through the snapshot framing
+    // bitwise, and a single flipped bit anywhere in the image flips a
+    // checksum: decode fails, it never misreads content.
+    check_sized("ckpt frame roundtrip", 60, 6, |rng, size| {
+        let mut sections: Vec<(String, Vec<u8>)> = Vec::new();
+        for i in 0..size {
+            let name = format!("s{i}-{}", rng.below(1000));
+            let len = rng.below(200);
+            let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            sections.push((name, payload));
+        }
+        let img = frame::encode(&sections);
+        let back = frame::decode(&img).map_err(|e| e.to_string())?;
+        expect(back == sections, "roundtrip is bitwise".to_string())?;
+        let at = rng.below(img.len());
+        let bit = 1u8 << rng.below(8);
+        let mut bad = img.clone();
+        bad[at] ^= bit;
+        match frame::decode(&bad) {
+            Err(_) => Ok(()),
+            Ok(got) => expect(
+                false,
+                format!("flip at {at} (bit {bit:#04x}) decoded to {} sections", got.len()),
+            ),
+        }
+    });
+}
+
+#[test]
+fn prop_ckpt_payload_codec_roundtrip_bitwise() {
+    use edgc::ckpt::frame::{Dec, Enc};
+    // The scalar/slab payload codec the state layer builds every section
+    // with: whatever goes in comes out bit-identical, and the payload is
+    // consumed exactly (no trailing bytes).
+    check("ckpt payload codec roundtrip", 60, |rng| {
+        let f32v: Vec<f32> = (0..rng.below(64)).map(|_| rng.normal() as f32).collect();
+        let f64v: Vec<f64> = (0..rng.below(32)).map(|_| rng.normal()).collect();
+        let u64v: Vec<u64> = (0..rng.below(32)).map(|_| rng.next_u64()).collect();
+        let s = format!("t{}", rng.below(10_000));
+        let b = rng.below(2) == 1;
+        let opt = if rng.below(2) == 1 { Some(rng.normal()) } else { None };
+        let mut e = Enc::new();
+        e.u64(u64v.len() as u64).bool(b).opt_f64(opt).str(&s);
+        e.f32s(&f32v).f64s(&f64v).u64s(&u64v);
+        let buf = e.finish();
+        let mut d = Dec::new(&buf);
+        let r = (|| -> edgc::util::error::Result<bool> {
+            let mut same = d.u64()? == u64v.len() as u64;
+            same &= d.bool()? == b;
+            same &= d.opt_f64()?.map(f64::to_bits) == opt.map(f64::to_bits);
+            same &= d.str()? == s;
+            same &= d.f32s()?.iter().map(|x| x.to_bits()).eq(f32v.iter().map(|x| x.to_bits()));
+            same &= d.f64s()?.iter().map(|x| x.to_bits()).eq(f64v.iter().map(|x| x.to_bits()));
+            same &= d.u64s()? == u64v;
+            d.done()?;
+            Ok(same)
+        })();
+        match r {
+            Ok(same) => expect(same, "payload fields differ after roundtrip".to_string()),
+            Err(e) => Err(e.to_string()),
+        }
+    });
+}
