@@ -48,6 +48,22 @@ fn main() {
         mins[0] / mins[1].max(1.0)
     );
 
+    // window-boundary rank allocation on the deep preset's bucket plan:
+    // the coordinator-side cost `--rank-alloc layer` adds at each DAC
+    // window boundary (greedy CQM marginal-gain sweep over all buckets)
+    {
+        use edgc::coordinator::dac::RankBounds;
+        use edgc::coordinator::engine::{Backend, Engine};
+        let man = edgc::runtime::Manifest::synthesize("deep", 2, 0).expect("deep preset");
+        let engine = Engine::new(&man, 2, 1, false, Backend::Host, 0);
+        let alloc = edgc::coordinator::Alloc::new(&engine, RankBounds { r_min: 2, r_max: 64 })
+            .expect("deep bucket plan");
+        let stage_ranks = vec![32usize, 32];
+        set.run("alloc_window_deep_pp2_r32", || {
+            std::hint::black_box(alloc.allocate(&stage_ranks));
+        });
+    }
+
     // uncompressed baseline for the same volume
     let mut rng = Rng::new(2);
     let g1: Vec<f32> = rng.normal_vec(512 * 128, 0.02);

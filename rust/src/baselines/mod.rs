@@ -14,6 +14,7 @@
 //! same training loop, all-reduce engine and virtual clock.
 
 use crate::config::Method;
+use crate::coordinator::alloc::{Alloc, RankPlan};
 use crate::coordinator::dac::Dac;
 
 /// Warm-up length used by Optimus-CC's phase-selective compression.
@@ -21,26 +22,38 @@ pub fn optimus_warmup_steps(total_steps: usize) -> usize {
     (total_steps as f64 * 0.10).ceil() as usize
 }
 
-/// The per-step rank decision for a method. `None` = uncompressed step.
-/// For EDGC, `dac` must be the controller owned by the trainer.
+/// The per-step rank decision for a method, as a [`RankPlan`].
+/// `None` = uncompressed step. For EDGC, `dac` must be the controller
+/// owned by the trainer; `alloc` (when `--rank-alloc layer`) refines
+/// the DAC's stage rollup into per-bucket ranks — until the allocator
+/// has made its first window-boundary decision, the stage-uniform plan
+/// applies unchanged. The fixed-rank baselines are always uniform.
 pub fn ranks_for(
     method: Method,
     step: usize,
     total_steps: usize,
     stages: usize,
     dac: Option<&Dac>,
-) -> Option<Vec<usize>> {
+    alloc: Option<&Alloc>,
+) -> Option<RankPlan> {
     match method {
         Method::Megatron => None,
-        Method::FixedRank(r) => Some(vec![r; stages]),
+        Method::FixedRank(r) => Some(RankPlan::uniform(vec![r; stages])),
         Method::OptimusCc(r) => {
             if step < optimus_warmup_steps(total_steps) {
                 None
             } else {
-                Some(vec![r; stages])
+                Some(RankPlan::uniform(vec![r; stages]))
             }
         }
-        Method::Edgc => dac.and_then(|d| d.stage_ranks()),
+        Method::Edgc => {
+            let rs = dac.and_then(|d| d.stage_ranks())?;
+            Some(
+                alloc
+                    .and_then(|a| a.plan_for(rs.clone()))
+                    .unwrap_or_else(|| RankPlan::uniform(rs)),
+            )
+        }
     }
 }
 
@@ -54,47 +67,85 @@ pub fn uses_error_feedback(method: Method) -> bool {
 mod tests {
     use super::*;
     use crate::config::EdgcParams;
-    use crate::coordinator::dac::{Dac, RankBounds};
+    use crate::coordinator::dac::{Dac, DacConfig, RankBounds};
     use crate::netsim::LinearCommModel;
 
     #[test]
     fn megatron_never_compresses() {
         for step in [0, 100, 10_000] {
-            assert_eq!(ranks_for(Method::Megatron, step, 1000, 4, None), None);
+            assert_eq!(ranks_for(Method::Megatron, step, 1000, 4, None, None), None);
         }
     }
 
     #[test]
     fn powersgd_compresses_from_step_zero() {
-        assert_eq!(ranks_for(Method::FixedRank(64), 0, 1000, 4, None), Some(vec![64; 4]));
+        assert_eq!(
+            ranks_for(Method::FixedRank(64), 0, 1000, 4, None, None),
+            Some(RankPlan::uniform(vec![64; 4]))
+        );
     }
 
     #[test]
     fn optimus_cc_waits_out_warmup() {
         let total = 1000;
-        assert_eq!(ranks_for(Method::OptimusCc(128), 0, total, 4, None), None);
-        assert_eq!(ranks_for(Method::OptimusCc(128), 99, total, 4, None), None);
-        assert_eq!(ranks_for(Method::OptimusCc(128), 100, total, 4, None), Some(vec![128; 4]));
+        assert_eq!(ranks_for(Method::OptimusCc(128), 0, total, 4, None, None), None);
+        assert_eq!(ranks_for(Method::OptimusCc(128), 99, total, 4, None, None), None);
+        assert_eq!(
+            ranks_for(Method::OptimusCc(128), 100, total, 4, None, None),
+            Some(RankPlan::uniform(vec![128; 4]))
+        );
     }
 
     #[test]
     fn edgc_defers_to_dac() {
-        let mut dac = Dac::new(
-            EdgcParams { window: 10, ..Default::default() },
-            RankBounds { r_min: 8, r_max: 64 },
-            512,
-            128,
-            LinearCommModel { eta: 1e-4, mape: 0.0 },
-            1e-3,
-            4,
-            100,
-        );
-        assert_eq!(ranks_for(Method::Edgc, 5, 100, 4, Some(&dac)), None);
+        let mut dac = Dac::new(DacConfig {
+            params: EdgcParams { window: 10, ..Default::default() },
+            bounds: RankBounds { r_min: 8, r_max: 64 },
+            m: 512,
+            n: 128,
+            comm: LinearCommModel { eta: 1e-4, mape: 0.0 },
+            microback: 1e-3,
+            stages: 4,
+            total_steps: 100,
+        })
+        .unwrap();
+        assert_eq!(ranks_for(Method::Edgc, 5, 100, 4, Some(&dac), None), None);
         dac.on_window(10, 4.0);
         dac.on_window(20, 3.9);
         dac.on_window(25, 3.85);
-        let ranks = ranks_for(Method::Edgc, 30, 100, 4, Some(&dac)).unwrap();
-        assert_eq!(ranks.len(), 4);
+        let plan = ranks_for(Method::Edgc, 30, 100, 4, Some(&dac), None).unwrap();
+        assert_eq!(plan.stages(), 4);
+        assert!(!plan.is_layered(), "no allocator -> stage-uniform plan");
+    }
+
+    #[test]
+    fn edgc_layer_alloc_refines_the_stage_rollup() {
+        use crate::coordinator::engine::{Backend, Engine};
+        use crate::runtime::Manifest;
+        let mut dac = Dac::new(DacConfig {
+            params: EdgcParams { window: 10, ..Default::default() },
+            bounds: RankBounds { r_min: 8, r_max: 64 },
+            m: 512,
+            n: 128,
+            comm: LinearCommModel { eta: 1e-4, mape: 0.0 },
+            microback: 1e-3,
+            stages: 2,
+            total_steps: 100,
+        })
+        .unwrap();
+        dac.on_window(10, 4.0);
+        dac.on_window(20, 3.9);
+        dac.on_window(25, 3.85);
+        let man = Manifest::synthesize("deep", 2, 0).unwrap();
+        let engine = Engine::new(&man, 2, 1, false, Backend::Host, 0);
+        let mut alloc = Alloc::new(&engine, RankBounds { r_min: 2, r_max: 64 }).unwrap();
+        // before the first window-boundary decision: uniform plan
+        let p = ranks_for(Method::Edgc, 30, 100, 2, Some(&dac), Some(&alloc)).unwrap();
+        assert!(!p.is_layered());
+        alloc.on_window(30, &dac.stage_ranks().unwrap());
+        let p = ranks_for(Method::Edgc, 30, 100, 2, Some(&dac), Some(&alloc)).unwrap();
+        assert!(p.is_layered());
+        assert_eq!(p.stage_ranks(), dac.stage_ranks().unwrap().as_slice());
     }
 
     #[test]

@@ -56,7 +56,7 @@ pub fn fingerprint(cfg: &TrainConfig) -> u64 {
         "v{VERSION};artifacts={};steps={};dp={};pp={};tp={};micro={};lr={:016x};seed={};\
          method={};alpha={:016x};beta={:016x};window={};step_limit={};warmup={:016x};\
          aligned={};cluster={};corpus={};sim_params={};sim_tokens={};eval_every={};\
-         overlap={};codec={}",
+         overlap={};codec={};alloc={};rmin={};rmax={}",
         cfg.artifacts,
         cfg.steps,
         cfg.dp,
@@ -79,6 +79,9 @@ pub fn fingerprint(cfg: &TrainConfig) -> u64 {
         cfg.eval_every,
         cfg.overlap,
         cfg.codec.name(),
+        cfg.rank_alloc.name(),
+        cfg.rank_min.map_or("-".into(), |v| v.to_string()),
+        cfg.rank_max.map_or("-".into(), |v| v.to_string()),
     );
     fnv64(canon.as_bytes())
 }
@@ -494,6 +497,13 @@ mod tests {
         let mut steps = base.clone();
         steps.steps += 1;
         assert_ne!(fp, fingerprint(&steps), "steps drives the DAC warm-up floor");
+        let mut alloc = base.clone();
+        alloc.rank_alloc = crate::config::RankAlloc::Layer;
+        assert_ne!(fp, fingerprint(&alloc), "the allocator mode shapes the stream");
+        let mut bounds = base.clone();
+        bounds.rank_min = Some(2);
+        bounds.rank_max = Some(32);
+        assert_ne!(fp, fingerprint(&bounds), "rank bound overrides shape the stream");
         // Paths and snapshot cadence must NOT pin the fingerprint.
         let mut knobs = base.clone();
         knobs.out_dir = "elsewhere".into();

@@ -26,6 +26,8 @@ use std::ops::Range;
 use std::path::Path;
 
 use crate::ckpt::{self, frame, frame::Section};
+use crate::coordinator::alloc::AllocState;
+use crate::coordinator::dac::DacState;
 use crate::coordinator::trainer::Trainer;
 use crate::dist::collective;
 use crate::dist::transport::{Class, Counters, LinkStats, Transport};
@@ -333,12 +335,53 @@ impl Trainer {
                     e.bool(false);
                 }
                 Some(dac) => {
-                    let (h_ini, h_peak, decline, warm, r_prev) = dac.snapshot_state();
-                    e.bool(true).opt_f64(h_ini).f64(h_peak).usize(decline).bool(warm).f64(r_prev);
+                    let st = dac.snapshot_state();
+                    e.bool(true)
+                        .opt_f64(st.h_ini)
+                        .f64(st.h_peak)
+                        .usize(st.decline_windows)
+                        .bool(st.warmup_done)
+                        .f64(st.r_prev);
                     e.f64s(&dac.entropy_trace);
                     e.usize(dac.rank_trace.len());
                     for &(w, r) in &dac.rank_trace {
                         e.usize(w).f64(r);
+                    }
+                }
+            }
+            // Per-bucket allocator state (`--rank-alloc layer`): the
+            // open/completed entropy windows per bucket, the live
+            // allocation and its decision trace.
+            match &self.alloc {
+                None => {
+                    e.bool(false);
+                }
+                Some(a) => {
+                    let st = a.snapshot_state();
+                    e.bool(true);
+                    e.usize(st.open.len());
+                    for (i, (meas, sig)) in st.open.iter().enumerate() {
+                        e.f64s(meas).f64s(sig);
+                        let (hist, sigs) = &st.history[i];
+                        e.f64s(hist).f64s(sigs);
+                    }
+                    match &st.current {
+                        None => {
+                            e.bool(false);
+                        }
+                        Some(cur) => {
+                            e.bool(true).usize(cur.len());
+                            for &r in cur {
+                                e.usize(r);
+                            }
+                        }
+                    }
+                    e.usize(st.trace.len());
+                    for (step, ranks) in &st.trace {
+                        e.usize(*step).usize(ranks.len());
+                        for &r in ranks {
+                            e.usize(r);
+                        }
                     }
                 }
             }
@@ -552,10 +595,16 @@ impl Trainer {
                 if let Some(dac) = self.dac.as_mut() {
                     let h_ini = d.opt_f64()?;
                     let h_peak = d.f64()?;
-                    let decline = d.usize()?;
-                    let warm = d.bool()?;
+                    let decline_windows = d.usize()?;
+                    let warmup_done = d.bool()?;
                     let r_prev = d.f64()?;
-                    dac.restore_state(h_ini, h_peak, decline, warm, r_prev);
+                    dac.restore_state(DacState {
+                        h_ini,
+                        h_peak,
+                        decline_windows,
+                        warmup_done,
+                        r_prev,
+                    });
                     dac.entropy_trace = d.f64s()?;
                     let n = d.usize()?;
                     let mut trace = Vec::with_capacity(n);
@@ -564,6 +613,48 @@ impl Trainer {
                         trace.push((w, d.f64()?));
                     }
                     dac.rank_trace = trace;
+                }
+                let alloc_present = d.bool()?;
+                ensure!(
+                    alloc_present == self.alloc.is_some(),
+                    "snapshot {} a layer allocator, live run {}",
+                    if alloc_present { "carries" } else { "lacks" },
+                    if self.alloc.is_some() { "has one" } else { "does not" }
+                );
+                if let Some(a) = self.alloc.as_mut() {
+                    let nb = d.usize()?;
+                    let mut open = Vec::with_capacity(nb);
+                    let mut history = Vec::with_capacity(nb);
+                    for _ in 0..nb {
+                        let meas = d.f64s()?;
+                        let sig = d.f64s()?;
+                        open.push((meas, sig));
+                        let hist = d.f64s()?;
+                        let sigs = d.f64s()?;
+                        history.push((hist, sigs));
+                    }
+                    let current = if d.bool()? {
+                        let n = d.usize()?;
+                        let mut cur = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            cur.push(d.usize()?);
+                        }
+                        Some(cur)
+                    } else {
+                        None
+                    };
+                    let nt = d.usize()?;
+                    let mut trace = Vec::with_capacity(nt);
+                    for _ in 0..nt {
+                        let step = d.usize()?;
+                        let n = d.usize()?;
+                        let mut rs = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            rs.push(d.usize()?);
+                        }
+                        trace.push((step, rs));
+                    }
+                    a.restore_state(AllocState { open, history, current, trace })?;
                 }
                 self.clock.total = d.f64()?;
                 self.clock.comm_total = d.f64()?;

@@ -200,6 +200,39 @@ impl Method {
     }
 }
 
+/// How the per-step rank decision maps onto gradient buckets
+/// (`--rank-alloc`, `compression.rank_alloc`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RankAlloc {
+    /// One rank per pipeline stage — the DAC's Algorithm-2 rollup,
+    /// the paper's configuration and the default.
+    #[default]
+    Stage,
+    /// Per-bucket refinement of the stage rollup: at each window
+    /// boundary a greedy allocator redistributes every stage's
+    /// factor-volume budget across that stage's buckets by CQM
+    /// marginal gain (L-GreCo-style; DESIGN.md §Adaptive rank
+    /// allocation).
+    Layer,
+}
+
+impl RankAlloc {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RankAlloc::Stage => "stage",
+            RankAlloc::Layer => "layer",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RankAlloc> {
+        Ok(match s {
+            "stage" => RankAlloc::Stage,
+            "layer" => RankAlloc::Layer,
+            other => bail!("unknown rank allocator {other:?} (stage|layer)"),
+        })
+    }
+}
+
 /// EDGC controller parameters (paper defaults annotated).
 #[derive(Clone, Copy, Debug)]
 pub struct EdgcParams {
@@ -250,6 +283,18 @@ impl EdgcParams {
     }
 }
 
+/// The resolved compression policy of a run ([`TrainConfig::compression`]):
+/// one view over every knob that shapes the gradient wire stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Compression {
+    pub method: Method,
+    pub rank_alloc: RankAlloc,
+    pub rank_min: Option<usize>,
+    pub rank_max: Option<usize>,
+    pub codec: Codec,
+    pub overlap: bool,
+}
+
 /// A full training-run configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -263,6 +308,13 @@ pub struct TrainConfig {
     pub lr: f64,
     pub seed: u64,
     pub method: Method,
+    /// Stage-uniform vs per-bucket rank allocation (`--rank-alloc`).
+    pub rank_alloc: RankAlloc,
+    /// Override the calibrated rank floor (`--rank-min`); validated
+    /// against the actual bucket dimensions at plan-build time.
+    pub rank_min: Option<usize>,
+    /// Override the calibrated rank ceiling (`--rank-max`).
+    pub rank_max: Option<usize>,
     pub edgc: EdgcParams,
     pub cluster: Cluster,
     /// Corpus size in tokens.
@@ -315,6 +367,9 @@ impl Default for TrainConfig {
             lr: 1e-3,
             seed: 0,
             method: Method::Edgc,
+            rank_alloc: RankAlloc::Stage,
+            rank_min: None,
+            rank_max: None,
             edgc: EdgcParams::default(),
             cluster: CLUSTER1_V100,
             corpus_tokens: 400_000,
@@ -351,16 +406,29 @@ impl TrainConfig {
         c.seed = t.usize_or("run.seed", c.seed as usize)? as u64;
         c.lr = t.f64_or("run.lr", c.lr)?;
         c.eval_every = t.usize_or("run.eval_every", c.eval_every)?;
-        c.overlap = t.bool_or("run.overlap", c.overlap)?;
-        c.codec = Codec::parse(&t.str_or("wire.codec", c.codec.name())?)?;
         c.corpus_tokens = t.usize_or("run.corpus_tokens", c.corpus_tokens)?;
         c.out_dir = t.str_or("run.out_dir", &c.out_dir)?;
         c.dp = t.usize_or("parallel.dp", c.dp)?;
         c.pp = t.usize_or("parallel.pp", c.pp)?;
         c.tp = t.usize_or("parallel.tp", c.tp)?;
         c.microbatches = t.usize_or("parallel.microbatches", c.microbatches)?;
-        let rank = t.usize_or("compress.rank", 64)?;
-        c.method = Method::parse(&t.str_or("compress.method", "edgc")?, rank)?;
+        // Compression knobs: the legacy keys (`compress.*`, `wire.codec`,
+        // `run.overlap`) are read first as documented aliases, then the
+        // unified `[compression]` table overrides them key by key.
+        c.overlap = t.bool_or("run.overlap", c.overlap)?;
+        c.codec = Codec::parse(&t.str_or("wire.codec", c.codec.name())?)?;
+        let rank = t.usize_or("compression.rank", t.usize_or("compress.rank", 64)?)?;
+        let method = t.str_or("compression.method", &t.str_or("compress.method", "edgc")?)?;
+        c.method = Method::parse(&method, rank)?;
+        c.overlap = t.bool_or("compression.overlap", c.overlap)?;
+        c.codec = Codec::parse(&t.str_or("compression.codec", c.codec.name())?)?;
+        c.rank_alloc = RankAlloc::parse(&t.str_or("compression.rank_alloc", c.rank_alloc.name())?)?;
+        if let Some(v) = t.get("compression.rank_min") {
+            c.rank_min = Some(v.as_usize().context("compression.rank_min")?);
+        }
+        if let Some(v) = t.get("compression.rank_max") {
+            c.rank_max = Some(v.as_usize().context("compression.rank_max")?);
+        }
         c.edgc.alpha = t.f64_or("edgc.alpha", c.edgc.alpha)?;
         c.edgc.beta = t.f64_or("edgc.beta", c.edgc.beta)?;
         c.edgc.window = t.usize_or("edgc.window", c.edgc.window)?;
@@ -376,7 +444,36 @@ impl TrainConfig {
         }
         c.edgc.validate().context("[edgc] section")?;
         c.validate_ckpt().context("[run] section")?;
+        c.validate_compression().context("[compression] section")?;
         Ok(c)
+    }
+
+    /// Every compression-related knob of a run, resolved into one view:
+    /// CLI flags, the legacy TOML keys and the `[compression]` table all
+    /// land on the same `TrainConfig` fields, and consumers that only
+    /// care about the wire-shaping policy read this instead of picking
+    /// fields out of the full config.
+    pub fn compression(&self) -> Compression {
+        Compression {
+            method: self.method,
+            rank_alloc: self.rank_alloc,
+            rank_min: self.rank_min,
+            rank_max: self.rank_max,
+            codec: self.codec,
+            overlap: self.overlap,
+        }
+    }
+
+    /// Cheap structural checks on the resolved compression knobs (the
+    /// dimension-aware bound validation against real buckets happens at
+    /// plan-build time in `coordinator::alloc::validate_rank_bounds`).
+    pub fn validate_compression(&self) -> Result<()> {
+        if let (Some(lo), Some(hi)) = (self.rank_min, self.rank_max) {
+            crate::ensure!(lo <= hi, "rank bounds inverted: rank_min {lo} > rank_max {hi}");
+        }
+        crate::ensure!(self.rank_min != Some(0), "rank_min must be >= 1");
+        crate::ensure!(self.rank_max != Some(0), "rank_max must be >= 1");
+        Ok(())
     }
 
     /// Reject inconsistent checkpoint knobs (shared by TOML and CLI
@@ -508,6 +605,61 @@ codec = "lossless"
         let mut bad = TrainConfig::default();
         bad.stop_after = Some(0);
         assert!(bad.validate_ckpt().is_err());
+    }
+
+    #[test]
+    fn compression_table_overrides_legacy_aliases() {
+        let text = r#"
+[run]
+overlap = false
+
+[compress]
+method = "powersgd"
+rank = 32
+
+[wire]
+codec = "off"
+
+[compression]
+method = "optimus-cc"
+rank = 16
+rank_alloc = "layer"
+rank_min = 4
+rank_max = 48
+codec = "lossless"
+overlap = true
+"#;
+        let c = TrainConfig::from_toml(text).unwrap();
+        let v = c.compression();
+        assert_eq!(v.method, Method::OptimusCc(16));
+        assert_eq!(v.rank_alloc, RankAlloc::Layer);
+        assert_eq!(v.rank_min, Some(4));
+        assert_eq!(v.rank_max, Some(48));
+        assert_eq!(v.codec, Codec::Lossless);
+        assert!(v.overlap);
+    }
+
+    #[test]
+    fn legacy_compression_aliases_still_resolve() {
+        let c = TrainConfig::from_toml(SAMPLE).unwrap();
+        let v = c.compression();
+        assert_eq!(v.method, Method::OptimusCc(128));
+        assert_eq!(v.rank_alloc, RankAlloc::Stage);
+        assert_eq!(v.codec, Codec::Lossless);
+        assert_eq!((v.rank_min, v.rank_max), (None, None));
+    }
+
+    #[test]
+    fn rank_alloc_parse_and_bounds_validation() {
+        assert_eq!(RankAlloc::parse("stage").unwrap(), RankAlloc::Stage);
+        assert_eq!(RankAlloc::parse("layer").unwrap(), RankAlloc::Layer);
+        assert!(RankAlloc::parse("tensor").is_err());
+        let e = TrainConfig::from_toml("[compression]\nrank_min = 8\nrank_max = 4\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("rank bounds inverted"), "{e}");
+        assert!(TrainConfig::from_toml("[compression]\nrank_min = 0\n").is_err());
+        assert!(TrainConfig::from_toml("[compression]\nrank_alloc = \"hot\"\n").is_err());
     }
 
     #[test]

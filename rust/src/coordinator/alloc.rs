@@ -1,0 +1,784 @@
+//! Per-bucket adaptive rank allocation (L-GreCo × EDGC; ROADMAP item 1)
+//! behind the unified [`RankPlan`] decision API.
+//!
+//! Two pieces live here:
+//!
+//! * [`RankPlan`] — the single type every rank decision travels as. A
+//!   plan is a per-stage rollup (`stage`, what Algorithm 2 / Eq. 4
+//!   produces) plus optional per-bucket refinements (`buckets`). The
+//!   stage-uniform mode of the paper is the degenerate case with no
+//!   bucket entries, so the engine, clock, checkpoint codec and wire
+//!   broadcast all run one code path. [`RankPlan::layered`] is the one
+//!   validating constructor: bucket decisions are checked against the
+//!   engine's [`crate::coordinator::engine::Engine::bucket_plan`]-derived
+//!   [`BucketInfo`]s (every compressible bucket covered, every rank
+//!   within its bucket's usable range).
+//! * [`Alloc`] — the deterministic greedy allocator (`--rank-alloc
+//!   layer`). At each DAC window boundary it takes the stage ranks the
+//!   DAC decided and redistributes each stage's realized factor-volume
+//!   budget Σ min(r_s, r_max_t)·(m_t+n_t) across that stage's gradient
+//!   buckets, minimizing the CQM-modeled error Σ w_b·g(r_b; m_b, n_b)
+//!   (weights from per-bucket GDS entropy, L-GreCo style). Marginal
+//!   error gains of `g` are diminishing in r (the largest MP
+//!   eigenvalues are removed first), so greedy gain-per-float selection
+//!   is the classic near-optimal allocation for this objective. All
+//!   arithmetic is fixed-order f64 over the cached MP grids — the
+//!   decision is a pure function of the training stream, which is what
+//!   keeps `--rank-alloc layer` byte-deterministic across transports,
+//!   thread counts, overlap and resume.
+
+use std::ops::Range;
+
+use crate::coordinator::dac::RankBounds;
+use crate::coordinator::engine::{BucketKey, Engine};
+use crate::cqm;
+use crate::entropy::{Gds, WindowStats};
+use crate::util::error::Result;
+
+/// One rank decision for a step. `stage[s]` is the per-stage rollup
+/// (always present, len = pp); `buckets` holds per-bucket refinements
+/// in the allocator's bucket order (empty in stage-uniform mode).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RankPlan {
+    stage: Vec<usize>,
+    buckets: Vec<(BucketKey, usize)>,
+}
+
+impl RankPlan {
+    /// The degenerate stage-uniform plan (paper Eq. 4 semantics): every
+    /// tensor of stage `s` compresses at `stage[s]` (engine-clamped to
+    /// its bucket's r_max).
+    pub fn uniform(stage: Vec<usize>) -> RankPlan {
+        assert!(!stage.is_empty(), "a rank plan needs at least one stage");
+        RankPlan { stage, buckets: Vec::new() }
+    }
+
+    /// The validating constructor for layered plans: `buckets` must
+    /// cover exactly the compressible buckets described by `infos`
+    /// (same keys, same order), every rank within `[1, cap]` of its
+    /// bucket, and every bucket's stage within the plan. Errors name
+    /// the offending bucket.
+    pub fn layered(
+        stage: Vec<usize>,
+        buckets: Vec<(BucketKey, usize)>,
+        infos: &[BucketInfo],
+    ) -> Result<RankPlan> {
+        crate::ensure!(!stage.is_empty(), "a rank plan needs at least one stage");
+        crate::ensure!(
+            buckets.len() == infos.len(),
+            "layered plan has {} bucket entries for {} compressible buckets",
+            buckets.len(),
+            infos.len()
+        );
+        for ((key, r), info) in buckets.iter().zip(infos) {
+            crate::ensure!(
+                *key == info.key,
+                "bucket {} out of place in the plan (expected {})",
+                key.label(),
+                info.key.label()
+            );
+            crate::ensure!(
+                *r >= 1 && *r <= info.cap,
+                "bucket {} rank {r} outside its usable range [1, {}] (largest member {}x{})",
+                key.label(),
+                info.cap,
+                info.m,
+                info.n
+            );
+            crate::ensure!(
+                info.stage < stage.len(),
+                "bucket {} on stage {} of a {}-stage plan",
+                key.label(),
+                info.stage,
+                stage.len()
+            );
+        }
+        Ok(RankPlan { stage, buckets })
+    }
+
+    /// Number of pipeline stages the rollup covers.
+    pub fn stages(&self) -> usize {
+        self.stage.len()
+    }
+
+    /// Per-stage rollup ranks.
+    pub fn stage_ranks(&self) -> &[usize] {
+        &self.stage
+    }
+
+    /// Rollup rank of stage `s` (out-of-range clamps to the last stage,
+    /// mirroring the historical `Vec<usize>` indexing tolerance in the
+    /// virtual clock and the repro projections).
+    pub fn stage_rank(&self, s: usize) -> usize {
+        self.stage[s.min(self.stage.len() - 1)]
+    }
+
+    /// Per-bucket refinements (empty = stage-uniform).
+    pub fn bucket_ranks(&self) -> &[(BucketKey, usize)] {
+        &self.buckets
+    }
+
+    /// Does this plan carry per-bucket decisions?
+    pub fn is_layered(&self) -> bool {
+        !self.buckets.is_empty()
+    }
+
+    /// The effective rank for a tensor of bucket `key` on stage
+    /// `stage`: the bucket refinement when present, the stage rollup
+    /// otherwise. (The engine additionally clamps to the tensor's own
+    /// bucket r_max, exactly as the bare stage vectors were applied.)
+    pub fn rank_for(&self, stage: usize, key: BucketKey) -> usize {
+        for (k, r) in &self.buckets {
+            if *k == key {
+                return *r;
+            }
+        }
+        self.stage_rank(stage)
+    }
+}
+
+fn key_tag(k: BucketKey) -> (u8, u32) {
+    match k {
+        BucketKey::Embed => (0, 0),
+        BucketKey::Layer(i) => (1, i as u32),
+        BucketKey::Head => (2, 0),
+    }
+}
+
+fn key_untag(tag: u8, aux: u32) -> Result<BucketKey> {
+    Ok(match tag {
+        0 => BucketKey::Embed,
+        1 => BucketKey::Layer(aux as usize),
+        2 => BucketKey::Head,
+        other => crate::bail!("malformed rank broadcast (bucket key tag {other})"),
+    })
+}
+
+/// The one serialized form of a per-step rank decision, used by the
+/// rank-0 broadcast in the distributed runners. Layout:
+/// tag 0 = None (uncompressed step); tag 1 = stage-uniform (u32 count +
+/// u32 ranks); tag 2 = layered (the stage rollup as tag 1, then u32
+/// bucket count + per bucket `u8` key tag, `u32` layer index, `u32`
+/// rank).
+pub fn encode_plan(plan: Option<&RankPlan>) -> Vec<u8> {
+    match plan {
+        None => vec![0u8],
+        Some(p) => {
+            let mut out = vec![if p.is_layered() { 2u8 } else { 1u8 }];
+            out.extend_from_slice(&(p.stage.len() as u32).to_le_bytes());
+            for &r in &p.stage {
+                out.extend_from_slice(&(r as u32).to_le_bytes());
+            }
+            if p.is_layered() {
+                out.extend_from_slice(&(p.buckets.len() as u32).to_le_bytes());
+                for &(k, r) in &p.buckets {
+                    let (tag, aux) = key_tag(k);
+                    out.push(tag);
+                    out.extend_from_slice(&aux.to_le_bytes());
+                    out.extend_from_slice(&(r as u32).to_le_bytes());
+                }
+            }
+            out
+        }
+    }
+}
+
+/// Inverse of [`encode_plan`]. Rejects truncated/padded payloads with
+/// a hard error — a malformed rank broadcast must never be silently
+/// reinterpreted.
+pub fn decode_plan(buf: &[u8]) -> Result<Option<RankPlan>> {
+    let u32_at = |off: usize| -> u32 {
+        u32::from_le_bytes([buf[off], buf[off + 1], buf[off + 2], buf[off + 3]])
+    };
+    match buf.first() {
+        Some(0) if buf.len() == 1 => Ok(None),
+        Some(1) if buf.len() >= 5 => {
+            let n = u32_at(1) as usize;
+            crate::ensure!(buf.len() == 5 + 4 * n, "rank broadcast length mismatch");
+            let stage = (0..n).map(|i| u32_at(5 + 4 * i) as usize).collect();
+            Ok(Some(RankPlan { stage, buckets: Vec::new() }))
+        }
+        Some(2) if buf.len() >= 9 => {
+            let n = u32_at(1) as usize;
+            crate::ensure!(buf.len() >= 9 + 4 * n, "rank broadcast length mismatch");
+            let stage: Vec<usize> = (0..n).map(|i| u32_at(5 + 4 * i) as usize).collect();
+            let nb = u32_at(5 + 4 * n) as usize;
+            crate::ensure!(buf.len() == 9 + 4 * n + 9 * nb, "rank broadcast length mismatch");
+            let mut buckets = Vec::with_capacity(nb);
+            for b in 0..nb {
+                let off = 9 + 4 * n + 9 * b;
+                let key = key_untag(buf[off], u32_at(off + 1))?;
+                buckets.push((key, u32_at(off + 5) as usize));
+            }
+            Ok(Some(RankPlan { stage, buckets }))
+        }
+        _ => crate::bail!("malformed rank broadcast ({} bytes)", buf.len()),
+    }
+}
+
+/// Static description of one compressible gradient bucket, derived from
+/// the engine's bucket plan: what the allocator distributes ranks over.
+#[derive(Clone, Debug)]
+pub struct BucketInfo {
+    pub key: BucketKey,
+    pub stage: usize,
+    /// Flat gradient range of the whole bucket (incl. 1-D members) —
+    /// the slice per-bucket GDS entropy samples.
+    pub range: Range<usize>,
+    /// `(m, n, r_max)` of every compressible member tensor.
+    pub members: Vec<(usize, usize, usize)>,
+    /// Dims of the largest member — the CQM reference shape g(r; m, n).
+    pub m: usize,
+    pub n: usize,
+    /// Σ m·n over compressible members (error weighting).
+    pub elems: usize,
+    /// Highest useful rank: max member r_max (each member's r_max is
+    /// already ≤ min(m, n) of that member).
+    pub cap: usize,
+}
+
+impl BucketInfo {
+    /// Factor-volume (floats) this bucket ships at bucket rank `r`,
+    /// with the engine's per-tensor clamp applied.
+    pub fn volume(&self, r: usize) -> usize {
+        self.members.iter().map(|&(m, n, rm)| r.min(rm) * (m + n)).sum()
+    }
+
+    /// Floats added by raising the bucket rank r → r+1.
+    fn step_cost(&self, r: usize) -> usize {
+        self.members.iter().filter(|&&(_, _, rm)| r < rm).map(|&(m, n, _)| m + n).sum()
+    }
+}
+
+/// The compressible buckets of `engine`, in bucket-plan (backward
+/// completion) order; buckets with no 2-D members (e.g. the lnf-only
+/// head group) carry nothing to compress and are skipped.
+pub fn bucket_infos(engine: &Engine) -> Result<Vec<BucketInfo>> {
+    let plan = engine.bucket_plan(None)?;
+    let mut out = Vec::new();
+    for b in &plan {
+        if b.tensors.is_empty() {
+            continue;
+        }
+        let mut members = Vec::new();
+        let (mut m, mut n, mut elems, mut cap) = (0usize, 0usize, 0usize, 0usize);
+        for &ti in &b.tensors {
+            let bk = engine.tensors[ti].bucket;
+            members.push((bk.m, bk.n, bk.r_max));
+            elems += bk.m * bk.n;
+            cap = cap.max(bk.r_max);
+            if bk.m * bk.n > m * n {
+                m = bk.m;
+                n = bk.n;
+            }
+        }
+        out.push(BucketInfo {
+            key: b.key,
+            stage: b.stage,
+            range: b.range.clone(),
+            members,
+            m,
+            n,
+            elems,
+            cap,
+        });
+    }
+    crate::ensure!(!out.is_empty(), "no compressible buckets for per-bucket rank allocation");
+    Ok(out)
+}
+
+/// Satellite bugfix: reject user-configured rank bounds that no bucket
+/// can honor *at plan-build time*, naming the bucket — previously a
+/// floor above a small bucket's min(m, n) was only caught (or silently
+/// clamped) deep inside `compress`. Derived (netsim) bounds are not
+/// routed here: they keep the historical per-tensor clamp semantics.
+pub fn validate_rank_bounds(
+    engine: &Engine,
+    rank_min: Option<usize>,
+    rank_max: Option<usize>,
+) -> Result<()> {
+    if let (Some(lo), Some(hi)) = (rank_min, rank_max) {
+        crate::ensure!(lo <= hi, "rank bounds inverted: rank_min {lo} > rank_max {hi}");
+    }
+    if let Some(hi) = rank_max {
+        crate::ensure!(hi >= 1, "rank_max must be >= 1 (got {hi})");
+    }
+    let Some(lo) = rank_min else { return Ok(()) };
+    crate::ensure!(lo >= 1, "rank_min must be >= 1 (got {lo})");
+    for info in &bucket_infos(engine)? {
+        crate::ensure!(
+            lo <= info.cap,
+            "rank floor {lo} exceeds bucket {}'s usable max {} (largest member {}x{})",
+            info.key.label(),
+            info.cap,
+            info.m,
+            info.n
+        );
+    }
+    Ok(())
+}
+
+/// Checkpointable allocator state: per-bucket entropy windows (open +
+/// completed), the live allocation and its trace. Restoring this onto a
+/// freshly built [`Alloc`] of the same engine reproduces every future
+/// decision bit-exactly (pinned by the resume determinism tests).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AllocState {
+    /// Per bucket: the open window's raw (measurements, sigmas).
+    pub open: Vec<(Vec<f64>, Vec<f64>)>,
+    /// Per bucket: completed-window (means, sigma means).
+    pub history: Vec<(Vec<f64>, Vec<f64>)>,
+    pub current: Option<Vec<usize>>,
+    pub trace: Vec<(usize, Vec<usize>)>,
+}
+
+/// The `--rank-alloc layer` controller: owns the per-bucket GDS windows
+/// and the greedy window-boundary allocation. Lives on the decision
+/// rank only (rank 0 / the centralized trainer); everyone else receives
+/// the resulting [`RankPlan`] over the wire.
+#[derive(Clone, Debug)]
+pub struct Alloc {
+    pub bounds: RankBounds,
+    pub infos: Vec<BucketInfo>,
+    /// Per-bucket entropy windows, aligned with `infos`.
+    windows: Vec<WindowStats>,
+    /// The live per-bucket allocation (None until the DAC first
+    /// activates), aligned with `infos`.
+    current: Option<Vec<usize>>,
+    /// `(window-end step, per-bucket ranks)` decision trace.
+    pub trace: Vec<(usize, Vec<usize>)>,
+}
+
+impl Alloc {
+    pub fn new(engine: &Engine, bounds: RankBounds) -> Result<Alloc> {
+        crate::ensure!(
+            bounds.r_min >= 1 && bounds.r_min <= bounds.r_max,
+            "allocator rank bounds inverted: [{}, {}]",
+            bounds.r_min,
+            bounds.r_max
+        );
+        let infos = bucket_infos(engine)?;
+        let windows = vec![WindowStats::default(); infos.len()];
+        Ok(Alloc { bounds, infos, windows, current: None, trace: Vec::new() })
+    }
+
+    /// Take one per-bucket entropy measurement round over the full flat
+    /// gradient. Uses the salted GDS phase so the global entropy stream
+    /// (and therefore stage-uniform byte output) is untouched: the
+    /// shared measurement counter does not advance here.
+    pub fn measure(&mut self, gds: &mut Gds, grad: &[f32]) {
+        for (i, info) in self.infos.iter().enumerate() {
+            let est = gds.measure_with_salt(&grad[info.range.clone()], i as u64 + 1);
+            self.windows[i].push(&est);
+        }
+    }
+
+    /// Close every bucket's entropy window (no-op for buckets with no
+    /// pending measurements, mirroring `WindowStats::roll`).
+    pub fn roll_windows(&mut self) {
+        for w in &mut self.windows {
+            w.roll();
+        }
+    }
+
+    /// Window-boundary allocation: redistribute each stage's realized
+    /// factor-volume budget across its buckets (greedy, deterministic)
+    /// and make the result the live decision.
+    pub fn on_window(&mut self, step: usize, stage_ranks: &[usize]) {
+        let ranks = self.allocate(stage_ranks);
+        self.trace.push((step, ranks.clone()));
+        self.current = Some(ranks);
+    }
+
+    /// The live layered plan for the given stage rollup (None until the
+    /// first window-boundary allocation).
+    pub fn plan_for(&self, stage: Vec<usize>) -> Option<RankPlan> {
+        let cur = self.current.as_ref()?;
+        let buckets: Vec<(BucketKey, usize)> =
+            self.infos.iter().zip(cur).map(|(i, &r)| (i.key, r)).collect();
+        Some(
+            RankPlan::layered(stage, buckets, &self.infos)
+                .expect("window-boundary allocation satisfies the plan invariants"),
+        )
+    }
+
+    fn cap(&self, b: usize) -> usize {
+        self.infos[b].cap.min(self.bounds.r_max)
+    }
+
+    fn floor(&self, b: usize, stage_rank: usize) -> usize {
+        // never above the stage rank (keeps Σ floor volumes affordable)
+        self.bounds.r_min.min(self.cap(b)).min(stage_rank).max(1)
+    }
+
+    /// Per-bucket error weights: Σ m·n, modulated by the latest
+    /// completed per-bucket entropy window when every bucket has one
+    /// (Lemma 2: σ_b ∝ e^{h_b}, so hotter buckets deserve rank). The
+    /// modulation is clamped to [1/4, 4] — entropy steers, it does not
+    /// starve.
+    fn weights(&self) -> Vec<f64> {
+        let hs: Option<Vec<f64>> =
+            self.windows.iter().map(|w| w.history.last().copied()).collect();
+        match hs {
+            Some(hs) if !hs.is_empty() => {
+                let mean = hs.iter().sum::<f64>() / hs.len() as f64;
+                self.infos
+                    .iter()
+                    .zip(&hs)
+                    .map(|(i, h)| i.elems as f64 * (h - mean).exp().clamp(0.25, 4.0))
+                    .collect()
+            }
+            _ => self.infos.iter().map(|i| i.elems as f64).collect(),
+        }
+    }
+
+    /// The stage-uniform allocation the budget derives from: bucket b
+    /// of stage s at min(r_s, cap_b) — exactly what the engine's
+    /// per-tensor clamp realizes for a bare stage vector.
+    pub fn uniform_ranks(&self, stage_ranks: &[usize]) -> Vec<usize> {
+        self.infos
+            .iter()
+            .enumerate()
+            .map(|(b, i)| stage_ranks[i.stage.min(stage_ranks.len() - 1)].min(self.cap(b)).max(1))
+            .collect()
+    }
+
+    /// The CQM-modeled aggregate error of a per-bucket allocation under
+    /// the current entropy weights: Σ_b w_b · g(r_b)/g(0).
+    pub fn modeled_error(&self, ranks: &[usize]) -> f64 {
+        assert_eq!(ranks.len(), self.infos.len());
+        self.infos
+            .iter()
+            .zip(self.weights())
+            .zip(ranks)
+            .map(|((i, w), &r)| w * cqm::relative_error(r as f64, i.m, i.n))
+            .sum()
+    }
+
+    /// Total factor-volume (floats) of an allocation.
+    pub fn volume(&self, ranks: &[usize]) -> usize {
+        self.infos.iter().zip(ranks).map(|(i, &r)| i.volume(r)).sum()
+    }
+
+    /// The greedy allocation: per stage, start every bucket at its
+    /// floor and repeatedly buy the +1 rank step with the best
+    /// weighted-error gain per float, until the stage's budget
+    /// (= the uniform allocation's volume) is exhausted. Ties break to
+    /// the lowest bucket index; all arithmetic is fixed-order f64, so
+    /// the result is a pure function of (stage_ranks, entropy windows).
+    /// Guaranteed never worse than uniform under the same model: the
+    /// uniform allocation is kept whenever greedy fails to beat it.
+    pub fn allocate(&self, stage_ranks: &[usize]) -> Vec<usize> {
+        let weights = self.weights();
+        let uniform = self.uniform_ranks(stage_ranks);
+        let mut out = vec![0usize; self.infos.len()];
+        for s in 0..stage_ranks.len() {
+            let bs: Vec<usize> =
+                (0..self.infos.len()).filter(|&b| self.infos[b].stage == s).collect();
+            if bs.is_empty() {
+                continue;
+            }
+            let budget: usize = bs.iter().map(|&b| self.infos[b].volume(uniform[b])).sum();
+            let mut spent = 0usize;
+            for &b in &bs {
+                out[b] = self.floor(b, stage_ranks[s.min(stage_ranks.len() - 1)]);
+                spent += self.infos[b].volume(out[b]);
+            }
+            loop {
+                let mut best: Option<(f64, usize, usize)> = None;
+                for &b in &bs {
+                    if out[b] >= self.cap(b) {
+                        continue;
+                    }
+                    let cost = self.infos[b].step_cost(out[b]);
+                    if cost == 0 || spent + cost > budget {
+                        continue;
+                    }
+                    let i = &self.infos[b];
+                    let gain = weights[b]
+                        * (cqm::relative_error(out[b] as f64, i.m, i.n)
+                            - cqm::relative_error(out[b] as f64 + 1.0, i.m, i.n))
+                        / cost as f64;
+                    if best.map_or(true, |(g0, _, _)| gain > g0) {
+                        best = Some((gain, b, cost));
+                    }
+                }
+                match best {
+                    Some((_, b, cost)) => {
+                        out[b] += 1;
+                        spent += cost;
+                    }
+                    None => break,
+                }
+            }
+        }
+        // the model guard: greedy must not regress the modeled error
+        // (possible only at pathological budget granularity)
+        if self.modeled_error(&out) <= self.modeled_error(&uniform) {
+            out
+        } else {
+            uniform
+        }
+    }
+
+    /// Capture the allocator state for the checkpoint `coord` section.
+    pub fn snapshot_state(&self) -> AllocState {
+        AllocState {
+            open: self
+                .windows
+                .iter()
+                .map(|w| {
+                    let (m, s) = w.open_window();
+                    (m.to_vec(), s.to_vec())
+                })
+                .collect(),
+            history: self
+                .windows
+                .iter()
+                .map(|w| (w.history.clone(), w.sigma_history.clone()))
+                .collect(),
+            current: self.current.clone(),
+            trace: self.trace.clone(),
+        }
+    }
+
+    /// Restore a state captured by [`Alloc::snapshot_state`] onto a
+    /// freshly built allocator of the same engine/bounds.
+    pub fn restore_state(&mut self, state: AllocState) -> Result<()> {
+        let nb = self.infos.len();
+        crate::ensure!(
+            state.open.len() == nb && state.history.len() == nb,
+            "allocator snapshot covers {} buckets, engine has {nb}",
+            state.open.len()
+        );
+        if let Some(cur) = &state.current {
+            crate::ensure!(
+                cur.len() == nb,
+                "allocator snapshot decision covers {} buckets, engine has {nb}",
+                cur.len()
+            );
+        }
+        for (i, w) in self.windows.iter_mut().enumerate() {
+            let (meas, sigs) = state.open[i].clone();
+            w.set_open_window(meas, sigs);
+            let (h, sh) = state.history[i].clone();
+            w.history = h;
+            w.sigma_history = sh;
+        }
+        self.current = state.current;
+        self.trace = state.trace;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::Backend;
+    use crate::entropy::GdsConfig;
+    use crate::runtime::Manifest;
+    use crate::util::rng::Rng;
+
+    fn deep_engine(pp: usize) -> Engine {
+        let man = Manifest::synthesize("deep", 2, 0).unwrap();
+        Engine::new(&man, pp, 1, false, Backend::Host, 0)
+    }
+
+    #[test]
+    fn uniform_plan_is_the_degenerate_case() {
+        let p = RankPlan::uniform(vec![8, 16]);
+        assert!(!p.is_layered());
+        assert_eq!(p.stages(), 2);
+        assert_eq!(p.stage_rank(0), 8);
+        assert_eq!(p.stage_rank(7), 16, "out-of-range clamps to the last stage");
+        assert_eq!(p.rank_for(1, BucketKey::Layer(3)), 16, "no refinement -> stage rollup");
+    }
+
+    #[test]
+    fn layered_constructor_validates_against_bucket_plan() {
+        let e = deep_engine(2);
+        let infos = bucket_infos(&e).unwrap();
+        let ok: Vec<(BucketKey, usize)> = infos.iter().map(|i| (i.key, 1)).collect();
+        let p = RankPlan::layered(vec![4, 4], ok.clone(), &infos).unwrap();
+        assert!(p.is_layered());
+        assert_eq!(p.rank_for(infos[0].stage, infos[0].key), 1);
+
+        // missing bucket entry
+        let mut short = ok.clone();
+        short.pop();
+        let err = RankPlan::layered(vec![4, 4], short, &infos).unwrap_err().to_string();
+        assert!(err.contains("bucket entries"), "{err}");
+        // out-of-order / wrong key
+        let mut swapped = ok.clone();
+        swapped.swap(0, 1);
+        let err = RankPlan::layered(vec![4, 4], swapped, &infos).unwrap_err().to_string();
+        assert!(err.contains("out of place"), "{err}");
+        // rank over the bucket cap, named error
+        let mut over = ok.clone();
+        over[0].1 = infos[0].cap + 1;
+        let err = RankPlan::layered(vec![4, 4], over, &infos).unwrap_err().to_string();
+        assert!(err.contains(&infos[0].key.label()), "{err}");
+        assert!(err.contains("usable range"), "{err}");
+    }
+
+    #[test]
+    fn plan_wire_roundtrip_all_tags() {
+        // tag 0: uncompressed step
+        assert_eq!(decode_plan(&encode_plan(None)).unwrap(), None);
+        // tag 1: stage-uniform
+        let u = RankPlan::uniform(vec![3, 9, 27]);
+        assert_eq!(decode_plan(&encode_plan(Some(&u))).unwrap(), Some(u));
+        // tag 2: layered
+        let e = deep_engine(2);
+        let infos = bucket_infos(&e).unwrap();
+        let buckets: Vec<(BucketKey, usize)> = infos.iter().map(|i| (i.key, i.cap)).collect();
+        let p = RankPlan::layered(vec![5, 6], buckets, &infos).unwrap();
+        assert_eq!(decode_plan(&encode_plan(Some(&p))).unwrap(), Some(p));
+        // malformed payloads fail loudly
+        assert!(decode_plan(&[]).unwrap_err().to_string().contains("malformed"));
+        assert!(decode_plan(&[9, 1]).unwrap_err().to_string().contains("malformed"));
+        let mut truncated = encode_plan(Some(&RankPlan::uniform(vec![1, 2])));
+        truncated.pop();
+        let err = decode_plan(&truncated).unwrap_err().to_string();
+        assert!(err.contains("length mismatch"), "{err}");
+    }
+
+    #[test]
+    fn bucket_infos_skip_plain_only_buckets_and_cover_compressibles() {
+        let e = deep_engine(2);
+        let infos = bucket_infos(&e).unwrap();
+        // every engine tensor's bucket key appears exactly once
+        for t in &e.tensors {
+            let hits =
+                infos.iter().filter(|i| i.range.contains(&t.spec.offset)).count();
+            assert_eq!(hits, 1, "{}", t.spec.name);
+        }
+        for i in &infos {
+            assert!(!i.members.is_empty());
+            assert!(i.cap >= 1 && i.cap <= i.m.min(i.n).max(i.m.max(i.n)));
+            assert!(i.elems > 0);
+            assert_eq!(i.volume(0), 0);
+            assert!(i.volume(i.cap) > 0);
+        }
+    }
+
+    #[test]
+    fn rank_bounds_validated_against_bucket_dims() {
+        let e = deep_engine(2);
+        // derived-shaped bounds pass
+        validate_rank_bounds(&e, Some(1), Some(64)).unwrap();
+        validate_rank_bounds(&e, None, None).unwrap();
+        // a floor over the smallest bucket's usable max names the bucket
+        let min_cap = bucket_infos(&e).unwrap().iter().map(|i| i.cap).min().unwrap();
+        let err = validate_rank_bounds(&e, Some(min_cap + 1), None).unwrap_err().to_string();
+        assert!(err.contains("rank floor"), "{err}");
+        assert!(err.contains("bucket"), "{err}");
+        // inverted bounds
+        let err = validate_rank_bounds(&e, Some(8), Some(4)).unwrap_err().to_string();
+        assert!(err.contains("inverted"), "{err}");
+    }
+
+    /// Acceptance criterion: on the deep preset, the layered allocation
+    /// at the same total factor-volume budget yields strictly lower
+    /// CQM-modeled aggregate error than the stage-uniform one, and the
+    /// decision is bit-deterministic.
+    #[test]
+    fn layer_alloc_beats_stage_uniform_at_equal_volume_on_deep() {
+        for pp in [1usize, 2] {
+            let e = deep_engine(pp);
+            let alloc = Alloc::new(&e, RankBounds { r_min: 2, r_max: 64 }).unwrap();
+            let stage_ranks = vec![16usize; pp];
+            let uniform = alloc.uniform_ranks(&stage_ranks);
+            let greedy = alloc.allocate(&stage_ranks);
+            assert!(
+                alloc.volume(&greedy) <= alloc.volume(&uniform),
+                "budget violated: {} > {}",
+                alloc.volume(&greedy),
+                alloc.volume(&uniform)
+            );
+            let (eg, eu) = (alloc.modeled_error(&greedy), alloc.modeled_error(&uniform));
+            assert!(eg < eu, "pp={pp}: layered {eg} not strictly below uniform {eu}");
+            // bit-determinism of the decision
+            let again = alloc.allocate(&stage_ranks);
+            assert_eq!(greedy, again);
+            // and the resulting plan validates
+            let p = RankPlan::layered(
+                stage_ranks.clone(),
+                alloc.infos.iter().zip(&greedy).map(|(i, &r)| (i.key, r)).collect(),
+                &alloc.infos,
+            )
+            .unwrap();
+            assert!(p.is_layered());
+        }
+    }
+
+    #[test]
+    fn entropy_weighting_steers_rank_toward_hot_buckets() {
+        let e = deep_engine(1);
+        let mut alloc = Alloc::new(&e, RankBounds { r_min: 1, r_max: 64 }).unwrap();
+        let mut gds = Gds::new(GdsConfig { alpha: 1.0, beta: 1.0, max_sample: 1 << 20 }).unwrap();
+        // gradient with one very hot bucket (bucket 0 = the head-most)
+        let n = e.n_params;
+        let mut rng = Rng::new(3);
+        let mut grad: Vec<f32> = rng.normal_vec(n, 0.01);
+        let hot = alloc.infos[0].range.clone();
+        for (j, x) in rng.normal_vec(hot.len(), 10.0).into_iter().enumerate() {
+            grad[hot.start + j] = x;
+        }
+        alloc.measure(&mut gds, &grad);
+        alloc.roll_windows();
+        let cold = alloc.allocate(&[8]);
+        // same stage ranks without the entropy signal
+        let flat = Alloc::new(&e, RankBounds { r_min: 1, r_max: 64 }).unwrap().allocate(&[8]);
+        assert!(
+            cold[0] >= flat[0],
+            "hot bucket must not lose rank: {} vs {}",
+            cold[0],
+            flat[0]
+        );
+        assert!(alloc.modeled_error(&cold) <= alloc.modeled_error(&flat) + 1e-9);
+    }
+
+    #[test]
+    fn window_boundary_allocation_and_plan_for() {
+        let e = deep_engine(2);
+        let mut alloc = Alloc::new(&e, RankBounds { r_min: 2, r_max: 64 }).unwrap();
+        assert!(alloc.plan_for(vec![8, 8]).is_none(), "no decision before a boundary");
+        alloc.on_window(5, &[16, 16]);
+        let p = alloc.plan_for(vec![16, 16]).unwrap();
+        assert!(p.is_layered());
+        assert_eq!(p.bucket_ranks().len(), alloc.infos.len());
+        assert_eq!(alloc.trace.len(), 1);
+        assert_eq!(alloc.trace[0].0, 5);
+    }
+
+    #[test]
+    fn snapshot_restore_reproduces_decisions() {
+        let e = deep_engine(2);
+        let bounds = RankBounds { r_min: 2, r_max: 64 };
+        let mut a = Alloc::new(&e, bounds).unwrap();
+        let mut gds = Gds::new(GdsConfig { alpha: 1.0, beta: 0.5, max_sample: 4096 }).unwrap();
+        let mut rng = Rng::new(9);
+        let g1: Vec<f32> = rng.normal_vec(e.n_params, 1.0);
+        let g2: Vec<f32> = rng.normal_vec(e.n_params, 0.5);
+        a.measure(&mut gds, &g1);
+        a.roll_windows();
+        a.on_window(5, &[12, 20]);
+        a.measure(&mut gds, &g2); // mid-window measurement, then snapshot
+        let snap = a.snapshot_state();
+
+        let mut b = Alloc::new(&e, bounds).unwrap();
+        b.restore_state(snap).unwrap();
+        // both continue identically
+        for x in [&mut a, &mut b] {
+            x.roll_windows();
+            x.on_window(10, &[10, 18]);
+        }
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.plan_for(vec![10, 18]), b.plan_for(vec![10, 18]));
+        // a mismatched snapshot is rejected
+        let mut c = Alloc::new(&e, bounds).unwrap();
+        let bad = AllocState { open: vec![(vec![], vec![])], ..Default::default() };
+        assert!(c.restore_state(bad).is_err());
+    }
+}

@@ -197,19 +197,23 @@ impl VirtualClock {
     }
 
     /// Advance the clock by one training iteration; returns
-    /// (iteration_time, bottleneck_comm_time).
+    /// (iteration_time, bottleneck_comm_time). Layered plans price
+    /// per-stage flops by their stage rollup rank — the per-bucket
+    /// refinement already shows up in `stage_compressed`, and the
+    /// rollup is the modeled PowerSGD matmul rank (a deliberate
+    /// modeling approximation, same spirit as the linear comm model).
     pub fn step(
         &mut self,
         stage_compressed: &[usize],
         stage_original: &[usize],
-        ranks: Option<&[usize]>,
+        ranks: Option<&crate::coordinator::alloc::RankPlan>,
     ) -> (f64, f64) {
         let dp_comm: Vec<f64> = (0..self.pp)
             .map(|s| {
                 self.stage_dp_time(
                     stage_compressed[s],
                     stage_original[s],
-                    ranks.map(|r| r[s.min(r.len() - 1)]),
+                    ranks.map(|p| p.stage_rank(s)),
                 )
             })
             .collect();

@@ -19,12 +19,75 @@
 use crate::config::EdgcParams;
 use crate::cqm;
 use crate::netsim::LinearCommModel;
+use crate::util::error::Result;
 
 /// Rank bounds for the controller (stage-1 reference bucket).
 #[derive(Clone, Copy, Debug)]
 pub struct RankBounds {
     pub r_min: usize,
     pub r_max: usize,
+}
+
+/// Construction parameters for the [`Dac`] controller — the named,
+/// validated replacement for the historical 8-positional `Dac::new`
+/// (two adjacent `usize` dims and two `f64` budgets made call sites
+/// unauditable).
+#[derive(Clone, Copy, Debug)]
+pub struct DacConfig {
+    pub params: EdgcParams,
+    pub bounds: RankBounds,
+    /// Reference bucket dimensions for the CQM g(r; m, n) (the paper
+    /// uses the dominant gradient-matrix shape of stage 1).
+    pub m: usize,
+    pub n: usize,
+    /// Calibrated linear comm model (Eq. 3).
+    pub comm: LinearCommModel,
+    /// Mean microbatch backward time (Eq. 4).
+    pub microback: f64,
+    pub stages: usize,
+    /// Total planned iterations (for the 10% warm-up floor).
+    pub total_steps: usize,
+}
+
+impl DacConfig {
+    /// Validated like [`crate::entropy::GdsConfig`]: every bound the
+    /// control arithmetic divides by or clamps to must be sane up
+    /// front, not discovered as a NaN rank mid-run.
+    pub fn validate(&self) -> Result<()> {
+        self.params.validate()?;
+        crate::ensure!(
+            self.bounds.r_min >= 1 && self.bounds.r_min <= self.bounds.r_max,
+            "DAC rank bounds inverted: [{}, {}]",
+            self.bounds.r_min,
+            self.bounds.r_max
+        );
+        crate::ensure!(self.m >= 1 && self.n >= 1, "DAC reference bucket {}x{}", self.m, self.n);
+        crate::ensure!(
+            self.bounds.r_max <= self.m.min(self.n),
+            "DAC r_max {} over reference bucket min({}, {})",
+            self.bounds.r_max,
+            self.m,
+            self.n
+        );
+        crate::ensure!(self.stages >= 1, "DAC needs at least one stage");
+        crate::ensure!(self.microback >= 0.0, "negative microbatch backward time");
+        Ok(())
+    }
+}
+
+/// The private controller state a checkpoint must capture to reproduce
+/// every post-resume decision bit-exactly (the public traces are
+/// snapshotted separately by the caller). Named replacement for the
+/// historical 5-tuple — the ckpt `coord` codec reads/writes these
+/// fields explicitly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DacState {
+    /// `h_ini` of the activation anchor, if compression has activated.
+    pub h_ini: Option<f64>,
+    pub h_peak: f64,
+    pub decline_windows: usize,
+    pub warmup_done: bool,
+    pub r_prev: f64,
 }
 
 /// Reference state captured when compression activates (Constraint 1:
@@ -71,33 +134,25 @@ pub struct Dac {
 }
 
 impl Dac {
-    pub fn new(
-        params: EdgcParams,
-        bounds: RankBounds,
-        m: usize,
-        n: usize,
-        comm: LinearCommModel,
-        microback: f64,
-        stages: usize,
-        total_steps: usize,
-    ) -> Self {
-        Dac {
-            params,
-            bounds,
-            m,
-            n,
-            comm,
-            microback,
-            stages,
-            total_steps,
+    pub fn new(cfg: DacConfig) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Dac {
+            params: cfg.params,
+            bounds: cfg.bounds,
+            m: cfg.m,
+            n: cfg.n,
+            comm: cfg.comm,
+            microback: cfg.microback,
+            stages: cfg.stages,
+            total_steps: cfg.total_steps,
             activation: None,
             h_peak: f64::NEG_INFINITY,
             decline_windows: 0,
             warmup_done: false,
-            r_prev: bounds.r_max as f64,
+            r_prev: cfg.bounds.r_max as f64,
             entropy_trace: Vec::new(),
             rank_trace: Vec::new(),
-        }
+        })
     }
 
     /// Is compression active (past warm-up)?
@@ -177,35 +232,27 @@ impl Dac {
         self.rank_trace.push((self.entropy_trace.len() - 1, r_new));
     }
 
-    /// Capture the private warm-up/controller state for checkpointing:
-    /// `(h_ini if activated, h_peak, decline_windows, warmup_done, r_prev)`.
+    /// Capture the private warm-up/controller state for checkpointing.
     /// The public traces are snapshotted separately by the caller.
-    pub fn snapshot_state(&self) -> (Option<f64>, f64, usize, bool, f64) {
-        (
-            self.activation.map(|a| a.h_ini),
-            self.h_peak,
-            self.decline_windows,
-            self.warmup_done,
-            self.r_prev,
-        )
+    pub fn snapshot_state(&self) -> DacState {
+        DacState {
+            h_ini: self.activation.map(|a| a.h_ini),
+            h_peak: self.h_peak,
+            decline_windows: self.decline_windows,
+            warmup_done: self.warmup_done,
+            r_prev: self.r_prev,
+        }
     }
 
     /// Restore the controller state captured by [`Dac::snapshot_state`].
     /// Must be applied to a freshly-built `Dac` with identical construction
     /// parameters, otherwise post-resume decisions diverge.
-    pub fn restore_state(
-        &mut self,
-        h_ini: Option<f64>,
-        h_peak: f64,
-        decline_windows: usize,
-        warmup_done: bool,
-        r_prev: f64,
-    ) {
-        self.activation = h_ini.map(|h| ActivationRef { h_ini: h });
-        self.h_peak = h_peak;
-        self.decline_windows = decline_windows;
-        self.warmup_done = warmup_done;
-        self.r_prev = r_prev;
+    pub fn restore_state(&mut self, state: DacState) {
+        self.activation = state.h_ini.map(|h| ActivationRef { h_ini: h });
+        self.h_peak = state.h_peak;
+        self.decline_windows = state.decline_windows;
+        self.warmup_done = state.warmup_done;
+        self.r_prev = state.r_prev;
     }
 
     /// Stage-1 rank for the current window (None during warm-up).
@@ -259,16 +306,39 @@ mod tests {
     use super::*;
 
     fn mk(total_steps: usize, window: usize) -> Dac {
-        Dac::new(
-            EdgcParams { window, step_limit: 8, ..Default::default() },
-            RankBounds { r_min: 12, r_max: 64 },
-            512,
-            128,
-            LinearCommModel { eta: 1e-4, mape: 0.0 },
-            2e-3,
-            4,
+        Dac::new(DacConfig {
+            params: EdgcParams { window, step_limit: 8, ..Default::default() },
+            bounds: RankBounds { r_min: 12, r_max: 64 },
+            m: 512,
+            n: 128,
+            comm: LinearCommModel { eta: 1e-4, mape: 0.0 },
+            microback: 2e-3,
+            stages: 4,
             total_steps,
-        )
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_bounds() {
+        let mut cfg = DacConfig {
+            params: EdgcParams::default(),
+            bounds: RankBounds { r_min: 12, r_max: 64 },
+            m: 512,
+            n: 128,
+            comm: LinearCommModel { eta: 1e-4, mape: 0.0 },
+            microback: 2e-3,
+            stages: 4,
+            total_steps: 100,
+        };
+        cfg.validate().unwrap();
+        cfg.bounds = RankBounds { r_min: 65, r_max: 64 };
+        assert!(cfg.validate().unwrap_err().to_string().contains("inverted"));
+        cfg.bounds = RankBounds { r_min: 12, r_max: 256 };
+        assert!(cfg.validate().unwrap_err().to_string().contains("reference bucket"));
+        cfg.bounds = RankBounds { r_min: 12, r_max: 64 };
+        cfg.stages = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]
@@ -397,9 +467,9 @@ mod tests {
         for (w, &h) in entropies.iter().enumerate().take(4) {
             a.on_window(10 + w * 10, h);
         }
-        let (h_ini, h_peak, dw, done, r_prev) = a.snapshot_state();
+        let state = a.snapshot_state();
         let mut b = mk(100, 10);
-        b.restore_state(h_ini, h_peak, dw, done, r_prev);
+        b.restore_state(state);
         b.entropy_trace = a.entropy_trace.clone();
         b.rank_trace = a.rank_trace.clone();
         for (w, &h) in entropies.iter().enumerate().skip(4) {

@@ -24,6 +24,7 @@ use std::time::Instant;
 use crate::util::error::{Context, Result};
 
 use crate::compress::{allreduce_mean, TensorCompressor, Volume};
+use crate::coordinator::alloc::RankPlan;
 use crate::dist::{collective, Transport};
 use crate::runtime::{lit_f32, to_f32, Bucket, Manifest, ParamSpec, Runtime};
 use crate::tensor::Mat;
@@ -41,6 +42,9 @@ pub struct CompTensor {
     pub spec: ParamSpec,
     pub bucket: Bucket,
     pub stage: usize,
+    /// The gradient bucket this tensor belongs to (the granularity
+    /// [`RankPlan`] refinements are expressed at).
+    pub key: BucketKey,
     pub comp: TensorCompressor,
 }
 
@@ -101,6 +105,19 @@ impl StagePlan {
         let (idx, _) = rest.split_once('.')?;
         let i = idx.parse::<usize>().ok()?;
         Some(i.min(self.n_layer - 1))
+    }
+
+    /// Gradient-bucket identity of a named parameter — the single
+    /// name→bucket convention shared by [`Engine::bucket_plan`], the
+    /// per-tensor [`CompTensor::key`] tagging and the rank allocator.
+    pub fn bucket_key_of(&self, name: &str) -> BucketKey {
+        if let Some(i) = self.layer_of_name(name) {
+            return BucketKey::Layer(i);
+        }
+        if name.starts_with("lnf") {
+            return BucketKey::Head;
+        }
+        BucketKey::Embed
     }
 
     /// Stage of a named parameter: embeddings → 0, `lnf*` → last stage,
@@ -265,6 +282,7 @@ impl Engine {
             match manifest.bucket_for(&spec.shape) {
                 Some(bucket) if spec.is_matrix() => {
                     let stage = plan.stage_of_name(&spec.name);
+                    let key = plan.bucket_key_of(&spec.name);
                     let comp = TensorCompressor::new(
                         bucket.m,
                         bucket.n,
@@ -273,7 +291,7 @@ impl Engine {
                         error_feedback,
                         &mut rng,
                     );
-                    tensors.push(CompTensor { spec: spec.clone(), bucket, stage, comp });
+                    tensors.push(CompTensor { spec: spec.clone(), bucket, stage, key, comp });
                 }
                 _ => plain.push(spec.clone()),
             }
@@ -306,24 +324,25 @@ impl Engine {
     /// Perform the DP gradient all-reduce for one step.
     ///
     /// `grads[i]` is replica i's full flat gradient. `ranks` is the
-    /// per-stage effective rank (None = uncompressed step). `rt` is
-    /// required for the Artifact backend.
+    /// step's [`RankPlan`] (None = uncompressed step); stage-uniform
+    /// plans apply their rollup per stage, layered plans their
+    /// per-bucket refinement. `rt` is required for the Artifact backend.
     pub fn allreduce(
         &mut self,
         rt: Option<&Runtime>,
         grads: &[Vec<f32>],
-        ranks: Option<&[usize]>,
+        ranks: Option<&RankPlan>,
     ) -> Result<AllreduceReport> {
         let k = grads.len();
         assert!(k > 0);
         for g in grads {
             assert_eq!(g.len(), self.n_params);
         }
-        if let Some(rs) = ranks {
+        if let Some(p) = ranks {
             crate::ensure!(
-                rs.len() == self.pp,
+                p.stages() == self.pp,
                 "per-stage rank vector has {} entries for pp={}",
-                rs.len(),
+                p.stages(),
                 self.pp
             );
         }
@@ -352,7 +371,7 @@ impl Engine {
             let off = t.spec.offset;
             let len = t.spec.size();
             stage_original[t.stage] += len;
-            let r_eff = ranks.map(|rs| rs[t.stage].clamp(1, t.bucket.r_max));
+            let r_eff = ranks.map(|p| p.rank_for(t.stage, t.key).clamp(1, t.bucket.r_max));
             match r_eff {
                 None => {
                     let slices: Vec<&[f32]> = grads.iter().map(|g| &g[off..off + len]).collect();
@@ -408,7 +427,7 @@ impl Engine {
         &mut self,
         tr: &mut dyn Transport,
         grad: &[f32],
-        ranks: Option<&[usize]>,
+        ranks: Option<&RankPlan>,
     ) -> Result<AllreduceReport> {
         self.allreduce_dist_inner(tr, grad, ranks, None)
     }
@@ -424,7 +443,7 @@ impl Engine {
         &mut self,
         tr: &mut dyn Transport,
         grad: &[f32],
-        ranks: Option<&[usize]>,
+        ranks: Option<&RankPlan>,
         stage: usize,
     ) -> Result<AllreduceReport> {
         crate::ensure!(stage < self.pp, "stage {stage} out of pp {}", self.pp);
@@ -435,7 +454,7 @@ impl Engine {
         &mut self,
         tr: &mut dyn Transport,
         grad: &[f32],
-        ranks: Option<&[usize]>,
+        ranks: Option<&RankPlan>,
         only_stage: Option<usize>,
     ) -> Result<AllreduceReport> {
         crate::ensure!(
@@ -448,11 +467,11 @@ impl Engine {
             grad.len(),
             self.n_params
         );
-        if let Some(rs) = ranks {
+        if let Some(p) = ranks {
             crate::ensure!(
-                rs.len() == self.pp,
+                p.stages() == self.pp,
                 "per-stage rank vector has {} entries for pp={}",
-                rs.len(),
+                p.stages(),
                 self.pp
             );
         }
@@ -497,7 +516,7 @@ impl Engine {
             let off = t.spec.offset;
             let len = t.spec.size();
             stage_original[t.stage] += len;
-            let r_eff = ranks.map(|rs| rs[t.stage].clamp(1, t.bucket.r_max));
+            let r_eff = ranks.map(|p| p.rank_for(t.stage, t.key).clamp(1, t.bucket.r_max));
             match r_eff {
                 None => {
                     mean_range(&mut *tr, &mut avg, off, len)?;
@@ -538,16 +557,8 @@ impl Engine {
             crate::ensure!(s < self.pp, "stage {s} out of pp {}", self.pp);
         }
         let in_scope = |st: usize| only_stage.map_or(true, |s| s == st);
-        let key_of = |name: &str| -> BucketKey {
-            // one name-parsing convention: StagePlan::layer_of_name
-            if let Some(i) = self.plan.layer_of_name(name) {
-                return BucketKey::Layer(i);
-            }
-            if name.starts_with("lnf") {
-                return BucketKey::Head;
-            }
-            BucketKey::Embed
-        };
+        // one name→bucket convention: StagePlan::bucket_key_of
+        let key_of = |name: &str| -> BucketKey { self.plan.bucket_key_of(name) };
         let mut keys = Vec::new();
         if in_scope(self.pp - 1) {
             keys.push((BucketKey::Head, self.pp - 1));
@@ -618,18 +629,18 @@ impl Engine {
         tr: &mut dyn Transport,
         rx: &Receiver<BucketGrad>,
         plan: &[GradBucket],
-        ranks: Option<&[usize]>,
+        ranks: Option<&RankPlan>,
         origin: Instant,
     ) -> Result<(AllreduceReport, Vec<(f64, f64)>)> {
         crate::ensure!(
             self.backend == Backend::Host,
             "overlapped all-reduce runs the host backend only"
         );
-        if let Some(rs) = ranks {
+        if let Some(p) = ranks {
             crate::ensure!(
-                rs.len() == self.pp,
+                p.stages() == self.pp,
                 "per-stage rank vector has {} entries for pp={}",
-                rs.len(),
+                p.stages(),
                 self.pp
             );
         }
@@ -673,7 +684,7 @@ impl Engine {
                 let t = &mut self.tensors[ti];
                 let (off, len) = (t.spec.offset, t.spec.size());
                 stage_original[t.stage] += len;
-                match ranks.map(|rs| rs[t.stage].clamp(1, t.bucket.r_max)) {
+                match ranks.map(|p| p.rank_for(t.stage, t.key).clamp(1, t.bucket.r_max)) {
                     None => {
                         let mut seg = grad[off - base..off - base + len].to_vec();
                         collective::all_reduce_mean(tr, &mut seg)?;
@@ -853,6 +864,11 @@ fn round_artifact(
 mod tests {
     use super::*;
 
+    /// Stage-uniform plan shorthand for the rank-vector call sites.
+    fn up(v: &[usize]) -> RankPlan {
+        RankPlan::uniform(v.to_vec())
+    }
+
     #[test]
     fn stage_assignment() {
         assert_eq!(stage_of("tok_emb", 8, 4), 0);
@@ -929,13 +945,13 @@ mod tests {
         let grads: Vec<Vec<f32>> = (0..world).map(|_| rng.normal_vec(56, 1.0)).collect();
         let mut central = Engine::new(&mini_manifest(), 2, world, true, Backend::Host, 5);
         let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
-        let rep_c = central.allreduce(None, &refs, Some(&[1, 2])).unwrap();
+        let rep_c = central.allreduce(None, &refs, Some(&up(&[1, 2]))).unwrap();
 
         for stage in 0..2usize {
             let out =
                 crate::dist::run_group(crate::dist::TransportKind::Mem, world, |rank, tr| {
                     let mut e = Engine::new(&mini_manifest(), 2, world, true, Backend::Host, 5);
-                    e.allreduce_dist_stage(tr, &grads[rank], Some(&[1, 2]), stage)
+                    e.allreduce_dist_stage(tr, &grads[rank], Some(&up(&[1, 2])), stage)
                 })
                 .unwrap();
             for (rep, _) in &out {
@@ -1012,7 +1028,7 @@ mod tests {
         let mut e = Engine::new(&mini_manifest(), 2, 1, true, Backend::Host, 1);
         let mut rng = Rng::new(9);
         let g: Vec<f32> = rng.normal_vec(56, 1.0);
-        let rep = e.allreduce(None, &[g.clone()], Some(&[1, 1])).unwrap();
+        let rep = e.allreduce(None, &[g.clone()], Some(&up(&[1, 1]))).unwrap();
         // 8x4 at r=1: 12 floats vs 32; 4x2 at r=1: 6 vs 8 (x2 tensors)
         assert!(rep.total_compressed() < rep.total_original());
         assert!(rep.mean_rel_error > 0.0 && rep.mean_rel_error < 1.0);
@@ -1065,11 +1081,11 @@ mod tests {
         let mut e = Engine::new(&mini_manifest(), 2, 1, false, Backend::Host, 0);
         let g: Vec<f32> = (0..56).map(|i| i as f32).collect();
         for bad in [vec![1usize], vec![1, 1, 1]] {
-            let err = e.allreduce(None, &[g.clone()], Some(&bad)).unwrap_err();
+            let err = e.allreduce(None, &[g.clone()], Some(&up(&bad))).unwrap_err();
             assert!(err.to_string().contains("pp=2"), "{err}");
         }
-        // the exact-length vector still works
-        assert!(e.allreduce(None, &[g], Some(&[1, 1])).is_ok());
+        // the exact-length plan still works
+        assert!(e.allreduce(None, &[g], Some(&up(&[1, 1]))).is_ok());
     }
 
     #[test]
@@ -1079,11 +1095,11 @@ mod tests {
         let grads: Vec<Vec<f32>> = (0..world).map(|_| rng.normal_vec(56, 1.0)).collect();
         let mut central = Engine::new(&mini_manifest(), 2, world, true, Backend::Host, 5);
         let refs: Vec<Vec<f32>> = grads.clone();
-        let rep_c = central.allreduce(None, &refs, Some(&[1, 2])).unwrap();
+        let rep_c = central.allreduce(None, &refs, Some(&up(&[1, 2]))).unwrap();
 
         let out = crate::dist::run_group(crate::dist::TransportKind::Mem, world, |rank, tr| {
             let mut e = Engine::new(&mini_manifest(), 2, world, true, Backend::Host, 5);
-            e.allreduce_dist(tr, &grads[rank], Some(&[1, 2]))
+            e.allreduce_dist(tr, &grads[rank], Some(&up(&[1, 2])))
         })
         .unwrap();
         for (rank, (rep, _)) in out.iter().enumerate() {
@@ -1119,12 +1135,12 @@ mod tests {
         let mut rng = Rng::new(40);
         let grads: Vec<Vec<f32>> = (0..world).map(|_| rng.normal_vec(56, 1.0)).collect();
         let mut central = Engine::new(&mini_manifest(), 2, world, true, Backend::Host, 5);
-        let rep_c = central.allreduce(None, &grads, Some(&[1, 2])).unwrap();
+        let rep_c = central.allreduce(None, &grads, Some(&up(&[1, 2]))).unwrap();
 
         let out = crate::dist::run_group(crate::dist::TransportKind::Mem, world, |rank, tr| {
             tr.set_codec(crate::dist::Codec::Lossless);
             let mut e = Engine::new(&mini_manifest(), 2, world, true, Backend::Host, 5);
-            e.allreduce_dist(tr, &grads[rank], Some(&[1, 2]))
+            e.allreduce_dist(tr, &grads[rank], Some(&up(&[1, 2])))
         })
         .unwrap();
         for (rank, (rep, _)) in out.iter().enumerate() {
@@ -1185,12 +1201,12 @@ mod tests {
         let world = 2usize;
         let mut rng = Rng::new(60);
         let grads: Vec<Vec<f32>> = (0..world).map(|_| rng.normal_vec(56, 1.0)).collect();
-        for (ranks, steps) in [(Some(vec![1usize, 2]), 3usize), (None, 1)] {
+        for (ranks, steps) in [(Some(up(&[1, 2])), 3usize), (None, 1)] {
             let seq = crate::dist::run_group(crate::dist::TransportKind::Mem, world, |rank, tr| {
                 let mut e = Engine::new(&mini_manifest(), 2, world, true, Backend::Host, 5);
                 let mut last = None;
                 for _ in 0..steps {
-                    last = Some(e.allreduce_dist(tr, &grads[rank], ranks.as_deref())?);
+                    last = Some(e.allreduce_dist(tr, &grads[rank], ranks.as_ref())?);
                 }
                 Ok((last.unwrap(), e))
             })
@@ -1209,7 +1225,7 @@ mod tests {
                         tr,
                         &rx,
                         &plan,
-                        ranks.as_deref(),
+                        ranks.as_ref(),
                         std::time::Instant::now(),
                     )?;
                     assert_eq!(spans.len(), plan.len());
@@ -1262,11 +1278,48 @@ mod tests {
     }
 
     #[test]
+    fn layered_plan_refines_per_bucket_ranks() {
+        // A layered plan raising h1's bucket above the stage rollup must
+        // behave exactly like the uniform plan that assigns that rank to
+        // h1's stage: same approx bits, refined volume accounting.
+        let mut rng = Rng::new(11);
+        let g: Vec<f32> = rng.normal_vec(56, 1.0);
+        let infos = crate::coordinator::alloc::bucket_infos(&Engine::new(
+            &mini_manifest(),
+            2,
+            1,
+            false,
+            Backend::Host,
+            2,
+        ))
+        .unwrap();
+        let buckets: Vec<(BucketKey, usize)> = infos
+            .iter()
+            .map(|i| (i.key, if i.key == BucketKey::Layer(1) { 2 } else { 1 }))
+            .collect();
+        let layered = RankPlan::layered(vec![1, 1], buckets, &infos).unwrap();
+        let mut e1 = Engine::new(&mini_manifest(), 2, 1, false, Backend::Host, 2);
+        let rep_l = e1.allreduce(None, &[g.clone()], Some(&layered)).unwrap();
+        let mut e2 = Engine::new(&mini_manifest(), 2, 1, false, Backend::Host, 2);
+        let rep_u = e2.allreduce(None, &[g.clone()], Some(&up(&[1, 2]))).unwrap();
+        // h1.qkv_w is the only stage-1 compressible: both plans give it
+        // rank 2 and everything else rank 1 -> bitwise-equal outputs
+        for (a, b) in rep_l.avg.iter().zip(&rep_u.avg) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(rep_l.stage_compressed, rep_u.stage_compressed);
+        // and strictly more volume than all-rank-1 uniform
+        let mut e3 = Engine::new(&mini_manifest(), 2, 1, false, Backend::Host, 2);
+        let rep_1 = e3.allreduce(None, &[g], Some(&up(&[1, 1]))).unwrap();
+        assert!(rep_l.total_compressed() > rep_1.total_compressed());
+    }
+
+    #[test]
     fn per_stage_ranks_apply() {
         let mut e = Engine::new(&mini_manifest(), 2, 1, false, Backend::Host, 2);
         let mut rng = Rng::new(10);
         let g: Vec<f32> = rng.normal_vec(56, 1.0);
-        let rep = e.allreduce(None, &[g], Some(&[1, 2])).unwrap();
+        let rep = e.allreduce(None, &[g], Some(&up(&[1, 2]))).unwrap();
         // stage-1 tensor (4x2) at rank 2 = full rank for that bucket
         let s1_err = rep
             .tensor_errors

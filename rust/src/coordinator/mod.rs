@@ -1,6 +1,8 @@
 //! Layer-3 coordinator: the paper's system contribution.
 //!
 //! * [`dac`] — the EDGC controller (warm-up, Algorithm 1, Algorithm 2)
+//! * [`alloc`] — the [`alloc::RankPlan`] decision API plus the
+//!   per-bucket greedy rank allocator (`--rank-alloc layer`)
 //! * [`engine`] — compressed DP all-reduce over PJRT artifacts / host,
 //!   plus the shared [`engine::StagePlan`] stage partition map
 //! * [`clock`] — virtual wall-clock (pipesim × netsim composition)
@@ -9,14 +11,16 @@
 //!   per-stage timings)
 //! * [`trainer`] — the training orchestrator tying it all together
 
+pub mod alloc;
 pub mod clock;
 pub mod dac;
 pub mod engine;
 pub mod pipeline;
 pub mod trainer;
 
+pub use alloc::{Alloc, RankPlan};
 pub use clock::VirtualClock;
-pub use dac::{Dac, RankBounds};
+pub use dac::{Dac, DacConfig, DacState, RankBounds};
 pub use engine::{Backend, BucketKey, Engine, GradBucket, StagePlan};
 pub use trainer::{
     run_distributed, run_distributed_pp, DistRun, OverlapReport, PipeCalibration, RunSummary,

@@ -18,9 +18,10 @@ use crate::util::error::{Context, Result};
 
 use crate::baselines;
 use crate::ckpt::state::{CoordAccum, RankLayout};
-use crate::config::{Method, TrainConfig};
+use crate::config::{Method, RankAlloc, TrainConfig};
+use crate::coordinator::alloc::{self, Alloc, RankPlan};
 use crate::coordinator::clock::{BucketCost, VirtualClock};
-use crate::coordinator::dac::{Dac, RankBounds};
+use crate::coordinator::dac::{Dac, DacConfig, RankBounds};
 use crate::coordinator::engine::{AllreduceReport, Backend, BucketKey, Engine, GradBucket};
 use crate::coordinator::pipeline::{self, ModelStage, OverlapHooks, PipeTiming};
 use crate::data::{build_probes, Batcher, SynthCorpus};
@@ -59,6 +60,10 @@ pub struct RunSummary {
     /// Aligned (window, stage-1 rank) decisions; `window` indexes
     /// `entropy_trace` (see `Dac::rank_trace`).
     pub rank_trace: Vec<(usize, f64)>,
+    /// Per-bucket rank decisions of the layer allocator, one `(step,
+    /// ranks)` entry per window boundary (empty unless `--rank-alloc
+    /// layer`); ranks are in `alloc::bucket_infos` order.
+    pub alloc_trace: Vec<(usize, Vec<usize>)>,
     /// (tensor, stage, rel_error) samples recorded every eval interval.
     pub error_samples: Vec<(usize, String, usize, f64)>,
     /// Comm-hiding diagnostics of an `--overlap` run (None otherwise).
@@ -187,6 +192,9 @@ pub struct Trainer {
     pub backend: Backend,
     pub engine: Engine,
     pub dac: Option<Dac>,
+    /// Per-bucket greedy rank allocator (`--rank-alloc layer`): refines
+    /// the DAC's stage rollup into bucket ranks at window boundaries.
+    pub alloc: Option<Alloc>,
     // pub(crate): the checkpoint layer (`ckpt::state`) serializes these
     // directly — they are the complete cross-step training state.
     pub(crate) params: Vec<f32>,
@@ -237,10 +245,19 @@ impl Trainer {
         );
         clock.volume_scale = (cfg.sim_params as f64 / n as f64).max(1.0);
 
+        // Satellite of the RankPlan redesign: user-set rank bounds are
+        // validated against the actual bucket dimensions here, at
+        // plan-build time, instead of deep inside `compress`.
+        alloc::validate_rank_bounds(&engine, cfg.rank_min, cfg.rank_max)?;
+
         let dac = if cfg.method == Method::Edgc {
             Some(Self::build_dac(&cfg, &engine, &clock)?)
         } else {
             None
+        };
+        let alloc = match (&dac, cfg.rank_alloc) {
+            (Some(d), RankAlloc::Layer) => Some(Alloc::new(&engine, d.bounds)?),
+            _ => None,
         };
 
         let gds = Gds::new(GdsConfig {
@@ -259,6 +276,7 @@ impl Trainer {
             corpus,
             engine,
             dac,
+            alloc,
             clock,
             rt,
             backend,
@@ -294,19 +312,31 @@ impl Trainer {
             r += grid_step;
         }
         crate::ensure!(!pts.is_empty(), "empty calibration grid");
-        let r_max = if r_max_eq2 == 0 { ceil } else { r_max_eq2.min(ceil) };
-        let bounds = RankBounds { r_min: netsim::rank_min(r_max), r_max };
+        // --rank-min/--rank-max override the calibrated bounds (the
+        // override is still clamped to the bucket ceiling; inverted
+        // bounds are rejected by DacConfig::validate).
+        let r_max = match cfg.rank_max {
+            Some(hi) => hi.min(ceil),
+            None => {
+                if r_max_eq2 == 0 {
+                    ceil
+                } else {
+                    r_max_eq2.min(ceil)
+                }
+            }
+        };
+        let r_min = cfg.rank_min.unwrap_or_else(|| netsim::rank_min(r_max));
         let comm = fit_eta(&pts);
-        Ok(Dac::new(
-            cfg.edgc,
-            bounds,
-            big.bucket.m,
-            big.bucket.n,
+        Dac::new(DacConfig {
+            params: cfg.edgc,
+            bounds: RankBounds { r_min, r_max },
+            m: big.bucket.m,
+            n: big.bucket.n,
             comm,
-            clock.t_bwd,
-            cfg.pp,
-            cfg.steps,
-        ))
+            microback: clock.t_bwd,
+            stages: cfg.pp,
+            total_steps: cfg.steps,
+        })
     }
 
     fn run_train_step(&self, batch: &[i32]) -> Result<(f32, Vec<f32>)> {
@@ -486,11 +516,12 @@ impl Trainer {
                 self.cfg.steps,
                 self.cfg.pp,
                 self.dac.as_ref(),
+                self.alloc.as_ref(),
             );
 
             // 3. compressed all-reduce
             let rt_opt = if self.backend == Backend::Artifact { Some(&self.rt) } else { None };
-            let report = self.engine.allreduce(rt_opt, &grads, ranks.as_deref())?;
+            let report = self.engine.allreduce(rt_opt, &grads, ranks.as_ref())?;
             total_comm += report.total_compressed();
             total_orig += report.total_original();
             for (acc, &c) in stage_comm_floats.iter_mut().zip(&report.stage_compressed) {
@@ -501,8 +532,11 @@ impl Trainer {
             let avg = report.avg.clone();
             self.adam_update(&avg, step + 1)?;
 
-            // 5. GDS + window + DAC
+            // 5. GDS + window + DAC (+ per-bucket allocator windows)
             if self.gds.due(step) {
+                if let Some(a) = self.alloc.as_mut() {
+                    a.measure(&mut self.gds, &grads[0]);
+                }
                 let est = self.measure_entropy(&grads[0])?;
                 self.window.push(&est);
             }
@@ -512,13 +546,19 @@ impl Trainer {
                         dac.on_window(step + 1, mean);
                     }
                 }
+                if let Some(a) = self.alloc.as_mut() {
+                    a.roll_windows();
+                    if let Some(rs) = self.dac.as_ref().and_then(|d| d.stage_ranks()) {
+                        a.on_window(step + 1, &rs);
+                    }
+                }
             }
 
             // 6. virtual clock
             let (iter_time, _comm_time) = self.clock.step(
                 &report.stage_compressed,
                 &report.stage_original,
-                ranks.as_deref(),
+                ranks.as_ref(),
             );
 
             // bookkeeping
@@ -533,7 +573,7 @@ impl Trainer {
                 loss,
                 last_val,
                 report.mean_rel_error,
-                ranks.as_ref().map_or(0.0, |r| r[0] as f64),
+                ranks.as_ref().map_or(0.0, |p| p.stage_rank(0) as f64),
                 report.total_compressed() as f64,
                 iter_time,
                 self.clock.total,
@@ -589,6 +629,7 @@ impl Trainer {
                 || self.window.history.clone(),
             ),
             rank_trace: self.dac.as_ref().map(|d| d.rank_trace.clone()).unwrap_or_default(),
+            alloc_trace: self.alloc.as_ref().map(|a| a.trace.clone()).unwrap_or_default(),
             error_samples,
             overlap: None,
             wire: WireReport::default(),
@@ -704,17 +745,21 @@ impl Trainer {
             // after the compute yields the same bytes)
             let ranks = {
                 let mine = if rank == 0 {
-                    Some(encode_ranks(&baselines::ranks_for(
-                        self.cfg.method,
-                        step,
-                        self.cfg.steps,
-                        self.cfg.pp,
-                        self.dac.as_ref(),
-                    )))
+                    Some(alloc::encode_plan(
+                        baselines::ranks_for(
+                            self.cfg.method,
+                            step,
+                            self.cfg.steps,
+                            self.cfg.pp,
+                            self.dac.as_ref(),
+                            self.alloc.as_ref(),
+                        )
+                        .as_ref(),
+                    ))
                 } else {
                     None
                 };
-                decode_ranks(&collective::broadcast_bytes(tr, 0, mine.as_deref())?)?
+                alloc::decode_plan(&collective::broadcast_bytes(tr, 0, mine.as_deref())?)?
             };
 
             // this rank's train step + compressed all-reduce:
@@ -723,7 +768,7 @@ impl Trainer {
             let (loss_i, g, report, measured) = match comm.as_deref_mut() {
                 None => {
                     let (loss_i, g) = self.run_train_step(&batch)?;
-                    let report = self.engine.allreduce_dist(tr, &g, ranks.as_deref())?;
+                    let report = self.engine.allreduce_dist(tr, &g, ranks.as_ref())?;
                     (loss_i, g, report, None)
                 }
                 Some(comm_tr) => {
@@ -739,7 +784,7 @@ impl Trainer {
                         &batch,
                         &mut gbuf,
                         plan,
-                        ranks.as_deref(),
+                        ranks.as_ref(),
                         0..n_layer,
                         (rank, 0, 1),
                         None,
@@ -768,6 +813,9 @@ impl Trainer {
             // 5/6. control plane + bookkeeping on rank 0 only
             if rank == 0 {
                 if self.gds.due(step) {
+                    if let Some(a) = self.alloc.as_mut() {
+                        a.measure(&mut self.gds, &g);
+                    }
                     let est = self.measure_entropy(&g)?;
                     self.window.push(&est);
                 }
@@ -777,11 +825,17 @@ impl Trainer {
                             dac.on_window(step + 1, mean);
                         }
                     }
+                    if let Some(a) = self.alloc.as_mut() {
+                        a.roll_windows();
+                        if let Some(rs) = self.dac.as_ref().and_then(|d| d.stage_ranks()) {
+                            a.on_window(step + 1, &rs);
+                        }
+                    }
                 }
                 let (iter_time, _comm_time) = self.clock.step(
                     &report.stage_compressed,
                     &report.stage_original,
-                    ranks.as_deref(),
+                    ranks.as_ref(),
                 );
                 // overlap diagnostics (never fed back into decisions)
                 if let Some((spans, bwd_done)) = &measured {
@@ -789,7 +843,7 @@ impl Trainer {
                     ov_hidden += h;
                     ov_busy += b;
                     let costs = self
-                        .overlap_bucket_costs(full_plan.as_ref().expect("plan"), ranks.as_deref());
+                        .overlap_bucket_costs(full_plan.as_ref().expect("plan"), ranks.as_ref());
                     model.add(&self.clock.overlap_step_estimate(&costs));
                 }
                 if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
@@ -803,7 +857,7 @@ impl Trainer {
                     loss,
                     last_val,
                     report.mean_rel_error,
-                    ranks.as_ref().map_or(0.0, |r| r[0] as f64),
+                    ranks.as_ref().map_or(0.0, |p| p.stage_rank(0) as f64),
                     report.total_compressed() as f64,
                     iter_time,
                     self.clock.total,
@@ -874,6 +928,7 @@ impl Trainer {
                 || self.window.history.clone(),
             ),
             rank_trace: self.dac.as_ref().map(|d| d.rank_trace.clone()).unwrap_or_default(),
+            alloc_trace: self.alloc.as_ref().map(|a| a.trace.clone()).unwrap_or_default(),
             error_samples,
             overlap: self.overlap_report(ov_hidden, ov_busy, &model),
             wire: WireReport::default(), // filled in by run_distributed
@@ -906,7 +961,7 @@ impl Trainer {
     fn overlap_bucket_costs(
         &self,
         plan: &[GradBucket],
-        ranks: Option<&[usize]>,
+        ranks: Option<&RankPlan>,
     ) -> Vec<Vec<BucketCost>> {
         let mut out: Vec<Vec<BucketCost>> = vec![Vec::new(); self.clock.pp];
         for b in plan {
@@ -916,7 +971,10 @@ impl Trainer {
                 let t = &self.engine.tensors[ti];
                 orig += t.spec.size();
                 comp += match ranks {
-                    Some(rs) => rs[t.stage].clamp(1, t.bucket.r_max) * (t.bucket.m + t.bucket.n),
+                    Some(p) => {
+                        p.rank_for(t.stage, t.key).clamp(1, t.bucket.r_max)
+                            * (t.bucket.m + t.bucket.n)
+                    }
                     None => t.spec.size(),
                 };
             }
@@ -925,7 +983,7 @@ impl Trainer {
                 comp += sz;
                 orig += sz;
             }
-            let comm = self.clock.stage_dp_time(comp, orig, ranks.map(|rs| rs[b.stage]));
+            let comm = self.clock.stage_dp_time(comp, orig, ranks.map(|p| p.stage_rank(b.stage)));
             out[b.stage].push(BucketCost { comm, post_backward: b.key == BucketKey::Embed });
         }
         out
@@ -946,7 +1004,7 @@ impl Trainer {
         batch: &[i32],
         gbuf: &mut Vec<f32>,
         plan: &[GradBucket],
-        ranks: Option<&[usize]>,
+        ranks: Option<&RankPlan>,
         layers: std::ops::Range<usize>,
         topo: (usize, usize, usize),
         sub_members: Option<&[usize]>,
@@ -1128,17 +1186,21 @@ impl Trainer {
             // rank decision on the coordinator (it owns the DAC), broadcast
             let ranks = {
                 let mine = if g_rank == 0 {
-                    Some(encode_ranks(&baselines::ranks_for(
-                        self.cfg.method,
-                        step,
-                        self.cfg.steps,
-                        pp,
-                        self.dac.as_ref(),
-                    )))
+                    Some(alloc::encode_plan(
+                        baselines::ranks_for(
+                            self.cfg.method,
+                            step,
+                            self.cfg.steps,
+                            pp,
+                            self.dac.as_ref(),
+                            self.alloc.as_ref(),
+                        )
+                        .as_ref(),
+                    ))
                 } else {
                     None
                 };
-                decode_ranks(&collective::broadcast_bytes(tr, 0, mine.as_deref())?)?
+                alloc::decode_plan(&collective::broadcast_bytes(tr, 0, mine.as_deref())?)?
             };
 
             // 1F1B over this replica's pipeline + tied-embedding
@@ -1170,7 +1232,7 @@ impl Trainer {
                     };
                     let report = {
                         let mut sub = SubTransport::new(&mut *tr, sub_members.clone())?;
-                        self.engine.allreduce_dist_stage(&mut sub, &gbuf, ranks.as_deref(), stage)?
+                        self.engine.allreduce_dist_stage(&mut sub, &gbuf, ranks.as_ref(), stage)?
                     };
                     (timing, replica_loss, report, None)
                 }
@@ -1182,7 +1244,7 @@ impl Trainer {
                         &batch,
                         &mut gbuf,
                         plan,
-                        ranks.as_deref(),
+                        ranks.as_ref(),
                         layer_range.clone(),
                         (first_rank, stage, pp),
                         Some(&sub_members),
@@ -1333,6 +1395,9 @@ impl Trainer {
                     );
                     full[range.clone()].copy_from_slice(&slice);
                 }
+                if let Some(a) = self.alloc.as_mut() {
+                    a.measure(&mut self.gds, &full);
+                }
                 let est = self.measure_entropy(&full)?;
                 self.window.push(&est);
             }
@@ -1342,14 +1407,20 @@ impl Trainer {
                         dac.on_window(step + 1, mean);
                     }
                 }
+                if let Some(a) = self.alloc.as_mut() {
+                    a.roll_windows();
+                    if let Some(rs) = self.dac.as_ref().and_then(|d| d.stage_ranks()) {
+                        a.on_window(step + 1, &rs);
+                    }
+                }
             }
 
             // virtual clock
             let (iter_time, _comm_time) =
-                self.clock.step(&stage_compressed, &stage_original, ranks.as_deref());
+                self.clock.step(&stage_compressed, &stage_original, ranks.as_ref());
             // modeled overlap estimate (diagnostics only)
             if let Some(plan) = full_plan.as_ref() {
-                let costs = self.overlap_bucket_costs(plan, ranks.as_deref());
+                let costs = self.overlap_bucket_costs(plan, ranks.as_ref());
                 model.add(&self.clock.overlap_step_estimate(&costs));
             }
 
@@ -1375,7 +1446,7 @@ impl Trainer {
                 loss,
                 last_val,
                 mean_rel_error,
-                ranks.as_ref().map_or(0.0, |r| r[0] as f64),
+                ranks.as_ref().map_or(0.0, |p| p.stage_rank(0) as f64),
                 stage_compressed.iter().sum::<usize>() as f64,
                 iter_time,
                 self.clock.total,
@@ -1490,6 +1561,7 @@ impl Trainer {
                     .map(|d| d.entropy_trace.clone())
                     .unwrap_or_else(|| self.window.history.clone()),
                 rank_trace: self.dac.as_ref().map(|d| d.rank_trace.clone()).unwrap_or_default(),
+                alloc_trace: self.alloc.as_ref().map(|a| a.trace.clone()).unwrap_or_default(),
                 error_samples,
                 overlap: self.overlap_report(ov_hidden, ov_busy, &model),
                 wire: WireReport::default(), // filled in by run_distributed_pp
@@ -1511,38 +1583,6 @@ impl Trainer {
 }
 
 // --------------------------------------------------------- distributed
-
-/// Wire encoding of a per-step rank decision (rank-0 broadcast).
-fn encode_ranks(r: &Option<Vec<usize>>) -> Vec<u8> {
-    match r {
-        None => vec![0],
-        Some(v) => {
-            let mut out = vec![1u8];
-            out.extend((v.len() as u32).to_le_bytes());
-            for &x in v {
-                out.extend((x as u32).to_le_bytes());
-            }
-            out
-        }
-    }
-}
-
-fn decode_ranks(b: &[u8]) -> Result<Option<Vec<usize>>> {
-    match b.first() {
-        Some(&0) if b.len() == 1 => Ok(None),
-        Some(&1) if b.len() >= 5 => {
-            let n = u32::from_le_bytes([b[1], b[2], b[3], b[4]]) as usize;
-            crate::ensure!(b.len() == 5 + 4 * n, "rank broadcast length mismatch");
-            Ok(Some(
-                b[5..]
-                    .chunks_exact(4)
-                    .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize)
-                    .collect(),
-            ))
-        }
-        _ => crate::bail!("malformed rank broadcast ({} bytes)", b.len()),
-    }
-}
 
 /// Send/receive one metrics-only message: the payload is accounted on
 /// the diag traffic class on both endpoints, keeping the data-class

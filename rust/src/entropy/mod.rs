@@ -168,9 +168,20 @@ impl Gds {
     /// Measure entropy of a gradient slice (β-subsampled). Callers gate on
     /// [`Gds::due`]; measuring off-schedule is allowed (warm-up probes).
     pub fn measure(&mut self, grad: &[f32]) -> Estimate {
-        let beta_cap = (self.cfg.max_sample as f64 / grad.len().max(1) as f64).min(self.cfg.beta);
-        let phase = self.measure_count.wrapping_mul(7919); // decorrelate
+        let est = self.measure_with_salt(grad, 0);
         self.measure_count += 1;
+        est
+    }
+
+    /// Measure entropy with a caller-supplied phase salt and *without*
+    /// advancing the measurement counter: auxiliary per-bucket samples
+    /// (rank allocation) decorrelate from the primary stream via the
+    /// salt while leaving its phases — and therefore its bytes —
+    /// untouched. Salt 0 is exactly the primary phase.
+    pub fn measure_with_salt(&mut self, grad: &[f32], salt: u64) -> Estimate {
+        let beta_cap = (self.cfg.max_sample as f64 / grad.len().max(1) as f64).min(self.cfg.beta);
+        // decorrelate across measurements (7919) and salts (104729)
+        let phase = self.measure_count.wrapping_mul(7919) ^ (salt as usize).wrapping_mul(104_729);
         let mut buf = std::mem::take(&mut self.buf);
         subsample(grad, beta_cap, phase, &mut buf);
         let est = estimate(&buf);

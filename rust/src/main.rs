@@ -14,7 +14,7 @@
 
 use edgc::util::error::{Context, Result};
 
-use edgc::config::{cluster_by_name, Method, TrainConfig};
+use edgc::config::{cluster_by_name, Method, RankAlloc, TrainConfig};
 use edgc::coordinator::{run_distributed, run_distributed_pp, Backend, Trainer};
 use edgc::dist::{Codec, TransportKind};
 use edgc::repro;
@@ -29,8 +29,32 @@ fn spec() -> Spec {
         flags: vec![
             ("artifacts", "DIR", "artifact directory (default artifacts/tiny)"),
             ("steps", "N", "training steps / experiment scale (default 200)"),
-            ("method", "NAME", "megatron|powersgd|optimus-cc|edgc (default edgc)"),
-            ("rank", "R", "fixed rank for powersgd/optimus-cc (default 32)"),
+            (
+                "method",
+                "NAME",
+                "megatron|powersgd|optimus-cc|edgc (default edgc). Deprecated \
+                 TOML alias: compress.method — prefer [compression] method",
+            ),
+            (
+                "rank",
+                "R",
+                "fixed rank for powersgd/optimus-cc (default 32). Deprecated \
+                 TOML alias: compress.rank — prefer [compression] rank",
+            ),
+            (
+                "rank-alloc",
+                "NAME",
+                "EDGC rank allocation: stage (uniform per pipeline stage, \
+                 default) | layer (per-bucket greedy refinement of the \
+                 stage budget by CQM marginal gain)",
+            ),
+            (
+                "rank-min",
+                "R",
+                "override the calibrated rank floor (validated against the \
+                 actual bucket dimensions at launch)",
+            ),
+            ("rank-max", "R", "override the calibrated rank ceiling"),
             ("dp", "N", "data-parallel degree (default 2)"),
             ("pp", "N", "pipeline stages (default 4)"),
             ("tp", "N", "tensor-parallel degree, timing model only (default 4)"),
@@ -53,14 +77,16 @@ fn spec() -> Spec {
                 "",
                 "overlap bucketed gradient communication with backward compute \
                  (per-layer buckets on a dedicated comm thread per rank; \
-                 byte-identical outputs; requires --transport)",
+                 byte-identical outputs; requires --transport). Deprecated \
+                 TOML alias: run.overlap — prefer [compression] overlap",
             ),
             (
                 "codec",
                 "NAME",
                 "wire codec for distributed runs: off|lossless|bf16|f16 \
                  (lossless is bit-exact; bf16/f16 quantize PowerSGD factors; \
-                 default off)",
+                 default off). Deprecated TOML alias: wire.codec — prefer \
+                 [compression] codec",
             ),
             (
                 "save-every",
@@ -150,6 +176,15 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(m) = args.opt("method") {
         cfg.method = Method::parse(m, rank)?;
     }
+    if let Some(a) = args.opt("rank-alloc") {
+        cfg.rank_alloc = RankAlloc::parse(a)?;
+    }
+    if args.opt("rank-min").is_some() {
+        cfg.rank_min = Some(args.usize_or("rank-min", 0)?);
+    }
+    if args.opt("rank-max").is_some() {
+        cfg.rank_max = Some(args.usize_or("rank-max", 0)?);
+    }
     if let Some(c) = args.opt("cluster") {
         cfg.cluster = cluster_by_name(c)?;
     }
@@ -180,6 +215,7 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
         cfg.stop_after = Some(args.usize_or("stop-after", 0)?);
     }
     cfg.validate_ckpt()?;
+    cfg.validate_compression()?;
     if let Some(dir) = &cfg.ckpt_dir {
         probe_writable(dir)?;
     }
@@ -242,6 +278,13 @@ fn cmd_train(args: &Args) -> Result<()> {
             format!(", codec={}", cfg.codec.name())
         },
     );
+    if cfg.rank_alloc == RankAlloc::Layer {
+        println!(
+            "[edgc] rank allocation: layer (per-bucket greedy refinement{}{})",
+            cfg.rank_min.map_or(String::new(), |r| format!(", rank-min={r}")),
+            cfg.rank_max.map_or(String::new(), |r| format!(", rank-max={r}")),
+        );
+    }
     let out_dir = cfg.out_dir.clone();
     let dp = cfg.dp;
     // real pipeline execution is opt-in: an *explicit* --pp > 1 next to

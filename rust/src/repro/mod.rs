@@ -16,7 +16,7 @@ use crate::util::error::Result;
 
 use self::campaign::job_seed;
 
-use crate::config::{EdgcParams, Method, TrainConfig};
+use crate::config::{EdgcParams, Method, RankAlloc, TrainConfig};
 use crate::coordinator::{Backend, Trainer};
 use crate::cqm;
 use crate::entropy;
@@ -27,7 +27,7 @@ use crate::tensor::{mse, pearson, pearson64};
 
 pub const ALL: &[&str] = &[
     "fig2", "fig3", "fig4", "fig9", "fig10", "fig11", "table3", "table4", "fig12", "table5",
-    "fig13", "table6", "table7", "fig14", "scaling",
+    "fig13", "table6", "table7", "fig14", "scaling", "alloc",
 ];
 
 /// Common options for the harness.
@@ -93,6 +93,7 @@ pub fn run_tables(name: &str, opts: &Opts) -> Result<Vec<Table>> {
         "table7" => table7_window_sizes(opts)?,
         "fig14" => fig14_stage_alignment(opts)?,
         "scaling" => scaling_llama34b()?,
+        "alloc" => alloc_layer_vs_stage(opts)?,
         other => bail!("unknown experiment {other:?}; available: {}", ALL.join(", ")),
     };
     for t in &tables {
@@ -125,6 +126,9 @@ fn base_cfg(opts: &Opts, exp: &str, method: Method) -> TrainConfig {
         lr: 2e-3,
         seed,
         method,
+        rank_alloc: RankAlloc::Stage,
+        rank_min: None,
+        rank_max: None,
         edgc: EdgcParams {
             window: (opts.steps / 20).max(4),
             alpha: 0.5,
@@ -556,8 +560,8 @@ fn scaling_llama34b() -> Result<Vec<Table>> {
         let mut vc = crate::coordinator::VirtualClock::new(c, dp, tp, pp, micro, n_params, tokens);
         let orig = vec![n_params / pp; pp];
         let comp = vec![stage_floats; pp];
-        let ranks_v = rank.map(|r| vec![r; pp]);
-        vc.step(&comp, &orig, ranks_v.as_deref())
+        let ranks_v = rank.map(|r| crate::coordinator::RankPlan::uniform(vec![r; pp]));
+        vc.step(&comp, &orig, ranks_v.as_ref())
     };
     // Megatron baseline
     let (it_base, comm_base) = clock(None, n_params / pp);
@@ -586,6 +590,56 @@ fn scaling_llama34b() -> Result<Vec<Table>> {
         (1.0 - it_edgc / it_base) * 100.0,
         (1.0 - comm_edgc / comm_base) * 100.0,
     ]);
+    Ok(vec![t])
+}
+
+// ------------------------------------------------------------------ alloc
+
+/// `--rank-alloc` comparison: per-bucket greedy allocation (`layer`) vs
+/// the stage-uniform rollup (`stage`) on the deep preset's bucket plan,
+/// at the SAME total factor-volume budget per stage. One GDS window of a
+/// deterministic synthetic gradient stream seeds the entropy weighting
+/// (matched-seed protocol, like every other job); the layered plan's
+/// CQM-modeled aggregate error must sit strictly below the uniform one
+/// at every budget point — the acceptance criterion also asserted in
+/// `coordinator::alloc` tests.
+fn alloc_layer_vs_stage(opts: &Opts) -> Result<Vec<Table>> {
+    use crate::coordinator::alloc::Alloc;
+    use crate::coordinator::dac::RankBounds;
+    use crate::coordinator::engine::{Backend as EngineBackend, Engine};
+    use crate::entropy::{Gds, GdsConfig};
+    use crate::runtime::Manifest;
+
+    let man = Manifest::synthesize("deep", 2, 0)?;
+    let pp = 2usize;
+    let engine = Engine::new(&man, pp, 1, false, EngineBackend::Host, 0);
+    let mut alloc = Alloc::new(&engine, RankBounds { r_min: 2, r_max: 64 })?;
+    let mut gds = Gds::new(GdsConfig { alpha: 1.0, beta: 0.25, max_sample: 1 << 20 })?;
+    let mut rng = crate::util::rng::Rng::new(job_seed(opts.seed, "alloc", "grad", "deep"));
+    for _ in 0..4 {
+        let grad: Vec<f32> = rng.normal_vec(engine.n_params, 0.02);
+        alloc.measure(&mut gds, &grad);
+    }
+    alloc.roll_windows();
+
+    let mut t = Table::new(
+        "alloc_layer_vs_stage",
+        &["stage_rank", "volume_budget", "volume_layer", "err_stage", "err_layer", "improvement_pct"],
+    );
+    for r in [4usize, 8, 16, 32] {
+        let stage_ranks = vec![r; pp];
+        let uniform = alloc.uniform_ranks(&stage_ranks);
+        let greedy = alloc.allocate(&stage_ranks);
+        let (vu, vl) = (alloc.volume(&uniform), alloc.volume(&greedy));
+        let (eu, el) = (alloc.modeled_error(&uniform), alloc.modeled_error(&greedy));
+        if vl > vu {
+            bail!("layer allocation exceeded the stage budget at rank {r}: {vl} > {vu}");
+        }
+        if el >= eu {
+            bail!("layer allocation not strictly below uniform at rank {r}: {el} >= {eu}");
+        }
+        t.push(vec![r as f64, vu as f64, vl as f64, eu, el, (1.0 - el / eu) * 100.0]);
+    }
     Ok(vec![t])
 }
 
@@ -633,8 +687,8 @@ pub fn paper_scale_projection(cluster: Cluster, n_params: usize, dp: usize) -> T
             let frac = (seg as f64 + 0.5) / 10.0;
             let r = sched(frac);
             let comp = r.map(|r| floats_at(r)).unwrap_or(stage_orig);
-            let ranks_v = r.map(|r| vec![r; pp]);
-            let (it, cm) = vc.step(&vec![comp; pp], &vec![stage_orig; pp], ranks_v.as_deref());
+            let ranks_v = r.map(|r| crate::coordinator::RankPlan::uniform(vec![r; pp]));
+            let (it, cm) = vc.step(&vec![comp; pp], &vec![stage_orig; pp], ranks_v.as_ref());
             tot += it * iters / 10.0;
             comm += cm * iters / 10.0;
         }
@@ -704,6 +758,18 @@ mod tests {
         let e2e = t.rows[1][3];
         let comm = t.rows[1][4];
         assert!(e2e > 0.0 && comm > 15.0, "e2e={e2e} comm={comm}");
+    }
+
+    #[test]
+    fn alloc_job_shows_strict_layer_improvement_at_equal_volume() {
+        let tables = alloc_layer_vs_stage(&Opts::default()).unwrap();
+        let t = &tables[0];
+        assert!(!t.rows.is_empty());
+        for row in &t.rows {
+            assert!(row[2] <= row[1], "budget violated: {row:?}");
+            assert!(row[4] < row[3], "layer not strictly better: {row:?}");
+            assert!(row[5] > 0.0, "non-positive improvement: {row:?}");
+        }
     }
 
     #[test]

@@ -37,6 +37,9 @@ fn tiny_cfg(method: Method, steps: usize) -> TrainConfig {
         lr: 2e-3,
         seed: 7,
         method,
+        rank_alloc: edgc::config::RankAlloc::Stage,
+        rank_min: None,
+        rank_max: None,
         edgc: edgc::config::EdgcParams {
             window: 5,
             alpha: 0.5,
@@ -349,6 +352,50 @@ fn overlap_matches_sequential_bytes() {
     par::set_threads(1);
 }
 
+/// The `--rank-alloc layer` byte-determinism pin: the per-bucket
+/// allocation is decided on the coordinator rank from the salted GDS
+/// side-stream and broadcast with the stage ranks, so every
+/// {pp 1,2} x {dp 1,2} x {mem,tcp} x {overlap on,off} cell must
+/// reproduce the centralized (or sequential) reference bit for bit.
+#[test]
+fn layer_alloc_matrix_is_byte_identical() {
+    let _knob = hold_par_knob();
+    par::set_threads(1);
+    for (pp, dp) in [(1usize, 1usize), (1, 2), (2, 1), (2, 2)] {
+        for kind in [TransportKind::Mem, TransportKind::Tcp] {
+            for overlap in [false, true] {
+                let mut cfg = tiny_cfg(Method::Edgc, 12);
+                cfg.pp = pp;
+                cfg.dp = dp;
+                cfg.rank_alloc = edgc::config::RankAlloc::Layer;
+                if overlap {
+                    assert_overlap_matches_sequential(&cfg, kind);
+                } else if pp >= 2 {
+                    assert_pp_matches_centralized(&cfg, kind);
+                } else {
+                    let tag = format!("layer pp={pp} dp={dp} over {}", kind.name());
+                    let (central_params, central_curve, central_alloc) = {
+                        let mut t = Trainer::new(cfg.clone(), Backend::Host).unwrap();
+                        let s = t.run().unwrap();
+                        (t.params().to_vec(), s.curve.render(), s.alloc_trace.clone())
+                    };
+                    let run = run_distributed(cfg.clone(), Backend::Host, kind).unwrap();
+                    assert_eq!(run.summary.curve.render(), central_curve, "curve ({tag})");
+                    let same = run.params.len() == central_params.len()
+                        && run
+                            .params
+                            .iter()
+                            .zip(&central_params)
+                            .all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(same, "params differ ({tag})");
+                    assert_eq!(run.summary.alloc_trace, central_alloc, "alloc trace ({tag})");
+                }
+            }
+        }
+    }
+    par::set_threads(1);
+}
+
 /// Overlapped runs keep the microbatch-split invariance: uneven and
 /// zero-length trailing microbatches change only when buckets are
 /// handed off, never the bytes.
@@ -548,12 +595,18 @@ fn pp_dp_matrix_cell() {
         Ok("off") | Err(_) => false,
         Ok(other) => panic!("EDGC_RESUME={other:?} is not on|off"),
     };
+    let rank_alloc = match std::env::var("EDGC_RANK_ALLOC") {
+        Ok(v) => edgc::config::RankAlloc::parse(&v)
+            .unwrap_or_else(|e| panic!("EDGC_RANK_ALLOC: {e}")),
+        Err(_) => edgc::config::RankAlloc::Stage,
+    };
     let mut cfg = tiny_cfg(Method::Edgc, 8);
     cfg.artifacts = "artifacts/deep".into();
     cfg.pp = pp;
     cfg.dp = dp;
     cfg.microbatches = 4;
     cfg.codec = codec;
+    cfg.rank_alloc = rank_alloc;
     if resume {
         // resume dimension: interrupt the cell at step 3, resume, and
         // demand bytes identical to the cell's own unbroken run
@@ -820,6 +873,7 @@ fn assert_resume_matches_unbroken(cfg: &TrainConfig, kind: TransportKind, k: usi
     assert!(same, "params differ ({tag})");
     assert_eq!(resumed.summary.entropy_trace, unbroken.summary.entropy_trace, "entropy ({tag})");
     assert_eq!(resumed.summary.rank_trace, unbroken.summary.rank_trace, "ranks ({tag})");
+    assert_eq!(resumed.summary.alloc_trace, unbroken.summary.alloc_trace, "alloc ({tag})");
     assert_eq!(resumed.summary.error_samples, unbroken.summary.error_samples, "errors ({tag})");
     assert_eq!(
         resumed.summary.total_comm_floats, unbroken.summary.total_comm_floats,
@@ -872,6 +926,14 @@ fn resume_matches_unbroken_matrix() {
                 }
             }
         }
+    }
+    // the layer-allocator cell: a mid-window interrupt (k=3 inside the
+    // first window of 5) must restore the salted GDS phases, the open
+    // per-bucket entropy windows, and the current allocation bit-exactly
+    for kind in [TransportKind::Mem, TransportKind::Tcp] {
+        let mut cfg = tiny_cfg(Method::Edgc, 12);
+        cfg.rank_alloc = edgc::config::RankAlloc::Layer;
+        assert_resume_matches_unbroken(&cfg, kind, 3);
     }
     par::set_threads(1);
 }

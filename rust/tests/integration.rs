@@ -21,6 +21,9 @@ fn tiny_cfg(method: Method, steps: usize) -> TrainConfig {
         lr: 2e-3,
         seed: 7,
         method,
+        rank_alloc: edgc::config::RankAlloc::Stage,
+        rank_min: None,
+        rank_max: None,
         edgc: edgc::config::EdgcParams {
             window: 5,
             alpha: 0.5,
@@ -76,7 +79,7 @@ fn executable_and_host_compression_paths_agree() {
     let mut rng = Rng::new(42);
     let g1: Vec<f32> = rng.normal_vec(man.n_params, 0.02);
     let g2: Vec<f32> = rng.normal_vec(man.n_params, 0.02);
-    let ranks = vec![8usize, 8];
+    let ranks = edgc::coordinator::RankPlan::uniform(vec![8, 8]);
     let rep_h = host.allreduce(None, &[g1.clone(), g2.clone()], Some(&ranks)).unwrap();
     let rep_a = art.allreduce(Some(&rt), &[g1, g2], Some(&ranks)).unwrap();
     assert_eq!(rep_h.total_compressed(), rep_a.total_compressed());
@@ -154,6 +157,24 @@ fn edgc_artifact_backend_smoke() {
     let s = t.run().unwrap();
     assert!(s.final_train_loss.is_finite());
     assert!(s.curve.rows.len() == 12);
+}
+
+#[test]
+fn edgc_layer_alloc_engages_and_trains() {
+    let mut cfg = tiny_cfg(Method::Edgc, 40);
+    cfg.rank_alloc = edgc::config::RankAlloc::Layer;
+    let mut t = Trainer::new(cfg, Backend::Host).unwrap();
+    let s = t.run().unwrap();
+    // compression engaged and the allocator recorded per-bucket decisions
+    assert!(s.total_comm_floats < s.total_uncompressed_floats);
+    assert!(!s.alloc_trace.is_empty(), "no per-bucket allocation decisions recorded");
+    for (step, ranks) in &s.alloc_trace {
+        assert!(*step > 0 && !ranks.is_empty());
+        assert!(ranks.iter().all(|&r| r >= 1), "rank 0 allocated at step {step}");
+    }
+    // loss still decreases under the refined plan
+    let first = s.curve.column("loss")[0];
+    assert!(s.final_train_loss < first - 0.4);
 }
 
 #[test]
