@@ -107,6 +107,7 @@ mod tests {
             microback: 1e-3,
             stages: 4,
             total_steps: 100,
+            slack: None,
         })
         .unwrap();
         assert_eq!(ranks_for(Method::Edgc, 5, 100, 4, Some(&dac), None), None);
@@ -131,6 +132,7 @@ mod tests {
             microback: 1e-3,
             stages: 2,
             total_steps: 100,
+            slack: None,
         })
         .unwrap();
         dac.on_window(10, 4.0);

@@ -52,11 +52,22 @@ pub const RETAIN: usize = 2;
 /// resumed with a different snapshot cadence or output directory.
 pub fn fingerprint(cfg: &TrainConfig) -> u64 {
     let e = &cfg.edgc;
+    // Scenario knobs that shape the stream pin the fingerprint:
+    // local-SGD cadence/penalty change every update, and a straggler
+    // profile changes the DAC's slack ladder. The fault spec does NOT —
+    // like `stop_after`, it models an interruption of the same stream,
+    // and `--resume` after a fault must accept the dead run's snapshots.
+    let s = &cfg.scenario;
+    let straggler = s.straggler.as_ref().map_or_else(
+        || "-".to_string(),
+        |p| p.iter().map(|f| format!("{:016x}", f.to_bits())).collect::<Vec<_>>().join(","),
+    );
     let canon = format!(
         "v{VERSION};artifacts={};steps={};dp={};pp={};tp={};micro={};lr={:016x};seed={};\
          method={};alpha={:016x};beta={:016x};window={};step_limit={};warmup={:016x};\
          aligned={};cluster={};corpus={};sim_params={};sim_tokens={};eval_every={};\
-         overlap={};codec={};alloc={};rmin={};rmax={}",
+         overlap={};codec={};alloc={};rmin={};rmax={};\
+         lsgd={};lsgdpen={:016x};straggler={}",
         cfg.artifacts,
         cfg.steps,
         cfg.dp,
@@ -82,6 +93,9 @@ pub fn fingerprint(cfg: &TrainConfig) -> u64 {
         cfg.rank_alloc.name(),
         cfg.rank_min.map_or("-".into(), |v| v.to_string()),
         cfg.rank_max.map_or("-".into(), |v| v.to_string()),
+        s.local_sgd,
+        s.local_sgd_penalty.to_bits(),
+        straggler,
     );
     fnv64(canon.as_bytes())
 }
@@ -504,13 +518,26 @@ mod tests {
         bounds.rank_min = Some(2);
         bounds.rank_max = Some(32);
         assert_ne!(fp, fingerprint(&bounds), "rank bound overrides shape the stream");
-        // Paths and snapshot cadence must NOT pin the fingerprint.
+        let mut lsgd = base.clone();
+        lsgd.scenario.local_sgd = 4;
+        assert_ne!(fp, fingerprint(&lsgd), "local-SGD cadence shapes the stream");
+        let mut pen = base.clone();
+        pen.scenario.local_sgd = 4;
+        pen.scenario.local_sgd_penalty = 0.1;
+        assert_ne!(fingerprint(&lsgd), fingerprint(&pen), "the penalty shapes the stream");
+        let mut strag = base.clone();
+        strag.scenario.straggler = Some(vec![1.0, 2.0]);
+        assert_ne!(fp, fingerprint(&strag), "a straggler profile reshapes the slack ladder");
+        // Paths and snapshot cadence must NOT pin the fingerprint —
+        // and neither does a fault spec: resuming *after* a fault must
+        // accept the dead run's snapshots.
         let mut knobs = base.clone();
         knobs.out_dir = "elsewhere".into();
         knobs.save_every = 17;
         knobs.ckpt_dir = Some("x".into());
         knobs.resume = Some("y".into());
         knobs.stop_after = Some(3);
+        knobs.scenario.fault = Some(crate::config::FaultSpec { rank: 0, step: 2 });
         assert_eq!(fp, fingerprint(&knobs));
     }
 

@@ -347,6 +347,13 @@ impl Trainer {
                     for &(w, r) in &dac.rank_trace {
                         e.usize(w).f64(r);
                     }
+                    e.usize(dac.stage_trace.len());
+                    for (w, rs) in &dac.stage_trace {
+                        e.usize(*w).usize(rs.len());
+                        for &r in rs {
+                            e.usize(r);
+                        }
+                    }
                 }
             }
             // Per-bucket allocator state (`--rank-alloc layer`): the
@@ -613,6 +620,18 @@ impl Trainer {
                         trace.push((w, d.f64()?));
                     }
                     dac.rank_trace = trace;
+                    let n = d.usize()?;
+                    let mut strace = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let w = d.usize()?;
+                        let k = d.usize()?;
+                        let mut rs = Vec::with_capacity(k);
+                        for _ in 0..k {
+                            rs.push(d.usize()?);
+                        }
+                        strace.push((w, rs));
+                    }
+                    dac.stage_trace = strace;
                 }
                 let alloc_present = d.bool()?;
                 ensure!(

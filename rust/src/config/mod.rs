@@ -14,6 +14,9 @@ use crate::{bail, err};
 use crate::dist::codec::Codec;
 use crate::netsim::{Cluster, CLUSTER1_V100, CLUSTER2_H100, CLUSTER3_SCALING};
 
+pub mod scenario;
+pub use scenario::{FaultSpec, ScenarioConfig};
+
 /// A scalar or array value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
@@ -353,6 +356,10 @@ pub struct TrainConfig {
     /// from `steps`, so an interrupted-then-resumed run is byte-identical
     /// to the unbroken one. Used by the resume-determinism tests and CI.
     pub stop_after: Option<usize>,
+    /// Hostile-cluster scenario: local-SGD cadence, straggler profile,
+    /// fault injection (`[scenario]` table, `--local-sgd`/`--straggler`/
+    /// `--fault-rank`/`--fault-step`). Benign by default.
+    pub scenario: ScenarioConfig,
 }
 
 impl Default for TrainConfig {
@@ -383,6 +390,7 @@ impl Default for TrainConfig {
             ckpt_dir: None,
             resume: None,
             stop_after: None,
+            scenario: ScenarioConfig::default(),
         }
     }
 }
@@ -442,10 +450,60 @@ impl TrainConfig {
         if let Some(v) = t.get("run.ckpt_dir") {
             c.ckpt_dir = Some(v.as_str().context("run.ckpt_dir")?.to_string());
         }
+        c.scenario.local_sgd = t.usize_or("scenario.local_sgd", c.scenario.local_sgd)?;
+        c.scenario.local_sgd_penalty =
+            t.f64_or("scenario.local_sgd_penalty", c.scenario.local_sgd_penalty)?;
+        if let Some(v) = t.get("scenario.straggler") {
+            let Value::Arr(items) = v else { bail!("scenario.straggler must be an array") };
+            let profile: Vec<f64> = items
+                .iter()
+                .map(|x| x.as_f64())
+                .collect::<Result<_>>()
+                .context("scenario.straggler")?;
+            c.scenario.straggler = Some(profile);
+        }
+        match (t.get("scenario.fault_rank"), t.get("scenario.fault_step")) {
+            (Some(r), Some(s)) => {
+                c.scenario.fault = Some(FaultSpec {
+                    rank: r.as_usize().context("scenario.fault_rank")?,
+                    step: s.as_usize().context("scenario.fault_step")?,
+                });
+            }
+            (None, None) => {}
+            _ => bail!("scenario.fault_rank and scenario.fault_step must be set together"),
+        }
         c.edgc.validate().context("[edgc] section")?;
         c.validate_ckpt().context("[run] section")?;
         c.validate_compression().context("[compression] section")?;
+        c.validate_scenario().context("[scenario] section")?;
         Ok(c)
+    }
+
+    /// Check the scenario against this run's geometry (one call site for
+    /// TOML and CLI layering; see [`ScenarioConfig::validate`]).
+    pub fn validate_scenario(&self) -> Result<()> {
+        self.scenario.validate(self.pp, self.dp * self.pp, self.steps, self.save_every)?;
+        if self.scenario.local_sgd > 1 {
+            // The run (and any modeled interruption) must end on a sync
+            // boundary: mid-round the replicas hold diverged local
+            // parameters that neither snapshots nor the final
+            // consistency check can describe.
+            crate::ensure!(
+                self.steps % self.scenario.local_sgd == 0,
+                "steps ({}) must be a multiple of local_sgd ({}) so the run ends on a \
+                 sync boundary",
+                self.steps,
+                self.scenario.local_sgd
+            );
+            if let Some(k) = self.stop_after {
+                crate::ensure!(
+                    k % self.scenario.local_sgd == 0,
+                    "stop_after ({k}) must land on a local_sgd ({}) sync boundary",
+                    self.scenario.local_sgd
+                );
+            }
+        }
+        Ok(())
     }
 
     /// Every compression-related knob of a run, resolved into one view:
@@ -660,6 +718,48 @@ overlap = true
         assert!(e.contains("rank bounds inverted"), "{e}");
         assert!(TrainConfig::from_toml("[compression]\nrank_min = 0\n").is_err());
         assert!(TrainConfig::from_toml("[compression]\nrank_alloc = \"hot\"\n").is_err());
+    }
+
+    #[test]
+    fn scenario_table_parses_and_validates() {
+        let text = r#"
+[parallel]
+dp = 2
+pp = 2
+
+[run]
+steps = 100
+
+[scenario]
+local_sgd = 4
+local_sgd_penalty = 0.2
+straggler = [1.0, 2.0]
+fault_rank = 3
+fault_step = 9
+"#;
+        let c = TrainConfig::from_toml(text).unwrap();
+        assert!(c.scenario.active());
+        assert_eq!(c.scenario.local_sgd, 4);
+        assert!((c.scenario.local_sgd_penalty - 0.2).abs() < 1e-12);
+        assert_eq!(c.scenario.straggler.as_deref(), Some(&[1.0, 2.0][..]));
+        assert_eq!(c.scenario.fault, Some(FaultSpec { rank: 3, step: 9 }));
+        // defaults stay benign
+        assert!(!TrainConfig::from_toml("").unwrap().scenario.active());
+    }
+
+    #[test]
+    fn scenario_table_rejects_bad_shapes() {
+        // fault knobs must come as a pair
+        let e = TrainConfig::from_toml("[scenario]\nfault_rank = 1\n").unwrap_err().to_string();
+        assert!(e.contains("set together"), "{e}");
+        // profile arity is checked against the run's pp
+        let text = "[parallel]\npp = 4\n\n[scenario]\nstraggler = [1.0, 2.0]\n";
+        let e = TrainConfig::from_toml(text).unwrap_err().to_string();
+        assert!(e.contains("[scenario] section"), "{e}");
+        // snapshots must align to the local-SGD cadence
+        let text = "[run]\nsave_every = 5\nckpt_dir = \"c\"\n\n[scenario]\nlocal_sgd = 2\n";
+        assert!(TrainConfig::from_toml(text).is_err());
+        assert!(TrainConfig::from_toml("[scenario]\nstraggler = 2.0\n").is_err());
     }
 
     #[test]

@@ -1,0 +1,216 @@
+//! Hostile-cluster scenario configuration.
+//!
+//! A *scenario* perturbs how a run executes — local-SGD sync cadence,
+//! deterministic per-stage stragglers, a rank killed mid-step — without
+//! touching what the run computes at the points it does synchronize.
+//! [`ScenarioConfig`] is the one typed decision record for all of it:
+//! the `[scenario]` TOML table and the `--local-sgd` / `--straggler` /
+//! `--fault-*` CLI flags both land here, every bound is checked once at
+//! build time ([`ScenarioConfig::validate`]), and the trainer, DAC and
+//! virtual clock read the validated struct instead of re-deriving knobs
+//! (DESIGN.md §Scenarios).
+//!
+//! * `local_sgd = K` — DP replicas take K plain-SGD steps locally, then
+//!   all-reduce the *pseudo-gradient* `(anchor - local)/(K·lr)` through
+//!   the existing compressed collectives; `local_sgd_penalty` is the
+//!   EDiT-style RMS damping applied to the averaged pseudo-gradient.
+//! * `straggler = [f_0, ..]` — per-stage slowdown factors priced into
+//!   the virtual clock and enacted (diagnostics-only) as real sleeps in
+//!   pipeline workers; the DAC prices slack per stage from the modeled
+//!   skewed timeline instead of the uniform `i·microback` ladder.
+//! * `fault = (rank, step)` — that rank exits before step `step`'s sync;
+//!   survivors get a typed [`DistError::PeerDeath`](crate::dist::DistError)
+//!   naming it, and `train --resume` rejoins byte-identically.
+
+use crate::util::error::Result;
+use crate::{bail, ensure};
+
+/// A rank killed mid-run: `rank` bails out right before the collective
+/// of step `step`, so its peers observe a closed link on that step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Flat worker rank (`replica * pp + stage` in pp runs).
+    pub rank: usize,
+    /// 0-based training step at which the rank dies.
+    pub step: usize,
+}
+
+/// The validated hostile-cluster scenario of a run
+/// ([`TrainConfig::scenario`](super::TrainConfig::scenario)).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioConfig {
+    /// Local-SGD sync period K: replicas synchronize every K steps
+    /// (1 = classic per-step DP, the default).
+    pub local_sgd: usize,
+    /// Pseudo-gradient RMS penalty λ in `[0, 1)`: the averaged
+    /// pseudo-gradient is scaled by `1 / (1 + λ·rms)` to damp outer
+    /// spikes (EDiT). Requires `local_sgd > 1`.
+    pub local_sgd_penalty: f64,
+    /// Per-stage slowdown factors, one per pipeline stage, each ≥ 1.0
+    /// (1.0 = nominal speed). `None` = uniform cluster.
+    pub straggler: Option<Vec<f64>>,
+    /// Kill `fault.rank` at `fault.step`. Excluded from the checkpoint
+    /// fingerprint (like `stop_after`): the fault interrupts the stream
+    /// but must not change it.
+    pub fault: Option<FaultSpec>,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig { local_sgd: 1, local_sgd_penalty: 0.0, straggler: None, fault: None }
+    }
+}
+
+impl ScenarioConfig {
+    /// Whether any scenario dimension deviates from the benign default.
+    pub fn active(&self) -> bool {
+        self != &ScenarioConfig::default()
+    }
+
+    /// Whether `step` (0-based) ends a local-SGD round, i.e. replicas
+    /// synchronize pseudo-gradients after this step's backward. With
+    /// `local_sgd = 1` every step is a sync step.
+    pub fn is_sync_step(&self, step: usize) -> bool {
+        (step + 1) % self.local_sgd == 0
+    }
+
+    /// The slowdown factor of `stage` (1.0 when no profile is set).
+    pub fn stage_slowdown(&self, stage: usize) -> f64 {
+        self.straggler.as_ref().and_then(|p| p.get(stage)).copied().unwrap_or(1.0)
+    }
+
+    /// Build-time validation against the run geometry. `world` is the
+    /// flat worker count of the distributed run (`dp·pp`), `steps` the
+    /// planned horizon, `save_every` the snapshot cadence (0 = off).
+    ///
+    /// Checks: K ≥ 1; λ ∈ [0, 1) and only with K > 1; straggler profile
+    /// has one finite factor ≥ 1.0 per stage; a fault names a live rank
+    /// and a step inside the horizon; snapshots align to sync
+    /// boundaries (`save_every % K == 0`) so a local-SGD resume never
+    /// lands mid-round.
+    pub fn validate(&self, pp: usize, world: usize, steps: usize, save_every: usize) -> Result<()> {
+        ensure!(self.local_sgd >= 1, "scenario.local_sgd must be >= 1 (got {})", self.local_sgd);
+        ensure!(
+            self.local_sgd_penalty.is_finite() && (0.0..1.0).contains(&self.local_sgd_penalty),
+            "scenario.local_sgd_penalty must be in [0, 1), got {}",
+            self.local_sgd_penalty
+        );
+        if self.local_sgd_penalty > 0.0 && self.local_sgd == 1 {
+            bail!("scenario.local_sgd_penalty requires local_sgd > 1 (penalty damps the pseudo-gradient, which only exists between sync rounds)");
+        }
+        if let Some(profile) = &self.straggler {
+            ensure!(
+                profile.len() == pp,
+                "scenario.straggler needs one factor per pipeline stage: got {} factors for pp = {pp}",
+                profile.len()
+            );
+            for (i, f) in profile.iter().enumerate() {
+                ensure!(
+                    f.is_finite() && *f >= 1.0,
+                    "scenario.straggler[{i}] must be a finite factor >= 1.0 (got {f})"
+                );
+            }
+        }
+        if let Some(fault) = &self.fault {
+            ensure!(
+                fault.rank < world,
+                "scenario fault rank {} out of range for world size {world}",
+                fault.rank
+            );
+            ensure!(
+                fault.step < steps,
+                "scenario fault step {} must precede the horizon ({steps} steps)",
+                fault.step
+            );
+        }
+        if self.local_sgd > 1 && save_every > 0 {
+            ensure!(
+                save_every % self.local_sgd == 0,
+                "save_every = {save_every} must be a multiple of local_sgd = {} so snapshots land on sync boundaries",
+                self.local_sgd
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn with(f: impl FnOnce(&mut ScenarioConfig)) -> ScenarioConfig {
+        let mut s = ScenarioConfig::default();
+        f(&mut s);
+        s
+    }
+
+    #[test]
+    fn default_is_benign_and_validates() {
+        let s = ScenarioConfig::default();
+        assert!(!s.active());
+        assert!(s.is_sync_step(0) && s.is_sync_step(7));
+        assert_eq!(s.stage_slowdown(3), 1.0);
+        s.validate(4, 8, 100, 0).unwrap();
+    }
+
+    #[test]
+    fn local_sgd_sync_cadence() {
+        let s = with(|s| s.local_sgd = 4);
+        assert!(s.active());
+        assert!(!s.is_sync_step(0) && !s.is_sync_step(2));
+        assert!(s.is_sync_step(3) && s.is_sync_step(7));
+        s.validate(2, 4, 100, 0).unwrap();
+        // snapshots must align to sync boundaries
+        s.validate(2, 4, 100, 8).unwrap();
+        let e = s.validate(2, 4, 100, 6).unwrap_err().to_string();
+        assert!(e.contains("multiple of local_sgd"), "{e}");
+        assert!(with(|s| s.local_sgd = 0).validate(2, 4, 100, 0).is_err());
+    }
+
+    #[test]
+    fn penalty_bounds_and_pairing() {
+        with(|s| {
+            s.local_sgd = 2;
+            s.local_sgd_penalty = 0.5;
+        })
+        .validate(2, 4, 100, 0)
+        .unwrap();
+        // penalty without a local phase is meaningless
+        let e = with(|s| s.local_sgd_penalty = 0.5).validate(2, 4, 100, 0).unwrap_err();
+        assert!(e.to_string().contains("local_sgd > 1"), "{e}");
+        for bad in [-0.1, 1.0, f64::NAN] {
+            let s = with(|s| {
+                s.local_sgd = 2;
+                s.local_sgd_penalty = bad;
+            });
+            assert!(s.validate(2, 4, 100, 0).is_err(), "penalty {bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn straggler_profile_bounds() {
+        let s = with(|s| s.straggler = Some(vec![1.0, 2.5]));
+        s.validate(2, 4, 100, 0).unwrap();
+        assert_eq!(s.stage_slowdown(1), 2.5);
+        // wrong arity vs pp
+        assert!(s.validate(4, 8, 100, 0).is_err());
+        for bad in [0.5, 0.0, f64::INFINITY, f64::NAN] {
+            let s = with(|s| s.straggler = Some(vec![1.0, bad]));
+            assert!(s.validate(2, 4, 100, 0).is_err(), "factor {bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn fault_must_name_live_rank_inside_horizon() {
+        let s = with(|s| s.fault = Some(FaultSpec { rank: 3, step: 5 }));
+        s.validate(2, 4, 100, 0).unwrap();
+        let e = with(|s| s.fault = Some(FaultSpec { rank: 4, step: 5 }))
+            .validate(2, 4, 100, 0)
+            .unwrap_err();
+        assert!(e.to_string().contains("out of range"), "{e}");
+        let e = with(|s| s.fault = Some(FaultSpec { rank: 0, step: 100 }))
+            .validate(2, 4, 100, 0)
+            .unwrap_err();
+        assert!(e.to_string().contains("horizon"), "{e}");
+    }
+}

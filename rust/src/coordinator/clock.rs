@@ -57,6 +57,10 @@ pub struct VirtualClock {
     /// to the simulated (paper-scale) model: sim_params / actual_params.
     /// Numerics run on the small model; the clock prices the big one.
     pub volume_scale: f64,
+    /// Per-stage compute slowdown factors (scenario straggler profile):
+    /// stage `s`'s fwd/bwd times are multiplied by `slowdown[s]`. All
+    /// 1.0 on a uniform cluster.
+    pub slowdown: Vec<f64>,
     /// Accumulated virtual seconds.
     pub total: f64,
     /// Accumulated DP-communication virtual seconds (bottleneck stage).
@@ -94,6 +98,7 @@ impl VirtualClock {
             t_bwd,
             t_opt,
             volume_scale: 1.0,
+            slowdown: vec![1.0; pp],
             total: 0.0,
             comm_total: 0.0,
             compute_total: 0.0,
@@ -129,12 +134,26 @@ impl VirtualClock {
         }
     }
 
+    /// Install a straggler profile (one factor ≥ 1.0 per stage); the
+    /// pipesim spec, the DAC's slack pricing and the overlap estimate
+    /// all see the skewed timeline from here on.
+    pub fn set_slowdown(&mut self, profile: &[f64]) {
+        assert_eq!(profile.len(), self.pp, "slowdown profile must be stage-indexed");
+        self.slowdown = profile.to_vec();
+    }
+
+    /// Stage `s`'s per-microbatch backward time under the slowdown
+    /// profile.
+    pub fn stage_t_bwd(&self, s: usize) -> f64 {
+        self.t_bwd * self.slowdown[s]
+    }
+
     /// The pipesim spec this clock prices one iteration with, at the
     /// given per-stage DP communication times.
     pub fn pipe_spec(&self, dp_comm: Vec<f64>) -> PipeSpec {
         PipeSpec {
-            t_fwd: vec![self.t_fwd; self.pp],
-            t_bwd: vec![self.t_bwd; self.pp],
+            t_fwd: self.slowdown.iter().map(|f| self.t_fwd * f).collect(),
+            t_bwd: self.slowdown.iter().map(|f| self.t_bwd * f).collect(),
             microbatches: self.microbatches,
             t_p2p: self.cluster.inter_node.latency_us * 1e-6,
             dp_comm,
@@ -170,8 +189,9 @@ impl VirtualClock {
         let mut total = 0.0f64;
         let mut exposed = vec![0.0f64; self.pp];
         for (s, buckets) in stage_buckets.iter().enumerate() {
+            let t_bwd = self.stage_t_bwd(s);
             let n_ib = buckets.iter().filter(|b| !b.post_backward).count().max(1);
-            let t0 = last[s] - self.t_bwd; // final-microbatch backward start
+            let t0 = last[s] - t_bwd; // final-microbatch backward start
             let mut cursor = 0.0f64;
             let mut j = 0usize;
             for b in buckets {
@@ -179,7 +199,7 @@ impl VirtualClock {
                     last[s]
                 } else {
                     j += 1;
-                    t0 + j as f64 * self.t_bwd / n_ib as f64
+                    t0 + j as f64 * t_bwd / n_ib as f64
                 };
                 let start = cursor.max(ready);
                 let end = start + b.comm;
@@ -339,6 +359,29 @@ mod tests {
         assert!(e.hidden <= c.t_bwd * c.pp as f64 + 1e-9);
         assert!(e.overlapped_iter > e.sequential_iter * 0.5);
         assert!(e.overlapped_iter <= e.sequential_iter + 1e-12);
+    }
+
+    #[test]
+    fn straggler_profile_skews_timeline_and_slack() {
+        let mut slow = clock();
+        let ulb = slow.modeled_last_bwd();
+        slow.set_slowdown(&[1.0, 1.0, 2.0, 1.0]);
+        let lb = slow.modeled_last_bwd();
+        // stage 0 still drains last (the backward chain ends there)...
+        for i in 1..4 {
+            assert!(lb[0] >= lb[i], "{lb:?}");
+        }
+        // ...but stage 3's gradient now drains through the 2x-slow
+        // stage 2, so its slack before the stage-0 finish stretches
+        // well past the uniform `i·microback` ladder
+        let slack = |v: &[f64], i: usize| v[0] - v[i];
+        assert!(slack(&lb, 3) > 1.2 * slack(&ulb, 3), "{lb:?} vs {ulb:?}");
+        // and iterations cost more than on the uniform cluster
+        let orig = vec![10_000_000; 4];
+        let (it_slow, _) = slow.step(&orig, &orig, None);
+        let (it_uniform, _) = clock().step(&orig, &orig, None);
+        assert!(it_slow > it_uniform, "{it_slow} vs {it_uniform}");
+        assert_eq!(slow.stage_t_bwd(2), 2.0 * slow.t_bwd);
     }
 
     #[test]

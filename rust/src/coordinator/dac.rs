@@ -32,7 +32,7 @@ pub struct RankBounds {
 /// validated replacement for the historical 8-positional `Dac::new`
 /// (two adjacent `usize` dims and two `f64` budgets made call sites
 /// unauditable).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct DacConfig {
     pub params: EdgcParams,
     pub bounds: RankBounds,
@@ -47,6 +47,12 @@ pub struct DacConfig {
     pub stages: usize,
     /// Total planned iterations (for the 10% warm-up floor).
     pub total_steps: usize,
+    /// Per-stage slack budgets in seconds, overriding the uniform
+    /// `i·T̄_microBack` ladder of Eq. 4. Set on skewed clusters
+    /// (scenario straggler profiles), where the slack comes from the
+    /// *modeled* skewed timeline (`VirtualClock::modeled_last_bwd`) —
+    /// still a pure function of the config, preserving byte-determinism.
+    pub slack: Option<Vec<f64>>,
 }
 
 impl DacConfig {
@@ -71,6 +77,20 @@ impl DacConfig {
         );
         crate::ensure!(self.stages >= 1, "DAC needs at least one stage");
         crate::ensure!(self.microback >= 0.0, "negative microbatch backward time");
+        if let Some(slack) = &self.slack {
+            crate::ensure!(
+                slack.len() == self.stages,
+                "DAC slack override has {} entries for {} stages",
+                slack.len(),
+                self.stages
+            );
+            for (i, s) in slack.iter().enumerate() {
+                crate::ensure!(
+                    s.is_finite() && *s >= 0.0,
+                    "DAC slack[{i}] must be finite and non-negative (got {s})"
+                );
+            }
+        }
         Ok(())
     }
 }
@@ -114,6 +134,9 @@ pub struct Dac {
     pub stages: usize,
     /// Total planned iterations (for the 10% warm-up floor).
     pub total_steps: usize,
+    /// Per-stage slack override (see [`DacConfig::slack`]); `None` keeps
+    /// the uniform `i·microback` ladder.
+    pub slack: Option<Vec<f64>>,
 
     activation: Option<ActivationRef>,
     /// Running peak of window entropy during warm-up (the instability
@@ -131,6 +154,12 @@ pub struct Dac {
     /// no rank, so a bare rank list would silently pair `rank_trace[i]`
     /// with the wrong window in Fig.-13-style plots.
     pub rank_trace: Vec<(usize, f64)>,
+    /// Per-stage rank decisions aligned the same way: one
+    /// `(window, ranks)` entry per post-activation window, recording the
+    /// full Algorithm-2 rollup. This is what the straggler experiments
+    /// compare — skewed slack visibly reshapes the per-stage spread
+    /// while `rank_trace` (stage 1) can stay identical.
+    pub stage_trace: Vec<(usize, Vec<usize>)>,
 }
 
 impl Dac {
@@ -145,6 +174,7 @@ impl Dac {
             microback: cfg.microback,
             stages: cfg.stages,
             total_steps: cfg.total_steps,
+            slack: cfg.slack,
             activation: None,
             h_peak: f64::NEG_INFINITY,
             decline_windows: 0,
@@ -152,6 +182,7 @@ impl Dac {
             r_prev: cfg.bounds.r_max as f64,
             entropy_trace: Vec::new(),
             rank_trace: Vec::new(),
+            stage_trace: Vec::new(),
         })
     }
 
@@ -204,6 +235,7 @@ impl Dac {
                 self.activation = Some(ActivationRef { h_ini: window_entropy });
                 self.r_prev = self.bounds.r_max as f64;
                 self.rank_trace.push((self.entropy_trace.len() - 1, self.r_prev));
+                self.record_stage_trace();
             }
             return;
         }
@@ -230,6 +262,13 @@ impl Dac {
         r_new = r_new.clamp(self.bounds.r_min as f64, self.bounds.r_max as f64);
         self.r_prev = r_new;
         self.rank_trace.push((self.entropy_trace.len() - 1, r_new));
+        self.record_stage_trace();
+    }
+
+    fn record_stage_trace(&mut self) {
+        if let Some(ranks) = self.stage_ranks() {
+            self.stage_trace.push((self.entropy_trace.len() - 1, ranks));
+        }
     }
 
     /// Capture the private warm-up/controller state for checkpointing.
@@ -275,7 +314,14 @@ impl Dac {
     /// report (`pipesim::fit_microback`) rather than this decision —
     /// [`Dac::stage_ranks_for_slack`] is the same Eq.-4 arithmetic with
     /// explicit budgets for measured-slack diagnostics.
+    ///
+    /// With a [`DacConfig::slack`] override (straggler scenarios), the
+    /// installed per-stage budgets — modeled, not measured — replace the
+    /// ladder.
     pub fn stage_ranks(&self) -> Option<Vec<usize>> {
+        if let Some(slack) = &self.slack {
+            return self.stage_ranks_for_slack(slack);
+        }
         let slack: Vec<f64> = (0..self.stages).map(|i| i as f64 * self.microback).collect();
         self.stage_ranks_for_slack(&slack)
     }
@@ -315,6 +361,7 @@ mod tests {
             microback: 2e-3,
             stages: 4,
             total_steps,
+            slack: None,
         })
         .unwrap()
     }
@@ -330,8 +377,14 @@ mod tests {
             microback: 2e-3,
             stages: 4,
             total_steps: 100,
+            slack: None,
         };
         cfg.validate().unwrap();
+        cfg.slack = Some(vec![0.0, 1e-3, 2e-3]);
+        assert!(cfg.validate().unwrap_err().to_string().contains("slack"), "arity vs stages");
+        cfg.slack = Some(vec![0.0, 1e-3, 2e-3, -1.0]);
+        assert!(cfg.validate().is_err(), "negative slack");
+        cfg.slack = None;
         cfg.bounds = RankBounds { r_min: 65, r_max: 64 };
         assert!(cfg.validate().unwrap_err().to_string().contains("inverted"));
         cfg.bounds = RankBounds { r_min: 12, r_max: 256 };
@@ -445,6 +498,50 @@ mod tests {
     fn no_stage_ranks_during_warmup() {
         let d = mk(100, 10);
         assert!(d.stage_ranks().is_none());
+        assert!(d.stage_trace.is_empty());
+    }
+
+    #[test]
+    fn slack_override_reshapes_stage_ranks() {
+        // eta chosen so one microback of slack is worth 2 ranks (not 20,
+        // which would pin every later stage at the r_max clamp and hide
+        // the skew).
+        let mk2 = |slack: Option<Vec<f64>>| {
+            Dac::new(DacConfig {
+                params: EdgcParams { window: 10, step_limit: 8, ..Default::default() },
+                bounds: RankBounds { r_min: 12, r_max: 64 },
+                m: 512,
+                n: 128,
+                comm: LinearCommModel { eta: 1e-3, mape: 0.0 },
+                microback: 2e-3,
+                stages: 4,
+                total_steps: 100,
+                slack,
+            })
+            .unwrap()
+        };
+        let activate = |d: &mut Dac| {
+            d.on_window(10, 4.0);
+            d.on_window(20, 3.9);
+            d.on_window(25, 3.8);
+            d.on_window(35, 3.0); // drive the stage-1 rank below r_max
+        };
+        let mut uniform = mk2(None);
+        let mb = uniform.microback;
+        // a straggler at stage 2 stretches stage 3's drain path: slack
+        // [0, 1, 2, 4]·microback instead of the uniform [0, 1, 2, 3]
+        let mut skewed = mk2(Some(vec![0.0, mb, 2.0 * mb, 4.0 * mb]));
+        activate(&mut uniform);
+        activate(&mut skewed);
+        let u = uniform.stage_ranks().unwrap();
+        let s = skewed.stage_ranks().unwrap();
+        assert_eq!(&u[..3], &s[..3], "unchanged slack entries keep their ranks");
+        assert!(s[3] > u[3], "{s:?} vs {u:?}");
+        // the divergence is visible in the recorded per-stage trace
+        assert_eq!(uniform.stage_trace.len(), uniform.rank_trace.len());
+        let (w, ranks) = &uniform.stage_trace[1];
+        assert_eq!((*w, ranks.clone()), (uniform.rank_trace[1].0, u.clone()));
+        assert_ne!(uniform.stage_trace, skewed.stage_trace);
     }
 
     #[test]

@@ -66,6 +66,11 @@ pub struct RunSummary {
     pub alloc_trace: Vec<(usize, Vec<usize>)>,
     /// (tensor, stage, rel_error) samples recorded every eval interval.
     pub error_samples: Vec<(usize, String, usize, f64)>,
+    /// Per-stage DAC rank decisions, one `(window, ranks)` entry per
+    /// post-activation window (see `Dac::stage_trace`) — the artifact
+    /// the straggler experiments compare: skewed slack reshapes the
+    /// per-stage spread while the stage-1 `rank_trace` can stay put.
+    pub stage_rank_trace: Vec<(usize, Vec<usize>)>,
     /// Comm-hiding diagnostics of an `--overlap` run (None otherwise).
     /// Diagnostics only: the curve and every decision stay identical to
     /// the sequential path (the byte-determinism contract).
@@ -144,6 +149,39 @@ fn frac(num: f64, den: f64) -> f64 {
     }
 }
 
+/// One plain-SGD local step of the local-SGD scenario: `l -= lr · g`,
+/// elementwise in f32. Every execution path (centralized, dp-ranked,
+/// pp-ranked) shares this exact expression so the local phase is
+/// byte-deterministic across them.
+fn local_sgd_update(local: &mut [f32], g: &[f32], lr32: f32) {
+    for (l, &gi) in local.iter_mut().zip(g) {
+        *l -= lr32 * gi;
+    }
+}
+
+/// Sequential f64 sum of squares — one per-stage partial of the EDiT
+/// pseudo-gradient RMS penalty. The partials are folded in stage order
+/// by [`local_sgd_penalty_scale`]; keeping the grouping identical in
+/// the centralized and pipeline paths is what makes the penalty
+/// byte-deterministic (f64 addition is not associative).
+fn sumsq(xs: &[f32]) -> f64 {
+    xs.iter().fold(0.0f64, |acc, &x| acc + (x as f64) * (x as f64))
+}
+
+/// EDiT-style penalty on the averaged pseudo-gradient:
+/// `1 / (1 + λ · rms)`, folded in f64 from the per-stage partial sums
+/// (in stage order) and applied in f32.
+fn local_sgd_penalty_scale(lambda: f64, stage_sumsq: &[f64], n: usize) -> f32 {
+    let total = stage_sumsq.iter().fold(0.0f64, |acc, &p| acc + p);
+    let rms = (total / n as f64).sqrt();
+    (1.0 / (1.0 + lambda * rms)) as f32
+}
+
+/// Extra wall-clock sleep (microseconds) enacted per unit of slowdown
+/// factor by a straggling pipeline worker. Diagnostics-only: measured
+/// timings shift, every decision stays on the modeled timeline.
+const STRAGGLER_SLEEP_US: f64 = 2000.0;
+
 /// Fold per-bucket comm busy spans into `(hidden, busy)` seconds: the
 /// portion executed before `bwd_done` (the worker's wall-clock
 /// backward-finish, same time origin) counts as hidden.
@@ -210,6 +248,7 @@ pub struct Trainer {
 impl Trainer {
     pub fn new(cfg: TrainConfig, backend: Backend) -> Result<Trainer> {
         cfg.edgc.validate()?;
+        cfg.validate_scenario()?;
         let rt = Runtime::load(&cfg.artifacts)?;
         let man = rt.manifest.clone();
         let params = rt.init_params()?;
@@ -244,6 +283,13 @@ impl Trainer {
             cfg.sim_tokens,
         );
         clock.volume_scale = (cfg.sim_params as f64 / n as f64).max(1.0);
+        // Straggler scenario: the skewed per-stage compute profile is
+        // priced into every timeline the clock produces (pipesim spec,
+        // modeled last-backward, overlap estimate) before the DAC
+        // calibrates against it.
+        if let Some(profile) = &cfg.scenario.straggler {
+            clock.set_slowdown(profile);
+        }
 
         // Satellite of the RankPlan redesign: user-set rank bounds are
         // validated against the actual bucket dimensions here, at
@@ -327,6 +373,15 @@ impl Trainer {
         };
         let r_min = cfg.rank_min.unwrap_or_else(|| netsim::rank_min(r_max));
         let comm = fit_eta(&pts);
+        // Straggler scenario: on a skewed cluster Eq. 4's uniform
+        // `i · microback` ladder no longer describes the drain order, so
+        // the per-stage slack is taken from the modeled (slowdown-priced)
+        // timeline instead. Still a pure function of config — never of
+        // measured wall-clock — so rank decisions stay byte-deterministic.
+        let slack = cfg.scenario.straggler.as_ref().map(|_| {
+            let lb = clock.modeled_last_bwd();
+            lb.iter().map(|&x| (lb[0] - x).max(0.0)).collect()
+        });
         Dac::new(DacConfig {
             params: cfg.edgc,
             bounds: RankBounds { r_min, r_max },
@@ -336,19 +391,44 @@ impl Trainer {
             microback: clock.t_bwd,
             stages: cfg.pp,
             total_steps: cfg.steps,
+            slack,
         })
     }
 
     fn run_train_step(&self, batch: &[i32]) -> Result<(f32, Vec<f32>)> {
+        self.run_train_step_on(&self.params, batch)
+    }
+
+    /// [`Trainer::run_train_step`] evaluated at an explicit parameter
+    /// vector — the centralized local-SGD lane trains each replica's
+    /// local copy while `self.params` stays the round's anchor.
+    fn run_train_step_on(&self, params: &[f32], batch: &[i32]) -> Result<(f32, Vec<f32>)> {
         let man = &self.rt.manifest;
         let out = self.rt.run(
             "train_step",
             &[
-                lit_f32(&self.params, &[man.n_params as i64])?,
+                lit_f32(params, &[man.n_params as i64])?,
                 lit_i32(batch, &[man.batch as i64, (man.seq_len + 1) as i64])?,
             ],
         )?;
         Ok((to_scalar(&out[0])?, to_f32(&out[1])?))
+    }
+
+    /// The scenario fault hook: rank `me` bails out at the top of its
+    /// fault step, before any of the step's traffic, so every surviving
+    /// peer observes a closed link (typed [`crate::dist::DistError::PeerDeath`])
+    /// and the group tears down loudly naming the dead rank.
+    fn fault_due(&self, me: usize, step: usize) -> Result<()> {
+        if let Some(f) = self.cfg.scenario.fault {
+            if f.rank == me && f.step == step {
+                crate::bail!(
+                    "scenario fault injection: rank {} terminated at step {}",
+                    f.rank,
+                    f.step
+                );
+            }
+        }
+        Ok(())
     }
 
     fn adam_update(&mut self, grads: &[f32], t: usize) -> Result<()> {
@@ -496,18 +576,81 @@ impl Trainer {
         }
         let end_step = self.cfg.stop_after.map_or(self.cfg.steps, |k| k.min(self.cfg.steps));
 
+        // Local-SGD scenario state: between sync points each replica
+        // trains its own parameter copy with plain SGD while
+        // `self.params` stays the round's anchor; the anchor only moves
+        // at sync steps, when the averaged pseudo-gradient feeds the
+        // outer Adam. At K = 1 `locals` is None and the loop below is
+        // the classic per-step lane, bit for bit.
+        let local_k = self.cfg.scenario.local_sgd;
+        let lr32 = self.cfg.lr as f32;
+        let pg_scale = (1.0 / (local_k as f64 * self.cfg.lr)) as f32;
+        let mut locals: Option<Vec<Vec<f32>>> =
+            (local_k > 1).then(|| vec![self.params.clone(); self.cfg.dp]);
+        let stage_ranges = self.engine.plan.param_ranges(&self.rt.manifest)?;
+
         for step in start_step..end_step {
-            // 1. per-replica train steps
+            self.fault_due(0, step)?;
+            // 1. per-replica train steps (on the local copies when the
+            // local-SGD scenario is active)
             let mut losses = Vec::with_capacity(self.cfg.dp);
             let mut grads = Vec::with_capacity(self.cfg.dp);
             for i in 0..self.cfg.dp {
                 let batch = self.batchers[i].next_train();
-                let (loss, g) = self.run_train_step(&batch)?;
+                let (loss, g) = match locals.as_ref() {
+                    Some(ls) => self.run_train_step_on(&ls[i], &batch)?,
+                    None => self.run_train_step(&batch)?,
+                };
                 losses.push(loss);
                 grads.push(g);
             }
             let loss = losses.iter().map(|&x| x as f64).sum::<f64>() / losses.len() as f64;
             last_loss = loss;
+            if let Some(ls) = locals.as_mut() {
+                for (l, g) in ls.iter_mut().zip(&grads) {
+                    local_sgd_update(l, g, lr32);
+                }
+            }
+            let sync = self.cfg.scenario.is_sync_step(step);
+
+            if !sync {
+                // Local phase: no collective, no optimizer — entropy
+                // still tracks replica 0's local gradient so the DAC
+                // sees the same stream cadence as the per-step lane.
+                if self.gds.due(step) {
+                    if let Some(a) = self.alloc.as_mut() {
+                        a.measure(&mut self.gds, &grads[0]);
+                    }
+                    let est = self.measure_entropy(&grads[0])?;
+                    self.window.push(&est);
+                }
+                if (step + 1) % window_len == 0 {
+                    if let Some(mean) = self.window.roll() {
+                        if let Some(dac) = self.dac.as_mut() {
+                            dac.on_window(step + 1, mean);
+                        }
+                    }
+                    if let Some(a) = self.alloc.as_mut() {
+                        a.roll_windows();
+                        if let Some(rs) = self.dac.as_ref().and_then(|d| d.stage_ranks()) {
+                            a.on_window(step + 1, &rs);
+                        }
+                    }
+                }
+                let zeros = vec![0usize; self.cfg.pp];
+                let (iter_time, _comm_time) = self.clock.step(&zeros, &zeros, None);
+                curve.push(vec![
+                    step as f64,
+                    loss,
+                    last_val,
+                    0.0,
+                    0.0,
+                    0.0,
+                    iter_time,
+                    self.clock.total,
+                ]);
+                continue;
+            }
 
             // 2. rank decision
             let ranks = baselines::ranks_for(
@@ -519,18 +662,53 @@ impl Trainer {
                 self.alloc.as_ref(),
             );
 
-            // 3. compressed all-reduce
+            // 3. compressed all-reduce (of the gradients, or — at a
+            // local-SGD sync point — of the per-replica pseudo-gradients
+            // (anchor − local) / (K · lr))
             let rt_opt = if self.backend == Backend::Artifact { Some(&self.rt) } else { None };
-            let report = self.engine.allreduce(rt_opt, &grads, ranks.as_ref())?;
+            let report = match locals.as_ref() {
+                None => self.engine.allreduce(rt_opt, &grads, ranks.as_ref())?,
+                Some(ls) => {
+                    let deltas: Vec<Vec<f32>> = ls
+                        .iter()
+                        .map(|l| {
+                            self.params
+                                .iter()
+                                .zip(l)
+                                .map(|(&a, &li)| (a - li) * pg_scale)
+                                .collect()
+                        })
+                        .collect();
+                    self.engine.allreduce(rt_opt, &deltas, ranks.as_ref())?
+                }
+            };
             total_comm += report.total_compressed();
             total_orig += report.total_original();
             for (acc, &c) in stage_comm_floats.iter_mut().zip(&report.stage_compressed) {
                 *acc += c;
             }
 
-            // 4. optimizer
-            let avg = report.avg.clone();
-            self.adam_update(&avg, step + 1)?;
+            // 4. optimizer (the outer Adam at local-SGD sync points,
+            // with the EDiT RMS penalty on the averaged pseudo-gradient)
+            let mut avg = report.avg.clone();
+            if locals.is_some() && self.cfg.scenario.local_sgd_penalty > 0.0 {
+                let partials: Vec<f64> =
+                    stage_ranges.iter().map(|r| sumsq(&avg[r.clone()])).collect();
+                let scale = local_sgd_penalty_scale(
+                    self.cfg.scenario.local_sgd_penalty,
+                    &partials,
+                    avg.len(),
+                );
+                for x in avg.iter_mut() {
+                    *x *= scale;
+                }
+            }
+            self.adam_update(&avg, (step + 1) / local_k)?;
+            if let Some(ls) = locals.as_mut() {
+                for l in ls.iter_mut() {
+                    l.copy_from_slice(&self.params);
+                }
+            }
 
             // 5. GDS + window + DAC (+ per-bucket allocator windows)
             if self.gds.due(step) {
@@ -630,6 +808,11 @@ impl Trainer {
             ),
             rank_trace: self.dac.as_ref().map(|d| d.rank_trace.clone()).unwrap_or_default(),
             alloc_trace: self.alloc.as_ref().map(|a| a.trace.clone()).unwrap_or_default(),
+            stage_rank_trace: self
+                .dac
+                .as_ref()
+                .map(|d| d.stage_trace.clone())
+                .unwrap_or_default(),
             error_samples,
             overlap: None,
             wire: WireReport::default(),
@@ -735,8 +918,67 @@ impl Trainer {
         }
         let end_step = self.cfg.stop_after.map_or(self.cfg.steps, |k| k.min(self.cfg.steps));
 
+        // Local-SGD scenario state (see `run`): here `self.params` IS
+        // this rank's local replica; `anchor` keeps the round's shared
+        // starting point. Snapshots only fire at sync boundaries
+        // (validated), where params == anchor, so a resume restores
+        // both from the one saved vector.
+        let local_k = self.cfg.scenario.local_sgd;
+        let lr32 = self.cfg.lr as f32;
+        let pg_scale = (1.0 / (local_k as f64 * self.cfg.lr)) as f32;
+        let mut anchor: Option<Vec<f32>> = (local_k > 1).then(|| self.params.clone());
+        let stage_ranges = self.engine.plan.param_ranges(&self.rt.manifest)?;
+
         for step in start_step..end_step {
+            self.fault_due(rank, step)?;
             let batch = self.batchers[rank].next_train();
+            let sync = self.cfg.scenario.is_sync_step(step);
+
+            if !sync {
+                // Local phase: a plain-SGD step on this rank's replica.
+                // No rank broadcast, no collective — only the group-mean
+                // loss gather so every path's curve carries it.
+                let (loss_i, g) = self.run_train_step(&batch)?;
+                local_sgd_update(&mut self.params, &g, lr32);
+                let losses = collective::all_gather_f32(tr, loss_i)?;
+                let loss = losses.iter().map(|&x| x as f64).sum::<f64>() / losses.len() as f64;
+                last_loss = loss;
+                if rank == 0 {
+                    if self.gds.due(step) {
+                        if let Some(a) = self.alloc.as_mut() {
+                            a.measure(&mut self.gds, &g);
+                        }
+                        let est = self.measure_entropy(&g)?;
+                        self.window.push(&est);
+                    }
+                    if (step + 1) % window_len == 0 {
+                        if let Some(mean) = self.window.roll() {
+                            if let Some(dac) = self.dac.as_mut() {
+                                dac.on_window(step + 1, mean);
+                            }
+                        }
+                        if let Some(a) = self.alloc.as_mut() {
+                            a.roll_windows();
+                            if let Some(rs) = self.dac.as_ref().and_then(|d| d.stage_ranks()) {
+                                a.on_window(step + 1, &rs);
+                            }
+                        }
+                    }
+                    let zeros = vec![0usize; self.cfg.pp];
+                    let (iter_time, _comm_time) = self.clock.step(&zeros, &zeros, None);
+                    curve.push(vec![
+                        step as f64,
+                        loss,
+                        last_val,
+                        0.0,
+                        0.0,
+                        0.0,
+                        iter_time,
+                        self.clock.total,
+                    ]);
+                }
+                continue;
+            }
 
             // rank decision on rank 0 (it owns the DAC), broadcast —
             // decided up front so an overlapped step can hand it to the
@@ -764,8 +1006,25 @@ impl Trainer {
 
             // this rank's train step + compressed all-reduce:
             // sequential, or overlapped with a dedicated comm thread
-            // draining per-layer buckets as backward finalizes them
-            let (loss_i, g, report, measured) = match comm.as_deref_mut() {
+            // draining per-layer buckets as backward finalizes them.
+            // At a local-SGD sync point the round's last local step runs
+            // first and the collective carries the pseudo-gradient
+            // (anchor − local) / (K · lr) instead — the comm plane idles
+            // there (even with --overlap) because the pseudo-gradient
+            // only exists after the local update, so there is no
+            // backward pass left to hide its sync behind.
+            let (loss_i, g, report, measured) = if let Some(a) = anchor.as_ref() {
+                let (loss_i, g) = self.run_train_step(&batch)?;
+                local_sgd_update(&mut self.params, &g, lr32);
+                let delta: Vec<f32> = a
+                    .iter()
+                    .zip(self.params.iter())
+                    .map(|(&ai, &li)| (ai - li) * pg_scale)
+                    .collect();
+                let report = self.engine.allreduce_dist(tr, &delta, ranks.as_ref())?;
+                (loss_i, g, report, None)
+            } else {
+                match comm.as_deref_mut() {
                 None => {
                     let (loss_i, g) = self.run_train_step(&batch)?;
                     let report = self.engine.allreduce_dist(tr, &g, ranks.as_ref())?;
@@ -792,6 +1051,7 @@ impl Trainer {
                     let loss_i = out.replica_loss.context("single stage reports the loss")?;
                     (loss_i, gbuf, out.report, Some((out.spans, out.bwd_done)))
                 }
+                }
             };
 
             // mean loss over the group, f64-summed in rank order like
@@ -806,9 +1066,29 @@ impl Trainer {
                 *acc += c;
             }
 
-            // 4. optimizer (every rank, identical averaged gradient)
-            let avg = report.avg.clone();
-            self.adam_update(&avg, step + 1)?;
+            // 4. optimizer (every rank, identical averaged input). In
+            // the local-SGD scenario the outer Adam consumes the
+            // penalized averaged pseudo-gradient, applied to the anchor.
+            let mut avg = report.avg.clone();
+            if anchor.is_some() && self.cfg.scenario.local_sgd_penalty > 0.0 {
+                let partials: Vec<f64> =
+                    stage_ranges.iter().map(|r| sumsq(&avg[r.clone()])).collect();
+                let scale = local_sgd_penalty_scale(
+                    self.cfg.scenario.local_sgd_penalty,
+                    &partials,
+                    avg.len(),
+                );
+                for x in avg.iter_mut() {
+                    *x *= scale;
+                }
+            }
+            if let Some(a) = anchor.as_ref() {
+                self.params.copy_from_slice(a);
+            }
+            self.adam_update(&avg, (step + 1) / local_k)?;
+            if let Some(a) = anchor.as_mut() {
+                a.copy_from_slice(&self.params);
+            }
 
             // 5/6. control plane + bookkeeping on rank 0 only
             if rank == 0 {
@@ -929,6 +1209,11 @@ impl Trainer {
             ),
             rank_trace: self.dac.as_ref().map(|d| d.rank_trace.clone()).unwrap_or_default(),
             alloc_trace: self.alloc.as_ref().map(|a| a.trace.clone()).unwrap_or_default(),
+            stage_rank_trace: self
+                .dac
+                .as_ref()
+                .map(|d| d.stage_trace.clone())
+                .unwrap_or_default(),
             error_samples,
             overlap: self.overlap_report(ov_hidden, ov_busy, &model),
             wire: WireReport::default(), // filled in by run_distributed
@@ -1180,8 +1465,138 @@ impl Trainer {
         }
         let end_step = self.cfg.stop_after.map_or(self.cfg.steps, |k| k.min(self.cfg.steps));
 
+        // Local-SGD scenario state (see `run_rank`): `self.params` is
+        // this worker's local replica; `anchor` holds the round's
+        // shared starting point for this stage's range.
+        let local_k = self.cfg.scenario.local_sgd;
+        let lr32 = self.cfg.lr as f32;
+        let pg_scale = (1.0 / (local_k as f64 * self.cfg.lr)) as f32;
+        let mut anchor: Option<Vec<f32>> = (local_k > 1).then(|| self.params.clone());
+
         for step in start_step..end_step {
+            self.fault_due(g_rank, step)?;
             let batch = self.batchers[replica].next_train();
+            // Straggler enactment: a slowed stage really does take
+            // longer. Wall-clock only — the measured timings it skews
+            // are diagnostics; every decision stays on the modeled
+            // (slowdown-priced) timeline.
+            if let Some(profile) = &self.cfg.scenario.straggler {
+                let extra = (profile[stage] - 1.0).max(0.0);
+                if extra > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_micros(
+                        (extra * STRAGGLER_SLEEP_US) as u64,
+                    ));
+                }
+            }
+            let sync = self.cfg.scenario.is_sync_step(step);
+
+            if !sync {
+                // Local phase: 1F1B on the local replica, a plain-SGD
+                // update of this stage's range, the tied-embedding
+                // refresh — no DP collective, no optimizer.
+                let mut gbuf = vec![0.0f32; n_params];
+                let (_timing, replica_loss) = {
+                    let exec = self
+                        .rt
+                        .host_exec()
+                        .context("pipeline training requires the host executor")?;
+                    let mut ms = ModelStage::new(
+                        exec,
+                        &self.params,
+                        &batch,
+                        &mut gbuf,
+                        layer_range.clone(),
+                        stage == 0,
+                        stage + 1 == pp,
+                        micro,
+                    )?;
+                    let timing = pipeline::run_1f1b(tr, first_rank, stage, pp, micro, &mut ms)?;
+                    ms.exchange_tied(tr, first_rank, first_rank + pp - 1)?;
+                    (timing, ms.replica_loss())
+                };
+                local_sgd_update(&mut self.params[my_range.clone()], &gbuf[my_range.clone()], lr32);
+                if stage == 0 {
+                    collective::send_f32s(
+                        tr,
+                        first_rank + pp - 1,
+                        &self.params[tok_range.clone()],
+                    )?;
+                } else if stage + 1 == pp {
+                    let w = collective::recv_f32s(tr, first_rank)?;
+                    crate::ensure!(
+                        w.len() == tok_range.len(),
+                        "tied weight sync of {} floats, expected {}",
+                        w.len(),
+                        tok_range.len()
+                    );
+                    self.params[tok_range.clone()].copy_from_slice(&w);
+                }
+                if let Some(l) = replica_loss {
+                    send_diag(tr, 0, &l.to_le_bytes())?;
+                }
+                let due = self.gds.due(step);
+                if due && replica == 0 && stage != 0 {
+                    send_f32s_diag(tr, 0, &gbuf[my_range.clone()])?;
+                }
+                if g_rank != 0 {
+                    // snapshots only fire at sync boundaries (validated)
+                    continue;
+                }
+                // coordinator: loss fold + entropy + zero-volume clock
+                let mut loss_acc = 0.0f64;
+                for r in 0..dp {
+                    let b = recv_diag(tr, r * pp + pp - 1)?;
+                    crate::ensure!(b.len() == 4, "loss payload of {} bytes", b.len());
+                    loss_acc += f32::from_le_bytes([b[0], b[1], b[2], b[3]]) as f64;
+                }
+                let loss = loss_acc / dp as f64;
+                last_loss = loss;
+                if due {
+                    let mut full = vec![0.0f32; n_params];
+                    full[ranges[0].clone()].copy_from_slice(&gbuf[ranges[0].clone()]);
+                    for (s, range) in ranges.iter().enumerate().skip(1) {
+                        let slice = recv_f32s_diag(tr, s)?;
+                        crate::ensure!(
+                            slice.len() == range.len(),
+                            "entropy slice from stage {s} has {} floats, expected {}",
+                            slice.len(),
+                            range.len()
+                        );
+                        full[range.clone()].copy_from_slice(&slice);
+                    }
+                    if let Some(a) = self.alloc.as_mut() {
+                        a.measure(&mut self.gds, &full);
+                    }
+                    let est = self.measure_entropy(&full)?;
+                    self.window.push(&est);
+                }
+                if (step + 1) % window_len == 0 {
+                    if let Some(mean) = self.window.roll() {
+                        if let Some(dac) = self.dac.as_mut() {
+                            dac.on_window(step + 1, mean);
+                        }
+                    }
+                    if let Some(a) = self.alloc.as_mut() {
+                        a.roll_windows();
+                        if let Some(rs) = self.dac.as_ref().and_then(|d| d.stage_ranks()) {
+                            a.on_window(step + 1, &rs);
+                        }
+                    }
+                }
+                let zeros = vec![0usize; pp];
+                let (iter_time, _comm_time) = self.clock.step(&zeros, &zeros, None);
+                curve.push(vec![
+                    step as f64,
+                    loss,
+                    last_val,
+                    0.0,
+                    0.0,
+                    0.0,
+                    iter_time,
+                    self.clock.total,
+                ]);
+                continue;
+            }
 
             // rank decision on the coordinator (it owns the DAC), broadcast
             let ranks = {
@@ -1208,7 +1623,43 @@ impl Trainer {
             // sequential, or overlapped with a dedicated comm thread
             // draining per-layer buckets as backward finalizes them
             let mut gbuf = vec![0.0f32; n_params];
-            let (timing, replica_loss, report, measured) = match comm.as_deref_mut() {
+            let (timing, replica_loss, report, measured) = if let Some(a) = anchor.as_ref() {
+                // local-SGD sync point (see run_rank): the round's last
+                // local step runs sequentially, then the stage subgroup
+                // syncs the pseudo-gradient (anchor − local) / (K · lr).
+                // The comm plane idles even with --overlap: the
+                // pseudo-gradient only exists after the local update.
+                let (timing, replica_loss) = {
+                    let exec = self
+                        .rt
+                        .host_exec()
+                        .context("pipeline training requires the host executor")?;
+                    let mut ms = ModelStage::new(
+                        exec,
+                        &self.params,
+                        &batch,
+                        &mut gbuf,
+                        layer_range.clone(),
+                        stage == 0,
+                        stage + 1 == pp,
+                        micro,
+                    )?;
+                    let timing = pipeline::run_1f1b(tr, first_rank, stage, pp, micro, &mut ms)?;
+                    ms.exchange_tied(tr, first_rank, first_rank + pp - 1)?;
+                    (timing, ms.replica_loss())
+                };
+                local_sgd_update(&mut self.params[my_range.clone()], &gbuf[my_range.clone()], lr32);
+                let mut delta = vec![0.0f32; n_params];
+                for i in my_range.clone() {
+                    delta[i] = (a[i] - self.params[i]) * pg_scale;
+                }
+                let report = {
+                    let mut sub = SubTransport::new(&mut *tr, sub_members.clone())?;
+                    self.engine.allreduce_dist_stage(&mut sub, &delta, ranks.as_ref(), stage)?
+                };
+                (timing, replica_loss, report, None)
+            } else {
+                match comm.as_deref_mut() {
                 None => {
                     let (timing, replica_loss) = {
                         let exec = self
@@ -1251,13 +1702,39 @@ impl Trainer {
                     )?;
                     (out.timing, out.replica_loss, out.report, Some((out.spans, out.bwd_done)))
                 }
+                }
             };
 
             // per-replica loss to the coordinator (metrics-only traffic)
             if let Some(l) = replica_loss {
                 send_diag(tr, 0, &l.to_le_bytes())?;
             }
-            self.adam_update_range(&report.avg, step + 1, my_range.clone())?;
+            // Optimizer: the outer Adam on this stage's range. In the
+            // local-SGD scenario it consumes the penalized averaged
+            // pseudo-gradient, applied to the anchor; the penalty's
+            // per-stage partial sums travel the full mesh as f64 bits
+            // and everyone folds replica 0's entries (ranks 0..pp are
+            // its stage workers in stage order — the exact grouping of
+            // the centralized fold).
+            let mut avg = report.avg.clone();
+            if anchor.is_some() && self.cfg.scenario.local_sgd_penalty > 0.0 {
+                let partial = sumsq(&avg[my_range.clone()]);
+                let all = collective::all_gather_u64(tr, partial.to_bits())?;
+                let partials: Vec<f64> =
+                    all[..pp].iter().map(|&bits| f64::from_bits(bits)).collect();
+                let scale = local_sgd_penalty_scale(
+                    self.cfg.scenario.local_sgd_penalty,
+                    &partials,
+                    n_params,
+                );
+                for x in avg[my_range.clone()].iter_mut() {
+                    *x *= scale;
+                }
+            }
+            if let Some(a) = anchor.as_ref() {
+                self.params[my_range.clone()].copy_from_slice(&a[my_range.clone()]);
+            }
+            self.adam_update_range(&avg, (step + 1) / local_k, my_range.clone())?;
 
             // Tied-parameter sync: the last stage's head reads `tok_emb`,
             // which stage 0 owns and just Adam-updated — ship the fresh
@@ -1277,6 +1754,10 @@ impl Trainer {
                     tok_range.len()
                 );
                 self.params[tok_range.clone()].copy_from_slice(&w);
+            }
+            // local-SGD: the post-sync parameters anchor the next round
+            if let Some(a) = anchor.as_mut() {
+                a.copy_from_slice(&self.params);
             }
 
             // stage diagnostics to the coordinator (subgroup roots)
@@ -1562,6 +2043,11 @@ impl Trainer {
                     .unwrap_or_else(|| self.window.history.clone()),
                 rank_trace: self.dac.as_ref().map(|d| d.rank_trace.clone()).unwrap_or_default(),
                 alloc_trace: self.alloc.as_ref().map(|a| a.trace.clone()).unwrap_or_default(),
+                stage_rank_trace: self
+                    .dac
+                    .as_ref()
+                    .map(|d| d.stage_trace.clone())
+                    .unwrap_or_default(),
                 error_samples,
                 overlap: self.overlap_report(ov_hidden, ov_busy, &model),
                 wire: WireReport::default(), // filled in by run_distributed_pp

@@ -1,0 +1,62 @@
+//! Typed distributed failures.
+//!
+//! The transports used to report every fault as a rendered string,
+//! which forced fault-handling code (and the fault-injection tests) to
+//! grep messages. [`DistError`] names the three failure shapes the
+//! wire layer can actually produce; it rides inside
+//! [`EdgcError`](crate::util::error::EdgcError) (see
+//! `EdgcError::dist`), so existing `Result` signatures and context
+//! chains are untouched while callers match on the variant:
+//!
+//! * [`DistError::PeerDeath`] — the link to a peer closed mid-run: the
+//!   peer's transport dropped (worker exited, crashed, or was
+//!   fault-injected). Collectives block on specific peers, so this is
+//!   the error every survivor of a killed rank eventually sees.
+//! * [`DistError::FrameCorrupt`] — a frame arrived (or was about to be
+//!   sent) that cannot be valid: an oversized length prefix or a wire
+//!   codec payload that fails to decode.
+//! * [`DistError::Timeout`] — a receive exceeded the transport's
+//!   configured deadline (`Transport::set_recv_deadline`); off by
+//!   default, so unconfigured groups keep their blocking semantics.
+
+use std::fmt;
+
+/// The typed cause of a transport-layer failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DistError {
+    /// The link to `rank` closed: that peer's transport is gone.
+    PeerDeath { rank: usize },
+    /// A frame that cannot be decoded or legally sent.
+    FrameCorrupt { detail: String },
+    /// No frame from `rank` within the configured receive deadline.
+    Timeout { rank: usize, millis: u64 },
+}
+
+impl fmt::Display for DistError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DistError::PeerDeath { rank } => {
+                write!(f, "peer rank {rank} died (link closed)")
+            }
+            DistError::FrameCorrupt { detail } => write!(f, "corrupt frame: {detail}"),
+            DistError::Timeout { rank, millis } => {
+                write!(f, "recv from rank {rank} timed out after {millis} ms")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_rank() {
+        let e = DistError::PeerDeath { rank: 2 };
+        assert!(e.to_string().contains("rank 2"));
+        let t = DistError::Timeout { rank: 1, millis: 250 };
+        assert!(t.to_string().contains("rank 1") && t.to_string().contains("250"));
+        let c = DistError::FrameCorrupt { detail: "bad header".into() };
+        assert!(c.to_string().contains("bad header"));
+    }
+}

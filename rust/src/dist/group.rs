@@ -61,21 +61,40 @@ pub fn rank_rng(seed: u64, rank: usize) -> Rng {
     Rng::new(seed).fork(0xD157_0000 ^ rank as u64)
 }
 
-/// Shared join protocol of the group runners: surface the lowest-rank
-/// error (with rank context) or a panic as one failure, otherwise the
-/// rank-indexed `(result, counter snapshot)` list.
+/// Shared join protocol of the group runners: surface one failure with
+/// rank context, otherwise the rank-indexed `(result, counter
+/// snapshot)` list. Root-cause preference: when a rank dies, its peers
+/// cascade with transport-symptom errors ([`crate::dist::DistError`] —
+/// peer death, timeouts), so the lowest-rank *non-transport* error (the
+/// rank that actually failed, or panicked) wins over a lower rank's
+/// symptom. A fault-injected rank is therefore always the one named,
+/// even when rank 0 only observed the secondary link closure.
 fn collect_ranks<R>(
     joined: Vec<std::thread::Result<(Result<R>, Counters)>>,
 ) -> Result<Vec<(R, Counters)>> {
     let mut out = Vec::with_capacity(joined.len());
+    let mut symptom = None; // lowest-rank transport-symptom error
+    let mut root = None; // lowest-rank root-cause error
     for (rank, j) in joined.into_iter().enumerate() {
         match j {
             Ok((Ok(r), c)) => out.push((r, c)),
-            Ok((Err(e), _)) => return Err(e.context(format!("rank {rank}"))),
-            Err(_) => return Err(err!("rank {rank} worker panicked")),
+            Ok((Err(e), _)) => {
+                let e = e.context(format!("rank {rank}"));
+                if e.dist().is_some() {
+                    symptom.get_or_insert(e);
+                } else {
+                    root.get_or_insert(e);
+                }
+            }
+            Err(_) => {
+                root.get_or_insert(err!("rank {rank} worker panicked"));
+            }
         }
     }
-    Ok(out)
+    match root.or(symptom) {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
 }
 
 /// Spawn `world` rank workers over a fresh `kind` mesh, run `f` on
@@ -223,10 +242,19 @@ mod tests {
             let r = rx
                 .recv_timeout(std::time::Duration::from_secs(60))
                 .unwrap_or_else(|_| panic!("{}: group hung after rank 1 died", kind.name()));
-            let msg = r.unwrap_err().to_string();
+            // root-cause preference: the survivors' typed PeerDeath
+            // symptoms are subordinated to the dead rank's own error,
+            // so the surfaced failure names rank 1 with its real reason
+            let err = r.unwrap_err();
             assert!(
-                msg.contains("rank 1"),
-                "{}: teardown error must name the dead rank: {msg}",
+                err.dist().is_none(),
+                "{}: the root cause is not a transport symptom: {err}",
+                kind.name()
+            );
+            let msg = err.to_string();
+            assert!(
+                msg.contains("rank 1") && msg.contains("injected fault"),
+                "{}: teardown error must name the dead rank and its reason: {msg}",
                 kind.name()
             );
         }

@@ -23,12 +23,17 @@
 //!   for any rank count
 //! * [`group`] — `run_group`: scoped rank worker threads over a mesh,
 //!   per-rank counter snapshots, rank-forked RNG streams
+//! * [`error`] — typed transport failures ([`DistError`]): peer death,
+//!   corrupt frames, receive timeouts — carried inside `EdgcError` so
+//!   fault handling matches variants instead of grepping messages
 
 pub mod codec;
 pub mod collective;
+pub mod error;
 pub mod group;
 pub mod transport;
 
 pub use codec::{Codec, Lane};
+pub use error::DistError;
 pub use group::{run_group, run_group2, TransportKind};
 pub use transport::{Class, Counters, SubTransport, Transport};

@@ -36,11 +36,13 @@
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
 
 use super::codec::{self, Codec, Lane};
-use crate::util::error::{Context, Result};
-use crate::{bail, ensure};
+use super::error::DistError;
+use crate::ensure;
+use crate::util::error::{Context, EdgcError, Result};
 
 /// Upper bound on a single frame's payload (sanity guard against a
 /// corrupted length prefix on the TCP path).
@@ -203,6 +205,11 @@ pub trait Transport: Send {
     /// codecs quantize only `Lane::Factor` traffic.
     fn lane(&self) -> Lane;
     fn set_lane(&mut self, lane: Lane);
+    /// Deadline for subsequent `recv` calls: `None` (the default)
+    /// blocks forever, `Some(d)` surfaces [`DistError::Timeout`] when
+    /// no frame arrives within `d`. A deadline turns a silent hang on
+    /// a wedged peer into a typed, attributable failure.
+    fn set_recv_deadline(&mut self, _deadline: Option<Duration>) {}
     /// What a peer would actually receive if `payload` were sent now —
     /// `Some(quantized)` under a lossy codec/lane pair, `None` when the
     /// wire is bit-exact. Collectives apply this to the chunks they
@@ -309,9 +316,41 @@ impl Transport for SubTransport<'_> {
     fn set_lane(&mut self, lane: Lane) {
         self.inner.set_lane(lane);
     }
+
+    fn set_recv_deadline(&mut self, deadline: Option<Duration>) {
+        self.inner.set_recv_deadline(deadline);
+    }
 }
 
 // ------------------------------------------------------------ in-process
+
+/// The typed error for a link whose peer endpoint is gone, annotated
+/// with the observing rank (the inherent `EdgcError::context` keeps the
+/// [`DistError`] cause reachable through `EdgcError::dist`).
+fn peer_death(me: usize, peer: usize) -> EdgcError {
+    EdgcError::from_dist(DistError::PeerDeath { rank: peer }).context(format!("rank {me}"))
+}
+
+/// Drain one frame from a per-peer inbox under the optional deadline,
+/// mapping the two mpsc failure shapes to their typed causes.
+fn inbox_recv<T>(
+    rx: &Receiver<T>,
+    me: usize,
+    from: usize,
+    deadline: Option<Duration>,
+) -> Result<T> {
+    match deadline {
+        None => rx.recv().map_err(|_| peer_death(me, from)),
+        Some(d) => rx.recv_timeout(d).map_err(|e| match e {
+            RecvTimeoutError::Disconnected => peer_death(me, from),
+            RecvTimeoutError::Timeout => EdgcError::from_dist(DistError::Timeout {
+                rank: from,
+                millis: d.as_millis() as u64,
+            })
+            .context(format!("rank {me}")),
+        }),
+    }
+}
 
 /// Encode `payload` for the wire; `None` means raw passthrough
 /// (`Codec::Off` adds no header and no overhead).
@@ -323,13 +362,17 @@ fn wire_encode(codec: Codec, lane: Lane, payload: &[u8]) -> Option<Vec<u8>> {
     }
 }
 
-/// Decode a received wire message back to `(logical_bytes, wire_len)`.
+/// Decode a received wire message back to `(logical_bytes, wire_len)`;
+/// a payload the codec rejects is a typed [`DistError::FrameCorrupt`].
 fn wire_decode(codec: Codec, msg: Vec<u8>) -> Result<(Vec<u8>, usize)> {
     let wire = msg.len();
     if codec == Codec::Off {
         Ok((msg, wire))
     } else {
-        Ok((codec::decode(&msg)?, wire))
+        let logical = codec::decode(&msg).map_err(|e| {
+            EdgcError::from_dist(DistError::FrameCorrupt { detail: e.to_string() })
+        })?;
+        Ok((logical, wire))
     }
 }
 
@@ -342,6 +385,7 @@ pub struct MemTransport {
     counters: Counters,
     codec: Codec,
     lane: Lane,
+    deadline: Option<Duration>,
 }
 
 /// Build the full in-process mesh: `world` endpoints, rank-indexed.
@@ -372,6 +416,7 @@ pub fn mem_mesh(world: usize) -> Vec<MemTransport> {
             counters: Counters::new(world),
             codec: Codec::Off,
             lane: Lane::Frame,
+            deadline: None,
         })
         .collect()
 }
@@ -396,9 +441,8 @@ impl Transport for MemTransport {
             None => payload.to_vec(),
         };
         let wire_len = wire.len();
-        tx.send(wire)
-            .ok()
-            .with_context(|| format!("rank {}: link to rank {to} closed", self.rank))?;
+        // a dropped receiver means the peer's transport is gone
+        tx.send(wire).map_err(|_| peer_death(self.rank, to))?;
         self.counters.on_send(to, payload.len(), wire_len);
         Ok(())
     }
@@ -409,10 +453,7 @@ impl Transport for MemTransport {
             .get(from)
             .and_then(|p| p.as_ref())
             .with_context(|| format!("rank {}: no link from rank {from}", self.rank))?;
-        let msg = rx
-            .recv()
-            .ok()
-            .with_context(|| format!("rank {}: link from rank {from} closed", self.rank))?;
+        let msg = inbox_recv(rx, self.rank, from, self.deadline)?;
         let (logical, wire_len) = wire_decode(self.codec, msg)?;
         self.counters.on_recv(from, logical.len(), wire_len);
         Ok(logical)
@@ -441,6 +482,10 @@ impl Transport for MemTransport {
     fn set_lane(&mut self, lane: Lane) {
         self.lane = lane;
     }
+
+    fn set_recv_deadline(&mut self, deadline: Option<Duration>) {
+        self.deadline = deadline;
+    }
 }
 
 // ----------------------------------------------------------- tcp mesh
@@ -452,13 +497,19 @@ pub struct TcpTransport {
     world: usize,
     /// Write side of each link (reader threads own clones).
     streams: Vec<Option<TcpStream>>,
-    inbox: Vec<Option<Receiver<Vec<u8>>>>,
+    inbox: Vec<Option<Receiver<ReaderFrame>>>,
     counters: Counters,
     codec: Codec,
     lane: Lane,
+    deadline: Option<Duration>,
 }
 
-fn reader_loop(mut stream: TcpStream, tx: Sender<Vec<u8>>) {
+/// One inbox item: a drained frame, or the reader's reason for refusing
+/// one (an impossible length prefix) — surfaced by `recv` as
+/// [`DistError::FrameCorrupt`] rather than a silent link teardown.
+type ReaderFrame = std::result::Result<Vec<u8>, String>;
+
+fn reader_loop(mut stream: TcpStream, tx: Sender<ReaderFrame>) {
     loop {
         let mut lenb = [0u8; 4];
         if stream.read_exact(&mut lenb).is_err() {
@@ -466,10 +517,11 @@ fn reader_loop(mut stream: TcpStream, tx: Sender<Vec<u8>>) {
         }
         let len = u32::from_le_bytes(lenb) as usize;
         if len > MAX_FRAME {
+            tx.send(Err(format!("length prefix {len} exceeds MAX_FRAME {MAX_FRAME}"))).ok();
             return;
         }
         let mut buf = vec![0u8; len];
-        if stream.read_exact(&mut buf).is_err() || tx.send(buf).is_err() {
+        if stream.read_exact(&mut buf).is_err() || tx.send(Ok(buf)).is_err() {
             return;
         }
     }
@@ -541,6 +593,7 @@ pub fn tcp_mesh(world: usize) -> Result<Vec<TcpTransport>> {
             counters: Counters::new(world),
             codec: Codec::Off,
             lane: Lane::Frame,
+            deadline: None,
         });
     }
     Ok(out)
@@ -559,16 +612,20 @@ impl Transport for TcpTransport {
         let encoded = wire_encode(self.codec, self.lane, payload);
         let wire: &[u8] = encoded.as_deref().unwrap_or(payload);
         if wire.len() > MAX_FRAME {
-            bail!("frame of {} wire bytes exceeds MAX_FRAME", wire.len());
+            return Err(EdgcError::from_dist(DistError::FrameCorrupt {
+                detail: format!("frame of {} wire bytes exceeds MAX_FRAME", wire.len()),
+            }));
         }
         let s = self
             .streams
             .get_mut(to)
             .and_then(|p| p.as_mut())
             .with_context(|| format!("rank {}: no link to rank {to}", self.rank))?;
+        // a write failure on an established loopback link means the
+        // peer endpoint is gone (connection reset / shutdown)
         s.write_all(&(wire.len() as u32).to_le_bytes())
             .and_then(|_| s.write_all(wire))
-            .with_context(|| format!("rank {}: send to rank {to}", self.rank))?;
+            .map_err(|e| peer_death(self.rank, to).context(format!("send ({e})")))?;
         self.counters.on_send(to, payload.len(), wire.len());
         Ok(())
     }
@@ -579,10 +636,13 @@ impl Transport for TcpTransport {
             .get(from)
             .and_then(|p| p.as_ref())
             .with_context(|| format!("rank {}: no link from rank {from}", self.rank))?;
-        let msg = rx
-            .recv()
-            .ok()
-            .with_context(|| format!("rank {}: link from rank {from} closed", self.rank))?;
+        let msg = match inbox_recv(rx, self.rank, from, self.deadline)? {
+            Ok(buf) => buf,
+            Err(detail) => {
+                return Err(EdgcError::from_dist(DistError::FrameCorrupt { detail })
+                    .context(format!("rank {}: recv from rank {from}", self.rank)))
+            }
+        };
         let (logical, wire_len) = wire_decode(self.codec, msg)?;
         self.counters.on_recv(from, logical.len(), wire_len);
         Ok(logical)
@@ -610,6 +670,10 @@ impl Transport for TcpTransport {
 
     fn set_lane(&mut self, lane: Lane) {
         self.lane = lane;
+    }
+
+    fn set_recv_deadline(&mut self, deadline: Option<Duration>) {
+        self.deadline = deadline;
     }
 }
 
@@ -834,6 +898,43 @@ mod tests {
         let mut b = mesh.pop().unwrap();
         let a = mesh.pop().unwrap();
         drop(a); // shutdown propagates EOF to b's reader
-        assert!(b.recv(0).is_err());
+        let err = b.recv(0).unwrap_err();
+        assert_eq!(err.dist(), Some(&DistError::PeerDeath { rank: 0 }));
+    }
+
+    #[test]
+    fn closed_mem_link_is_typed_peer_death() {
+        // send into a dropped peer endpoint
+        let mut mesh = mem_mesh(2);
+        let b = mesh.pop().unwrap();
+        let mut a = mesh.remove(0);
+        drop(b);
+        let err = a.send(1, b"x").unwrap_err();
+        assert_eq!(err.dist(), Some(&DistError::PeerDeath { rank: 1 }));
+        // recv from a dropped peer endpoint
+        let mut mesh = mem_mesh(2);
+        let mut b = mesh.pop().unwrap();
+        let a = mesh.remove(0);
+        drop(a);
+        let err = b.recv(0).unwrap_err();
+        assert_eq!(err.dist(), Some(&DistError::PeerDeath { rank: 0 }));
+        assert!(err.to_string().contains("rank 0"), "{err}");
+    }
+
+    #[test]
+    fn recv_deadline_surfaces_typed_timeout() {
+        let mut mesh = mem_mesh(2);
+        let mut b = mesh.pop().unwrap();
+        b.set_recv_deadline(Some(Duration::from_millis(10)));
+        let err = b.recv(0).unwrap_err();
+        assert_eq!(err.dist(), Some(&DistError::Timeout { rank: 0, millis: 10 }));
+        // clearing the deadline restores blocking semantics; a queued
+        // frame is delivered normally either way
+        let mut a = mesh.remove(0);
+        a.send(1, b"late").unwrap();
+        assert_eq!(b.recv(0).unwrap(), b"late");
+        b.set_recv_deadline(None);
+        a.send(1, b"again").unwrap();
+        assert_eq!(b.recv(0).unwrap(), b"again");
     }
 }

@@ -14,7 +14,7 @@
 
 use edgc::util::error::{Context, Result};
 
-use edgc::config::{cluster_by_name, Method, RankAlloc, TrainConfig};
+use edgc::config::{cluster_by_name, FaultSpec, Method, RankAlloc, TrainConfig};
 use edgc::coordinator::{run_distributed, run_distributed_pp, Backend, Trainer};
 use edgc::dist::{Codec, TransportKind};
 use edgc::repro;
@@ -107,6 +107,32 @@ fn spec() -> Spec {
                 "halt after N steps without changing the planned horizon \
                  (schedules still derive from --steps; used to model interruption)",
             ),
+            (
+                "local-sgd",
+                "K",
+                "scenario: replicas take K local SGD steps between compressed \
+                 syncs of the pseudo-gradient (K=1: classic per-step sync)",
+            ),
+            (
+                "local-sgd-penalty",
+                "X",
+                "scenario: EDiT-style RMS penalty weight on the averaged \
+                 pseudo-gradient (0 <= X < 1; requires --local-sgd > 1)",
+            ),
+            (
+                "straggler",
+                "LIST",
+                "scenario: per-stage compute slowdown factors, comma-separated \
+                 (one per pipeline stage, each >= 1.0; e.g. 1,1,2,1). Priced \
+                 into the timing model and enacted by real stage workers",
+            ),
+            (
+                "fault-rank",
+                "R",
+                "scenario: kill global rank R mid-step (with --fault-step; the \
+                 group tears down loudly naming the rank; --resume rejoins)",
+            ),
+            ("fault-step", "N", "scenario: the step at which --fault-rank dies"),
             ("threshold", "X", "bench-diff: allowed fractional regression (default 0.25)"),
             (
                 "min-ns",
@@ -214,8 +240,36 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if args.opt("stop-after").is_some() {
         cfg.stop_after = Some(args.usize_or("stop-after", 0)?);
     }
+    if args.opt("local-sgd").is_some() {
+        cfg.scenario.local_sgd = args.usize_or("local-sgd", 1)?;
+    }
+    if args.opt("local-sgd-penalty").is_some() {
+        cfg.scenario.local_sgd_penalty = args.f64_or("local-sgd-penalty", 0.0)?;
+    }
+    if let Some(list) = args.opt("straggler") {
+        let profile: Vec<f64> = list
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f64>()
+                    .map_err(|_| edgc::err!("--straggler: bad slowdown factor {s:?} in {list:?}"))
+            })
+            .collect::<Result<_>>()?;
+        cfg.scenario.straggler = Some(profile);
+    }
+    match (args.opt("fault-rank"), args.opt("fault-step")) {
+        (Some(_), Some(_)) => {
+            cfg.scenario.fault = Some(FaultSpec {
+                rank: args.usize_or("fault-rank", 0)?,
+                step: args.usize_or("fault-step", 0)?,
+            });
+        }
+        (None, None) => {}
+        _ => edgc::bail!("--fault-rank and --fault-step must be given together"),
+    }
     cfg.validate_ckpt()?;
     cfg.validate_compression()?;
+    cfg.validate_scenario()?;
     if let Some(dir) = &cfg.ckpt_dir {
         probe_writable(dir)?;
     }

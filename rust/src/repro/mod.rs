@@ -27,7 +27,7 @@ use crate::tensor::{mse, pearson, pearson64};
 
 pub const ALL: &[&str] = &[
     "fig2", "fig3", "fig4", "fig9", "fig10", "fig11", "table3", "table4", "fig12", "table5",
-    "fig13", "table6", "table7", "fig14", "scaling", "alloc",
+    "fig13", "table6", "table7", "fig14", "scaling", "alloc", "stragglers",
 ];
 
 /// Common options for the harness.
@@ -94,6 +94,7 @@ pub fn run_tables(name: &str, opts: &Opts) -> Result<Vec<Table>> {
         "fig14" => fig14_stage_alignment(opts)?,
         "scaling" => scaling_llama34b()?,
         "alloc" => alloc_layer_vs_stage(opts)?,
+        "stragglers" => stragglers_uniform_vs_skewed(opts)?,
         other => bail!("unknown experiment {other:?}; available: {}", ALL.join(", ")),
     };
     for t in &tables {
@@ -149,6 +150,7 @@ fn base_cfg(opts: &Opts, exp: &str, method: Method) -> TrainConfig {
         ckpt_dir: None,
         resume: None,
         stop_after: None,
+        scenario: crate::config::ScenarioConfig::default(),
     }
 }
 
@@ -643,6 +645,93 @@ fn alloc_layer_vs_stage(opts: &Opts) -> Result<Vec<Table>> {
     Ok(vec![t])
 }
 
+// ------------------------------------------------------------- stragglers
+
+/// `edgc reproduce stragglers`: DAC stage alignment on a skewed cluster.
+/// Two controllers consume the same window-entropy schedule — one on a
+/// uniform cluster (Eq.-4 `i·T̄_microBack` slack ladder), one with a
+/// straggler profile priced into the timing model, whose per-stage slack
+/// comes from the *modeled* skewed drain timeline
+/// (`VirtualClock::modeled_last_bwd`) exactly as the trainer installs it
+/// (`[scenario] straggler = [...]`). The comparison artifact is the pair
+/// of per-stage rank traces: the slowed stage compresses its pipeline
+/// neighbours' drain slack, so the skewed trace must visibly diverge
+/// from the uniform one — the job fails if the traces coincide.
+///
+/// The comm model uses a controlled η worth ~2 ranks per microbatch
+/// backward of slack, so the divergence is readable in integer ranks
+/// instead of vanishing into the round/clamp (same device as the
+/// `slack_override_reshapes_stage_ranks` unit test).
+fn stragglers_uniform_vs_skewed(opts: &Opts) -> Result<Vec<Table>> {
+    use crate::coordinator::dac::{Dac, DacConfig, RankBounds};
+    use crate::coordinator::VirtualClock;
+    use crate::netsim::LinearCommModel;
+
+    let c = CLUSTER1_V100;
+    let (dp, tp, pp, micro) = (2usize, 4usize, 4usize, 8usize);
+    let n_params = 2_500_000_000usize;
+    let tokens = 32 * 1024;
+    // stage 2 computes at half speed — the paper's hostile-cluster shape
+    let profile = [1.0f64, 1.0, 2.0, 1.0];
+    let uniform_clock = VirtualClock::new(c, dp, tp, pp, micro, n_params, tokens);
+    let mut skewed_clock = VirtualClock::new(c, dp, tp, pp, micro, n_params, tokens);
+    skewed_clock.set_slowdown(&profile);
+    let microback = uniform_clock.t_bwd;
+    let comm = LinearCommModel { eta: microback / 2.0, mape: 0.0 };
+    // trainer-identical slack derivation (coordinator::Trainer::build_dac)
+    let lb = skewed_clock.modeled_last_bwd();
+    let skewed_slack: Vec<f64> = lb.iter().map(|&x| (lb[0] - x).max(0.0)).collect();
+    let mk = |slack: Option<Vec<f64>>| {
+        Dac::new(DacConfig {
+            params: EdgcParams { window: 10, step_limit: 8, ..Default::default() },
+            bounds: RankBounds { r_min: 8, r_max: 64 },
+            m: 1920,
+            n: 1920 * 4,
+            comm,
+            microback,
+            stages: pp,
+            total_steps: 200,
+            slack,
+        })
+    };
+    let mut uniform = mk(None)?;
+    let mut skewed = mk(Some(skewed_slack.clone()))?;
+    // shared entropy schedule: instability rise, sustained decline past
+    // the 10% warm-up floor, then a slow drift — drives the stage-1 rank
+    // into the interior of [r_min, r_max] where stage spread is visible
+    let entropies = [4.0, 3.95, 3.9, 3.6, 3.3, 3.0, 2.8, 2.7, 2.9, 3.1];
+    for (w, &h) in entropies.iter().enumerate() {
+        let step = (w + 1) * 10;
+        uniform.on_window(step, h);
+        skewed.on_window(step, h);
+    }
+    if uniform.stage_trace == skewed.stage_trace {
+        bail!(
+            "straggler profile {profile:?} left the DAC stage-rank trace \
+             unchanged: {:?}",
+            uniform.stage_trace
+        );
+    }
+
+    let mut slack_t = Table::new(
+        "stragglers_stage_slack",
+        &["stage", "slowdown", "slack_uniform_s", "slack_skewed_s"],
+    );
+    for i in 0..pp {
+        slack_t.push(vec![i as f64, profile[i], i as f64 * microback, skewed_slack[i]]);
+    }
+    let mut trace_t = Table::new(
+        "stragglers_stage_rank_trace",
+        &["window", "stage", "rank_uniform", "rank_skewed"],
+    );
+    for ((w, u), (_, s)) in uniform.stage_trace.iter().zip(&skewed.stage_trace) {
+        for i in 0..pp {
+            trace_t.push(vec![*w as f64, i as f64, u[i] as f64, s[i] as f64]);
+        }
+    }
+    Ok(vec![slack_t, trace_t])
+}
+
 // --------------------------------------------------------------- misc api
 
 /// CQM curve g(r)/g(0) for documentation plots (not a paper figure, used
@@ -770,6 +859,21 @@ mod tests {
             assert!(row[4] < row[3], "layer not strictly better: {row:?}");
             assert!(row[5] > 0.0, "non-positive improvement: {row:?}");
         }
+    }
+
+    #[test]
+    fn stragglers_trace_diverges_from_uniform() {
+        let tables = stragglers_uniform_vs_skewed(&Opts::default()).unwrap();
+        let slack = &tables[0];
+        // the skewed modeled slack must not reproduce the uniform ladder
+        assert!(slack.rows.iter().any(|r| (r[2] - r[3]).abs() > 1e-12), "{:?}", slack.rows);
+        let trace = &tables[1];
+        assert!(!trace.rows.is_empty());
+        assert!(
+            trace.rows.iter().any(|r| r[2] != r[3]),
+            "stage-rank traces identical: {:?}",
+            trace.rows
+        );
     }
 
     #[test]

@@ -10,19 +10,43 @@
 use std::fmt;
 
 /// The crate-wide error: a rendered message, context-prefixed as it
-/// bubbles up (`context: cause`).
+/// bubbles up (`context: cause`), plus an optional typed distributed
+/// cause ([`crate::dist::DistError`]) that survives every `context`
+/// wrap so fault-handling code can match on *what* failed instead of
+/// grepping the rendered string.
 pub struct EdgcError {
     msg: String,
+    dist: Option<crate::dist::DistError>,
 }
 
 impl EdgcError {
     pub fn new(msg: impl Into<String>) -> Self {
-        EdgcError { msg: msg.into() }
+        EdgcError { msg: msg.into(), dist: None }
+    }
+
+    /// An error whose root cause is a typed transport failure. The
+    /// rendered message is the variant's `Display`; the variant itself
+    /// stays reachable through [`EdgcError::dist`] no matter how many
+    /// context layers are stacked on top.
+    pub fn from_dist(e: crate::dist::DistError) -> Self {
+        EdgcError { msg: e.to_string(), dist: Some(e) }
     }
 
     /// Prefix this error with a higher-level context line.
     pub fn context(self, ctx: impl fmt::Display) -> Self {
-        EdgcError { msg: format!("{ctx}: {}", self.msg) }
+        EdgcError { msg: format!("{ctx}: {}", self.msg), dist: self.dist }
+    }
+
+    /// The typed distributed cause, if this error originated in the
+    /// transport layer.
+    pub fn dist(&self) -> Option<&crate::dist::DistError> {
+        self.dist.as_ref()
+    }
+}
+
+impl From<crate::dist::DistError> for EdgcError {
+    fn from(e: crate::dist::DistError) -> Self {
+        EdgcError::from_dist(e)
     }
 }
 
@@ -148,6 +172,18 @@ mod tests {
         assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
         let w: Result<()> = fails().with_context(|| format!("step {}", 7));
         assert_eq!(w.unwrap_err().to_string(), "step 7: inner 42");
+    }
+
+    #[test]
+    fn dist_cause_survives_context() {
+        use crate::dist::DistError;
+        let e = EdgcError::from_dist(DistError::PeerDeath { rank: 3 });
+        assert_eq!(e.dist(), Some(&DistError::PeerDeath { rank: 3 }));
+        assert!(e.to_string().contains("rank 3"));
+        let wrapped = e.context("collective").context("rank 0");
+        assert_eq!(wrapped.dist(), Some(&DistError::PeerDeath { rank: 3 }));
+        assert!(wrapped.to_string().starts_with("rank 0: collective:"));
+        assert_eq!(err!("plain").dist(), None);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 use std::collections::BTreeMap;
 use std::sync::{Mutex, MutexGuard};
 
-use edgc::config::{Method, TrainConfig};
+use edgc::config::{FaultSpec, Method, TrainConfig};
 use edgc::coordinator::pipeline::FRAME_HEADER_BYTES;
 use edgc::coordinator::{run_distributed, run_distributed_pp, Backend, DistRun, Trainer};
 use edgc::dist::{Codec, TransportKind};
@@ -60,6 +60,7 @@ fn tiny_cfg(method: Method, steps: usize) -> TrainConfig {
         ckpt_dir: None,
         resume: None,
         stop_after: None,
+        scenario: edgc::config::ScenarioConfig::default(),
     }
 }
 
@@ -555,67 +556,185 @@ fn bf16_codec_is_deterministic_and_bounded() {
     par::set_threads(1);
 }
 
-/// One cell of the CI pp×dp×transport×overlap×codec matrix, selected
-/// via environment (EDGC_PP / EDGC_DP / EDGC_TRANSPORT / EDGC_OVERLAP
-/// / EDGC_CODEC) on the 4-layer `deep` preset so pp=4 splits real
-/// stages. Ignored by default; the `pp-dp-matrix` CI job runs it with
-/// `--ignored`. codec=lossless re-runs the cell with wire compression
-/// on — the byte-identity against the centralized/sequential reference
-/// (which never sees a codec) is exactly the off-equivalence pin.
+/// The scenario dimension of the CI matrix (`EDGC_CELL=...,scenario=`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum CellScenario {
+    Off,
+    LocalSgd,
+    Straggler,
+}
+
+/// One cell of the CI pp×dp×transport×overlap×codec×resume×rank-alloc×
+/// scenario matrix. Selection used to sprawl across six `EDGC_*`
+/// environment variables whose defaults silently shrank a typo'd
+/// dimension; the whole cell now arrives through the single `EDGC_CELL`
+/// variable as comma-separated `key=value` pairs, e.g.
+///
+/// ```text
+/// EDGC_CELL=pp=4,dp=2,transport=tcp,overlap=on,codec=lossless,scenario=local-sgd
+/// ```
+///
+/// Unknown keys, malformed pairs, and unparseable values fail the cell
+/// loudly — never fall back to the default shape.
+#[derive(Clone, Debug)]
+struct MatrixCell {
+    pp: usize,
+    dp: usize,
+    transport: TransportKind,
+    overlap: bool,
+    codec: Codec,
+    resume: bool,
+    rank_alloc: edgc::config::RankAlloc,
+    scenario: CellScenario,
+}
+
+impl Default for MatrixCell {
+    fn default() -> Self {
+        MatrixCell {
+            pp: 2,
+            dp: 1,
+            transport: TransportKind::Mem,
+            overlap: false,
+            codec: Codec::Off,
+            resume: false,
+            rank_alloc: edgc::config::RankAlloc::Stage,
+            scenario: CellScenario::Off,
+        }
+    }
+}
+
+impl MatrixCell {
+    fn parse(spec: &str) -> MatrixCell {
+        fn on_off(k: &str, v: &str) -> bool {
+            match v {
+                "on" => true,
+                "off" => false,
+                other => panic!("EDGC_CELL: {k}={other:?} is not on|off"),
+            }
+        }
+        let mut cell = MatrixCell::default();
+        for pair in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = pair
+                .split_once('=')
+                .unwrap_or_else(|| panic!("EDGC_CELL: {pair:?} is not key=value"));
+            match k {
+                "pp" => {
+                    cell.pp = v.parse().unwrap_or_else(|_| panic!("EDGC_CELL: pp={v:?}"));
+                }
+                "dp" => {
+                    cell.dp = v.parse().unwrap_or_else(|_| panic!("EDGC_CELL: dp={v:?}"));
+                }
+                "transport" => {
+                    cell.transport = TransportKind::parse(v)
+                        .unwrap_or_else(|e| panic!("EDGC_CELL: transport: {e}"));
+                }
+                "overlap" => cell.overlap = on_off(k, v),
+                "codec" => {
+                    cell.codec =
+                        Codec::parse(v).unwrap_or_else(|e| panic!("EDGC_CELL: codec: {e}"));
+                }
+                "resume" => cell.resume = on_off(k, v),
+                "rank-alloc" => {
+                    cell.rank_alloc = edgc::config::RankAlloc::parse(v)
+                        .unwrap_or_else(|e| panic!("EDGC_CELL: rank-alloc: {e}"));
+                }
+                "scenario" => {
+                    cell.scenario = match v {
+                        "off" => CellScenario::Off,
+                        "local-sgd" => CellScenario::LocalSgd,
+                        "straggler" => CellScenario::Straggler,
+                        other => {
+                            panic!("EDGC_CELL: scenario={other:?} is not off|local-sgd|straggler")
+                        }
+                    };
+                }
+                other => panic!("EDGC_CELL: unknown key {other:?} in {pair:?}"),
+            }
+        }
+        cell
+    }
+
+    fn from_env() -> MatrixCell {
+        match std::env::var("EDGC_CELL") {
+            Ok(spec) => MatrixCell::parse(&spec),
+            Err(_) => MatrixCell::default(),
+        }
+    }
+}
+
+#[test]
+fn matrix_cell_parses_and_rejects() {
+    let cell = MatrixCell::parse("pp=4, dp=2,transport=tcp,overlap=on,scenario=straggler");
+    assert_eq!((cell.pp, cell.dp), (4, 2));
+    assert_eq!(cell.transport, TransportKind::Tcp);
+    assert!(cell.overlap && !cell.resume);
+    assert_eq!(cell.scenario, CellScenario::Straggler);
+    let d = MatrixCell::parse("");
+    assert_eq!((d.pp, d.dp), (2, 1));
+    assert_eq!(d.scenario, CellScenario::Off);
+    for bad in ["pp=x", "overlap=maybe", "scenario=chaos", "zz=1", "justakey"] {
+        assert!(
+            std::panic::catch_unwind(|| MatrixCell::parse(bad)).is_err(),
+            "{bad:?} must fail the cell"
+        );
+    }
+}
+
+/// One cell of the CI matrix on the 4-layer `deep` preset so pp=4 splits
+/// real stages. Ignored by default; the `pp-dp-matrix` CI job runs it
+/// with `--ignored` under an `EDGC_CELL` selection. codec=lossless
+/// re-runs the cell with wire compression on — the byte-identity against
+/// the centralized/sequential reference (which never sees a codec) is
+/// exactly the off-equivalence pin. scenario=local-sgd|straggler routes
+/// to the dedicated scenario pin: those runs reshape the data-plane
+/// volume, so the 1%-slack wire calibration of the plain cells does not
+/// apply, but the byte-identity against the centralized reference does.
 #[test]
 #[ignore]
 fn pp_dp_matrix_cell() {
     let _knob = hold_par_knob();
     par::set_threads(1);
-    // a set-but-unparseable variable must fail the cell, not silently
-    // shrink the matrix to the default shape
-    let get = |k: &str, d: usize| -> usize {
-        match std::env::var(k) {
-            Ok(v) => v.parse().unwrap_or_else(|_| panic!("{k}={v:?} is not a number")),
-            Err(_) => d,
-        }
-    };
-    let pp = get("EDGC_PP", 2);
-    let dp = get("EDGC_DP", 1);
-    let kind = TransportKind::parse(
-        &std::env::var("EDGC_TRANSPORT").unwrap_or_else(|_| "mem".into()),
-    )
-    .unwrap();
-    let overlap = match std::env::var("EDGC_OVERLAP").as_deref() {
-        Ok("on") => true,
-        Ok("off") | Err(_) => false,
-        Ok(other) => panic!("EDGC_OVERLAP={other:?} is not on|off"),
-    };
-    let codec = match std::env::var("EDGC_CODEC") {
-        Ok(v) => Codec::parse(&v).unwrap_or_else(|e| panic!("EDGC_CODEC: {e}")),
-        Err(_) => Codec::Off,
-    };
-    let resume = match std::env::var("EDGC_RESUME").as_deref() {
-        Ok("on") => true,
-        Ok("off") | Err(_) => false,
-        Ok(other) => panic!("EDGC_RESUME={other:?} is not on|off"),
-    };
-    let rank_alloc = match std::env::var("EDGC_RANK_ALLOC") {
-        Ok(v) => edgc::config::RankAlloc::parse(&v)
-            .unwrap_or_else(|e| panic!("EDGC_RANK_ALLOC: {e}")),
-        Err(_) => edgc::config::RankAlloc::Stage,
-    };
+    let cell = MatrixCell::from_env();
     let mut cfg = tiny_cfg(Method::Edgc, 8);
     cfg.artifacts = "artifacts/deep".into();
-    cfg.pp = pp;
-    cfg.dp = dp;
+    cfg.pp = cell.pp;
+    cfg.dp = cell.dp;
     cfg.microbatches = 4;
-    cfg.codec = codec;
-    cfg.rank_alloc = rank_alloc;
-    if resume {
-        // resume dimension: interrupt the cell at step 3, resume, and
-        // demand bytes identical to the cell's own unbroken run
-        cfg.overlap = overlap;
-        assert_resume_matches_unbroken(&cfg, kind, 3);
-    } else if overlap {
-        assert_overlap_matches_sequential(&cfg, kind);
-    } else {
-        assert_pp_matches_centralized(&cfg, kind);
+    cfg.codec = cell.codec;
+    cfg.rank_alloc = cell.rank_alloc;
+    match cell.scenario {
+        CellScenario::Off => {
+            if cell.resume {
+                // resume dimension: interrupt the cell at step 3, resume,
+                // and demand bytes identical to the cell's own unbroken run
+                cfg.overlap = cell.overlap;
+                assert_resume_matches_unbroken(&cfg, cell.transport, 3);
+            } else if cell.overlap {
+                assert_overlap_matches_sequential(&cfg, cell.transport);
+            } else {
+                assert_pp_matches_centralized(&cfg, cell.transport);
+            }
+        }
+        CellScenario::LocalSgd => {
+            cfg.scenario.local_sgd = 2;
+            cfg.scenario.local_sgd_penalty = 0.1;
+            if cell.resume {
+                // the interrupt must land on a sync boundary (multiple of K)
+                cfg.overlap = cell.overlap;
+                assert_resume_matches_unbroken(&cfg, cell.transport, 4);
+            } else {
+                assert_scenario_matches_centralized(&cfg, cell.transport, cell.overlap);
+            }
+        }
+        CellScenario::Straggler => {
+            cfg.scenario.straggler = Some((0..cell.pp).map(|s| 1.0 + s as f64 * 0.5).collect());
+            if cell.resume {
+                cfg.overlap = cell.overlap;
+                assert_resume_matches_unbroken(&cfg, cell.transport, 3);
+            } else {
+                assert_scenario_matches_centralized(&cfg, cell.transport, cell.overlap);
+            }
+        }
     }
     par::set_threads(1);
 }
@@ -904,6 +1023,276 @@ fn assert_resume_matches_unbroken(cfg: &TrainConfig, kind: TransportKind, k: usi
     assert_eq!(resumed.summary.wire.data_wire, unbroken.summary.wire.data_wire, "{tag}");
     std::fs::remove_dir_all(&dir).ok();
     unbroken
+}
+
+// ------------------------------------------------- hostile-cluster scenarios
+
+/// Scenario byte-identity pin without the wire-volume calibration:
+/// local-SGD syncs only every K-th step and stragglers stretch the
+/// control plane, so the 1% slack of `assert_pp_matches_centralized`
+/// (sized for per-step data traffic) is not guaranteed — but the
+/// byte-determinism contract is unchanged. The distributed run (and its
+/// overlapped variant) must reproduce the centralized curve, final
+/// parameters, and DAC stage-rank trace bit for bit.
+fn assert_scenario_matches_centralized(cfg: &TrainConfig, kind: TransportKind, overlap: bool) {
+    let tag = format!(
+        "{:?} pp={} dp={} K={} straggler={:?} overlap={overlap} over {}",
+        cfg.method,
+        cfg.pp,
+        cfg.dp,
+        cfg.scenario.local_sgd,
+        cfg.scenario.straggler,
+        kind.name()
+    );
+    let (central_params, central_curve, central_trace) = {
+        let mut t = Trainer::new(cfg.clone(), Backend::Host).unwrap();
+        let s = t.run().unwrap();
+        (t.params().to_vec(), s.curve.render(), s.stage_rank_trace.clone())
+    };
+    let mut dcfg = cfg.clone();
+    dcfg.overlap = overlap;
+    let run = dist_run(&dcfg, kind);
+    assert_eq!(run.summary.curve.render(), central_curve, "curve differs ({tag})");
+    let same = run.params.len() == central_params.len()
+        && run.params.iter().zip(&central_params).all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(same, "params differ ({tag})");
+    assert_eq!(run.summary.stage_rank_trace, central_trace, "DAC stage trace differs ({tag})");
+}
+
+/// The local-SGD acceptance pin: `--local-sgd 2` over
+/// {mem,tcp} × {threads 1,4} × {overlap on,off} on the dp-only rank
+/// workers is byte-identical to the centralized reference — curve and
+/// final parameters — with the EDiT pseudo-gradient penalty engaged.
+#[test]
+fn local_sgd_byte_identity_across_transports_threads_overlap() {
+    let _knob = hold_par_knob();
+    let mut cfg = tiny_cfg(Method::FixedRank(8), 8);
+    cfg.pp = 1;
+    cfg.dp = 2;
+    cfg.scenario.local_sgd = 2;
+    cfg.scenario.local_sgd_penalty = 0.1;
+    par::set_threads(1);
+    let (central_params, central_curve) = {
+        let mut t = Trainer::new(cfg.clone(), Backend::Host).unwrap();
+        let s = t.run().unwrap();
+        (t.params().to_vec(), s.curve.render())
+    };
+    for kind in [TransportKind::Mem, TransportKind::Tcp] {
+        for threads in [1usize, 4] {
+            for overlap in [false, true] {
+                par::set_threads(threads);
+                let mut c = cfg.clone();
+                c.overlap = overlap;
+                let run = dist_run(&c, kind);
+                let tag =
+                    format!("K=2 {} threads={threads} overlap={overlap}", kind.name());
+                assert_eq!(run.summary.curve.render(), central_curve, "curve ({tag})");
+                let same = run.params.len() == central_params.len()
+                    && run
+                        .params
+                        .iter()
+                        .zip(&central_params)
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "params differ ({tag})");
+                if overlap {
+                    // the comm plane idles in local-SGD mode (the
+                    // pseudo-gradient only exists after the last local
+                    // step) but the report must still be present and sane
+                    let report = run.summary.overlap.as_ref().unwrap();
+                    assert!((0.0..=1.0).contains(&report.measured_hidden_frac), "{tag}");
+                }
+            }
+        }
+    }
+    par::set_threads(1);
+}
+
+/// Local-SGD through the pipeline grid: pp=2 dp=2 stage workers sync the
+/// pseudo-gradient through the stage subgroups (including the sequential
+/// f64 penalty fold shared over `all_gather_u64`) and must reproduce the
+/// centralized bytes on both transports, with the full EDGC control
+/// plane measuring the *local* gradient between syncs.
+#[test]
+fn local_sgd_pipeline_matches_centralized() {
+    let _knob = hold_par_knob();
+    par::set_threads(1);
+    let mut cfg = tiny_cfg(Method::Edgc, 12);
+    cfg.scenario.local_sgd = 2;
+    cfg.scenario.local_sgd_penalty = 0.1;
+    assert_eq!((cfg.pp, cfg.dp), (2, 2));
+    for kind in [TransportKind::Mem, TransportKind::Tcp] {
+        assert_scenario_matches_centralized(&cfg, kind, false);
+    }
+    par::set_threads(1);
+}
+
+/// Local-SGD composes with checkpoint/resume: interrupting at a sync
+/// boundary (k=4, a multiple of K=2) and resuming reproduces the
+/// unbroken run byte for byte — the anchor is reconstructible from the
+/// snapshot because snapshots only land where params == anchor.
+#[test]
+fn local_sgd_resume_matches_unbroken() {
+    let _knob = hold_par_knob();
+    par::set_threads(1);
+    let mut cfg = tiny_cfg(Method::FixedRank(8), 8);
+    cfg.pp = 1;
+    cfg.dp = 2;
+    cfg.scenario.local_sgd = 2;
+    cfg.scenario.local_sgd_penalty = 0.1;
+    assert_resume_matches_unbroken(&cfg, TransportKind::Mem, 4);
+    par::set_threads(1);
+}
+
+/// Deterministic stragglers: the same per-stage slowdown profile yields
+/// byte-identical curves, parameters, and DAC stage-rank traces over mem
+/// and tcp (and vs the centralized reference) — the profile is priced
+/// into the *modeled* timeline, never measured, so real enacted sleeps
+/// cannot leak into the bytes.
+#[test]
+fn straggler_profile_is_transport_invariant() {
+    let _knob = hold_par_knob();
+    par::set_threads(1);
+    let mut cfg = tiny_cfg(Method::Edgc, 12);
+    cfg.scenario.straggler = Some(vec![1.0, 2.0]);
+    for kind in [TransportKind::Mem, TransportKind::Tcp] {
+        assert_scenario_matches_centralized(&cfg, kind, false);
+    }
+    let mem = dist_run(&cfg, TransportKind::Mem);
+    let tcp = dist_run(&cfg, TransportKind::Tcp);
+    assert_eq!(
+        mem.summary.stage_rank_trace, tcp.summary.stage_rank_trace,
+        "stage-rank trace differs between transports"
+    );
+    // the skewed run's timing model must reflect the straggler: its
+    // virtual step time is strictly longer than the uniform cluster's
+    let mut uniform = cfg.clone();
+    uniform.scenario.straggler = None;
+    let base = dist_run(&uniform, TransportKind::Mem);
+    assert!(
+        mem.summary.virtual_time > base.summary.virtual_time,
+        "straggler profile did not stretch the modeled timeline: {} vs {}",
+        mem.summary.virtual_time,
+        base.summary.virtual_time
+    );
+    par::set_threads(1);
+}
+
+/// Transport fault injection: a rank killed mid-step tears the group
+/// down loudly — the surfaced error names the injected rank and its
+/// reason, not a survivor's secondary transport symptom — and
+/// `--resume` from the last snapshot rejoins byte-identically to a run
+/// that never faulted.
+#[test]
+fn fault_injection_fails_loudly_and_resume_matches_unbroken() {
+    let _knob = hold_par_knob();
+    par::set_threads(1);
+    let dir = tmp_dir("fault-resume");
+    std::fs::remove_dir_all(&dir).ok();
+    let mut cfg = tiny_cfg(Method::FixedRank(8), 6);
+    cfg.pp = 1;
+    cfg.dp = 2;
+    for kind in [TransportKind::Mem, TransportKind::Tcp] {
+        let unbroken = dist_run(&cfg, kind);
+
+        let mut fault_cfg = cfg.clone();
+        fault_cfg.scenario.fault = Some(FaultSpec { rank: 1, step: 4 });
+        fault_cfg.save_every = 2;
+        fault_cfg.ckpt_dir = Some(dir.clone());
+        let err = match run_distributed(fault_cfg, Backend::Host, kind) {
+            Ok(_) => panic!("{}: the fault-injected run must fail", kind.name()),
+            Err(e) => e,
+        };
+        assert!(
+            err.dist().is_none(),
+            "{}: the root cause must not be a transport symptom: {err}",
+            kind.name()
+        );
+        let msg = err.to_string();
+        assert!(
+            msg.contains("rank 1") && msg.contains("fault injection") && msg.contains("step 4"),
+            "{}: teardown must name the injected rank: {msg}",
+            kind.name()
+        );
+
+        // the fault config is resumable: the fingerprint deliberately
+        // excludes the fault spec (like --stop-after), so the unfaulted
+        // config accepts the dead run's snapshots
+        let mut resume_cfg = cfg.clone();
+        resume_cfg.resume = Some(dir.clone());
+        let resumed = dist_run(&resume_cfg, kind);
+        assert_eq!(
+            resumed.summary.curve.render(),
+            unbroken.summary.curve.render(),
+            "{}: curve differs after fault + resume",
+            kind.name()
+        );
+        let same = resumed.params.len() == unbroken.params.len()
+            && resumed.params.iter().zip(&unbroken.params).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "{}: params differ after fault + resume", kind.name());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    par::set_threads(1);
+}
+
+/// Scenario misuse fails at launch, not mid-run: the CLI rejects a
+/// half-given fault pair, a straggler profile of the wrong arity, and a
+/// horizon that does not land on a local-SGD sync boundary.
+#[test]
+fn cli_scenario_flag_rejections() {
+    let run = |args: &[&str]| {
+        let o = std::process::Command::new(env!("CARGO_BIN_EXE_edgc")).args(args).output().unwrap();
+        (o.status.success(), String::from_utf8_lossy(&o.stderr).into_owned())
+    };
+    let (ok, stderr) = run(&["train", "--steps", "4", "--fault-rank", "1"]);
+    assert!(!ok, "half a fault pair must be rejected");
+    assert!(stderr.contains("--fault-step"), "{stderr}");
+
+    let (ok, stderr) =
+        run(&["train", "--steps", "4", "--dp", "2", "--straggler", "1.0,2.0,x"]);
+    assert!(!ok, "a malformed straggler factor must be rejected");
+    assert!(stderr.contains("straggler"), "{stderr}");
+
+    let (ok, stderr) = run(&["train", "--steps", "4", "--pp", "1", "--straggler", "1.0,2.0"]);
+    assert!(!ok, "profile arity must match the stage count");
+    assert!(stderr.contains("straggler"), "{stderr}");
+
+    let (ok, stderr) = run(&["train", "--steps", "5", "--dp", "2", "--local-sgd", "2"]);
+    assert!(!ok, "horizon off the sync boundary must be rejected");
+    assert!(stderr.contains("local_sgd") || stderr.contains("local-sgd"), "{stderr}");
+
+    let (ok, stderr) = run(&["train", "--steps", "4", "--local-sgd", "0"]);
+    assert!(!ok, "K=0 must be rejected");
+    assert!(stderr.contains("local"), "{stderr}");
+}
+
+/// `edgc train --local-sgd`/`--straggler` smoke over a real transport:
+/// the run completes and reports the scenario in its banner.
+#[test]
+fn cli_scenario_smoke() {
+    let out = tmp_dir("cli-scenario");
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_edgc"))
+        .args([
+            "train", "--dp", "2", "--transport", "mem", "--steps", "4", "--eval-every", "4",
+            "--threads", "1", "--local-sgd", "2", "--local-sgd-penalty", "0.1", "--out", &out,
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&status.stdout);
+    let stderr = String::from_utf8_lossy(&status.stderr);
+    assert!(status.status.success(), "local-sgd train failed:\n{stdout}\n{stderr}");
+    std::fs::remove_dir_all(&out).ok();
+
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_edgc"))
+        .args([
+            "train", "--pp", "2", "--dp", "1", "--transport", "mem", "--steps", "2",
+            "--eval-every", "2", "--threads", "1", "--straggler", "1.0,1.5", "--out", &out,
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&status.stdout);
+    let stderr = String::from_utf8_lossy(&status.stderr);
+    assert!(status.status.success(), "straggler train failed:\n{stdout}\n{stderr}");
+    std::fs::remove_dir_all(&out).ok();
 }
 
 /// The checkpoint acceptance pin: interrupt-at-3 + resume byte-identity

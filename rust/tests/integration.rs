@@ -44,6 +44,7 @@ fn tiny_cfg(method: Method, steps: usize) -> TrainConfig {
         ckpt_dir: None,
         resume: None,
         stop_after: None,
+        scenario: edgc::config::ScenarioConfig::default(),
     }
 }
 
